@@ -1,0 +1,86 @@
+//! Heterogeneous clusters unified by CXL (§4, Figure 3/4b): an NVLink
+//! rack of B200s and a UALink rack mixing AMD/Intel/Amazon/Meta
+//! accelerators coexist in one ScalePool domain. XLink interoperability
+//! rules are enforced; inter-cluster data movement is mediated by CXL.
+//!
+//! Run with: `cargo run --release --example heterogeneous`
+
+use scalepool::cluster::{
+    Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig, XlinkDomain, XlinkError,
+};
+use scalepool::coordinator::DataMovementRouter;
+use scalepool::fabric::{LinkKind, TopologyKind};
+use scalepool::util::units::{fmt_bytes, fmt_ns};
+
+fn main() {
+    // 1. the interoperability wall: NVLink + UALink cannot share a domain
+    let mut nv = XlinkDomain::new(LinkKind::NvLink5);
+    nv.add(Accelerator::b200()).unwrap();
+    match nv.add(Accelerator::mi300x()) {
+        Err(XlinkError::MixedLink(a, b)) => {
+            println!("rejected as the paper says it must be: cannot mix {a:?} and {b:?} in one XLink domain")
+        }
+        other => panic!("expected MixedLink, got {other:?}"),
+    }
+
+    // 2. a UALink rack is vendor-neutral
+    let mut ua = XlinkDomain::new(LinkKind::UaLink);
+    for acc in [
+        Accelerator::mi300x(),
+        Accelerator::gaudi3(),
+        Accelerator::trainium2(),
+        Accelerator::mtia2(),
+        Accelerator::maia100(),
+    ] {
+        ua.add(acc).unwrap();
+    }
+    ua.validate().unwrap();
+    println!(
+        "UALink rack: {} heterogeneous accelerators, {} HBM, bottleneck XLink bw {:.0} GB/s",
+        ua.members.len(),
+        fmt_bytes(ua.total_hbm()),
+        ua.per_device_bw()
+    );
+
+    // 3. both cluster kinds in one ScalePool, abstracted through CXL
+    let nv_rack = Rack::homogeneous("nv0", Accelerator::b200(), 8).unwrap();
+    let ua_rack = Rack { name: "ua0".into(), domain: ua, cxl_uplinks: 8 };
+    let sys = ScalePoolBuilder::new()
+        .rack(nv_rack)
+        .rack(ua_rack)
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 4,
+            ..Default::default()
+        })
+        .build();
+    println!(
+        "\nunified domain: {} accelerators ({} + {}), connected: {}",
+        sys.accelerator_count(),
+        sys.racks[0].acc_ids.len(),
+        sys.racks[1].acc_ids.len(),
+        sys.fabric.topo.is_connected()
+    );
+
+    // 4. inter-cluster data movement paths (Figure 4b): B200 -> MI300X
+    //    without InfiniBand and without an NVIDIA-proprietary bridge
+    let router = DataMovementRouter::new(&sys);
+    for bytes in [64.0, 4096.0, 1048576.0, 134217728.0] {
+        let d = router.route(sys.racks[0].acc_ids[0], sys.racks[1].acc_ids[0], bytes);
+        println!(
+            "  B200 -> MI300X {:>10}: {:?} via {} hops, est {}",
+            fmt_bytes(bytes),
+            d.class,
+            d.hops,
+            fmt_ns(d.est_latency_ns)
+        );
+    }
+
+    // 5. both clusters share the tier-2 pool
+    println!(
+        "\nshared tier-2 pool {} reachable from both clusters: nv rt {}, ua rt {}",
+        fmt_bytes(sys.tier2_capacity()),
+        fmt_ns(sys.tier2_rt_ns(0).unwrap()),
+        fmt_ns(sys.tier2_rt_ns(1).unwrap())
+    );
+}

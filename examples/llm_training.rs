@@ -1,0 +1,24 @@
+//! Figure 6 driver: LLM training execution time for the five paper
+//! workloads, ScalePool vs the RDMA baseline, with the full
+//! {communication, computation, other} breakdown and normalized bars.
+//!
+//! Run with: `cargo run --release --example llm_training`
+
+use scalepool::experiments::fig6;
+
+fn main() {
+    let res = fig6::run_fig6();
+    print!("{}", fig6::render(&res));
+
+    // normalized stacked bars, the paper's Figure 6 layout
+    println!("\nnormalized to each baseline (comm | compute | other):");
+    for r in &res.rows {
+        let [b, s] = r.normalized();
+        let bar = |f: (f64, f64, f64)| {
+            let w = |x: f64| "#".repeat((x * 40.0).round() as usize);
+            format!("{:<12}|{:<22}|{:<4}", w(f.0), w(f.1), w(f.2))
+        };
+        println!("{:<16} baseline  {} = 1.00", r.name, bar(b));
+        println!("{:<16} scalepool {} = {:.2}", "", bar(s), 1.0 / r.speedup());
+    }
+}

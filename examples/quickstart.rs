@@ -1,0 +1,67 @@
+//! Quickstart: build a 4-cluster ScalePool, inspect the hybrid fabric,
+//! compose a tier-2 memory pool, and get a one-line training estimate.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use scalepool::calculon::presets::gpt3_175b;
+use scalepool::calculon::execution::SystemProfile;
+use scalepool::calculon::ExecutionModel;
+use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use scalepool::coordinator::{DataMovementRouter, JobSpec, ScalePoolManager};
+use scalepool::fabric::TopologyKind;
+use scalepool::util::units::{fmt_bytes, fmt_ns};
+
+fn main() {
+    // 1. four NVL72-style racks joined by a 2-level CXL Clos fabric with
+    //    eight tier-2 memory nodes (Figure 2 of the paper)
+    let sys = ScalePoolBuilder::new()
+        .racks((0..4).map(|i| Rack::homogeneous(&format!("rack{i}"), Accelerator::b200(), 8).unwrap()))
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 8,
+            ..Default::default()
+        })
+        .build();
+
+    println!("ScalePool: {} accelerators across {} clusters", sys.accelerator_count(), sys.racks.len());
+    println!("  tier-1 per cluster: {}", fmt_bytes(sys.rack_hbm_capacity(0)));
+    println!("  tier-2 pool:        {}", fmt_bytes(sys.tier2_capacity()));
+    println!("  intra-rack  64 B:   {}", fmt_ns(sys.acc_latency_ns((0, 0), (0, 1), 64.0)));
+    println!("  inter-rack  64 B:   {}", fmt_ns(sys.acc_latency_ns((0, 0), (1, 0), 64.0)));
+    println!("  tier-2 round trip:  {}", fmt_ns(sys.tier2_rt_ns(0).unwrap()));
+
+    // 2. route some transfers across the hybrid fabric
+    let router = DataMovementRouter::new(&sys);
+    for (label, src, dst, bytes) in [
+        ("tensor exchange (intra-rack, 1 MiB)", sys.racks[0].acc_ids[0], sys.racks[0].acc_ids[1], 1048576.0),
+        ("coherent line (inter-rack, 64 B)", sys.racks[0].acc_ids[0], sys.racks[1].acc_ids[0], 64.0),
+        ("bulk gradient (inter-rack, 128 MiB)", sys.racks[0].acc_ids[0], sys.racks[1].acc_ids[0], 134217728.0),
+        ("tier-2 KV block (16 KiB)", sys.racks[0].acc_ids[0], sys.mem_nodes[0], 16384.0),
+    ] {
+        let d = router.route(src, dst, bytes);
+        println!("  {label:<40} -> {:?}, est {}", d.class, fmt_ns(d.est_latency_ns));
+    }
+
+    // 3. admit a job through the coordinator
+    let mut mgr = ScalePoolManager::new(&sys);
+    let grant = mgr
+        .admit(&JobSpec { name: "train-demo".into(), accelerators: 12, pool_bytes: 2e12 })
+        .expect("admission");
+    println!(
+        "  admitted job {:?}: {} rack(s), {} of tier-2 pool",
+        grant.job,
+        grant.accelerators.len(),
+        fmt_bytes(grant.pool_bytes)
+    );
+
+    // 4. one-line training estimate: GPT-3 on this architecture vs RDMA
+    let w = gpt3_175b();
+    let base = ExecutionModel::new(SystemProfile::baseline_rdma()).estimate(&w.model, &w.par);
+    let pool = ExecutionModel::new(SystemProfile::scalepool_cxl()).estimate(&w.model, &w.par);
+    println!(
+        "\nGPT-3 175B step: baseline {} -> ScalePool {} ({:.2}x)",
+        fmt_ns(base.total_ns()),
+        fmt_ns(pool.total_ns()),
+        base.total_ns() / pool.total_ns()
+    );
+}

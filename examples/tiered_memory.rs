@@ -1,0 +1,67 @@
+//! Figure 7 driver: tiered-memory latency sweep in two modes —
+//! the analytic model (the paper's sweep) and a detailed discrete-event
+//! cross-check of one working-set point on the built fabric.
+//!
+//! Run with: `cargo run --release --example tiered_memory`
+
+use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use scalepool::experiments::fig7;
+use scalepool::fabric::TopologyKind;
+use scalepool::sim::{MemSim, Transaction};
+use scalepool::util::units::fmt_ns;
+use scalepool::util::Rng;
+
+fn main() {
+    // --- analytic sweep (the paper's Figure 7) ---------------------------
+    let rows = fig7::run_fig7();
+    print!("{}", fig7::render(&rows));
+
+    let r2 = rows.iter().find(|r| r.working_set == 16.0 * fig7::ACCEL_HBM).unwrap();
+    let r3 = rows.iter().find(|r| r.working_set == 8.0 * fig7::CLUSTER_HBM).unwrap();
+    println!(
+        "\nregion-2 (WS > accelerator): ScalePool {:.2}x vs baseline (paper: 1.4x)",
+        r2.speedup_vs_baseline()
+    );
+    println!(
+        "region-3 (WS > cluster):     ScalePool {:.2}x vs baseline (paper: 4.5x), {:.2}x vs accelerator-clusters (paper: 1.6x)",
+        r3.speedup_vs_baseline(),
+        r3.speedup_vs_acc_clusters()
+    );
+
+    // --- event-driven cross-check ---------------------------------------
+    // one tier-2-bound point simulated transaction by transaction on the
+    // real fabric graph, contention included
+    let sys = ScalePoolBuilder::new()
+        .racks((0..2).map(|i| Rack::homogeneous(&format!("rack{i}"), Accelerator::b200(), 8).unwrap()))
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 4,
+            ..Default::default()
+        })
+        .build();
+    let mut rng = Rng::new(3);
+    let mut at = 0.0;
+    let txs: Vec<Transaction> = (0..50_000)
+        .map(|_| {
+            at += rng.exp(1.0 / 100.0);
+            Transaction {
+                src: sys.racks[0].acc_ids[rng.below(8) as usize],
+                dst: sys.mem_nodes[rng.below(4) as usize],
+                at,
+                bytes: 64.0,
+                device_ns: 130.0,
+            }
+        })
+        .collect();
+    let mut sim = MemSim::new(&sys.fabric);
+    let rep = sim.run(txs);
+    println!(
+        "\nevent-sim cross-check (64 B tier-2 reads, contention on): mean one-way {}, p-mean x2 = RT {}",
+        fmt_ns(rep.latency.mean()),
+        fmt_ns(2.0 * rep.latency.mean())
+    );
+    println!(
+        "analytic tier-2 RT used by the sweep: {} (hop-counted, idle fabric)",
+        fmt_ns(fig7::Fig7Params::reference().tier2_rt)
+    );
+}

@@ -1,0 +1,182 @@
+"""AOT compile path: lower L2/L1 JAX+Pallas programs to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per preset P in artifacts/:
+    P.train_step.hlo.txt   params+m+v+[step,tokens,targets] -> params'+m'+v'+[step',loss]
+    P.init.hlo.txt         [seed] -> params+m+v+[step]
+    P.eval.hlo.txt         params+[tokens,targets] -> [loss]
+    P.manifest.json        flat-I/O ABI: names/shapes/dtypes in order
+plus smoke.hlo.txt (2x2 Pallas matmul + 2, the runtime smoke test) and
+manifest.json (preset index). Python runs ONLY here — never at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_preset(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Lower train/init/eval for one preset; return its manifest dict."""
+    specs = cfg.param_specs()
+    n = len(specs)
+    B, S = cfg.batch, cfg.seq
+
+    params_abs = [_abstract(s) for _, s in specs]
+    step_abs = _abstract((), jnp.int32)
+    tok_abs = _abstract((B, S), jnp.int32)
+
+    names = [name for name, _ in specs]
+    io_params = [{"name": nm, **_spec(s)} for nm, s in specs]
+
+    artifacts = {}
+
+    # --- train step -------------------------------------------------------
+    train_inputs = params_abs * 3 + [step_abs, tok_abs, tok_abs]
+    lowered = jax.jit(M.train_step_flat(cfg)).lower(*train_inputs)
+    path = f"{cfg.name}.train_step.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["train_step"] = {
+        "artifact": path,
+        "inputs": (
+            [{"name": nm, **_spec(s)} for nm, s in specs]
+            + [{"name": f"m.{nm}", **_spec(s)} for nm, s in specs]
+            + [{"name": f"v.{nm}", **_spec(s)} for nm, s in specs]
+            + [
+                {"name": "step", "shape": [], "dtype": "s32"},
+                {"name": "tokens", "shape": [B, S], "dtype": "s32"},
+                {"name": "targets", "shape": [B, S], "dtype": "s32"},
+            ]
+        ),
+        "outputs": (
+            [{"name": nm, **_spec(s)} for nm, s in specs]
+            + [{"name": f"m.{nm}", **_spec(s)} for nm, s in specs]
+            + [{"name": f"v.{nm}", **_spec(s)} for nm, s in specs]
+            + [
+                {"name": "step", "shape": [], "dtype": "s32"},
+                {"name": "loss", "shape": [], "dtype": "f32"},
+            ]
+        ),
+    }
+
+    # --- init --------------------------------------------------------------
+    lowered = jax.jit(M.init_flat(cfg)).lower(_abstract((), jnp.int32))
+    path = f"{cfg.name}.init.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["init"] = {
+        "artifact": path,
+        "inputs": [{"name": "seed", "shape": [], "dtype": "s32"}],
+        "outputs": artifacts["train_step"]["inputs"][: 3 * n]
+        + [{"name": "step", "shape": [], "dtype": "s32"}],
+    }
+
+    # --- eval ----------------------------------------------------------------
+    lowered = jax.jit(M.eval_flat(cfg)).lower(*(params_abs + [tok_abs, tok_abs]))
+    path = f"{cfg.name}.eval.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["eval"] = {
+        "artifact": path,
+        "inputs": io_params
+        + [
+            {"name": "tokens", "shape": [B, S], "dtype": "s32"},
+            {"name": "targets", "shape": [B, S], "dtype": "s32"},
+        ],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+    }
+
+    manifest = {
+        "preset": cfg.name,
+        "hyperparams": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "mlp_mult": cfg.mlp_mult,
+            "lr": cfg.lr,
+            "weight_decay": cfg.weight_decay,
+        },
+        "param_count": int(sum(int(jnp.prod(jnp.asarray(s))) for _, s in specs)),
+        "n_params": n,
+        "params": names,
+        **artifacts,
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def lower_smoke(out_dir: str) -> None:
+    """fn(x, y) = (pallas_matmul(x, y) + 2,) over f32[2,2] — the runtime
+    smoke artifact (rust asserts the [5,5,9,9] result, as in the reference)."""
+    from .kernels.matmul import matmul
+
+    def fn(x, y):
+        return (matmul(x, y, 2) + 2.0,)
+
+    spec = _abstract((2, 2))
+    lowered = jax.jit(fn).lower(spec, spec)
+    with open(os.path.join(out_dir, "smoke.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small25m,base100m",
+        help="comma-separated preset names (see compile.model.PRESETS)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    lower_smoke(args.out_dir)
+    print("lowered smoke.hlo.txt")
+
+    index = {"presets": []}
+    for name in [p for p in args.presets.split(",") if p]:
+        cfg = M.PRESETS[name]
+        man = lower_preset(cfg, args.out_dir)
+        index["presets"].append(name)
+        print(
+            f"lowered preset {name}: {man['param_count']/1e6:.1f}M params, "
+            f"artifacts={list(k for k in ('train_step','init','eval'))}"
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(index, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot (+ ref oracles).
+from . import ref  # noqa: F401
+from .attention import flash_attention  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .adamw import adamw_update  # noqa: F401
+from .layernorm import layernorm  # noqa: F401

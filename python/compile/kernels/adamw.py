@@ -1,0 +1,99 @@
+"""L1: fused AdamW update as an elementwise Pallas VPU kernel.
+
+One kernel invocation updates one (8*128-aligned) block of the flattened
+parameter/moment tensors: moment updates, bias correction, decoupled weight
+decay, and the parameter step are fused into a single VMEM-resident pass —
+the GPU original would be a grid-stride elementwise CUDA kernel; on a
+TPU-shaped machine this is a VPU loop over (8, 128) registers.
+
+Bias corrections ``1 - beta^t`` depend on the (traced) step counter, so they
+are computed outside and passed in as a length-2 scalar vector.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128  # one (8, 128) VPU tile of f32
+LARGE_BLOCK = 64 * 1024  # for multi-million-element leaves: amortize the
+# per-grid-step slicing overhead of the lowered (interpret-mode) loop
+
+
+def _adamw_kernel(c_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, lr, b1, b2, eps, weight_decay):
+    c1 = c_ref[0]  # 1 - b1**step
+    c2 = c_ref[1]  # 1 - b2**step
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / c1
+    v_hat = v_new / c2
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p
+
+    po_ref[...] = (p - lr * update).astype(po_ref.dtype)
+    mo_ref[...] = m_new.astype(mo_ref.dtype)
+    vo_ref[...] = v_new.astype(vo_ref.dtype)
+
+
+def adamw_update(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    step: jax.Array,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    block: int | None = None,
+):
+    """Fused AdamW on a tensor of any shape. Returns (new_p, new_m, new_v).
+
+    The tensor is flattened and zero-padded to a block multiple; padding
+    lanes carry zeros through every moment update, so un-padding is exact.
+    """
+    shape, dtype = p.shape, p.dtype
+    n = p.size
+    if block is None:
+        # Interpret-mode lowering materializes a full-buffer
+        # dynamic-update-slice per grid step, so on CPU the whole padded
+        # array is processed as ONE grid step (block = n_pad). On a real
+        # TPU you would pick a VMEM-sized block (see BLOCK/LARGE_BLOCK and
+        # DESIGN.md §Perf) — the kernel body is identical either way.
+        block = (n + BLOCK - 1) // BLOCK * BLOCK
+    n_pad = (n + block - 1) // block * block
+
+    def flat(x):
+        x = jnp.ravel(x).astype(jnp.float32)
+        return jnp.pad(x, (0, n_pad - n))
+
+    pf, gf, mf, vf = flat(p), flat(g), flat(m), flat(v)
+    step_f = step.astype(jnp.float32)
+    c = jnp.stack([1.0 - b1**step_f, 1.0 - b2**step_f])
+
+    kernel = functools.partial(
+        _adamw_kernel, lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay
+    )
+    grid = (n_pad // block,)
+    blk = pl.BlockSpec((block,), lambda i: (i,))
+    cspec = pl.BlockSpec((2,), lambda i: (0,))
+    po, mo, vo = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[cspec, blk, blk, blk, blk],
+        out_specs=[blk, blk, blk],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.float32)] * 3,
+        interpret=True,
+    )(c, pf, gf, mf, vf)
+
+    unflat = lambda x: jnp.reshape(x[:n], shape).astype(dtype)
+    return unflat(po), unflat(mo), unflat(vo)

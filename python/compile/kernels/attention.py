@@ -1,0 +1,298 @@
+"""L1: flash-attention Pallas kernel (fwd + bwd), the model's compute hot-spot.
+
+Hardware adaptation (paper GPUs -> TPU-style Pallas, DESIGN.md
+section Hardware-Adaptation): the GPU flash-attention formulation
+(threadblock tiles in shared memory, warp reductions) is restated for a
+scratchpad machine:
+
+* the grid iterates ``(head, q_block)``; each invocation holds one q tile
+  in VMEM via BlockSpec and streams K/V tiles with ``pl.dynamic_slice``
+  loads — the HBM<->VMEM schedule the paper's substrate would express with
+  cp.async pipelines;
+* the online-softmax accumulator (m, l, acc) is carried through a
+  ``fori_loop`` instead of warp-shuffled registers;
+* all contractions are f32-accumulated, MXU-shaped (tiles are multiples of
+  the 128-lane register width whenever the sequence allows).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see /opt/xla-example/README).
+
+The public entry point :func:`flash_attention` carries a ``custom_vjp``
+whose backward pass is itself two Pallas kernels (dq and dk/dv), using the
+standard recompute-from-LSE formulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30  # avoids exp(-inf - -inf) = nan in the online softmax
+
+
+def _pick_block(seq_len: int, requested: int) -> int:
+    """Largest divisor of seq_len that is <= requested (kernels assume the
+    sequence is an exact multiple of the block)."""
+    b = min(requested, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, causal, block_k, seq_len, scale):
+    q = q_ref[...].astype(jnp.float32) * scale  # [bq, d]
+    bq = q.shape[0]
+    qi = pl.program_id(1)
+    q_ids = qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    nk_total = seq_len // block_k
+    if causal:
+        # only K blocks that intersect the lower triangle of this q tile
+        nk = ((qi + 1) * bq + block_k - 1) // block_k
+    else:
+        nk = nk_total
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        if causal:
+            k_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    d = q.shape[1]
+    init = (
+        jnp.full((bq,), _NEG_INF, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, d), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, nk, body, init)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l)
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    h, s, d = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    scale = float(1.0 / (d**0.5))
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, block_k=bk, seq_len=s, scale=scale
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, bq), lambda hi, qi: (hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, causal, block_k, seq_len, scale):
+    q = q_ref[...].astype(jnp.float32)  # [bq, d]
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]  # [bq]
+    delta = delta_ref[...]  # [bq]
+    bq, d = q.shape
+    qi = pl.program_id(1)
+    q_ids = qi * bq + jax.lax.iota(jnp.int32, bq)
+    nk = (
+        ((qi + 1) * bq + block_k - 1) // block_k if causal else seq_len // block_k
+    )
+
+    def body(j, dq):
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(
+            jnp.float32
+        )
+        s = scale * jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if causal:
+            k_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_ids[:, None] >= k_ids[None, :], s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [bq, bk]
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None])
+        return dq + scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    dq = jax.lax.fori_loop(0, nk, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, causal, block_q, seq_len, scale):
+    k = k_ref[...].astype(jnp.float32)  # [bk, d]
+    v = v_ref[...].astype(jnp.float32)
+    bk, d = k.shape
+    ki = pl.program_id(1)
+    k_ids = ki * bk + jax.lax.iota(jnp.int32, bk)
+    nq_total = seq_len // block_q
+    # causal: q blocks strictly before this k block contribute nothing
+    j0 = (ki * bk) // block_q if causal else 0
+
+    def body(j, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.dslice(j * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        do = pl.load(do_ref, (pl.dslice(j * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        lse = pl.load(lse_ref, (pl.dslice(j * block_q, block_q),))
+        delta = pl.load(delta_ref, (pl.dslice(j * block_q, block_q),))
+        s = scale * jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        if causal:
+            q_ids = j * block_q + jax.lax.iota(jnp.int32, block_q)
+            s = jnp.where(q_ids[:, None] >= k_ids[None, :], s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv_new = dv + jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None])
+        dk_new = dk + scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return dk_new, dv_new
+
+    init = (jnp.zeros((bk, d), jnp.float32), jnp.zeros((bk, d), jnp.float32))
+    dk, dv = jax.lax.fori_loop(j0, nq_total, body, init)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(causal, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    h, s, d = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    scale = float(1.0 / (d**0.5))
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _dq_kernel, causal=causal, block_k=bk, seq_len=s, scale=scale
+        ),
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, bq), lambda hi, qi: (hi, qi)),
+            pl.BlockSpec((None, bq), lambda hi, qi: (hi, qi)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _dkv_kernel, causal=causal, block_q=bq, seq_len=s, scale=scale
+        ),
+        grid=(h, s // bk),
+        in_specs=[
+            pl.BlockSpec((None, s, d), lambda hi, ki: (hi, 0, 0)),
+            pl.BlockSpec((None, bk, d), lambda hi, ki: (hi, ki, 0)),
+            pl.BlockSpec((None, bk, d), lambda hi, ki: (hi, ki, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, ki: (hi, 0, 0)),
+            pl.BlockSpec((None, s), lambda hi, ki: (hi, 0)),
+            pl.BlockSpec((None, s), lambda hi, ki: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bk, d), lambda hi, ki: (hi, ki, 0)),
+            pl.BlockSpec((None, bk, d), lambda hi, ki: (hi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, d), k.dtype),
+            jax.ShapeDtypeStruct((h, s, d), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Flash attention over ``[heads, seq, head_dim]`` tensors.
+
+    Matches :func:`..ref.attention_ref` to float tolerance; O(seq) memory in
+    the forward (only the LSE row statistics are saved for the backward).
+    """
+    out, _ = _fwd(q, k, v, causal, block_q, block_k)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, block_q, block_k):
+    out, lse = _fwd(q, k, v, causal, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+flash_attention.defvjp(_vjp_fwd, _bwd)

@@ -1,0 +1,50 @@
+"""L1: LayerNorm Pallas kernel (row-blocked, f32 statistics).
+
+Standalone member of the kernel portfolio (the L2 model keeps its LayerNorm
+in jnp for free autodiff); exercised by pytest/hypothesis against
+``ref.layernorm_ref`` and by the kernel micro-benches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [rows, d]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    eps: float = 1e-5,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """LayerNorm over the last axis of a 2-D ``[rows, d]`` tensor."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    while rows % br != 0:
+        br -= 1
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

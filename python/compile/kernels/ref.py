@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here, written in straight-line jax.numpy with no tiling or
+scratch management. pytest (python/tests/) and hypothesis sweeps assert
+`assert_allclose(kernel(...), ref(...))` across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain matmul with f32 accumulation (the MXU contract)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """Multi-head attention oracle.
+
+    Shapes: q, k, v are [heads, seq, head_dim]; output matches q.
+    Softmax is computed in f32 regardless of input dtype.
+    """
+    h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = (
+        jnp.einsum("hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32) * scale
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "hqk,hkd->hqd", probs.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    return out.astype(q.dtype)
+
+
+def adamw_ref(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    step: jax.Array,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+):
+    """AdamW update oracle. Returns (new_p, new_m, new_v)."""
+    step_f = step.astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**step_f)
+    v_hat = v_new / (1.0 - b2**step_f)
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p
+    return p - lr * update, m_new, v_new
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    """LayerNorm over the last axis, f32 statistics."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)

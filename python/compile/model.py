@@ -1,0 +1,289 @@
+"""L2: JAX transformer language model (fwd/bwd + fused AdamW), calling the
+L1 Pallas kernels, AOT-lowered by aot.py and executed from rust via PJRT.
+
+The model is a pre-LN GPT-style decoder:
+
+    tok_embed + pos_embed
+    N x [ LN -> flash_attention (Pallas) -> residual
+          LN -> MLP (GELU)               -> residual ]
+    LN_f -> lm_head
+
+Layer weights are *stacked* along a leading axis and the block is applied
+with ``jax.lax.scan`` — one HLO body regardless of depth, which keeps the
+lowered artifact small and lets XLA pipeline the layer loop.
+
+The train step is ``loss, grads = value_and_grad(loss_fn)`` followed by the
+fused Pallas AdamW on every leaf. Its flat I/O convention (see
+``flatten_state`` / manifest) is the contract with the rust runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.adamw import adamw_update
+from .kernels.matmul import matmul as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters for one AOT preset."""
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    seq: int
+    batch: int
+    mlp_mult: int = 4
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    # Which matmuls route through the Pallas tiled-matmul kernel. The flash
+    # attention + fused AdamW kernels are always on; the lm_head projection
+    # through the Pallas matmul is exercised in the tiny preset (and tests)
+    # but kept on jnp/XLA dot for the big presets, where the lowered
+    # interpret-mode tile loop would dominate CPU step time.
+    pallas_lm_head: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def mlp_hidden(self) -> int:
+        return self.hidden * self.mlp_mult
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Name/shape of every parameter, in the flat I/O order used by the
+        rust runtime (this order is the ABI — append only)."""
+        h, l, v, s, m = self.hidden, self.layers, self.vocab, self.seq, self.mlp_hidden
+        return [
+            ("tok_embed", (v, h)),
+            ("pos_embed", (s, h)),
+            ("ln1_g", (l, h)),
+            ("ln1_b", (l, h)),
+            ("wqkv", (l, h, 3 * h)),
+            ("bqkv", (l, 3 * h)),
+            ("wo", (l, h, h)),
+            ("bo", (l, h)),
+            ("ln2_g", (l, h)),
+            ("ln2_b", (l, h)),
+            ("w1", (l, h, m)),
+            ("b1", (l, m)),
+            ("w2", (l, m, h)),
+            ("b2", (l, h)),
+            ("lnf_g", (h,)),
+            ("lnf_b", (h,)),
+            ("lm_head", (h, v)),
+        ]
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(s))) for _, s in self.param_specs())
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # tests + fast CI: exercises every kernel including the Pallas lm_head
+    "tiny": ModelConfig(
+        "tiny", vocab=256, hidden=64, layers=2, heads=2, seq=64, batch=2,
+        pallas_lm_head=True,
+    ),
+    # ~25M params — quick end-to-end runs
+    "small25m": ModelConfig(
+        "small25m", vocab=8192, hidden=384, layers=6, heads=6, seq=128, batch=2,
+    ),
+    # ~110M params — the paper-scale end-to-end validation model
+    "base100m": ModelConfig(
+        "base100m", vocab=16384, hidden=768, layers=12, heads=12, seq=128, batch=2,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> Dict[str, jax.Array]:
+    """Initialize parameters (0.02-scaled normals; ones/zeros for LN)."""
+    key = jax.random.key(seed.astype(jnp.uint32))
+    params: Dict[str, jax.Array] = {}
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)) or name in ("ln1_g", "ln2_g", "lnf_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.startswith(("b", "ln")) or name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)) * g + b
+
+
+def _block(x, layer_params, cfg: ModelConfig):
+    """One transformer block over x: [B, S, H]."""
+    ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2 = layer_params
+    B, S, H = x.shape
+    nh, hd = cfg.heads, cfg.head_dim
+
+    y = _layernorm(x, ln1_g, ln1_b)
+    qkv = jnp.einsum("bsh,hk->bsk", y, wqkv) + bqkv  # [B, S, 3H]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B, S, H] -> [B, nh, S, hd]
+        return t.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    # vmap the Pallas flash-attention kernel over the batch; the kernel grid
+    # already covers (heads, q_blocks).
+    att = jax.vmap(lambda qq, kk, vv: flash_attention(qq, kk, vv, True))(q, k, v)
+    att = att.transpose(0, 2, 1, 3).reshape(B, S, H)
+    x = x + jnp.einsum("bsh,hk->bsk", att, wo) + bo
+
+    y = _layernorm(x, ln2_g, ln2_b)
+    hdn = jax.nn.gelu(jnp.einsum("bsh,hm->bsm", y, w1) + b1)
+    x = x + jnp.einsum("bsm,mh->bsh", hdn, w2) + b2
+    return x
+
+
+def forward(params: Dict[str, jax.Array], tokens: jax.Array, cfg: ModelConfig):
+    """Logits for token ids ``[B, S]`` -> ``[B, S, V]``."""
+    B, S = tokens.shape
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :S, :]
+
+    layer_keys = (
+        "ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo",
+        "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+    )
+    stacked = tuple(params[k] for k in layer_keys)
+
+    def body(carry, layer):
+        return _block(carry, layer, cfg), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+
+    if cfg.pallas_lm_head:
+        logits = pallas_matmul(x.reshape(B * S, cfg.hidden), params["lm_head"])
+        logits = logits.reshape(B, S, cfg.vocab)
+    else:
+        logits = jnp.einsum("bsh,hv->bsv", x, params["lm_head"])
+    return logits
+
+
+def loss_fn(params, tokens, targets, cfg: ModelConfig) -> jax.Array:
+    """Mean next-token cross-entropy (f32)."""
+    logits = forward(params, tokens, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def train_step(params, m, v, step, tokens, targets, cfg: ModelConfig):
+    """One optimizer step. Returns (params', m', v', step+1, loss).
+
+    grads via value_and_grad over the scanned model (flash-attention custom
+    VJP kernels inside); update via the fused Pallas AdamW on every leaf.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets, cfg)
+    new_step = step + 1
+
+    def upd(p, g, mm, vv):
+        return adamw_update(
+            p, g, mm, vv, new_step, lr=cfg.lr, weight_decay=cfg.weight_decay
+        )
+
+    out = {k: upd(params[k], grads[k], m[k], v[k]) for k in params}
+    new_p = {k: t[0] for k, t in out.items()}
+    new_m = {k: t[1] for k, t in out.items()}
+    new_v = {k: t[2] for k, t in out.items()}
+    return new_p, new_m, new_v, new_step, loss
+
+
+def eval_loss(params, tokens, targets, cfg: ModelConfig):
+    return loss_fn(params, tokens, targets, cfg)
+
+
+# ---------------------------------------------------------------------------
+# flat I/O (the ABI with the rust runtime)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[name] for name, _ in cfg.param_specs()]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    names = [n for n, _ in cfg.param_specs()]
+    return dict(zip(names, flat))
+
+
+def train_step_flat(cfg: ModelConfig):
+    """Returns fn(*flat) with flat = params + m + v + [step, tokens, targets],
+    producing params' + m' + v' + [step', loss] — the AOT entry point."""
+    n = len(cfg.param_specs())
+
+    def fn(*flat):
+        params = unflatten_params(cfg, flat[:n])
+        m = unflatten_params(cfg, flat[n : 2 * n])
+        v = unflatten_params(cfg, flat[2 * n : 3 * n])
+        step, tokens, targets = flat[3 * n : 3 * n + 3]
+        new_p, new_m, new_v, new_step, loss = train_step(
+            params, m, v, step, tokens, targets, cfg
+        )
+        return tuple(
+            flatten_params(cfg, new_p)
+            + flatten_params(cfg, new_m)
+            + flatten_params(cfg, new_v)
+            + [new_step, loss]
+        )
+
+    return fn
+
+
+def init_flat(cfg: ModelConfig):
+    """Returns fn(seed) -> params + m + v + [step] (all zeros moments)."""
+
+    def fn(seed):
+        params = init_params(cfg, seed)
+        flat_p = flatten_params(cfg, params)
+        m = [jnp.zeros_like(x) for x in flat_p]
+        v = [jnp.zeros_like(x) for x in flat_p]
+        step = jnp.asarray(0, jnp.int32)
+        return tuple(flat_p + m + v + [step])
+
+    return fn
+
+
+def eval_flat(cfg: ModelConfig):
+    """Returns fn(*params, tokens, targets) -> (loss,)."""
+    n = len(cfg.param_specs())
+
+    def fn(*flat):
+        params = unflatten_params(cfg, flat[:n])
+        tokens, targets = flat[n], flat[n + 1]
+        return (eval_loss(params, tokens, targets, cfg),)
+
+    return fn

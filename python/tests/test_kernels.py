@@ -1,0 +1,236 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes and dtypes (the session's core
+correctness signal for the compute layer)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.adamw import adamw_update
+from compile.kernels.attention import flash_attention
+from compile.kernels.layernorm import layernorm
+from compile.kernels.matmul import matmul
+
+SETTINGS = dict(max_examples=12, deadline=None, derandomize=True)
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    block=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (m, k), jnp.float32)
+    y = rand(rng, (k, n), jnp.float32)
+    got = matmul(x, y, block)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_dtypes(dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (32, 48), dtype)
+    y = rand(rng, (48, 16), dtype)
+    got = matmul(x, y, 16)
+    want = ref.matmul_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_gradients():
+    rng = np.random.default_rng(0)
+    x = rand(rng, (40, 24), jnp.float32)
+    y = rand(rng, (24, 56), jnp.float32)
+    f = lambda a, b: jnp.sum(jnp.sin(matmul(a, b, 16)))
+    g = lambda a, b: jnp.sum(jnp.sin(ref.matmul_ref(a, b)))
+    ga = jax.grad(f, argnums=(0, 1))(x, y)
+    gb = jax.grad(g, argnums=(0, 1))(x, y)
+    for u, w in zip(ga, gb):
+        np.testing.assert_allclose(u, w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        matmul(jnp.zeros((4, 5)), jnp.zeros((6, 7)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    heads=st.integers(1, 4),
+    seq=st.sampled_from([16, 32, 64, 96]),
+    hd=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    block=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(heads, seq, hd, causal, block, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (heads, seq, hd), jnp.float32)
+    k = rand(rng, (heads, seq, hd), jnp.float32)
+    v = rand(rng, (heads, seq, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal, block, block)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    causal=st.booleans(),
+    block=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**12),
+)
+def test_attention_gradients_match_ref(causal, block, seed):
+    rng = np.random.default_rng(seed)
+    shape = (2, 32, 16)
+    q, k, v = (rand(rng, shape, jnp.float32) for _ in range(3))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal, block, block) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gk, gr, "qkv"):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3, err_msg=f"d{name}")
+
+
+def test_attention_block_size_invariance():
+    rng = np.random.default_rng(1)
+    q, k, v = (rand(rng, (2, 64, 16), jnp.float32) for _ in range(3))
+    a = flash_attention(q, k, v, True, 16, 16)
+    b = flash_attention(q, k, v, True, 64, 32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causality():
+    """Perturbing a future key must not change earlier outputs."""
+    rng = np.random.default_rng(2)
+    q, k, v = (rand(rng, (1, 32, 8), jnp.float32) for _ in range(3))
+    base = flash_attention(q, k, v, True, 8, 8)
+    k2 = k.at[0, 20].add(100.0)
+    v2 = v.at[0, 20].add(-50.0)
+    pert = flash_attention(q, k2, v2, True, 8, 8)
+    np.testing.assert_allclose(base[0, :20], pert[0, :20], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[0, 20:], pert[0, 20:])
+
+
+def test_attention_lse_numerics_with_large_logits():
+    """The online softmax must survive large logit magnitudes."""
+    rng = np.random.default_rng(3)
+    q = 30.0 * rand(rng, (1, 32, 8), jnp.float32)
+    k = 30.0 * rand(rng, (1, 32, 8), jnp.float32)
+    v = rand(rng, (1, 32, 8), jnp.float32)
+    got = flash_attention(q, k, v, True, 8, 8)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# adamw
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.integers(1, 5000),
+    step=st.integers(1, 1000),
+    seed=st.integers(0, 2**16),
+)
+def test_adamw_matches_ref(n, step, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, (n,), jnp.float32)
+    g = rand(rng, (n,), jnp.float32)
+    m = 0.1 * rand(rng, (n,), jnp.float32)
+    v = jnp.abs(0.1 * rand(rng, (n,), jnp.float32))
+    s = jnp.asarray(step, jnp.int32)
+    got = adamw_update(p, g, m, v, s)
+    want = ref.adamw_ref(p, g, m, v, s)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_nd_shapes_and_padding():
+    rng = np.random.default_rng(5)
+    for shape in [(3,), (7, 11), (2, 3, 5), (1025,), (8 * 128,)]:
+        p = rand(rng, shape, jnp.float32)
+        g = rand(rng, shape, jnp.float32)
+        m = jnp.zeros(shape)
+        v = jnp.zeros(shape)
+        s = jnp.asarray(1, jnp.int32)
+        got = adamw_update(p, g, m, v, s)
+        want = ref.adamw_ref(p, g, m, v, s)
+        for a, b in zip(got, want):
+            assert a.shape == shape
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_weight_decay_acts():
+    p = jnp.ones((64,))
+    z = jnp.zeros((64,))
+    s = jnp.asarray(1, jnp.int32)
+    no_wd, _, _ = adamw_update(p, z, z, z, s, weight_decay=0.0)
+    wd, _, _ = adamw_update(p, z, z, z, s, weight_decay=0.1)
+    np.testing.assert_allclose(no_wd, p)
+    assert np.all(np.asarray(wd) < np.asarray(p))
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    rows=st.integers(1, 100),
+    d=st.sampled_from([8, 32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (rows, d), jnp.float32)
+    g = rand(rng, (d,), jnp.float32)
+    b = rand(rng, (d,), jnp.float32)
+    got = layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_output_statistics():
+    rng = np.random.default_rng(6)
+    x = 5.0 + 3.0 * rand(rng, (64, 128), jnp.float32)
+    y = layernorm(x, jnp.ones((128,)), jnp.zeros((128,)))
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.std(np.asarray(y), -1), 1.0, atol=1e-2)

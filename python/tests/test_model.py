@@ -1,0 +1,152 @@
+"""L2 model correctness: shapes, loss semantics, gradient flow, training
+dynamics, and the flat-I/O ABI the rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jnp.asarray(0, jnp.int32))
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq)).astype(np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    return jnp.asarray(toks), jnp.asarray(tgts)
+
+
+def test_param_specs_cover_all_params(params):
+    names = [n for n, _ in CFG.param_specs()]
+    assert set(names) == set(params.keys())
+    for name, shape in CFG.param_specs():
+        assert params[name].shape == shape, name
+
+
+def test_param_count_tiny():
+    # tiny: small but real (> 100k params)
+    n = sum(int(np.prod(s)) for _, s in CFG.param_specs())
+    assert 1e5 < n < 1e6
+
+
+def test_forward_shapes(params):
+    toks, _ = batch()
+    logits = M.forward(params, toks, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_initial_loss_near_uniform(params):
+    toks, tgts = batch()
+    loss = M.loss_fn(params, toks, tgts, CFG)
+    expected = np.log(CFG.vocab)
+    assert abs(float(loss) - expected) < 0.5, f"{float(loss)} vs ln(V)={expected:.2f}"
+
+
+def test_gradients_flow_to_every_parameter(params):
+    toks, tgts = batch()
+    grads = jax.grad(M.loss_fn)(params, toks, tgts, CFG)
+    for name, g in grads.items():
+        assert jnp.isfinite(g).all(), name
+        # pos_embed rows beyond seq never receive gradient; all used
+        # parameters must
+        if name != "pos_embed":
+            assert float(jnp.max(jnp.abs(g))) > 0.0, f"dead gradient: {name}"
+
+
+def test_causality_of_model(params):
+    """Changing a later input token must not change earlier logits."""
+    toks, _ = batch()
+    logits = M.forward(params, toks, CFG)
+    toks2 = toks.at[0, CFG.seq - 1].set((int(toks[0, CFG.seq - 1]) + 1) % CFG.vocab)
+    logits2 = M.forward(params, toks2, CFG)
+    np.testing.assert_allclose(
+        logits[0, : CFG.seq - 1], logits2[0, : CFG.seq - 1], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_train_step_decreases_loss(params):
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    step = jnp.asarray(0, jnp.int32)
+    toks, tgts = batch()
+    jit_step = jax.jit(lambda p, m_, v_, s: M.train_step(p, m_, v_, s, toks, tgts, CFG))
+    p = params
+    losses = []
+    for _ in range(20):
+        p, m, v, step, loss = jit_step(p, m, v, step)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert int(step) == 20
+
+
+def test_train_step_flat_roundtrip(params):
+    """The flat entry point computes the same result as the dict API."""
+    n = len(CFG.param_specs())
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    step = jnp.asarray(0, jnp.int32)
+    toks, tgts = batch()
+
+    ref_out = M.train_step(params, m, v, step, toks, tgts, CFG)
+    flat_in = (
+        M.flatten_params(CFG, params)
+        + M.flatten_params(CFG, m)
+        + M.flatten_params(CFG, v)
+        + [step, toks, tgts]
+    )
+    flat_out = M.train_step_flat(CFG)(*flat_in)
+    assert len(flat_out) == 3 * n + 2
+    # params
+    ref_flat = M.flatten_params(CFG, ref_out[0])
+    for a, b in zip(flat_out[:n], ref_flat):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    # loss
+    np.testing.assert_allclose(flat_out[-1], ref_out[-1], rtol=1e-6)
+
+
+def test_init_flat_layout():
+    n = len(CFG.param_specs())
+    out = M.init_flat(CFG)(jnp.asarray(0, jnp.int32))
+    assert len(out) == 3 * n + 1
+    # moments start at zero
+    for x in out[n : 3 * n]:
+        assert float(jnp.max(jnp.abs(x))) == 0.0
+    assert int(out[-1]) == 0
+    # params match shapes
+    for x, (_, shape) in zip(out[:n], CFG.param_specs()):
+        assert x.shape == shape
+
+
+def test_eval_flat_matches_loss(params):
+    toks, tgts = batch()
+    want = M.loss_fn(params, toks, tgts, CFG)
+    (got,) = M.eval_flat(CFG)(*(M.flatten_params(CFG, params) + [toks, tgts]))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_determinism_of_init():
+    a = M.init_params(CFG, jnp.asarray(7, jnp.int32))
+    b = M.init_params(CFG, jnp.asarray(7, jnp.int32))
+    c = M.init_params(CFG, jnp.asarray(8, jnp.int32))
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_presets_are_consistent():
+    for name, cfg in M.PRESETS.items():
+        assert cfg.name == name
+        assert cfg.hidden % cfg.heads == 0, name
+        n = sum(int(np.prod(s)) for _, s in cfg.param_specs())
+        if name == "base100m":
+            assert 9e7 < n < 1.5e8, f"{name}: {n}"
+        if name == "small25m":
+            assert 1e7 < n < 4e7, f"{name}: {n}"

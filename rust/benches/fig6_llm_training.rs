@@ -1,0 +1,50 @@
+//! Bench F6 — regenerates Figure 6 (LLM training time, ScalePool vs RDMA
+//! baseline, five workloads, breakdown) and times the estimator itself,
+//! plus ablations over the design choices DESIGN.md calls out.
+//!
+//! Run with: `cargo bench --bench fig6_llm_training`
+
+use scalepool::bench::{BenchConfig, BenchGroup};
+use scalepool::calculon::execution::SystemProfile;
+use scalepool::calculon::presets::paper_workloads;
+use scalepool::experiments::fig6;
+
+fn main() {
+    // --- the figure itself ------------------------------------------------
+    let res = fig6::run_fig6();
+    print!("{}", fig6::render(&res));
+
+    // --- ablations ---------------------------------------------------------
+    println!("\nablation: what the CXL fabric's properties each contribute");
+    let base = SystemProfile::baseline_rdma();
+    let pool = SystemProfile::scalepool_cxl();
+
+    // (a) CXL wires but RDMA-style software on top (no hardware coherence)
+    let mut sw_on_cxl = pool.clone();
+    sw_on_cxl.inter_rack.sw_overhead_ns = base.inter_rack.sw_overhead_ns;
+    sw_on_cxl.inter_rack.bw_efficiency = base.inter_rack.bw_efficiency;
+    let a = fig6::run_fig6_with(base.clone(), sw_on_cxl, &paper_workloads());
+    println!("  CXL wires + RDMA software:   avg speedup {:.2}x (hardware path is the point, not the wires)", a.avg_speedup());
+
+    // (b) RDMA wires but zero software overhead (idealized NIC offload)
+    let mut hw_on_ib = base.clone();
+    hw_on_ib.inter_rack.sw_overhead_ns = pool.inter_rack.sw_overhead_ns;
+    hw_on_ib.inter_rack.bw_efficiency = pool.inter_rack.bw_efficiency;
+    let b = fig6::run_fig6_with(base.clone(), hw_on_ib, &paper_workloads());
+    println!("  IB wires + CXL-like software: avg speedup {:.2}x", b.avg_speedup());
+
+    // (c) full ScalePool
+    println!("  full ScalePool:               avg speedup {:.2}x", res.avg_speedup());
+
+    // --- estimator micro-bench ---------------------------------------------
+    let mut g = BenchGroup::new("fig6 estimator hot path").with_config(BenchConfig { warmup_iters: 5, iters: 50 });
+    g.bench("estimate 5 workloads x 2 systems", fig6::run_fig6);
+
+    // machine-readable summary line (consumed by EXPERIMENTS.md tooling)
+    println!(
+        "\nRESULT fig6 avg_speedup={:.3} max_speedup={:.3} comm_speedup={:.3}",
+        res.avg_speedup(),
+        res.max_speedup(),
+        res.avg_comm_speedup()
+    );
+}

@@ -1,0 +1,53 @@
+//! Bench F7 — regenerates Figure 7 (tiered-memory latency vs working-set
+//! size, three configurations) plus a coherence-protocol ablation and the
+//! sweep's own timing.
+//!
+//! Run with: `cargo bench --bench fig7_tiered_memory`
+
+use scalepool::bench::{BenchConfig, BenchGroup};
+use scalepool::coherence::Directory;
+use scalepool::experiments::fig7;
+use scalepool::util::Rng;
+
+fn main() {
+    let rows = fig7::run_fig7();
+    print!("{}", fig7::render(&rows));
+
+    let r2 = rows.iter().find(|r| r.working_set == 16.0 * fig7::ACCEL_HBM).unwrap();
+    let r3 = rows.iter().find(|r| r.working_set == 8.0 * fig7::CLUSTER_HBM).unwrap();
+
+    // --- ablation: coherence traffic cost of tier-1 sharing ---------------
+    // measure protocol messages per access for a sharing-heavy pattern —
+    // the cost the paper's "selective coherence" (§5) avoids paying for
+    // data that does not need it
+    let mut dir = Directory::new(8);
+    let mut rng = Rng::new(11);
+    let mut msgs = 0u64;
+    let accesses = 100_000;
+    for _ in 0..accesses {
+        let agent = rng.below(8) as usize;
+        let block = rng.zipf(10_000, 0.9);
+        let m = if rng.f64() < 0.3 { dir.write(agent, block) } else { dir.read(agent, block) };
+        msgs += m.total() as u64;
+    }
+    dir.check_invariants().unwrap();
+    println!(
+        "\ncoherence ablation: {:.2} protocol messages/access on a zipf share-heavy pattern ({} c2c, {} invalidations)",
+        msgs as f64 / accesses as f64,
+        dir.stats().cache_to_cache,
+        dir.stats().invalidations
+    );
+
+    // --- sweep timing -------------------------------------------------------
+    let mut g = BenchGroup::new("fig7 sweep hot path").with_config(BenchConfig { warmup_iters: 3, iters: 30 });
+    let p = fig7::Fig7Params::reference();
+    g.bench("10-point analytic sweep (3 configs)", || fig7::run_fig7_with(&p));
+    g.bench("fabric-derived params (topology build + routing)", fig7::Fig7Params::reference);
+
+    println!(
+        "\nRESULT fig7 region2_speedup={:.3} region3_vs_baseline={:.3} region3_vs_acc_clusters={:.3}",
+        r2.speedup_vs_baseline(),
+        r3.speedup_vs_baseline(),
+        r3.speedup_vs_acc_clusters()
+    );
+}

@@ -1,0 +1,145 @@
+//! Micro-benchmarks of the simulator's hot paths (the §Perf targets):
+//! routing-table construction, path latency evaluation, the discrete-event
+//! engine, the MESI directory, the pool allocator and workload generation.
+//!
+//! Run with: `cargo bench --bench micro_fabric`
+
+use scalepool::bench::{black_box, BenchConfig, BenchGroup};
+use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use scalepool::coherence::Directory;
+use scalepool::fabric::{LinkKind, NodeKind, Topology, TopologyKind};
+use scalepool::memory::pool::{MemoryPool, Placement};
+use scalepool::memory::Tier;
+use scalepool::sim::{Engine, EventKind, MemSim, Transaction};
+use scalepool::util::Rng;
+use scalepool::workloads::WorkingSetSweep;
+
+fn main() {
+    let mut g = BenchGroup::new("fabric").with_config(BenchConfig { warmup_iters: 3, iters: 30 });
+
+    let sys = ScalePoolBuilder::new()
+        .racks((0..8).map(|i| Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 16).unwrap()))
+        .config(SystemConfig { inter: InterCluster::Cxl(TopologyKind::MultiLevelClos), mem_nodes: 8, ..Default::default() })
+        .build();
+    println!(
+        "system under test: {} nodes, {} links",
+        sys.fabric.topo.nodes.len(),
+        sys.fabric.topo.links.len()
+    );
+
+    g.bench("build 8x16 system (topology + routing)", || {
+        ScalePoolBuilder::new()
+            .racks((0..8).map(|i| Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 16).unwrap()))
+            .config(SystemConfig { inter: InterCluster::Cxl(TopologyKind::MultiLevelClos), mem_nodes: 8, ..Default::default() })
+            .build()
+    });
+
+    let src = sys.racks[0].acc_ids[0];
+    let dst = sys.racks[7].acc_ids[15];
+    g.bench("path + message_latency (cross-fabric)", || {
+        let p = sys.fabric.path(src, dst).unwrap();
+        sys.fabric.message_latency(&p, 65536.0).total_ns()
+    });
+
+    g.bench("torus3d(8,8,8) build + route", || {
+        let (t, ids) = Topology::torus3d((8, 8, 8), LinkKind::CxlCoherent, "t");
+        let f = scalepool::fabric::Fabric::new(t);
+        f.latency_ns(ids[0], ids[ids.len() - 1], 4096.0)
+    });
+
+    // --- event engine -----------------------------------------------------
+    let mut g = BenchGroup::new("event engine").with_config(BenchConfig { warmup_iters: 2, iters: 10 });
+    g.bench("schedule+dispatch 1M events", || {
+        let mut e = Engine::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..100_000 {
+            e.schedule(rng.f64() * 1e6, EventKind::Custom { tag: 0 });
+        }
+        let mut n = 0u64;
+        while e.next().is_some() {
+            n += 1;
+            if n % 10 == 0 {
+                // keep the heap warm like a real simulation
+                let now = e.now();
+                e.schedule(now + 100.0, EventKind::Custom { tag: 1 });
+                n += 1;
+                if n > 1_000_000 {
+                    break;
+                }
+            }
+        }
+        n
+    });
+
+    let rack = Topology::single_hop(16, LinkKind::NvLink5, "r");
+    let accs = rack.nodes_of(NodeKind::Accelerator);
+    let fabric = scalepool::fabric::Fabric::new(rack);
+    g.bench("memsim 100k transactions (16-acc rack)", || {
+        let mut rng = Rng::new(2);
+        let mut at = 0.0;
+        let txs: Vec<Transaction> = (0..100_000)
+            .map(|_| {
+                at += rng.exp(1.0 / 20.0);
+                let s = accs[rng.below(16) as usize];
+                let mut d = accs[rng.below(16) as usize];
+                while d == s {
+                    d = accs[rng.below(16) as usize];
+                }
+                Transaction { src: s, dst: d, at, bytes: 4096.0, device_ns: 100.0 }
+            })
+            .collect();
+        let mut sim = MemSim::new(&fabric);
+        sim.run(txs).completed
+    });
+
+    // --- coherence directory ------------------------------------------------
+    let mut g = BenchGroup::new("coherence").with_config(BenchConfig { warmup_iters: 3, iters: 20 });
+    g.bench("MESI directory 100k mixed ops (8 agents)", || {
+        let mut d = Directory::new(8);
+        let mut rng = Rng::new(3);
+        let mut msgs = 0u64;
+        for _ in 0..100_000 {
+            let a = rng.below(8) as usize;
+            let b = rng.below(4096);
+            msgs += if rng.f64() < 0.3 { d.write(a, b) } else { d.read(a, b) }.total() as u64;
+        }
+        msgs
+    });
+
+    // --- pool allocator -------------------------------------------------------
+    let mut g = BenchGroup::new("memory pool").with_config(BenchConfig { warmup_iters: 3, iters: 20 });
+    g.bench("alloc/free churn 10k ops (3 regions)", || {
+        let mut p = MemoryPool::new();
+        p.add_region(0, Tier::Tier1Local, 1e12);
+        p.add_region(1, Tier::Tier1Remote, 1e13);
+        p.add_region(2, Tier::Tier2Pool, 1e14);
+        let mut rng = Rng::new(4);
+        let mut live = Vec::new();
+        for _ in 0..10_000 {
+            if rng.f64() < 0.6 || live.is_empty() {
+                if let Ok(a) = p.alloc(rng.f64_range(1e6, 1e9), Placement::FirstFit) {
+                    live.push(a.id);
+                }
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let id = live.swap_remove(i);
+                p.free(id).unwrap();
+            }
+        }
+        black_box(p.used())
+    });
+
+    // --- workload generation -----------------------------------------------
+    let mut g = BenchGroup::new("workloads").with_config(BenchConfig { warmup_iters: 2, iters: 10 });
+    g.bench("working-set trace 100k accesses", || {
+        WorkingSetSweep { accesses: 100_000, ..Default::default() }.trace(1e12).accesses.len()
+    });
+    g.bench("zipf draw x 100k (n=1e9)", || {
+        let mut rng = Rng::new(5);
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc = acc.wrapping_add(rng.zipf(1_000_000_000, 0.9));
+        }
+        acc
+    });
+}

@@ -1,0 +1,61 @@
+//! Bench T1 — regenerates Table 1 from the link models and benchmarks the
+//! per-link latency model across message sizes (the numbers behind the
+//! table's latency column).
+//!
+//! Run with: `cargo bench --bench table1_links`
+
+use scalepool::bench::{BenchConfig, BenchGroup};
+use scalepool::experiments::table1;
+use scalepool::fabric::LinkKind;
+
+fn main() {
+    let rows = table1::run_table1();
+    print!("{}", table1::render(&rows));
+
+    // per-link message-latency curves (the model behind the table)
+    println!("\nmessage latency by size (one link, one way):");
+    let kinds = [
+        LinkKind::NvLink5,
+        LinkKind::UaLink,
+        LinkKind::CxlCoherent,
+        LinkKind::CxlCapacity,
+        LinkKind::PcieGen5,
+        LinkKind::InfiniBandNdr,
+    ];
+    print!("{:>28}", "bytes");
+    for k in kinds {
+        print!("{:>14}", k.name().split_whitespace().next().unwrap());
+    }
+    println!();
+    for bytes in [64.0, 256.0, 4096.0, 65536.0, 1048576.0] {
+        print!("{bytes:>28}");
+        for k in kinds {
+            print!("{:>12.0}ns", k.params().message_latency_ns(bytes));
+        }
+        println!();
+    }
+
+    // packetization efficiency (the flit-size story of §2)
+    println!("\npacketization efficiency (payload/wire) at 64 B vs 64 KiB:");
+    for k in kinds {
+        let p = k.params();
+        println!(
+            "  {:<28} {:.2} -> {:.2}",
+            k.name(),
+            p.flit.efficiency(64.0),
+            p.flit.efficiency(65536.0)
+        );
+    }
+
+    let mut g = BenchGroup::new("link model hot path").with_config(BenchConfig { warmup_iters: 10, iters: 100 });
+    g.bench("message_latency_ns x 6 links x 5 sizes", || {
+        let mut acc = 0.0;
+        for k in kinds {
+            let p = k.params();
+            for b in [64.0, 256.0, 4096.0, 65536.0, 1048576.0] {
+                acc += p.message_latency_ns(b);
+            }
+        }
+        acc
+    });
+}

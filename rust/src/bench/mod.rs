@@ -1,0 +1,115 @@
+//! Hand-rolled micro-benchmark runner (criterion is not in the offline
+//! vendor set): warmup, timed iterations, and a mean/σ/p50/p99 report.
+//! Used by the `rust/benches/*` binaries (`cargo bench` with
+//! `harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 20 }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12}/iter  (σ {:>10}, p99 {:>12}, n={})",
+            self.name,
+            crate::util::units::fmt_ns(s.mean),
+            crate::util::units::fmt_ns(s.std),
+            crate::util::units::fmt_ns(s.p99),
+            s.n
+        )
+    }
+}
+
+/// Time `f` under `cfg`; the closure's return value is black-boxed.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult { name: name.to_string(), summary: Summary::from(samples) }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run a group of benches and print a header + rows (the bench binaries'
+/// common skeleton).
+pub struct BenchGroup {
+    title: String,
+    results: Vec<BenchResult>,
+    cfg: BenchConfig,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> BenchGroup {
+        println!("\n=== {title} ===");
+        BenchGroup { title: title.to_string(), results: Vec::new(), cfg: BenchConfig::default() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> &mut Self {
+        let r = bench(name, self.cfg, f);
+        println!("{}", r.report());
+        self.results.push(r);
+        self
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", BenchConfig { warmup_iters: 1, iters: 5 }, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Transformer model description: parameter counts, FLOPs and
+//! activation/communication volumes per layer — the inputs the execution
+//! model consumes.
+
+/// A decoder-only transformer workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LlmModel {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Global batch size in sequences.
+    pub global_batch: usize,
+    /// MLP expansion factor (4 for GPT-family).
+    pub mlp_mult: usize,
+}
+
+impl LlmModel {
+    /// Total parameter count (weights only, untied embedding + head).
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.layers as f64;
+        let v = self.vocab as f64;
+        let m = self.mlp_mult as f64;
+        // per layer: qkv 3h^2 + proj h^2 + mlp 2*m*h^2 + ln ~ 4h
+        let per_layer = (4.0 + 2.0 * m) * h * h + 8.0 * h;
+        l * per_layer + 2.0 * v * h + self.seq as f64 * h
+    }
+
+    /// Forward FLOPs for one token through one layer (2 FLOPs per MAC).
+    pub fn fwd_flops_per_token_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        let s = self.seq as f64;
+        let m = self.mlp_mult as f64;
+        // matmuls: qkv 3h^2, attn-out h^2, mlp 2*m*h^2  -> 2*(4+2m)h^2
+        // attention scores+values: 2 * 2 * s * h
+        2.0 * (4.0 + 2.0 * m) * h * h + 4.0 * s * h
+    }
+
+    /// Forward FLOPs for one full sequence through the whole model
+    /// (excluding the LM head).
+    pub fn fwd_flops_per_seq(&self) -> f64 {
+        self.fwd_flops_per_token_layer() * self.seq as f64 * self.layers as f64
+    }
+
+    /// LM-head FLOPs per sequence.
+    pub fn head_flops_per_seq(&self) -> f64 {
+        2.0 * self.seq as f64 * self.hidden as f64 * self.vocab as f64
+    }
+
+    /// Activation bytes crossing a pipeline-stage boundary per microbatch
+    /// of `mb` sequences (fp16/bf16 activations).
+    pub fn boundary_bytes(&self, mb: usize) -> f64 {
+        2.0 * mb as f64 * self.seq as f64 * self.hidden as f64
+    }
+
+    /// Bytes all-reduced per layer by tensor parallelism, per microbatch
+    /// (two all-reduces in fwd, two in bwd — Megatron-style; this is the
+    /// per-all-reduce buffer size).
+    pub fn tp_allreduce_bytes(&self, mb: usize) -> f64 {
+        2.0 * mb as f64 * self.seq as f64 * self.hidden as f64
+    }
+
+    /// Gradient bytes per data-parallel replica (fp16 grads).
+    pub fn grad_bytes(&self) -> f64 {
+        2.0 * self.param_count()
+    }
+
+    /// Memory footprint of weights + optimizer state per replica, bytes
+    /// (fp16 weights + fp32 master + two fp32 Adam moments = 18 B/param).
+    pub fn state_bytes(&self) -> f64 {
+        18.0 * self.param_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpt3ish() -> LlmModel {
+        LlmModel {
+            name: "gpt3".into(),
+            layers: 96,
+            hidden: 12288,
+            heads: 96,
+            seq: 2048,
+            vocab: 50257,
+            global_batch: 1536,
+            mlp_mult: 4,
+        }
+    }
+
+    #[test]
+    fn gpt3_parameter_count_near_175b() {
+        let p = gpt3ish().param_count();
+        assert!(p > 170e9 && p < 180e9, "gpt-3 params {p:.3e}");
+    }
+
+    #[test]
+    fn fwd_flops_consistent_with_6nd_rule() {
+        // fwd+bwd ~ 6 * params * tokens; fwd alone ~ 2 * params * tokens
+        let m = gpt3ish();
+        let per_token = m.fwd_flops_per_seq() / m.seq as f64 + m.head_flops_per_seq() / m.seq as f64;
+        let rule = 2.0 * m.param_count();
+        let ratio = per_token / rule;
+        assert!(ratio > 0.9 && ratio < 1.25, "flops/token vs 2N: {ratio}");
+    }
+
+    #[test]
+    fn boundary_bytes_scale_with_microbatch() {
+        let m = gpt3ish();
+        assert_eq!(m.boundary_bytes(4), 4.0 * m.boundary_bytes(1));
+    }
+
+    #[test]
+    fn state_dominates_grads() {
+        let m = gpt3ish();
+        assert!(m.state_bytes() == 9.0 * m.grad_bytes());
+    }
+}

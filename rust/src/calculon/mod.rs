@@ -1,0 +1,14 @@
+//! High-level LLM training co-design model — our reimplementation of the
+//! methodology the paper borrows from Calculon [41]: an analytic model of
+//! one training step under tensor/pipeline/data parallelism, producing the
+//! {communication, computation, other} breakdown Figure 6 reports.
+
+pub mod llm;
+pub mod parallelism;
+pub mod execution;
+pub mod presets;
+
+pub use execution::{Breakdown, ExecutionModel, TrainingEstimate};
+pub use llm::LlmModel;
+pub use parallelism::Parallelism;
+pub use presets::paper_workloads;

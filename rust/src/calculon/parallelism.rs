@@ -1,0 +1,108 @@
+//! Parallelism mapping: TP x PP x DP onto racks of accelerators, with the
+//! rack-boundary analysis that decides which traffic stays on XLink and
+//! which crosses the inter-cluster network (IB in the baseline, CXL in
+//! ScalePool).
+
+/// A 3-way parallelism configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Tensor-parallel degree (always mapped inside a rack).
+    pub tp: usize,
+    /// Pipeline-parallel degree.
+    pub pp: usize,
+    /// Data-parallel degree.
+    pub dp: usize,
+    /// Microbatch size (sequences).
+    pub microbatch: usize,
+}
+
+impl Parallelism {
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Microbatches per step per pipeline given the global batch.
+    pub fn microbatches(&self, global_batch: usize) -> usize {
+        (global_batch / (self.dp * self.microbatch)).max(1)
+    }
+
+    /// Pipeline stages resident per rack of `rack_size` accelerators
+    /// (TP groups are never split across racks).
+    pub fn stages_per_rack(&self, rack_size: usize) -> usize {
+        (rack_size / self.tp).max(1).min(self.pp)
+    }
+
+    /// Number of pipeline-stage boundaries that cross a rack boundary.
+    pub fn cross_rack_boundaries(&self, rack_size: usize) -> usize {
+        let spr = self.stages_per_rack(rack_size);
+        if self.pp <= spr {
+            0
+        } else {
+            self.pp.div_ceil(spr) - 1
+        }
+    }
+
+    /// Does the data-parallel all-reduce cross racks? It does whenever the
+    /// job spans more than one rack: replica packing is not rack-aligned,
+    /// so DP ring neighbors land in different racks.
+    pub fn dp_crosses_racks(&self, rack_size: usize) -> bool {
+        self.dp > 1 && self.gpus() > rack_size
+    }
+
+    /// Racks needed for the whole job.
+    pub fn racks_needed(&self, rack_size: usize) -> usize {
+        (self.gpus() as f64 / rack_size as f64).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NVL72: usize = 72;
+
+    #[test]
+    fn gpu_accounting() {
+        let p = Parallelism { tp: 8, pp: 8, dp: 16, microbatch: 1 };
+        assert_eq!(p.gpus(), 1024);
+        assert_eq!(p.racks_needed(NVL72), 15);
+    }
+
+    #[test]
+    fn microbatch_count() {
+        let p = Parallelism { tp: 8, pp: 8, dp: 16, microbatch: 2 };
+        assert_eq!(p.microbatches(1536), 48);
+    }
+
+    #[test]
+    fn stage_rack_mapping() {
+        // tp=8 -> 9 stages fit per 72-GPU rack
+        let p = Parallelism { tp: 8, pp: 16, dp: 1, microbatch: 1 };
+        assert_eq!(p.stages_per_rack(NVL72), 9);
+        assert_eq!(p.cross_rack_boundaries(NVL72), 1);
+    }
+
+    #[test]
+    fn small_pipeline_stays_in_rack() {
+        let p = Parallelism { tp: 8, pp: 8, dp: 4, microbatch: 1 };
+        assert_eq!(p.cross_rack_boundaries(NVL72), 0, "8 stages x tp8 = 64 GPUs fit one rack");
+        // 4 replicas x 64 GPUs = 256 GPUs > one rack: DP crosses racks
+        assert!(p.dp_crosses_racks(NVL72));
+        let single = Parallelism { tp: 8, pp: 8, dp: 1, microbatch: 1 };
+        assert!(!single.dp_crosses_racks(NVL72));
+    }
+
+    #[test]
+    fn big_replica_forces_cross_rack_dp() {
+        let p = Parallelism { tp: 8, pp: 12, dp: 8, microbatch: 1 };
+        assert!(p.dp_crosses_racks(NVL72));
+        assert!(p.cross_rack_boundaries(NVL72) >= 1);
+    }
+
+    #[test]
+    fn degenerate_no_pipeline() {
+        let p = Parallelism { tp: 8, pp: 1, dp: 2, microbatch: 1 };
+        assert_eq!(p.cross_rack_boundaries(NVL72), 0);
+        assert_eq!(p.stages_per_rack(NVL72), 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! The five LLM training workloads of Figure 6, with model hyperparameters
+//! and parallelism taken from each model's original paper (§6: "Simulation
+//! parameters, including GPU count, parallelism degree, batch size, and
+//! applied optimizations, adhere to the configurations originally
+//! presented in each model's initial research").
+
+use super::llm::LlmModel;
+use super::parallelism::Parallelism;
+
+/// One Figure 6 workload.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub model: LlmModel,
+    pub par: Parallelism,
+}
+
+/// GPT-3 175B (Brown et al. 2020; parallelism per Megatron-LM practice).
+pub fn gpt3_175b() -> Workload {
+    Workload {
+        model: LlmModel {
+            name: "GPT-3 175B".into(),
+            layers: 96,
+            hidden: 12288,
+            heads: 96,
+            seq: 2048,
+            vocab: 50257,
+            global_batch: 1536,
+            mlp_mult: 4,
+        },
+        par: Parallelism { tp: 8, pp: 8, dp: 16, microbatch: 1 },
+    }
+}
+
+/// Gopher 280B (Rae et al. 2021).
+pub fn gopher_280b() -> Workload {
+    Workload {
+        model: LlmModel {
+            name: "Gopher 280B".into(),
+            layers: 80,
+            hidden: 16384,
+            heads: 128,
+            seq: 2048,
+            vocab: 32000,
+            global_batch: 1536,
+            mlp_mult: 4,
+        },
+        par: Parallelism { tp: 8, pp: 10, dp: 24, microbatch: 1 },
+    }
+}
+
+/// Llama 3 405B (Grattafiori et al. 2024): 16k GPUs, seq 8192.
+pub fn llama3_405b() -> Workload {
+    Workload {
+        model: LlmModel {
+            name: "Llama-3 405B".into(),
+            layers: 126,
+            hidden: 16384,
+            heads: 128,
+            seq: 8192,
+            vocab: 128256,
+            global_batch: 2048,
+            mlp_mult: 4,
+        },
+        par: Parallelism { tp: 8, pp: 16, dp: 128, microbatch: 1 },
+    }
+}
+
+/// PaLM 540B (Chowdhery et al. 2023).
+pub fn palm_540b() -> Workload {
+    Workload {
+        model: LlmModel {
+            name: "PaLM 540B".into(),
+            layers: 118,
+            hidden: 18432,
+            heads: 48,
+            seq: 2048,
+            vocab: 256000,
+            global_batch: 2048,
+            mlp_mult: 4,
+        },
+        par: Parallelism { tp: 12, pp: 8, dp: 64, microbatch: 1 },
+    }
+}
+
+/// Megatron-Turing NLG 530B (Shoeybi et al. lineage; Smith et al. 2022
+/// deployment: tp=8, pp=35, batch 1920).
+pub fn megatron_530b() -> Workload {
+    Workload {
+        model: LlmModel {
+            name: "Megatron 530B".into(),
+            layers: 105,
+            hidden: 20480,
+            heads: 128,
+            seq: 2048,
+            vocab: 51200,
+            global_batch: 1920,
+            mlp_mult: 4,
+        },
+        par: Parallelism { tp: 8, pp: 35, dp: 12, microbatch: 1 },
+    }
+}
+
+/// All five Figure 6 workloads, in the paper's order.
+pub fn paper_workloads() -> Vec<Workload> {
+    vec![gpt3_175b(), gopher_280b(), llama3_405b(), palm_540b(), megatron_530b()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_workloads() {
+        assert_eq!(paper_workloads().len(), 5);
+    }
+
+    #[test]
+    fn parameter_counts_match_names() {
+        for (w, lo, hi) in [
+            (gpt3_175b(), 170e9, 180e9),
+            (gopher_280b(), 250e9, 295e9),
+            (llama3_405b(), 395e9, 430e9),
+            (palm_540b(), 480e9, 575e9),
+            (megatron_530b(), 520e9, 545e9),
+        ] {
+            let p = w.model.param_count();
+            assert!(p >= lo && p <= hi, "{}: {p:.3e} outside [{lo:.1e}, {hi:.1e}]", w.model.name);
+        }
+    }
+
+    #[test]
+    fn gpu_counts_plausible() {
+        for w in paper_workloads() {
+            let g = w.par.gpus();
+            assert!(g >= 1024 && g <= 16384, "{}: {g} GPUs", w.model.name);
+        }
+    }
+
+    #[test]
+    fn microbatches_positive() {
+        for w in paper_workloads() {
+            assert!(w.par.microbatches(w.model.global_batch) >= 1, "{}", w.model.name);
+        }
+    }
+}

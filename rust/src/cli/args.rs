@@ -1,0 +1,99 @@
+//! Minimal argument parser: one positional command plus `--key value` /
+//! `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    command: Option<String>,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(), // bare flag
+                };
+                out.opts.insert(key.to_string(), val);
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.command.as_deref()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let a = Args::parse(v(&["train", "--preset", "tiny", "--steps", "30", "--verbose"])).unwrap();
+        assert_eq!(a.command(), Some("train"));
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 30);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(v(&["fig6"])).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_or("preset", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(v(&["x", "--steps", "lots"])).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(Args::parse(v(&["a", "b"])).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::calculon::Parallelism;
+use crate::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use crate::coordinator::{EmulatedCluster, TrainJobScheduler};
+use crate::experiments;
+use crate::fabric::TopologyKind;
+use crate::runtime::{PjrtEngine, Trainer};
+use crate::sim::{MemSim, Transaction};
+use crate::util::units::{fmt_bytes, fmt_ns};
+use crate::util::{Json, Rng};
+use anyhow::{bail, Context, Result};
+
+pub fn table1() -> Result<()> {
+    let rows = experiments::run_table1();
+    print!("{}", experiments::table1::render(&rows));
+    Ok(())
+}
+
+pub fn fig6(args: &mut Args) -> Result<()> {
+    let res = experiments::run_fig6();
+    print!("{}", experiments::fig6::render(&res));
+    if let Some(path) = args.get("out") {
+        let rows: Vec<Json> = res
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::str(&r.name)),
+                    ("gpus", Json::num(r.gpus as f64)),
+                    ("baseline_total_s", Json::num(r.baseline.total_ns() / 1e9)),
+                    ("scalepool_total_s", Json::num(r.scalepool.total_ns() / 1e9)),
+                    ("speedup", Json::num(r.speedup())),
+                    ("comm_speedup", Json::num(r.comm_speedup())),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::arr(rows).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn fig7() -> Result<()> {
+    let rows = experiments::run_fig7();
+    print!("{}", experiments::fig7::render(&rows));
+    Ok(())
+}
+
+fn build_system(kind: &str, racks: usize, accels: usize) -> Result<crate::cluster::ScalePoolSystem> {
+    let inter = match kind {
+        "clos" => InterCluster::Cxl(TopologyKind::MultiLevelClos),
+        "torus" => InterCluster::Cxl(TopologyKind::Torus3d),
+        "dragonfly" => InterCluster::Cxl(TopologyKind::DragonFly),
+        "rdma" => InterCluster::RdmaInfiniBand,
+        other => bail!("unknown fabric kind '{other}' (clos|torus|dragonfly|rdma)"),
+    };
+    Ok(ScalePoolBuilder::new()
+        .racks(
+            (0..racks)
+                .map(|i| Rack::homogeneous(&format!("rack{i}"), Accelerator::b200(), accels).unwrap()),
+        )
+        .config(SystemConfig { inter, ..Default::default() })
+        .build())
+}
+
+pub fn topo(args: &mut Args) -> Result<()> {
+    let kind = args.get_or("kind", "clos");
+    let racks = args.usize_or("racks", 4).map_err(anyhow::Error::msg)?;
+    let accels = args.usize_or("accels", 8).map_err(anyhow::Error::msg)?;
+    let sys = build_system(&kind, racks, accels)?;
+    println!(
+        "fabric '{kind}': {} nodes, {} links, {} racks x {accels} accelerators, {} memory nodes",
+        sys.fabric.topo.nodes.len(),
+        sys.fabric.topo.links.len(),
+        sys.racks.len(),
+        sys.mem_nodes.len()
+    );
+    sys.fabric.topo.validate_radix().map_err(anyhow::Error::msg)?;
+    println!("radix check: ok; connected: {}", sys.fabric.topo.is_connected());
+    if racks >= 2 {
+        println!(
+            "intra-rack 64 B p2p: {}",
+            fmt_ns(sys.acc_latency_ns((0, 0), (0, 1), 64.0))
+        );
+        println!(
+            "inter-rack 64 B p2p: {}",
+            fmt_ns(sys.acc_latency_ns((0, 0), (1, 0), 64.0))
+        );
+        println!(
+            "inter-rack 1 MiB p2p: {}",
+            fmt_ns(sys.acc_latency_ns((0, 0), (1, 0), 1024.0 * 1024.0))
+        );
+        if let Some(rt) = sys.tier2_rt_ns(0) {
+            println!("tier-2 round trip (64 B): {}", fmt_ns(rt));
+        }
+        if let Some(bw) = sys.inter_rack_bw() {
+            println!("inter-rack path bandwidth: {:.1} GB/s", bw);
+        }
+    }
+    Ok(())
+}
+
+pub fn simulate(args: &mut Args) -> Result<()> {
+    let racks = args.usize_or("racks", 2).map_err(anyhow::Error::msg)?;
+    let accels = args.usize_or("accels", 8).map_err(anyhow::Error::msg)?;
+    let txs = args.usize_or("txs", 10_000).map_err(anyhow::Error::msg)?;
+    let bytes = args.f64_or("bytes", 4096.0).map_err(anyhow::Error::msg)?;
+    let seed = args.usize_or("seed", 7).map_err(anyhow::Error::msg)? as u64;
+    let sys = build_system("clos", racks, accels)?;
+
+    let mut rng = Rng::new(seed);
+    let mut at = 0.0;
+    let all: Vec<_> = sys.racks.iter().flat_map(|r| r.acc_ids.iter().copied()).collect();
+    let txv: Vec<Transaction> = (0..txs)
+        .map(|_| {
+            at += rng.exp(1.0 / 50.0);
+            let src = all[rng.below(all.len() as u64) as usize];
+            let dst = if !sys.mem_nodes.is_empty() && rng.f64() < 0.3 {
+                sys.mem_nodes[rng.below(sys.mem_nodes.len() as u64) as usize]
+            } else {
+                let mut d = all[rng.below(all.len() as u64) as usize];
+                while d == src {
+                    d = all[rng.below(all.len() as u64) as usize];
+                }
+                d
+            };
+            Transaction { src, dst, at, bytes, device_ns: 130.0 }
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut sim = MemSim::new(&sys.fabric);
+    let rep = sim.run(txv);
+    let wall = t0.elapsed();
+    println!(
+        "simulated {} transactions of {} in {} simulated time",
+        rep.completed,
+        fmt_bytes(bytes),
+        fmt_ns(rep.makespan_ns)
+    );
+    println!(
+        "latency: mean {} min {} max {}",
+        fmt_ns(rep.latency.mean()),
+        fmt_ns(rep.latency.min()),
+        fmt_ns(rep.latency.max())
+    );
+    println!(
+        "engine: {} events in {:?} ({:.2} M events/s); peak link utilization {:.1}%",
+        rep.events,
+        wall,
+        rep.events as f64 / wall.as_secs_f64() / 1e6,
+        100.0 * sim.peak_utilization(rep.makespan_ns)
+    );
+    Ok(())
+}
+
+pub fn smoke(args: &mut Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let engine = PjrtEngine::cpu()?;
+    println!("PJRT platform: {} ({} devices)", engine.platform(), engine.device_count());
+    let exe = engine.load_hlo(&dir.join("smoke.hlo.txt"))?;
+    let x = crate::runtime::pjrt::lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2])?;
+    let y = crate::runtime::pjrt::lit_f32(&[1.0, 1.0, 1.0, 1.0], &[2, 2])?;
+    let out = engine.run(&exe, &[x, y])?;
+    let v = out[0].to_vec::<f32>()?;
+    anyhow::ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "smoke mismatch: {v:?}");
+    println!("smoke (Pallas tiled matmul via AOT HLO): {v:?} — OK");
+    Ok(())
+}
+
+pub fn train(args: &mut Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let steps = args.usize_or("steps", 30).map_err(anyhow::Error::msg)?;
+    let seed = args.usize_or("seed", 0).map_err(anyhow::Error::msg)? as i32;
+    let log_every = args.usize_or("log-every", 10).map_err(anyhow::Error::msg)?.max(1);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    let trainer = Trainer::load(&dir, &preset)
+        .with_context(|| format!("loading preset '{preset}' from {}", dir.display()))?;
+    let m = trainer.manifest().clone();
+    println!(
+        "preset {}: {:.1}M params, batch {} x seq {}, state {}",
+        m.preset,
+        m.param_count as f64 / 1e6,
+        m.batch,
+        m.seq,
+        fmt_bytes((m.param_count * 12) as f64)
+    );
+
+    // emulate the paper-scale deployment this model would train on
+    let cluster = EmulatedCluster::for_preset(
+        m.vocab,
+        768,
+        12,
+        12,
+        m.seq,
+        512,
+        Parallelism { tp: 8, pp: 4, dp: 16, microbatch: 1 },
+    );
+    let mut sched = TrainJobScheduler::new(trainer, cluster, 42);
+    sched.init(seed)?;
+
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < steps {
+        let chunk = log_every.min(steps - done);
+        sched.run(chunk)?;
+        done += chunk;
+        let log = sched.log();
+        let last = log.last().unwrap();
+        let window = &log[log.len().saturating_sub(chunk)..];
+        let avg_loss: f32 = window.iter().map(|l| l.loss).sum::<f32>() / window.len() as f32;
+        println!(
+            "step {:>5}  loss {:.4} (avg {:.4})  pjrt {}  emulated: baseline {} scalepool {}  speedup {:.2}x",
+            last.step,
+            last.loss,
+            avg_loss,
+            fmt_ns(last.compute_wall_ns as f64),
+            fmt_ns(last.baseline_step_ns),
+            fmt_ns(last.scalepool_step_ns),
+            sched.emulated_speedup()
+        );
+    }
+    let wall = t0.elapsed();
+    let log = sched.log();
+    println!(
+        "\ntrained {} steps in {:.1}s wall ({:.2}s/step); loss {:.4} -> {:.4}; emulated ScalePool speedup {:.2}x",
+        steps,
+        wall.as_secs_f64(),
+        wall.as_secs_f64() / steps as f64,
+        log.first().unwrap().loss,
+        log.last().unwrap().loss,
+        sched.emulated_speedup()
+    );
+
+    if let Some(path) = args.get("out") {
+        let rows: Vec<Json> = log
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("step", Json::num(l.step as f64)),
+                    ("loss", Json::num(l.loss as f64)),
+                    ("pjrt_ns", Json::num(l.compute_wall_ns as f64)),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::arr(rows).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

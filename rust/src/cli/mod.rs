@@ -1,0 +1,74 @@
+//! The `scalepool` CLI: hand-rolled argument parsing (clap is not in the
+//! offline vendor set) and the subcommands that drive the experiment
+//! harnesses, the topology tools, the event simulator and the PJRT
+//! training runtime.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+const USAGE: &str = "\
+scalepool — hybrid XLink-CXL fabric simulator + LLM co-design framework
+
+USAGE:
+    scalepool <COMMAND> [OPTIONS]
+
+COMMANDS:
+    table1                     Regenerate Table 1 (link characteristics)
+    fig6                       Regenerate Figure 6 (LLM training, 5 models)
+    fig7                       Regenerate Figure 7 (tiered-memory sweep)
+    topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
+                               Build a fabric and print its shape/latencies
+    simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
+                               Event-driven memory-access simulation
+    train     --preset <tiny|small25m|base100m> --steps <N> [--seed <N>]
+              [--artifacts <dir>] [--log-every <N>] [--out <file>]
+                               End-to-end PJRT training under the emulated
+                               cluster (hybrid emulation)
+    smoke     [--artifacts <dir>]
+                               Load + run the Pallas smoke artifact
+    help                       Show this message
+";
+
+/// Entry point: parse and dispatch. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let mut args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let cmd = match args.command() {
+        Some(c) => c.to_string(),
+        None => {
+            println!("{USAGE}");
+            return 0;
+        }
+    };
+    let result = match cmd.as_str() {
+        "table1" => commands::table1(),
+        "fig6" => commands::fig6(&mut args),
+        "fig7" => commands::fig7(),
+        "topo" => commands::topo(&mut args),
+        "simulate" => commands::simulate(&mut args),
+        "train" => commands::train(&mut args),
+        "smoke" => commands::smoke(&mut args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Accelerator device presets — the heterogeneous XPU population of §4
+//! (NVIDIA GPUs on NVLink; AMD GPUs, MTIA, Trainium, Inferentia, Maia,
+//! Gaudi on UALink).
+
+use crate::fabric::LinkKind;
+
+/// Device vendor (drives XLink interoperability rules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+    Meta,
+    Amazon,
+    Microsoft,
+    Intel,
+}
+
+/// An accelerator model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Accelerator {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    /// Dense bf16 throughput, TFLOP/s.
+    pub bf16_tflops: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: f64,
+    /// HBM bandwidth, bytes/ns (GB/s).
+    pub hbm_bw: f64,
+    /// Native XLink technology.
+    pub xlink: LinkKind,
+    /// Aggregate XLink bandwidth per device (one direction), bytes/ns.
+    pub xlink_bw: f64,
+}
+
+impl Accelerator {
+    /// NVIDIA B200 (one GPU of a GB200 superchip): the paper's baseline
+    /// rack is "36 GB200 modules, with 72 GPUs interconnected via NVLink 5".
+    pub const fn b200() -> Accelerator {
+        Accelerator {
+            name: "B200",
+            vendor: Vendor::Nvidia,
+            bf16_tflops: 2_250.0,
+            hbm_bytes: 192e9,
+            hbm_bw: 8_000.0,
+            xlink: LinkKind::NvLink5,
+            xlink_bw: 900.0,
+        }
+    }
+
+    pub const fn mi300x() -> Accelerator {
+        Accelerator {
+            name: "MI300X",
+            vendor: Vendor::Amd,
+            bf16_tflops: 1_300.0,
+            hbm_bytes: 192e9,
+            hbm_bw: 5_300.0,
+            xlink: LinkKind::UaLink,
+            xlink_bw: 448.0,
+        }
+    }
+
+    pub const fn gaudi3() -> Accelerator {
+        Accelerator {
+            name: "Gaudi3",
+            vendor: Vendor::Intel,
+            bf16_tflops: 1_800.0,
+            hbm_bytes: 128e9,
+            hbm_bw: 3_700.0,
+            xlink: LinkKind::UaLink,
+            xlink_bw: 600.0,
+        }
+    }
+
+    pub const fn trainium2() -> Accelerator {
+        Accelerator {
+            name: "Trainium2",
+            vendor: Vendor::Amazon,
+            bf16_tflops: 650.0,
+            hbm_bytes: 96e9,
+            hbm_bw: 2_900.0,
+            xlink: LinkKind::UaLink,
+            xlink_bw: 400.0,
+        }
+    }
+
+    pub const fn mtia2() -> Accelerator {
+        Accelerator {
+            name: "MTIA-2",
+            vendor: Vendor::Meta,
+            bf16_tflops: 354.0,
+            hbm_bytes: 128e9,
+            hbm_bw: 1_300.0,
+            xlink: LinkKind::UaLink,
+            xlink_bw: 300.0,
+        }
+    }
+
+    pub const fn maia100() -> Accelerator {
+        Accelerator {
+            name: "Maia-100",
+            vendor: Vendor::Microsoft,
+            bf16_tflops: 800.0,
+            hbm_bytes: 64e9,
+            hbm_bw: 1_800.0,
+            xlink: LinkKind::UaLink,
+            xlink_bw: 400.0,
+        }
+    }
+
+    /// Effective achievable fraction of peak FLOPs for transformer layers
+    /// (model FLOP utilization ceiling used by the calculon model).
+    pub fn mfu_ceiling(&self) -> f64 {
+        match self.vendor {
+            Vendor::Nvidia => 0.55,
+            Vendor::Amd => 0.50,
+            _ => 0.45,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvidia_is_nvlink_everyone_else_ualink() {
+        assert_eq!(Accelerator::b200().xlink, LinkKind::NvLink5);
+        for a in [
+            Accelerator::mi300x(),
+            Accelerator::gaudi3(),
+            Accelerator::trainium2(),
+            Accelerator::mtia2(),
+            Accelerator::maia100(),
+        ] {
+            assert_eq!(a.xlink, LinkKind::UaLink, "{} must be UALink", a.name);
+        }
+    }
+
+    #[test]
+    fn b200_matches_gb200_specs() {
+        let b = Accelerator::b200();
+        assert_eq!(b.hbm_bytes, 192e9);
+        assert_eq!(b.xlink_bw, 900.0); // NVLink5: 1.8 TB/s bidirectional
+    }
+
+    #[test]
+    fn mfu_ceiling_sane() {
+        for a in [Accelerator::b200(), Accelerator::mi300x(), Accelerator::mtia2()] {
+            let c = a.mfu_ceiling();
+            assert!(c > 0.2 && c < 0.8);
+        }
+    }
+}

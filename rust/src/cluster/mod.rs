@@ -1,0 +1,14 @@
+//! Accelerator-centric clusters (§4) and the full ScalePool system builder:
+//! accelerator presets, rack-scale XLink domains with interoperability
+//! rules (NVLink needs an NVIDIA component; NVLink+UALink cannot share a
+//! domain), and the CXL fabric joining clusters + tier-2 memory nodes.
+
+pub mod accelerator;
+pub mod xlink;
+pub mod rack;
+pub mod scalepool;
+
+pub use accelerator::{Accelerator, Vendor};
+pub use rack::Rack;
+pub use scalepool::{InterCluster, ScalePoolBuilder, ScalePoolSystem, SystemConfig};
+pub use xlink::{XlinkDomain, XlinkError};

@@ -1,0 +1,108 @@
+//! Rack = one accelerator-centric cluster: an XLink domain plus its fabric
+//! subgraph (accelerators hanging off the rack's XLink switch complex) and
+//! a CXL uplink port count for joining the inter-cluster fabric.
+
+use super::accelerator::Accelerator;
+use super::xlink::{XlinkDomain, XlinkError};
+use crate::fabric::{LinkKind, NodeId, NodeKind, Topology};
+
+/// A rack-scale accelerator cluster.
+#[derive(Clone, Debug)]
+pub struct Rack {
+    pub name: String,
+    pub domain: XlinkDomain,
+    /// Number of CXL ports the rack exposes to the inter-cluster fabric.
+    pub cxl_uplinks: usize,
+}
+
+impl Rack {
+    /// Homogeneous rack of `n` copies of `acc`.
+    pub fn homogeneous(name: &str, acc: Accelerator, n: usize) -> Result<Rack, XlinkError> {
+        let mut domain = XlinkDomain::new(acc.xlink);
+        for _ in 0..n {
+            domain.add(acc)?;
+        }
+        domain.validate()?;
+        Ok(Rack { name: name.to_string(), domain, cxl_uplinks: 8 })
+    }
+
+    /// The paper's baseline rack: GB200 NVL72 (36 GB200 modules = 72 GPUs).
+    pub fn nvl72(name: &str) -> Rack {
+        Rack::homogeneous(name, Accelerator::b200(), 72).expect("NVL72 construction")
+    }
+
+    pub fn size(&self) -> usize {
+        self.domain.members.len()
+    }
+
+    /// Materialize this rack into a topology: accelerators around the
+    /// XLink switch, plus `cxl_uplinks` CXL bridge ports on the switch.
+    /// Returns (accelerator node ids, xlink switch id).
+    pub fn materialize(&self, topo: &mut Topology) -> (Vec<NodeId>, NodeId) {
+        let sw = topo.add_switch(
+            crate::fabric::SwitchParams::for_link(self.domain.kind),
+            format!("{}/xswitch", self.name),
+        );
+        let mut ids = Vec::with_capacity(self.size());
+        for (i, a) in self.domain.members.iter().enumerate() {
+            let id = topo.add_node(NodeKind::Accelerator, format!("{}/{}{}", self.name, a.name, i));
+            topo.connect(id, sw, self.domain.kind);
+            ids.push(id);
+        }
+        (ids, sw)
+    }
+
+    /// Tier-1 local capacity visible inside the rack, bytes.
+    pub fn hbm_capacity(&self) -> f64 {
+        self.domain.total_hbm()
+    }
+
+    /// Is this rack reachable over a given inter-cluster technology?
+    /// (Everything speaks CXL through the abstraction layer; XLink does
+    /// not cross rack boundaries.)
+    pub fn supports_uplink(&self, kind: LinkKind) -> bool {
+        kind.is_cxl() || kind == LinkKind::InfiniBandNdr || kind == LinkKind::PcieGen5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvl72_has_72_gpus_and_13_8tb() {
+        let r = Rack::nvl72("rack0");
+        assert_eq!(r.size(), 72);
+        assert!((r.hbm_capacity() - 72.0 * 192e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn materialize_produces_single_hop() {
+        let r = Rack::nvl72("rack0");
+        let mut t = Topology::new();
+        let (accs, sw) = r.materialize(&mut t);
+        assert_eq!(accs.len(), 72);
+        assert_eq!(t.degree(sw), 72);
+        assert!(t.is_connected());
+        assert!(t.validate_radix().is_ok());
+    }
+
+    #[test]
+    fn xlink_never_uplinks_between_racks() {
+        let r = Rack::nvl72("rack0");
+        assert!(!r.supports_uplink(LinkKind::NvLink5));
+        assert!(!r.supports_uplink(LinkKind::UaLink));
+        assert!(r.supports_uplink(LinkKind::CxlCoherent));
+        assert!(r.supports_uplink(LinkKind::InfiniBandNdr));
+    }
+
+    #[test]
+    fn heterogeneous_ualink_rack() {
+        let mut domain = XlinkDomain::new(LinkKind::UaLink);
+        domain.add(Accelerator::mi300x()).unwrap();
+        domain.add(Accelerator::gaudi3()).unwrap();
+        domain.validate().unwrap();
+        let r = Rack { name: "ua0".into(), domain, cxl_uplinks: 4 };
+        assert_eq!(r.size(), 2);
+    }
+}

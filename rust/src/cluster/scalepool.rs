@@ -1,0 +1,332 @@
+//! The full ScalePool system: racks joined by an inter-cluster fabric
+//! (hierarchical CXL for ScalePool; InfiniBand for the RDMA baseline),
+//! plus tier-2 memory nodes on the CXL side (Figure 2 / Figure 4).
+
+use super::rack::Rack;
+use crate::fabric::{Fabric, LinkKind, NodeId, NodeKind, Topology, TopologyKind};
+
+/// How clusters are joined.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InterCluster {
+    /// Scale-out baseline: InfiniBand NDR + RDMA software stack.
+    RdmaInfiniBand,
+    /// ScalePool: hierarchical CXL fabric of the given shape.
+    Cxl(TopologyKind),
+}
+
+/// System construction parameters.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub inter: InterCluster,
+    /// Tier-2 memory nodes attached to the CXL fabric.
+    pub mem_nodes: usize,
+    /// Capacity per memory node, bytes.
+    pub mem_node_capacity: f64,
+    /// CXL spine switches (Clos) / torus dims / dragonfly groups.
+    pub fabric_width: usize,
+    /// Give every accelerator its own CXL port into the fabric (the
+    /// paper's Figure 2/5b: CXL logic embedded in accelerators beside the
+    /// XLink controller). When false, only the rack switch uplinks.
+    pub direct_cxl_ports: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 8,
+            mem_node_capacity: 8.0 * 512e9, // 8 modules of 512 GB per node
+            fabric_width: 4,
+            direct_cxl_ports: true,
+        }
+    }
+}
+
+/// A rack materialized in the system topology.
+#[derive(Clone, Debug)]
+pub struct RackView {
+    pub rack: Rack,
+    pub acc_ids: Vec<NodeId>,
+    pub switch_id: NodeId,
+    /// The rack's uplink bridge port into the inter-cluster fabric.
+    pub uplink_id: NodeId,
+}
+
+/// The assembled system.
+#[derive(Debug)]
+pub struct ScalePoolSystem {
+    pub fabric: Fabric,
+    pub racks: Vec<RackView>,
+    pub mem_nodes: Vec<NodeId>,
+    pub config: SystemConfig,
+}
+
+/// Builder.
+#[derive(Default)]
+pub struct ScalePoolBuilder {
+    racks: Vec<Rack>,
+    config: Option<SystemConfig>,
+}
+
+impl ScalePoolBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn rack(mut self, rack: Rack) -> Self {
+        self.racks.push(rack);
+        self
+    }
+
+    pub fn racks(mut self, racks: impl IntoIterator<Item = Rack>) -> Self {
+        self.racks.extend(racks);
+        self
+    }
+
+    pub fn config(mut self, config: SystemConfig) -> Self {
+        self.config = Some(config);
+        self
+    }
+
+    /// Assemble the topology and routing.
+    pub fn build(self) -> ScalePoolSystem {
+        let config = self.config.unwrap_or_default();
+        let mut topo = Topology::new();
+
+        // 1. racks (intra-cluster XLink domains)
+        let mut views: Vec<RackView> = Vec::new();
+        for rack in self.racks {
+            let (acc_ids, switch_id) = rack.materialize(&mut topo);
+            views.push(RackView { rack, acc_ids, switch_id, uplink_id: switch_id });
+        }
+
+        // 2. inter-cluster fabric
+        let inter_kind = match config.inter {
+            InterCluster::RdmaInfiniBand => LinkKind::InfiniBandNdr,
+            InterCluster::Cxl(_) => LinkKind::CxlCoherent,
+        };
+        let leafs: Vec<NodeId> = match config.inter {
+            InterCluster::RdmaInfiniBand => {
+                // two-level IB fat tree: one leaf per rack + spines
+                let spines: Vec<NodeId> = (0..config.fabric_width.max(1))
+                    .map(|i| {
+                        topo.add_switch(
+                            crate::fabric::SwitchParams::for_link(inter_kind),
+                            format!("ib/spine{i}"),
+                        )
+                    })
+                    .collect();
+                views
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| {
+                        let leaf = topo.add_switch(
+                            crate::fabric::SwitchParams::for_link(inter_kind),
+                            format!("ib/leaf{i}"),
+                        );
+                        for &s in &spines {
+                            topo.connect(leaf, s, inter_kind);
+                        }
+                        leaf
+                    })
+                    .collect()
+            }
+            InterCluster::Cxl(TopologyKind::MultiLevelClos) | InterCluster::Cxl(TopologyKind::SingleHop) => {
+                let spines: Vec<NodeId> = (0..config.fabric_width.max(1))
+                    .map(|i| {
+                        topo.add_switch(
+                            crate::fabric::SwitchParams::for_link(inter_kind),
+                            format!("cxl/spine{i}"),
+                        )
+                    })
+                    .collect();
+                views
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| {
+                        let leaf = topo.add_switch(
+                            crate::fabric::SwitchParams::for_link(inter_kind),
+                            format!("cxl/leaf{i}"),
+                        );
+                        for &s in &spines {
+                            topo.connect(leaf, s, inter_kind);
+                        }
+                        leaf
+                    })
+                    .collect()
+            }
+            InterCluster::Cxl(TopologyKind::Torus3d) => {
+                let n = views.len().max(config.mem_nodes);
+                let x = (n as f64).cbrt().ceil() as usize;
+                let (sub, ids) = Topology::torus3d((x.max(2), x.max(2), x.max(1)), inter_kind, "cxl");
+                let off = topo.merge(&sub);
+                ids.iter().map(|&i| i + off).collect()
+            }
+            InterCluster::Cxl(TopologyKind::DragonFly) => {
+                let groups = config.fabric_width.max(2);
+                let per = ((views.len() + config.mem_nodes) as f64 / groups as f64).ceil() as usize;
+                let (sub, gids) = Topology::dragonfly(groups, per.max(2), inter_kind, "cxl");
+                let off = topo.merge(&sub);
+                gids.into_iter().flatten().map(|i| i + off).collect()
+            }
+        };
+
+        // 3. attach rack uplinks round-robin over fabric edge switches;
+        // with direct_cxl_ports every accelerator also gets its own CXL
+        // port into its rack's edge switch (Figure 2: per-accelerator CXL
+        // logic beside the XLink controller)
+        let direct = config.direct_cxl_ports && matches!(config.inter, InterCluster::Cxl(_));
+        for (i, v) in views.iter_mut().enumerate() {
+            let leaf = leafs[i % leafs.len()];
+            topo.connect(v.switch_id, leaf, inter_kind);
+            v.uplink_id = leaf;
+            if direct {
+                for &acc in &v.acc_ids {
+                    topo.connect(acc, leaf, LinkKind::CxlCoherent);
+                }
+            }
+        }
+
+        // 4. tier-2 memory nodes on the CXL fabric (capacity-oriented
+        // links); the RDMA baseline gets none — its overflow path is
+        // remote CPU memory over IB
+        let mut mem_nodes = Vec::new();
+        if matches!(config.inter, InterCluster::Cxl(_)) {
+            for m in 0..config.mem_nodes {
+                let id = topo.add_node(NodeKind::MemoryNode, format!("memnode{m}"));
+                let leaf = leafs[(views.len() + m) % leafs.len()];
+                topo.connect(id, leaf, LinkKind::CxlCapacity);
+                mem_nodes.push(id);
+            }
+        }
+
+        let fabric = Fabric::new(topo);
+        ScalePoolSystem { fabric, racks: views, mem_nodes, config }
+    }
+}
+
+impl ScalePoolSystem {
+    /// Total accelerators.
+    pub fn accelerator_count(&self) -> usize {
+        self.racks.iter().map(|r| r.acc_ids.len()).sum()
+    }
+
+    /// Tier-1 capacity of one rack (bytes) — the Fig 7 "cluster" threshold.
+    pub fn rack_hbm_capacity(&self, rack: usize) -> f64 {
+        self.racks[rack].rack.hbm_capacity()
+    }
+
+    /// Total tier-2 pool capacity, bytes.
+    pub fn tier2_capacity(&self) -> f64 {
+        self.mem_nodes.len() as f64 * self.config.mem_node_capacity
+    }
+
+    /// One-way latency between accelerator `a` of rack `i` and accelerator
+    /// `b` of rack `j` for a message of `bytes`.
+    pub fn acc_latency_ns(&self, (i, a): (usize, usize), (j, b): (usize, usize), bytes: f64) -> f64 {
+        self.fabric
+            .latency_ns(self.racks[i].acc_ids[a], self.racks[j].acc_ids[b], bytes)
+            .expect("connected system")
+    }
+
+    /// Round-trip latency from an accelerator to the nearest tier-2 memory
+    /// node for a 64 B transaction (request + data).
+    pub fn tier2_rt_ns(&self, rack: usize) -> Option<f64> {
+        let src = self.racks[rack].acc_ids[0];
+        self.mem_nodes
+            .iter()
+            .filter_map(|&m| self.fabric.latency_ns(src, m, 64.0))
+            .map(|l| 2.0 * l)
+            .fold(None, |acc: Option<f64>, l| Some(acc.map_or(l, |a| a.min(l))))
+    }
+
+    /// Round-trip latency to a peer accelerator in another rack (64 B,
+    /// coherent access pattern).
+    pub fn inter_rack_rt_ns(&self) -> Option<f64> {
+        if self.racks.len() < 2 {
+            return None;
+        }
+        Some(2.0 * self.acc_latency_ns((0, 0), (1, 0), 64.0))
+    }
+
+    /// Effective inter-rack bandwidth per rack uplink for large messages,
+    /// bytes/ns.
+    pub fn inter_rack_bw(&self) -> Option<f64> {
+        if self.racks.len() < 2 {
+            return None;
+        }
+        let p = self.fabric.path(self.racks[0].acc_ids[0], self.racks[1].acc_ids[0])?;
+        Some(self.fabric.path_bandwidth(&p, 1e9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys(inter: InterCluster, racks: usize) -> ScalePoolSystem {
+        let mut b = ScalePoolBuilder::new();
+        for i in 0..racks {
+            b = b.rack(Rack::homogeneous(&format!("rack{i}"), super::super::Accelerator::b200(), 8).unwrap());
+        }
+        b.config(SystemConfig { inter, ..Default::default() }).build()
+    }
+
+    #[test]
+    fn cxl_clos_system_connected() {
+        let s = sys(InterCluster::Cxl(TopologyKind::MultiLevelClos), 4);
+        assert!(s.fabric.topo.is_connected());
+        assert_eq!(s.accelerator_count(), 32);
+        assert_eq!(s.mem_nodes.len(), 8);
+        assert!(s.fabric.topo.validate_radix().is_ok());
+    }
+
+    #[test]
+    fn rdma_baseline_has_no_memory_nodes() {
+        let s = sys(InterCluster::RdmaInfiniBand, 4);
+        assert!(s.mem_nodes.is_empty());
+        assert!(s.fabric.topo.is_connected());
+    }
+
+    #[test]
+    fn intra_rack_beats_inter_rack() {
+        let s = sys(InterCluster::Cxl(TopologyKind::MultiLevelClos), 2);
+        let intra = s.acc_latency_ns((0, 0), (0, 1), 4096.0);
+        let inter = s.acc_latency_ns((0, 0), (1, 0), 4096.0);
+        assert!(intra < inter, "intra {intra} !< inter {inter}");
+    }
+
+    #[test]
+    fn cxl_inter_rack_beats_ib_inter_rack() {
+        // hardware path only; RDMA software overhead comes on top in
+        // collective::rdma — even the raw wires favor CXL here
+        let c = sys(InterCluster::Cxl(TopologyKind::MultiLevelClos), 2);
+        let r = sys(InterCluster::RdmaInfiniBand, 2);
+        let lc = c.acc_latency_ns((0, 0), (1, 0), 4096.0);
+        let lr = r.acc_latency_ns((0, 0), (1, 0), 4096.0);
+        assert!(lc < lr, "cxl {lc} !< ib {lr}");
+    }
+
+    #[test]
+    fn tier2_reachable_and_fast() {
+        let s = sys(InterCluster::Cxl(TopologyKind::MultiLevelClos), 2);
+        let rt = s.tier2_rt_ns(0).unwrap();
+        // "tens to hundreds of nanoseconds" plus fabric: must be < 2 µs
+        assert!(rt < 2_000.0, "tier-2 RT {rt} ns");
+    }
+
+    #[test]
+    fn torus_and_dragonfly_build_connected() {
+        for kind in [TopologyKind::Torus3d, TopologyKind::DragonFly] {
+            let s = sys(InterCluster::Cxl(kind), 4);
+            assert!(s.fabric.topo.is_connected(), "{kind:?} disconnected");
+            assert!(s.inter_rack_rt_ns().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn tier2_capacity_scales_with_nodes() {
+        let s = sys(InterCluster::Cxl(TopologyKind::MultiLevelClos), 2);
+        assert!((s.tier2_capacity() - 8.0 * 8.0 * 512e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! XLink domain rules (§2/§4): single-hop scalability limits and the
+//! NVLink/UALink interoperability wall that CXL resolves at the
+//! inter-cluster layer.
+
+use super::accelerator::{Accelerator, Vendor};
+use crate::fabric::LinkKind;
+
+/// Why a device cannot join an XLink domain.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum XlinkError {
+    #[error("mixing {0:?} and {1:?} in one XLink domain: incompatible PHY/flit formats")]
+    MixedLink(LinkKind, LinkKind),
+    #[error("NVLink domain requires at least one NVIDIA component (NVLink Fusion policy)")]
+    NvlinkNeedsNvidia,
+    #[error("domain full: {0} accelerators is the practical per-rack limit")]
+    DomainFull(usize),
+}
+
+/// A single-hop XLink domain (one rack-scale cluster's interconnect).
+#[derive(Clone, Debug)]
+pub struct XlinkDomain {
+    pub kind: LinkKind,
+    pub members: Vec<Accelerator>,
+    /// Practical per-rack limit (72 for both NVLink and UALink racks per
+    /// §4, despite UALink's theoretical 1,024).
+    pub max_members: usize,
+}
+
+impl XlinkDomain {
+    pub fn new(kind: LinkKind) -> XlinkDomain {
+        assert!(kind.is_xlink(), "XLink domain over a non-XLink technology");
+        XlinkDomain { kind, members: Vec::new(), max_members: 72 }
+    }
+
+    /// UALink's theoretical single-hop scale.
+    pub const UALINK_THEORETICAL_MAX: usize = 1024;
+
+    /// Try to add an accelerator, enforcing the §4 rules.
+    pub fn add(&mut self, acc: Accelerator) -> Result<(), XlinkError> {
+        if acc.xlink != self.kind {
+            return Err(XlinkError::MixedLink(self.kind, acc.xlink));
+        }
+        if self.members.len() >= self.max_members {
+            return Err(XlinkError::DomainFull(self.max_members));
+        }
+        self.members.push(acc);
+        Ok(())
+    }
+
+    /// Validate vendor policy: an NVLink domain must include >= 1 NVIDIA
+    /// component ("NVIDIA's strategic policy still mandates inclusion of at
+    /// least one NVIDIA component within NVLink-connected system").
+    pub fn validate(&self) -> Result<(), XlinkError> {
+        if self.kind == LinkKind::NvLink5
+            && !self.members.iter().any(|a| a.vendor == Vendor::Nvidia)
+            && !self.members.is_empty()
+        {
+            return Err(XlinkError::NvlinkNeedsNvidia);
+        }
+        Ok(())
+    }
+
+    /// Aggregate HBM capacity of the domain, bytes (the cluster's tier-1
+    /// local capacity).
+    pub fn total_hbm(&self) -> f64 {
+        self.members.iter().map(|a| a.hbm_bytes).sum()
+    }
+
+    /// Aggregate bf16 compute, TFLOP/s.
+    pub fn total_tflops(&self) -> f64 {
+        self.members.iter().map(|a| a.bf16_tflops).sum()
+    }
+
+    /// Per-device XLink bandwidth (bottleneck member), bytes/ns.
+    pub fn per_device_bw(&self) -> f64 {
+        self.members.iter().map(|a| a.xlink_bw).fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_rack_of_72_b200() {
+        let mut d = XlinkDomain::new(LinkKind::NvLink5);
+        for _ in 0..72 {
+            d.add(Accelerator::b200()).unwrap();
+        }
+        assert!(d.validate().is_ok());
+        assert_eq!(d.total_hbm(), 72.0 * 192e9);
+        assert_eq!(d.add(Accelerator::b200()), Err(XlinkError::DomainFull(72)));
+    }
+
+    #[test]
+    fn cannot_mix_nvlink_and_ualink() {
+        let mut d = XlinkDomain::new(LinkKind::NvLink5);
+        d.add(Accelerator::b200()).unwrap();
+        assert_eq!(
+            d.add(Accelerator::mi300x()),
+            Err(XlinkError::MixedLink(LinkKind::NvLink5, LinkKind::UaLink))
+        );
+    }
+
+    #[test]
+    fn ualink_mixes_vendors_freely() {
+        let mut d = XlinkDomain::new(LinkKind::UaLink);
+        d.add(Accelerator::mi300x()).unwrap();
+        d.add(Accelerator::gaudi3()).unwrap();
+        d.add(Accelerator::trainium2()).unwrap();
+        d.add(Accelerator::mtia2()).unwrap();
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn cxl_is_not_an_xlink_domain() {
+        XlinkDomain::new(LinkKind::CxlCoherent);
+    }
+
+    #[test]
+    fn bottleneck_bandwidth() {
+        let mut d = XlinkDomain::new(LinkKind::UaLink);
+        d.add(Accelerator::mi300x()).unwrap(); // 448
+        d.add(Accelerator::mtia2()).unwrap(); // 300
+        assert_eq!(d.per_device_bw(), 300.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Directory-based MESI coherence engine — the protocol semantics that
+//! CXL.cache contributes to tier-1 (§4: "accelerators can directly access
+//! remote memory at instruction-level granularity without software
+//! involvement").
+//!
+//! One `Directory` tracks the global state of cache blocks across N agents
+//! (accelerators). `read`/`write` drive the state machine and return the
+//! *message count breakdown* of the transaction, from which the latency
+//! model derives coherent-access cost (each message crosses the fabric).
+
+use std::collections::HashMap;
+
+/// Per-agent MESI state of a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MesiState {
+    Modified,
+    Exclusive,
+    Shared,
+    Invalid,
+}
+
+/// Message counts incurred by one transaction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Messages {
+    /// Requests to the home directory.
+    pub dir_req: u32,
+    /// Forwarded interventions / invalidations to other agents.
+    pub interventions: u32,
+    /// Data transfers (cache-to-cache or memory-to-cache).
+    pub data: u32,
+    /// Acks back to directory/requester.
+    pub acks: u32,
+}
+
+impl Messages {
+    pub fn total(&self) -> u32 {
+        self.dir_req + self.interventions + self.data + self.acks
+    }
+}
+
+/// Cumulative statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DirStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub hits: u64,
+    pub cache_to_cache: u64,
+    pub invalidations: u64,
+    pub messages: u64,
+}
+
+/// Directory state for one block.
+#[derive(Clone, Debug, Default)]
+struct BlockEntry {
+    /// agents holding the block in S
+    sharers: Vec<usize>,
+    /// agent holding M/E, if any
+    owner: Option<usize>,
+}
+
+/// A full-map directory over `agents` caches.
+#[derive(Clone, Debug)]
+pub struct Directory {
+    agents: usize,
+    blocks: HashMap<u64, BlockEntry>,
+    stats: DirStats,
+}
+
+impl Directory {
+    pub fn new(agents: usize) -> Directory {
+        assert!(agents >= 1);
+        Directory { agents, blocks: HashMap::new(), stats: DirStats::default() }
+    }
+
+    pub fn stats(&self) -> DirStats {
+        self.stats
+    }
+
+    /// State of `block` at `agent`.
+    pub fn state_of(&self, agent: usize, block: u64) -> MesiState {
+        match self.blocks.get(&block) {
+            None => MesiState::Invalid,
+            Some(e) => {
+                if e.owner == Some(agent) {
+                    // we do not distinguish M/E externally; M is the
+                    // conservative answer for an owned block
+                    MesiState::Modified
+                } else if e.sharers.contains(&agent) {
+                    MesiState::Shared
+                } else {
+                    MesiState::Invalid
+                }
+            }
+        }
+    }
+
+    /// Agent `a` reads `block`. Returns the protocol messages incurred.
+    pub fn read(&mut self, a: usize, block: u64) -> Messages {
+        assert!(a < self.agents);
+        self.stats.reads += 1;
+        let e = self.blocks.entry(block).or_default();
+        let mut m = Messages::default();
+        if e.owner == Some(a) || e.sharers.contains(&a) {
+            // hit: no traffic
+            self.stats.hits += 1;
+            return m;
+        }
+        m.dir_req = 1;
+        match e.owner {
+            Some(o) => {
+                // owner forwards data, downgrades to S
+                m.interventions = 1;
+                m.data = 1;
+                m.acks = 1;
+                e.sharers.push(o);
+                e.sharers.push(a);
+                e.owner = None;
+                self.stats.cache_to_cache += 1;
+            }
+            None => {
+                // from memory (home node)
+                m.data = 1;
+                if e.sharers.is_empty() {
+                    // grant E
+                    e.owner = Some(a);
+                } else {
+                    e.sharers.push(a);
+                }
+            }
+        }
+        self.stats.messages += m.total() as u64;
+        m
+    }
+
+    /// Agent `a` writes `block`.
+    pub fn write(&mut self, a: usize, block: u64) -> Messages {
+        assert!(a < self.agents);
+        self.stats.writes += 1;
+        let e = self.blocks.entry(block).or_default();
+        let mut m = Messages::default();
+        if e.owner == Some(a) {
+            self.stats.hits += 1;
+            return m; // already M/E: silent upgrade
+        }
+        m.dir_req = 1;
+        // invalidate all other holders
+        let mut inv = 0;
+        if let Some(o) = e.owner.take() {
+            if o != a {
+                inv += 1;
+                m.data = 1; // dirty data forwarded
+                self.stats.cache_to_cache += 1;
+            }
+        }
+        inv += e.sharers.iter().filter(|&&s| s != a).count() as u32;
+        let had_data = m.data > 0;
+        if !had_data {
+            m.data = 1; // from memory
+        }
+        m.interventions = inv;
+        m.acks = inv.max(1);
+        self.stats.invalidations += inv as u64;
+        e.sharers.clear();
+        e.owner = Some(a);
+        self.stats.messages += m.total() as u64;
+        m
+    }
+
+    /// Evict `block` from `agent` (capacity/conflict): silent for S/E,
+    /// writeback message for M (approximated as always-writeback for owner).
+    pub fn evict(&mut self, a: usize, block: u64) -> Messages {
+        let mut m = Messages::default();
+        if let Some(e) = self.blocks.get_mut(&block) {
+            if e.owner == Some(a) {
+                e.owner = None;
+                m.data = 1; // writeback
+                self.stats.messages += 1;
+            } else {
+                e.sharers.retain(|&s| s != a);
+            }
+            if e.owner.is_none() && e.sharers.is_empty() {
+                self.blocks.remove(&block);
+            }
+        }
+        m
+    }
+
+    /// Protocol invariant: a block with an owner has no sharers (SWMR).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (b, e) in &self.blocks {
+            if e.owner.is_some() && !e.sharers.is_empty() {
+                return Err(format!("block {b:#x}: owner and sharers coexist"));
+            }
+            let mut s = e.sharers.clone();
+            s.sort();
+            s.dedup();
+            if s.len() != e.sharers.len() {
+                return Err(format!("block {b:#x}: duplicate sharers"));
+            }
+            if let Some(o) = e.owner {
+                if o >= self.agents {
+                    return Err(format!("block {b:#x}: bogus owner {o}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_read_grants_exclusive() {
+        let mut d = Directory::new(4);
+        let m = d.read(0, 0x40);
+        assert_eq!(m.dir_req, 1);
+        assert_eq!(m.data, 1);
+        assert_eq!(d.state_of(0, 0x40), MesiState::Modified); // owner (E)
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn second_read_hits() {
+        let mut d = Directory::new(4);
+        d.read(0, 0x40);
+        let m = d.read(0, 0x40);
+        assert_eq!(m.total(), 0);
+        assert_eq!(d.stats().hits, 1);
+    }
+
+    #[test]
+    fn read_after_remote_write_is_cache_to_cache() {
+        let mut d = Directory::new(4);
+        d.write(0, 0x80);
+        let m = d.read(1, 0x80);
+        assert_eq!(m.interventions, 1, "owner must be downgraded");
+        assert_eq!(d.stats().cache_to_cache, 1);
+        assert_eq!(d.state_of(0, 0x80), MesiState::Shared);
+        assert_eq!(d.state_of(1, 0x80), MesiState::Shared);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn write_invalidates_all_sharers() {
+        let mut d = Directory::new(8);
+        d.write(0, 0x100);
+        d.read(1, 0x100);
+        d.read(2, 0x100);
+        d.read(3, 0x100);
+        let m = d.write(4, 0x100);
+        assert_eq!(m.interventions, 4, "4 holders to invalidate");
+        for a in 0..4 {
+            assert_eq!(d.state_of(a, 0x100), MesiState::Invalid);
+        }
+        assert_eq!(d.state_of(4, 0x100), MesiState::Modified);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn silent_upgrade_on_owned_block() {
+        let mut d = Directory::new(2);
+        d.write(0, 0x1);
+        let m = d.write(0, 0x1);
+        assert_eq!(m.total(), 0);
+    }
+
+    #[test]
+    fn evict_owner_writes_back() {
+        let mut d = Directory::new(2);
+        d.write(0, 0x1);
+        let m = d.evict(0, 0x1);
+        assert_eq!(m.data, 1);
+        assert_eq!(d.state_of(0, 0x1), MesiState::Invalid);
+        // next reader gets it from memory, fresh E
+        let m = d.read(1, 0x1);
+        assert_eq!(m.interventions, 0);
+    }
+
+    #[test]
+    fn ping_pong_traffic_grows() {
+        // write ping-pong between two agents: every write costs messages
+        let mut d = Directory::new(2);
+        for i in 0..10 {
+            let m = d.write(i % 2, 0x40);
+            if i > 0 {
+                assert!(m.total() >= 3, "ping-pong write {i} should cost messages");
+            }
+        }
+        assert!(d.stats().invalidations >= 9);
+        d.check_invariants().unwrap();
+    }
+}

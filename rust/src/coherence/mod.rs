@@ -1,0 +1,17 @@
+//! Coherence substrate for the tier-1 contrast in §5 of the paper:
+//!
+//! * [`directory`] — a MESI directory protocol engine (the semantics CXL.cache
+//!   provides at instruction granularity): real state machine, message
+//!   counting, invariant checks.
+//! * [`software`] — the non-coherent XLink alternative: sharing beyond the
+//!   static partition requires explicit software-managed page copies.
+//!
+//! The latency *parameters* these produce feed `memory::access`; the
+//! protocol engine itself is also exercised directly by tests and the
+//! coherence ablation bench.
+
+pub mod directory;
+pub mod software;
+
+pub use directory::{Directory, DirStats, MesiState};
+pub use software::SoftwareCopyModel;

@@ -1,0 +1,198 @@
+//! Collective algorithm cost models (ring, tree, hierarchical two-level),
+//! parameterized by a [`Transport`] per level.
+//!
+//! Conventions: `n` ranks, message `bytes` is the *full* buffer size per
+//! rank (all-reduce semantics: every rank ends with the reduced buffer).
+//! Chunked rings pay per-step latency+software once per step; bandwidth
+//! terms use the standard algorithm volume factors.
+
+use super::transport::Transport;
+
+/// Which algorithm a collective uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Ring,
+    Tree,
+    /// Two-level: intra-group (fast transport) then inter-group (slow),
+    /// the standard hierarchical schedule of rack-scale systems.
+    Hierarchical,
+}
+
+/// Cost model for a set of ranks joined by a transport (and optionally a
+/// second-level transport for hierarchical schedules).
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveModel {
+    /// Transport between peer ranks at the (single or outer) level.
+    pub transport: Transport,
+    /// Inner (intra-group) transport for hierarchical schedules.
+    pub inner: Option<Transport>,
+    /// Ranks per inner group (hierarchical only).
+    pub group: usize,
+}
+
+impl CollectiveModel {
+    pub fn flat(transport: Transport) -> CollectiveModel {
+        CollectiveModel { transport, inner: None, group: 1 }
+    }
+
+    pub fn hierarchical(outer: Transport, inner: Transport, group: usize) -> CollectiveModel {
+        assert!(group >= 1);
+        CollectiveModel { transport: outer, inner: Some(inner), group }
+    }
+
+    /// All-reduce of `bytes` per rank across `n` ranks, ns.
+    pub fn all_reduce(&self, n: usize, bytes: f64, algo: Algorithm) -> f64 {
+        if n <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        match algo {
+            Algorithm::Ring => ring_all_reduce(&self.transport, n, bytes),
+            Algorithm::Tree => tree_all_reduce(&self.transport, n, bytes),
+            Algorithm::Hierarchical => {
+                let inner = self.inner.unwrap_or(self.transport);
+                let g = self.group.min(n).max(1);
+                let outer_n = n.div_ceil(g);
+                // reduce-scatter inside groups, all-reduce across group
+                // leaders on the shard, all-gather inside groups
+                let rs = ring_reduce_scatter(&inner, g, bytes);
+                let shard = bytes / g as f64;
+                let ar = ring_all_reduce(&self.transport, outer_n, shard);
+                let ag = ring_all_gather(&inner, g, bytes);
+                rs + ar + ag
+            }
+        }
+    }
+
+    /// Reduce-scatter: each rank ends with bytes/n reduced shard.
+    pub fn reduce_scatter(&self, n: usize, bytes: f64) -> f64 {
+        if n <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        ring_reduce_scatter(&self.transport, n, bytes)
+    }
+
+    /// All-gather of bytes/n shards into the full buffer.
+    pub fn all_gather(&self, n: usize, bytes: f64) -> f64 {
+        if n <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        ring_all_gather(&self.transport, n, bytes)
+    }
+
+    /// Broadcast root -> n-1 peers (binomial tree).
+    pub fn broadcast(&self, n: usize, bytes: f64) -> f64 {
+        if n <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let rounds = (n as f64).log2().ceil();
+        rounds * self.transport.message_ns(bytes)
+    }
+
+    /// Point-to-point send of `bytes`.
+    pub fn p2p(&self, bytes: f64) -> f64 {
+        self.transport.message_ns(bytes)
+    }
+}
+
+fn ring_all_reduce(t: &Transport, n: usize, bytes: f64) -> f64 {
+    // 2(n-1) steps, each moving bytes/n
+    let steps = 2 * (n - 1);
+    steps as f64 * t.message_ns(bytes / n as f64)
+}
+
+fn ring_reduce_scatter(t: &Transport, n: usize, bytes: f64) -> f64 {
+    let steps = n - 1;
+    steps as f64 * t.message_ns(bytes / n as f64)
+}
+
+fn ring_all_gather(t: &Transport, n: usize, bytes: f64) -> f64 {
+    let steps = n - 1;
+    steps as f64 * t.message_ns(bytes / n as f64)
+}
+
+fn tree_all_reduce(t: &Transport, n: usize, bytes: f64) -> f64 {
+    // reduce up + broadcast down a binomial tree
+    let rounds = (n as f64).log2().ceil();
+    2.0 * rounds * t.message_ns(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Transport {
+        // NVLink-class
+        Transport { base_latency_ns: 400.0, sw_overhead_ns: 300.0, bw: 900.0, bw_efficiency: 0.9 }
+    }
+    fn slow_rdma() -> Transport {
+        Transport { base_latency_ns: 2_000.0, sw_overhead_ns: 5_000.0, bw: 50.0, bw_efficiency: 0.8 }
+    }
+    fn cxl() -> Transport {
+        Transport { base_latency_ns: 900.0, sw_overhead_ns: 300.0, bw: 64.0, bw_efficiency: 0.92 }
+    }
+
+    #[test]
+    fn trivial_cases_zero() {
+        let m = CollectiveModel::flat(fast());
+        assert_eq!(m.all_reduce(1, 1e6, Algorithm::Ring), 0.0);
+        assert_eq!(m.all_reduce(8, 0.0, Algorithm::Ring), 0.0);
+    }
+
+    #[test]
+    fn ring_bandwidth_term_scales_correctly() {
+        // for large buffers, ring all-reduce -> 2 * bytes / bw (n-indep)
+        let m = CollectiveModel::flat(Transport { base_latency_ns: 0.0, sw_overhead_ns: 0.0, bw: 100.0, bw_efficiency: 1.0 });
+        let t8 = m.all_reduce(8, 1e9, Algorithm::Ring);
+        let t64 = m.all_reduce(64, 1e9, Algorithm::Ring);
+        let ideal = 2.0 * 1e9 / 100.0;
+        // ratio to ideal is (n-1)/n
+        assert!((t8 / ideal - 7.0 / 8.0).abs() < 0.01);
+        assert!((t64 / ideal - 63.0 / 64.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn latency_term_hurts_small_messages_on_rdma() {
+        let rdma = CollectiveModel::flat(slow_rdma());
+        let cxl = CollectiveModel::flat(cxl());
+        // 1 MB over 64 ranks: 16 KB chunks -> overhead-dominated
+        let r = rdma.all_reduce(64, 1e6, Algorithm::Ring);
+        let c = cxl.all_reduce(64, 1e6, Algorithm::Ring);
+        assert!(r / c > 3.0, "rdma {r} vs cxl {c}");
+    }
+
+    #[test]
+    fn tree_beats_ring_for_tiny_buffers_large_n() {
+        let m = CollectiveModel::flat(slow_rdma());
+        let ring = m.all_reduce(256, 4096.0, Algorithm::Ring);
+        let tree = m.all_reduce(256, 4096.0, Algorithm::Tree);
+        assert!(tree < ring);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_over_slow_outer() {
+        let m = CollectiveModel::hierarchical(slow_rdma(), fast(), 72);
+        let flat = CollectiveModel::flat(slow_rdma());
+        let n = 288; // 4 racks of 72
+        let h = m.all_reduce(n, 1e8, Algorithm::Hierarchical);
+        let f = flat.all_reduce(n, 1e8, Algorithm::Ring);
+        assert!(h < f, "hierarchical {h} !< flat {f}");
+    }
+
+    #[test]
+    fn reduce_scatter_plus_all_gather_equals_ring_all_reduce() {
+        let m = CollectiveModel::flat(fast());
+        let n = 16;
+        let b = 1e7;
+        let sum = m.reduce_scatter(n, b) + m.all_gather(n, b);
+        let ar = m.all_reduce(n, b, Algorithm::Ring);
+        assert!((sum - ar).abs() / ar < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_log_rounds() {
+        let m = CollectiveModel::flat(fast());
+        let t8 = m.broadcast(8, 1e6);
+        let t64 = m.broadcast(64, 1e6);
+        assert!((t64 / t8 - 2.0).abs() < 1e-9); // log2 64 / log2 8 = 2
+    }
+}

@@ -1,0 +1,14 @@
+//! Collective-communication cost models over the fabric: ring/tree/
+//! hierarchical algorithms, the RDMA software stack of the scale-out
+//! baseline, and the CXL hardware-coherent path that replaces it
+//! (§4: "protocol-level coherence ... enables efficient collective
+//! communication by eliminating explicit synchronization and redundant
+//! data copying overhead").
+
+pub mod transport;
+pub mod rdma;
+pub mod algorithms;
+
+pub use algorithms::{Algorithm, CollectiveModel};
+pub use rdma::RdmaStack;
+pub use transport::Transport;

@@ -1,0 +1,86 @@
+//! A transport is "what one rank pays to move one message to a peer":
+//! base hardware latency, per-message software overhead, and bandwidth.
+//! Collectives compose transports; transports are derived from the fabric
+//! (hardware terms) and the software stack model (software terms).
+
+use crate::fabric::{Fabric, NodeId};
+
+/// Point-to-point transport characteristics between two ranks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transport {
+    /// Hardware one-way latency for a small (cache-line .. KB) message, ns.
+    pub base_latency_ns: f64,
+    /// Software overhead per message (launch, synchronization,
+    /// (de)serialization, registration) paid by the sender+receiver, ns.
+    pub sw_overhead_ns: f64,
+    /// Sustained per-rank bandwidth, bytes/ns.
+    pub bw: f64,
+    /// Fraction of `bw` achievable by the protocol stack (copies,
+    /// pipelining gaps).
+    pub bw_efficiency: f64,
+}
+
+impl Transport {
+    /// Time to move one `bytes` message to a peer, ns.
+    pub fn message_ns(&self, bytes: f64) -> f64 {
+        self.base_latency_ns + self.sw_overhead_ns + bytes / self.effective_bw()
+    }
+
+    pub fn effective_bw(&self) -> f64 {
+        self.bw * self.bw_efficiency
+    }
+
+    /// Derive the hardware part from a routed fabric path (software terms
+    /// zero — add them via `with_software`).
+    pub fn from_fabric(fabric: &Fabric, src: NodeId, dst: NodeId) -> Option<Transport> {
+        let path = fabric.path(src, dst)?;
+        let small = fabric.message_latency(&path, 512.0).total_ns();
+        let bw = fabric.path_bandwidth(&path, 1024.0 * 1024.0);
+        Some(Transport { base_latency_ns: small, sw_overhead_ns: 0.0, bw, bw_efficiency: 1.0 })
+    }
+
+    pub fn with_software(mut self, sw_overhead_ns: f64, bw_efficiency: f64) -> Transport {
+        self.sw_overhead_ns = sw_overhead_ns;
+        self.bw_efficiency = bw_efficiency;
+        self
+    }
+
+    pub fn with_bandwidth(mut self, bw: f64) -> Transport {
+        self.bw = bw;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{LinkKind, NodeKind, Topology};
+
+    #[test]
+    fn message_time_decomposes() {
+        let t = Transport { base_latency_ns: 100.0, sw_overhead_ns: 50.0, bw: 10.0, bw_efficiency: 0.5 };
+        assert_eq!(t.message_ns(0.0), 150.0);
+        assert_eq!(t.message_ns(500.0), 150.0 + 100.0);
+    }
+
+    #[test]
+    fn from_fabric_matches_facade() {
+        let topo = Topology::single_hop(4, LinkKind::NvLink5, "r");
+        let accs = topo.nodes_of(NodeKind::Accelerator);
+        let f = Fabric::new(topo);
+        let t = Transport::from_fabric(&f, accs[0], accs[1]).unwrap();
+        assert!(t.base_latency_ns > 0.0);
+        assert!(t.bw > 50.0 && t.bw <= 100.0);
+        assert_eq!(t.sw_overhead_ns, 0.0);
+    }
+
+    #[test]
+    fn software_overhead_composes() {
+        let topo = Topology::single_hop(4, LinkKind::NvLink5, "r");
+        let accs = topo.nodes_of(NodeKind::Accelerator);
+        let f = Fabric::new(topo);
+        let hw = Transport::from_fabric(&f, accs[0], accs[1]).unwrap();
+        let sw = hw.with_software(5_000.0, 0.8);
+        assert!(sw.message_ns(1024.0) > hw.message_ns(1024.0) + 4_000.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Job admission and resource allocation: accelerators are granted in
+//! whole XLink-domain chunks (gang scheduling inside racks), memory is
+//! composed from the tier pools, and the manager enforces the
+//! interoperability rules (a job's TP group never spans rack kinds).
+
+use crate::cluster::ScalePoolSystem;
+use crate::coordinator::metrics::Metrics;
+use std::collections::HashMap;
+
+/// Job identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobId(pub u64);
+
+/// A resource request.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    /// Accelerators required.
+    pub accelerators: usize,
+    /// Tier-2 pool bytes required (0 = none).
+    pub pool_bytes: f64,
+}
+
+/// An admitted job's grant.
+#[derive(Clone, Debug)]
+pub struct Grant {
+    pub job: JobId,
+    /// (rack index, accelerator indices within the rack).
+    pub accelerators: Vec<(usize, Vec<usize>)>,
+    pub pool_bytes: f64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AdmitError {
+    #[error("not enough accelerators: requested {requested}, {free} free")]
+    Accelerators { requested: usize, free: usize },
+    #[error("not enough tier-2 pool: requested {requested:.2e} B, {free:.2e} free")]
+    Pool { requested: f64, free: f64 },
+}
+
+/// The allocation manager.
+pub struct ScalePoolManager<'s> {
+    sys: &'s ScalePoolSystem,
+    /// free accelerator indices per rack
+    free: Vec<Vec<usize>>,
+    pool_free: f64,
+    grants: HashMap<JobId, Grant>,
+    next: u64,
+    pub metrics: Metrics,
+}
+
+impl<'s> ScalePoolManager<'s> {
+    pub fn new(sys: &'s ScalePoolSystem) -> Self {
+        let free = sys.racks.iter().map(|r| (0..r.acc_ids.len()).collect()).collect();
+        ScalePoolManager {
+            sys,
+            free,
+            pool_free: sys.tier2_capacity(),
+            grants: HashMap::new(),
+            next: 0,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn free_accelerators(&self) -> usize {
+        self.free.iter().map(Vec::len).sum()
+    }
+
+    pub fn free_pool_bytes(&self) -> f64 {
+        self.pool_free
+    }
+
+    /// Admit a job: rack-major packing (fill one rack before the next) to
+    /// keep TP/PP groups XLink-local, as §4 prescribes.
+    pub fn admit(&mut self, spec: &JobSpec) -> Result<Grant, AdmitError> {
+        let free = self.free_accelerators();
+        if spec.accelerators > free {
+            self.metrics.inc("admit_rejected_accels");
+            return Err(AdmitError::Accelerators { requested: spec.accelerators, free });
+        }
+        if spec.pool_bytes > self.pool_free {
+            self.metrics.inc("admit_rejected_pool");
+            return Err(AdmitError::Pool { requested: spec.pool_bytes, free: self.pool_free });
+        }
+        let mut need = spec.accelerators;
+        let mut accelerators = Vec::new();
+        for (rack, free) in self.free.iter_mut().enumerate() {
+            if need == 0 {
+                break;
+            }
+            let take = need.min(free.len());
+            if take > 0 {
+                let granted: Vec<usize> = free.drain(..take).collect();
+                accelerators.push((rack, granted));
+                need -= take;
+            }
+        }
+        debug_assert_eq!(need, 0);
+        self.pool_free -= spec.pool_bytes;
+        let job = JobId(self.next);
+        self.next += 1;
+        let grant = Grant { job, accelerators, pool_bytes: spec.pool_bytes };
+        self.grants.insert(job, grant.clone());
+        self.metrics.inc("jobs_admitted");
+        self.metrics.add("accels_granted", spec.accelerators as u64);
+        Ok(grant)
+    }
+
+    /// Release a job's resources.
+    pub fn release(&mut self, job: JobId) -> bool {
+        if let Some(g) = self.grants.remove(&job) {
+            for (rack, accs) in g.accelerators {
+                self.free[rack].extend(accs);
+                self.free[rack].sort_unstable();
+            }
+            self.pool_free += g.pool_bytes;
+            self.metrics.inc("jobs_released");
+            true
+        } else {
+            false
+        }
+    }
+
+    /// How many racks a job's grant spans (locality metric).
+    pub fn span(&self, job: JobId) -> Option<usize> {
+        self.grants.get(&job).map(|g| g.accelerators.len())
+    }
+
+    /// Conservation invariant: free + granted == total, per rack.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, rack) in self.sys.racks.iter().enumerate() {
+            let granted: usize = self
+                .grants
+                .values()
+                .flat_map(|g| &g.accelerators)
+                .filter(|(r, _)| *r == i)
+                .map(|(_, a)| a.len())
+                .sum();
+            let total = rack.acc_ids.len();
+            if self.free[i].len() + granted != total {
+                return Err(format!(
+                    "rack {i}: free {} + granted {granted} != {total}",
+                    self.free[i].len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+    use crate::fabric::TopologyKind;
+
+    fn sys(racks: usize, per: usize) -> ScalePoolSystem {
+        ScalePoolBuilder::new()
+            .racks((0..racks).map(|i| {
+                Rack::homogeneous(&format!("r{i}"), crate::cluster::Accelerator::b200(), per).unwrap()
+            }))
+            .config(SystemConfig {
+                inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+                mem_nodes: 2,
+                mem_node_capacity: 1e12,
+                ..Default::default()
+            })
+            .build()
+    }
+
+    #[test]
+    fn packs_rack_major() {
+        let s = sys(3, 8);
+        let mut m = ScalePoolManager::new(&s);
+        let g = m.admit(&JobSpec { name: "j".into(), accelerators: 8, pool_bytes: 0.0 }).unwrap();
+        assert_eq!(g.accelerators.len(), 1, "8 accs must fit one rack");
+        let g2 = m.admit(&JobSpec { name: "k".into(), accelerators: 12, pool_bytes: 0.0 }).unwrap();
+        assert_eq!(g2.accelerators.len(), 2, "12 accs span two racks");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let s = sys(2, 4);
+        let mut m = ScalePoolManager::new(&s);
+        assert!(m.admit(&JobSpec { name: "big".into(), accelerators: 9, pool_bytes: 0.0 }).is_err());
+        assert_eq!(m.metrics.counter("admit_rejected_accels"), 1);
+    }
+
+    #[test]
+    fn pool_accounting() {
+        let s = sys(1, 4);
+        let mut m = ScalePoolManager::new(&s);
+        let cap = m.free_pool_bytes();
+        let g = m.admit(&JobSpec { name: "p".into(), accelerators: 1, pool_bytes: cap / 2.0 }).unwrap();
+        assert!((m.free_pool_bytes() - cap / 2.0).abs() < 1.0);
+        assert!(m.admit(&JobSpec { name: "q".into(), accelerators: 1, pool_bytes: cap }).is_err());
+        m.release(g.job);
+        assert!((m.free_pool_bytes() - cap).abs() < 1.0);
+    }
+
+    #[test]
+    fn release_returns_accelerators() {
+        let s = sys(2, 4);
+        let mut m = ScalePoolManager::new(&s);
+        let g = m.admit(&JobSpec { name: "j".into(), accelerators: 6, pool_bytes: 0.0 }).unwrap();
+        assert_eq!(m.free_accelerators(), 2);
+        assert!(m.release(g.job));
+        assert_eq!(m.free_accelerators(), 8);
+        assert!(!m.release(g.job), "double release rejected");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn churn_preserves_invariants() {
+        let s = sys(4, 8);
+        let mut m = ScalePoolManager::new(&s);
+        let mut rng = crate::util::Rng::new(5);
+        let mut live = Vec::new();
+        for _ in 0..200 {
+            if rng.f64() < 0.6 || live.is_empty() {
+                let n = 1 + rng.below(10) as usize;
+                if let Ok(g) = m.admit(&JobSpec { name: "x".into(), accelerators: n, pool_bytes: 0.0 }) {
+                    live.push(g.job);
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let job = live.swap_remove(idx);
+                assert!(m.release(job));
+            }
+            m.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Lightweight metrics registry: named counters and ns-scale histograms
+//! (log-bucketed), shared by the coordinator components.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Log-bucketed latency histogram (1 ns .. ~18 s in x2 buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; 35],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; 35], count: 0, sum: 0.0 }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&mut self, ns: f64) {
+        let idx = if ns <= 1.0 { 0 } else { (ns.log2() as usize).min(34) };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += ns;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << 34) as f64
+    }
+}
+
+/// The registry.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn observe(&mut self, name: &str, ns: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(ns);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus-ish text dump.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "{k} {v}");
+        }
+        for (k, h) in &self.histograms {
+            let _ = writeln!(
+                out,
+                "{k}_count {}  {k}_mean_ns {:.1}  {k}_p50_ns {:.0}  {k}_p99_ns {:.0}",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99)
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("jobs");
+        m.add("jobs", 4);
+        assert_eq!(m.counter("jobs"), 5);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 100.0);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let mut m = Metrics::new();
+        m.inc("a");
+        m.observe("lat", 500.0);
+        let r = m.render();
+        assert!(r.contains("a 1"));
+        assert!(r.contains("lat_count 1"));
+    }
+}

@@ -1,0 +1,18 @@
+//! The ScalePool coordinator: the runtime brain that makes the paper's
+//! architecture operational — job admission and accelerator allocation
+//! over XLink domains, data-movement routing across the hybrid fabric,
+//! runtime memory tiering over the composable pools, and the training-job
+//! scheduler that drives the PJRT runtime under simulated cluster timing
+//! (hybrid emulation).
+
+pub mod metrics;
+pub mod router;
+pub mod tiering;
+pub mod manager;
+pub mod scheduler;
+
+pub use manager::{JobId, JobSpec, ScalePoolManager};
+pub use metrics::Metrics;
+pub use router::{DataMovementRouter, RouteClass, RouteDecision};
+pub use scheduler::{EmulatedCluster, TrainJobScheduler};
+pub use tiering::{TieringEngine, TieringPolicy, TieringStats};

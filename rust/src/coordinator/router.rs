@@ -1,0 +1,128 @@
+//! Data-movement routing over the hybrid fabric: picks the mechanism for
+//! each transfer the way §4 prescribes — XLink for intra-cluster bulk,
+//! CXL.cache for fine-grained coherent sharing, CXL.io/CXL.mem for bulk
+//! inter-cluster and tier-2 traffic — and prices the decision with the
+//! fabric model.
+
+use crate::cluster::ScalePoolSystem;
+use crate::fabric::NodeId;
+
+/// Which protocol path a transfer takes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteClass {
+    /// Intra-cluster accelerator transfer over XLink.
+    XlinkBulk,
+    /// Instruction-granularity coherent access over CXL.cache.
+    CxlCacheLine,
+    /// Bulk transfer over CXL.io / CXL.mem (no CPU involvement).
+    CxlBulk,
+    /// Tier-2 memory node access (capacity-oriented CXL).
+    CxlTier2,
+}
+
+/// A routing decision with its predicted cost.
+#[derive(Clone, Debug)]
+pub struct RouteDecision {
+    pub class: RouteClass,
+    pub est_latency_ns: f64,
+    pub hops: usize,
+}
+
+/// Threshold below which coherent line-granularity access beats a bulk
+/// transfer setup (bytes).
+pub const CACHELINE_CUTOFF: f64 = 4096.0;
+
+/// The router.
+pub struct DataMovementRouter<'s> {
+    sys: &'s ScalePoolSystem,
+}
+
+impl<'s> DataMovementRouter<'s> {
+    pub fn new(sys: &'s ScalePoolSystem) -> Self {
+        DataMovementRouter { sys }
+    }
+
+    fn rack_of(&self, node: NodeId) -> Option<usize> {
+        self.sys.racks.iter().position(|r| r.acc_ids.contains(&node))
+    }
+
+    /// Route a transfer of `bytes` between two accelerators (or an
+    /// accelerator and a memory node).
+    pub fn route(&self, src: NodeId, dst: NodeId, bytes: f64) -> RouteDecision {
+        let path = self.sys.fabric.path(src, dst).expect("connected fabric");
+        let lat = self.sys.fabric.message_latency(&path, bytes).total_ns();
+        let class = if self.sys.mem_nodes.contains(&dst) || self.sys.mem_nodes.contains(&src) {
+            RouteClass::CxlTier2
+        } else {
+            match (self.rack_of(src), self.rack_of(dst)) {
+                (Some(a), Some(b)) if a == b => RouteClass::XlinkBulk,
+                _ if bytes <= CACHELINE_CUTOFF => RouteClass::CxlCacheLine,
+                _ => RouteClass::CxlBulk,
+            }
+        };
+        RouteDecision { class, est_latency_ns: lat, hops: path.hops() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+    use crate::fabric::TopologyKind;
+
+    fn sys() -> ScalePoolSystem {
+        ScalePoolBuilder::new()
+            .racks((0..2).map(|i| {
+                Rack::homogeneous(&format!("r{i}"), crate::cluster::Accelerator::b200(), 4).unwrap()
+            }))
+            .config(SystemConfig {
+                inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+                mem_nodes: 2,
+                ..Default::default()
+            })
+            .build()
+    }
+
+    #[test]
+    fn intra_rack_uses_xlink() {
+        let s = sys();
+        let r = DataMovementRouter::new(&s);
+        let d = r.route(s.racks[0].acc_ids[0], s.racks[0].acc_ids[1], 1e6);
+        assert_eq!(d.class, RouteClass::XlinkBulk);
+        assert!(d.est_latency_ns > 0.0);
+    }
+
+    #[test]
+    fn small_inter_rack_is_coherent_cacheline() {
+        let s = sys();
+        let r = DataMovementRouter::new(&s);
+        let d = r.route(s.racks[0].acc_ids[0], s.racks[1].acc_ids[0], 64.0);
+        assert_eq!(d.class, RouteClass::CxlCacheLine);
+    }
+
+    #[test]
+    fn bulk_inter_rack_is_cxl_bulk() {
+        let s = sys();
+        let r = DataMovementRouter::new(&s);
+        let d = r.route(s.racks[0].acc_ids[0], s.racks[1].acc_ids[0], 1e8);
+        assert_eq!(d.class, RouteClass::CxlBulk);
+    }
+
+    #[test]
+    fn memory_node_traffic_is_tier2() {
+        let s = sys();
+        let r = DataMovementRouter::new(&s);
+        let d = r.route(s.racks[0].acc_ids[0], s.mem_nodes[0], 4096.0);
+        assert_eq!(d.class, RouteClass::CxlTier2);
+    }
+
+    #[test]
+    fn latency_scales_with_distance_class() {
+        let s = sys();
+        let r = DataMovementRouter::new(&s);
+        let intra = r.route(s.racks[0].acc_ids[0], s.racks[0].acc_ids[1], 4096.0);
+        let inter = r.route(s.racks[0].acc_ids[0], s.racks[1].acc_ids[0], 4096.0);
+        assert!(intra.est_latency_ns < inter.est_latency_ns);
+        assert!(intra.hops < inter.hops);
+    }
+}

@@ -1,0 +1,248 @@
+//! Runtime memory tiering over the composable pools: allocations land in
+//! tier-1 while it has headroom and spill to tier-2; hot spilled objects
+//! are promoted back when tier-1 frees up (§5's operational story).
+
+use crate::memory::pool::{AllocId, MemoryPool, Placement, PoolError};
+use crate::memory::Tier;
+use std::collections::HashMap;
+
+/// Tiering statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TieringStats {
+    pub allocs: u64,
+    pub tier1_allocs: u64,
+    pub tier2_spills: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub rejected: u64,
+}
+
+/// Where one object currently lives.
+#[derive(Clone, Debug)]
+struct Object {
+    bytes: f64,
+    tier: Tier,
+    alloc: AllocId,
+    /// touch counter since last decay (hotness proxy)
+    heat: u64,
+}
+
+/// Policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TieringPolicy {
+    /// Keep tier-1 utilization below this watermark when placing new
+    /// objects (leave room for bursts).
+    pub t1_high_watermark: f64,
+    /// Promote a tier-2 object when its heat exceeds this.
+    pub promote_heat: u64,
+}
+
+impl Default for TieringPolicy {
+    fn default() -> Self {
+        TieringPolicy { t1_high_watermark: 0.9, promote_heat: 8 }
+    }
+}
+
+/// The tiering engine over two pools.
+pub struct TieringEngine {
+    pub tier1: MemoryPool,
+    pub tier2: MemoryPool,
+    policy: TieringPolicy,
+    objects: HashMap<u64, Object>,
+    next_obj: u64,
+    stats: TieringStats,
+}
+
+impl TieringEngine {
+    pub fn new(tier1: MemoryPool, tier2: MemoryPool, policy: TieringPolicy) -> Self {
+        TieringEngine { tier1, tier2, policy, objects: HashMap::new(), next_obj: 0, stats: TieringStats::default() }
+    }
+
+    pub fn stats(&self) -> TieringStats {
+        self.stats
+    }
+
+    fn t1_util_after(&self, bytes: f64) -> f64 {
+        (self.tier1.used() + bytes) / self.tier1.capacity().max(1.0)
+    }
+
+    /// Allocate an object; returns its handle or an error if neither tier
+    /// can hold it.
+    pub fn alloc(&mut self, bytes: f64) -> Result<u64, PoolError> {
+        self.stats.allocs += 1;
+        let (tier, alloc) = if self.t1_util_after(bytes) <= self.policy.t1_high_watermark {
+            match self.tier1.alloc(bytes, Placement::FirstFit) {
+                Ok(a) => {
+                    self.stats.tier1_allocs += 1;
+                    (Tier::Tier1Local, a)
+                }
+                Err(_) => {
+                    self.stats.tier2_spills += 1;
+                    (Tier::Tier2Pool, self.tier2.alloc(bytes, Placement::WorstFit).inspect_err(|_| {}).map_err(|e| {
+                        self.stats.rejected += 1;
+                        e
+                    })?)
+                }
+            }
+        } else {
+            self.stats.tier2_spills += 1;
+            match self.tier2.alloc(bytes, Placement::WorstFit) {
+                Ok(a) => (Tier::Tier2Pool, a),
+                Err(e) => {
+                    self.stats.rejected += 1;
+                    return Err(e);
+                }
+            }
+        };
+        let id = self.next_obj;
+        self.next_obj += 1;
+        self.objects.insert(id, Object { bytes, tier, alloc: alloc.id, heat: 0 });
+        Ok(id)
+    }
+
+    /// Record an access to an object; may trigger promotion.
+    pub fn touch(&mut self, id: u64) -> Option<Tier> {
+        // split borrow: decide first, mutate after
+        let (needs_promote, bytes) = {
+            let o = self.objects.get_mut(&id)?;
+            o.heat += 1;
+            (o.tier == Tier::Tier2Pool && o.heat >= self.policy.promote_heat, o.bytes)
+        };
+        if needs_promote && self.t1_util_after(bytes) <= self.policy.t1_high_watermark {
+            if let Ok(a1) = self.tier1.alloc(bytes, Placement::FirstFit) {
+                let o = self.objects.get_mut(&id).unwrap();
+                let old = o.alloc;
+                o.alloc = a1.id;
+                o.tier = Tier::Tier1Local;
+                o.heat = 0;
+                self.tier2.free(old).expect("tier2 free");
+                self.stats.promotions += 1;
+            }
+        }
+        self.objects.get(&id).map(|o| o.tier)
+    }
+
+    /// Demote the coldest tier-1 object to tier-2 (called under pressure).
+    pub fn demote_coldest(&mut self) -> Option<u64> {
+        let (&id, _) = self
+            .objects
+            .iter()
+            .filter(|(_, o)| o.tier == Tier::Tier1Local)
+            .min_by_key(|(_, o)| o.heat)?;
+        let bytes = self.objects[&id].bytes;
+        let a2 = self.tier2.alloc(bytes, Placement::WorstFit).ok()?;
+        let o = self.objects.get_mut(&id).unwrap();
+        let old = o.alloc;
+        o.alloc = a2.id;
+        o.tier = Tier::Tier2Pool;
+        self.tier1.free(old).expect("tier1 free");
+        self.stats.demotions += 1;
+        Some(id)
+    }
+
+    /// Free an object.
+    pub fn free(&mut self, id: u64) -> Result<(), PoolError> {
+        let o = self.objects.remove(&id).ok_or(PoolError::UnknownAlloc)?;
+        match o.tier {
+            Tier::Tier2Pool => self.tier2.free(o.alloc),
+            _ => self.tier1.free(o.alloc),
+        }
+    }
+
+    pub fn tier_of(&self, id: u64) -> Option<Tier> {
+        self.objects.get(&id).map(|o| o.tier)
+    }
+
+    /// Cross-pool invariants.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.tier1.check_invariants()?;
+        self.tier2.check_invariants()?;
+        let t1: f64 = self
+            .objects
+            .values()
+            .filter(|o| o.tier != Tier::Tier2Pool)
+            .map(|o| o.bytes)
+            .sum();
+        let tol = 1e-6f64.max(1e-12 * self.tier1.used().abs());
+        if (t1 - self.tier1.used()).abs() > tol {
+            return Err(format!("tier1 accounting: objects {t1} vs pool {}", self.tier1.used()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(t1_cap: f64, t2_cap: f64) -> TieringEngine {
+        let mut t1 = MemoryPool::new();
+        t1.add_region(0, Tier::Tier1Local, t1_cap);
+        let mut t2 = MemoryPool::new();
+        t2.add_region(100, Tier::Tier2Pool, t2_cap);
+        TieringEngine::new(t1, t2, TieringPolicy::default())
+    }
+
+    #[test]
+    fn allocates_tier1_first() {
+        let mut e = engine(100.0, 1000.0);
+        let id = e.alloc(50.0).unwrap();
+        assert_eq!(e.tier_of(id), Some(Tier::Tier1Local));
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn spills_beyond_watermark() {
+        let mut e = engine(100.0, 1000.0);
+        let _a = e.alloc(85.0).unwrap();
+        let b = e.alloc(20.0).unwrap(); // 105% > 90% watermark
+        assert_eq!(e.tier_of(b), Some(Tier::Tier2Pool));
+        assert_eq!(e.stats().tier2_spills, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hot_object_promoted() {
+        let mut e = engine(100.0, 1000.0);
+        let a = e.alloc(85.0).unwrap();
+        let b = e.alloc(20.0).unwrap();
+        assert_eq!(e.tier_of(b), Some(Tier::Tier2Pool));
+        e.free(a).unwrap(); // tier-1 frees up
+        for _ in 0..8 {
+            e.touch(b);
+        }
+        assert_eq!(e.tier_of(b), Some(Tier::Tier1Local));
+        assert_eq!(e.stats().promotions, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demote_coldest_picks_least_touched() {
+        let mut e = engine(100.0, 1000.0);
+        let hot = e.alloc(40.0).unwrap();
+        let cold = e.alloc(40.0).unwrap();
+        for _ in 0..5 {
+            e.touch(hot);
+        }
+        let demoted = e.demote_coldest().unwrap();
+        assert_eq!(demoted, cold);
+        assert_eq!(e.tier_of(cold), Some(Tier::Tier2Pool));
+        assert_eq!(e.tier_of(hot), Some(Tier::Tier1Local));
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_when_everything_full() {
+        let mut e = engine(10.0, 10.0);
+        assert!(e.alloc(8.0).is_ok());
+        assert!(e.alloc(8.0).is_ok()); // spills
+        assert!(e.alloc(8.0).is_err());
+        assert_eq!(e.stats().rejected, 1);
+    }
+
+    #[test]
+    fn free_unknown_rejected() {
+        let mut e = engine(10.0, 10.0);
+        assert!(e.free(99).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Figure 6: LLM training execution time on ScalePool, normalized to the
+//! RDMA baseline, for the five paper workloads — with the {communication,
+//! computation, other} breakdown.
+//!
+//! Paper targets (shape): average speedup 1.22x, max 1.84x; inter-cluster
+//! communication speedup 3.79x on average; compute identical; "other"
+//! roughly constant.
+
+use crate::calculon::execution::SystemProfile;
+use crate::calculon::presets::{paper_workloads, Workload};
+use crate::calculon::{ExecutionModel, TrainingEstimate};
+
+/// One workload's result pair.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub name: String,
+    pub gpus: usize,
+    pub baseline: TrainingEstimate,
+    pub scalepool: TrainingEstimate,
+}
+
+impl Fig6Row {
+    pub fn speedup(&self) -> f64 {
+        self.baseline.total_ns() / self.scalepool.total_ns()
+    }
+    pub fn comm_speedup(&self) -> f64 {
+        let b = self.baseline.inter_cluster_comm_ns();
+        let s = self.scalepool.inter_cluster_comm_ns();
+        if s <= 0.0 {
+            1.0
+        } else {
+            b / s
+        }
+    }
+    /// Normalized stacked bars (baseline total = 1.0), paper layout.
+    pub fn normalized(&self) -> [(f64, f64, f64); 2] {
+        let t = self.baseline.total_ns();
+        let b = self.baseline.breakdown();
+        let s = self.scalepool.breakdown();
+        [
+            (b.comm_ns / t, b.compute_ns / t, b.other_ns / t),
+            (s.comm_ns / t, s.compute_ns / t, s.other_ns / t),
+        ]
+    }
+}
+
+/// Aggregate over all workloads.
+#[derive(Clone, Debug)]
+pub struct Fig6Result {
+    pub rows: Vec<Fig6Row>,
+}
+
+impl Fig6Result {
+    pub fn avg_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.speedup()).sum::<f64>() / self.rows.len() as f64
+    }
+    pub fn max_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.speedup()).fold(0.0, f64::max)
+    }
+    pub fn avg_comm_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.comm_speedup()).sum::<f64>() / self.rows.len() as f64
+    }
+}
+
+/// Run Figure 6 with the canonical profiles.
+pub fn run_fig6() -> Fig6Result {
+    run_fig6_with(SystemProfile::baseline_rdma(), SystemProfile::scalepool_cxl(), &paper_workloads())
+}
+
+/// Run Figure 6 with custom profiles / workloads (used by ablation benches).
+pub fn run_fig6_with(
+    baseline: SystemProfile,
+    scalepool: SystemProfile,
+    workloads: &[Workload],
+) -> Fig6Result {
+    let bm = ExecutionModel::new(baseline);
+    let sm = ExecutionModel::new(scalepool);
+    let rows = workloads
+        .iter()
+        .map(|w| Fig6Row {
+            name: w.model.name.clone(),
+            gpus: w.par.gpus(),
+            baseline: bm.estimate(&w.model, &w.par),
+            scalepool: sm.estimate(&w.model, &w.par),
+        })
+        .collect();
+    Fig6Result { rows }
+}
+
+/// Render the paper-style table.
+pub fn render(result: &Fig6Result) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>6} | {:>9} {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} {:>9} | {:>7} {:>9}\n",
+        "Model", "GPUs", "b.comm", "b.comp", "b.other", "b.total", "s.comm", "s.comp", "s.other",
+        "s.total", "speedup", "comm-spdup"
+    ));
+    out.push_str(&"-".repeat(132));
+    out.push('\n');
+    let s = |ns: f64| format!("{:.2}s", ns / 1e9);
+    for r in &result.rows {
+        let b = r.baseline.breakdown();
+        let sp = r.scalepool.breakdown();
+        out.push_str(&format!(
+            "{:<16} {:>6} | {:>9} {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} {:>9} | {:>6.2}x {:>8.2}x\n",
+            r.name,
+            r.gpus,
+            s(b.comm_ns),
+            s(b.compute_ns),
+            s(b.other_ns),
+            s(r.baseline.total_ns()),
+            s(sp.comm_ns),
+            s(sp.compute_ns),
+            s(sp.other_ns),
+            s(r.scalepool.total_ns()),
+            r.speedup(),
+            r.comm_speedup(),
+        ));
+    }
+    out.push_str(&format!(
+        "\naverage speedup {:.2}x (paper: 1.22x)   max {:.2}x (paper: 1.84x)   avg inter-cluster comm speedup {:.2}x (paper: 3.79x)\n",
+        result.avg_speedup(),
+        result.max_speedup(),
+        result.avg_comm_speedup()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_rows() {
+        assert_eq!(run_fig6().rows.len(), 5);
+    }
+
+    #[test]
+    fn every_model_speeds_up() {
+        for r in run_fig6().rows {
+            assert!(r.speedup() > 1.0, "{} slowed down: {:.3}", r.name, r.speedup());
+            assert!(r.speedup() < 3.0, "{} implausibly fast: {:.3}", r.name, r.speedup());
+        }
+    }
+
+    #[test]
+    fn calibration_bands_match_paper_shape() {
+        let res = run_fig6();
+        let avg = res.avg_speedup();
+        let max = res.max_speedup();
+        let comm = res.avg_comm_speedup();
+        // measured: avg 1.36, max 1.50, comm 3.93 — same ordering and
+        // magnitude class as the paper's 1.22 / 1.84 / 3.79 (see
+        // EXPERIMENTS.md for the delta discussion: our pipeline-overlap
+        // model is more conservative than the paper's, compressing the
+        // spread between the least and most comm-bound workloads)
+        assert!((1.15..=1.45).contains(&avg), "avg speedup {avg:.3} (paper 1.22)");
+        assert!((1.40..=2.20).contains(&max), "max speedup {max:.3} (paper 1.84)");
+        assert!((3.00..=4.80).contains(&comm), "comm speedup {comm:.3} (paper 3.79)");
+    }
+
+    #[test]
+    fn compute_and_other_roughly_constant() {
+        for r in run_fig6().rows {
+            assert!((r.baseline.compute_ns - r.scalepool.compute_ns).abs() < 1e-3);
+            let ob = r.baseline.other_ns();
+            let os = r.scalepool.other_ns();
+            assert!(os <= ob * 1.05, "{}: other grew {os} vs {ob}", r.name);
+            assert!(os >= ob * 0.4, "{}: other collapsed {os} vs {ob}", r.name);
+        }
+    }
+
+    #[test]
+    fn gains_come_from_comm() {
+        for r in run_fig6().rows {
+            let total_gain = r.baseline.total_ns() - r.scalepool.total_ns();
+            let comm_gain = r.baseline.comm_ns() - r.scalepool.comm_ns();
+            assert!(
+                comm_gain > 0.6 * total_gain,
+                "{}: comm gain {comm_gain:.2e} not dominant in {total_gain:.2e}",
+                r.name
+            );
+        }
+    }
+}

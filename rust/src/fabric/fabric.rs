@@ -1,0 +1,220 @@
+//! `Fabric` facade: a topology + its router, answering endpoint-to-endpoint
+//! questions — message latency (cut-through pipelined across hops), path
+//! bandwidth, and load-adjusted queuing.
+
+use super::link::LinkParams;
+use super::routing::{Path, Router};
+use super::topology::{NodeId, Topology};
+
+/// A topology with prebuilt routing and background-load knobs.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    pub topo: Topology,
+    router: Router,
+    /// Background utilization per link (0..1) used by the analytic queuing
+    /// adder; the event simulator models real contention instead.
+    load: Vec<f64>,
+}
+
+/// Latency breakdown of one message transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Head-of-line propagation+PHY+framing along every hop, ns.
+    pub head_ns: f64,
+    /// Switch traversal (incl. PBR decisions), ns.
+    pub switch_ns: f64,
+    /// Payload serialization at the bottleneck link, ns.
+    pub serialization_ns: f64,
+    /// Analytic queuing adder from background load, ns.
+    pub queuing_ns: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_ns(&self) -> f64 {
+        self.head_ns + self.switch_ns + self.serialization_ns + self.queuing_ns
+    }
+}
+
+impl Fabric {
+    pub fn new(topo: Topology) -> Fabric {
+        let router = Router::build(&topo);
+        let load = vec![0.0; topo.links.len()];
+        Fabric { topo, router, load }
+    }
+
+    /// Rebuild routing after topology edits.
+    pub fn rebuild(&mut self) {
+        self.router = Router::build(&self.topo);
+        self.load.resize(self.topo.links.len(), 0.0);
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Set background utilization (0..1) on a link.
+    pub fn set_load(&mut self, link: usize, rho: f64) {
+        self.load[link] = rho.clamp(0.0, 0.99);
+    }
+
+    /// Uniform background utilization on all links.
+    pub fn set_uniform_load(&mut self, rho: f64) {
+        for l in self.load.iter_mut() {
+            *l = rho.clamp(0.0, 0.99);
+        }
+    }
+
+    pub fn path(&self, src: NodeId, dst: NodeId) -> Option<Path> {
+        self.router.path(src, dst)
+    }
+
+    /// Bottleneck payload bandwidth along the path, bytes/ns.
+    pub fn path_bandwidth(&self, path: &Path, msg_bytes: f64) -> f64 {
+        path.links
+            .iter()
+            .map(|&l| self.topo.link(l).params.effective_bw(msg_bytes))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-way latency of a `msg_bytes` message along `path`, with
+    /// cut-through pipelining: per-hop head latency + per-switch traversal
+    /// + one serialization of the full payload at the bottleneck link +
+    /// per-hop queuing at the current background load.
+    pub fn message_latency(&self, path: &Path, msg_bytes: f64) -> LatencyBreakdown {
+        if path.links.is_empty() {
+            return LatencyBreakdown::default();
+        }
+        let mut head = 0.0;
+        let mut queuing = 0.0;
+        let mut bottleneck: Option<&LinkParams> = None;
+        for &l in &path.links {
+            let p = &self.topo.link(l).params;
+            head += p.head_latency_ns();
+            let service = p.flit.wire_bytes(p.flit.payload_bytes) / (p.raw_bw * p.phy.efficiency());
+            // queue at entry to each link, scaled by that link's load
+            let rho = self.load[l];
+            queuing += rho / (2.0 * (1.0 - rho)) * service * p.flit.flits(msg_bytes).min(64.0);
+            if bottleneck.map(|b| p.effective_bw(msg_bytes) < b.effective_bw(msg_bytes)).unwrap_or(true) {
+                bottleneck = Some(p);
+            }
+        }
+        let mut switch_ns = 0.0;
+        for &n in &path.nodes {
+            if let Some(sw) = &self.topo.node(n).switch {
+                switch_ns += sw.traversal_ns();
+            }
+        }
+        let b = bottleneck.unwrap();
+        // the head flit's wire time is already counted in head_latency
+        let body_bytes = (b.flit.wire_bytes(msg_bytes)
+            - (b.flit.payload_bytes + b.flit.header_bytes))
+            .max(0.0);
+        let serialization = body_bytes / (b.raw_bw * b.phy.efficiency());
+        LatencyBreakdown { head_ns: head, switch_ns, serialization_ns: serialization, queuing_ns: queuing }
+    }
+
+    /// Convenience: end-to-end one-way latency (ns) between two nodes.
+    pub fn latency_ns(&self, src: NodeId, dst: NodeId, msg_bytes: f64) -> Option<f64> {
+        let p = self.path(src, dst)?;
+        Some(self.message_latency(&p, msg_bytes).total_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::link::LinkKind;
+    use crate::fabric::topology::NodeKind;
+
+    fn rack() -> (Fabric, Vec<NodeId>) {
+        let t = Topology::single_hop(8, LinkKind::NvLink5, "r");
+        let accs = t.nodes_of(NodeKind::Accelerator);
+        (Fabric::new(t), accs)
+    }
+
+    #[test]
+    fn intra_rack_small_message_sub_microsecond() {
+        let (f, accs) = rack();
+        let t = f.latency_ns(accs[0], accs[1], 256.0).unwrap();
+        assert!(t < 1_000.0, "intra-rack 256 B took {t} ns");
+    }
+
+    #[test]
+    fn zero_length_path_zero_latency() {
+        let (f, accs) = rack();
+        assert_eq!(f.latency_ns(accs[0], accs[0], 1e6).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn latency_monotone_in_size() {
+        let (f, accs) = rack();
+        let mut last = 0.0;
+        for sz in [64.0, 1024.0, 65_536.0, 1e6, 1e8] {
+            let t = f.latency_ns(accs[0], accs[1], sz).unwrap();
+            assert!(t > last, "size {sz}: {t} !> {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn more_hops_more_latency() {
+        // chain: ep - sw - sw - sw - ep vs single switch
+        let (mut t, leaves) = Topology::clos(2, 1, LinkKind::CxlCoherent, "f");
+        let e0 = t.add_node(NodeKind::Accelerator, "e0");
+        let e1 = t.add_node(NodeKind::Accelerator, "e1");
+        t.connect(e0, leaves[0], LinkKind::CxlCoherent);
+        t.connect(e1, leaves[1], LinkKind::CxlCoherent);
+        let f = Fabric::new(t);
+        let multi = f.latency_ns(e0, e1, 256.0).unwrap();
+
+        let (f1, accs) = {
+            let t = Topology::single_hop(2, LinkKind::CxlCoherent, "s");
+            let a = t.nodes_of(NodeKind::Accelerator);
+            (Fabric::new(t), a)
+        };
+        let single = f1.latency_ns(accs[0], accs[1], 256.0).unwrap();
+        assert!(multi > single, "multi {multi} <= single {single}");
+    }
+
+    #[test]
+    fn background_load_adds_queuing() {
+        let (mut f, accs) = rack();
+        let base = f.latency_ns(accs[0], accs[1], 4096.0).unwrap();
+        f.set_uniform_load(0.8);
+        let loaded = f.latency_ns(accs[0], accs[1], 4096.0).unwrap();
+        assert!(loaded > base, "load must add queuing: {loaded} <= {base}");
+    }
+
+    #[test]
+    fn serialization_pipelines_across_hops() {
+        // for a large message, latency should be ~ one serialization, not
+        // hops * serialization (cut-through)
+        let (mut t, leaves) = Topology::clos(2, 1, LinkKind::CxlCoherent, "f");
+        let e0 = t.add_node(NodeKind::Accelerator, "e0");
+        let e1 = t.add_node(NodeKind::Accelerator, "e1");
+        t.connect(e0, leaves[0], LinkKind::CxlCoherent);
+        t.connect(e1, leaves[1], LinkKind::CxlCoherent);
+        let f = Fabric::new(t);
+        let p = f.path(e0, e1).unwrap();
+        assert_eq!(p.hops(), 4);
+        let br = f.message_latency(&p, 1e7); // 10 MB
+        let one_serialization = 1e7 / (128.0 * 0.95);
+        assert!(br.serialization_ns < 1.25 * one_serialization,
+            "serialization {} not pipelined (1x = {one_serialization})", br.serialization_ns);
+        assert!(br.total_ns() > one_serialization);
+    }
+
+    #[test]
+    fn path_bandwidth_is_bottleneck() {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Accelerator, "a");
+        let s = t.add_switch(crate::fabric::switch::SwitchParams::for_link(LinkKind::CxlCoherent), "s");
+        let b = t.add_node(NodeKind::MemoryNode, "m");
+        t.connect(a, s, LinkKind::CxlCoherent); // 128 GB/s
+        t.connect(s, b, LinkKind::InfiniBandNdr); // 50 GB/s
+        let f = Fabric::new(t);
+        let p = f.path(a, b).unwrap();
+        let bw = f.path_bandwidth(&p, 1e6);
+        assert!(bw < 50.0, "bottleneck must be IB: {bw}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Flit-level packetization (Table 1 / §2: 640 B UALink flits, 48–272 B
+//! NVLink flits, 256 B CXL 3.x PBR flits, 4 KiB InfiniBand MTU).
+//!
+//! A message of `payload` bytes is carved into flits of `payload_bytes`
+//! with `header_bytes` of framing each; the wire carries
+//! `n_flits * (payload_bytes + header_bytes)` plus a per-message header.
+
+/// Flit format of a link protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlitFormat {
+    /// Usable payload per flit, bytes.
+    pub payload_bytes: f64,
+    /// Framing (header + CRC) per flit, bytes.
+    pub header_bytes: f64,
+    /// Per-message header/trailer (transaction-layer), bytes.
+    pub msg_header_bytes: f64,
+}
+
+impl FlitFormat {
+    pub const fn new(payload: f64, header: f64, msg_header: f64) -> Self {
+        FlitFormat { payload_bytes: payload, header_bytes: header, msg_header_bytes: msg_header }
+    }
+
+    /// Number of flits for a message payload.
+    pub fn flits(&self, payload: f64) -> f64 {
+        ((payload + self.msg_header_bytes) / self.payload_bytes).ceil().max(1.0)
+    }
+
+    /// Total wire bytes for a message payload (packetization overhead in).
+    pub fn wire_bytes(&self, payload: f64) -> f64 {
+        let n = self.flits(payload);
+        n * (self.payload_bytes + self.header_bytes)
+    }
+
+    /// Packetization efficiency payload/wire for a message size.
+    pub fn efficiency(&self, payload: f64) -> f64 {
+        payload / self.wire_bytes(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const UALINK: FlitFormat = FlitFormat::new(608.0, 32.0, 16.0); // 640 B flit
+    const NVLINK: FlitFormat = FlitFormat::new(240.0, 16.0, 16.0); // 256 B flit
+
+    #[test]
+    fn single_flit_minimum() {
+        assert_eq!(UALINK.flits(1.0), 1.0);
+        assert_eq!(UALINK.flits(0.0), 1.0);
+    }
+
+    #[test]
+    fn flit_count_scales() {
+        // 608 payload bytes per flit, 16 msg header: 1200 B -> ceil(1216/608)=2
+        assert_eq!(UALINK.flits(1200.0), 2.0);
+        assert_eq!(NVLINK.flits(1200.0), 6.0); // ceil(1216/240)
+    }
+
+    #[test]
+    fn small_messages_are_inefficient_on_big_flits() {
+        // the paper's motivation for NVLink's small flits: fine-grained
+        // traffic wastes a 640 B UALink flit
+        let small = 64.0;
+        assert!(UALINK.efficiency(small) < NVLINK.efficiency(small));
+    }
+
+    #[test]
+    fn large_messages_approach_format_efficiency() {
+        let eff = UALINK.efficiency(1e6);
+        assert!(eff > 0.93 && eff < 0.951, "{eff}");
+    }
+
+    #[test]
+    fn wire_bytes_monotone() {
+        let mut last = 0.0;
+        for sz in [1.0, 100.0, 640.0, 1000.0, 10_000.0] {
+            let w = UALINK.wire_bytes(sz);
+            assert!(w >= last);
+            last = w;
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The interconnect substrate: links (NVLink/UALink/CXL/PCIe/InfiniBand),
+//! PHY + flit-level packetization latency models, switches with PBR
+//! routing, and topology builders (single-hop XLink domains; multi-level
+//! Clos, 3D-torus and DragonFly CXL fabrics — Figure 4a of the paper).
+//!
+//! The paper's methodology (§6): *"link latency derived from flit sizes,
+//! PHY layer characteristics, and packetization and queuing behaviors at
+//! both link and transaction layers; switch latencies ... empirical
+//! measurements from silicon prototypes, factoring in hop counts"* — this
+//! module implements exactly those factors as a parameterized model.
+
+pub mod link;
+pub mod phy;
+pub mod flit;
+pub mod switch;
+pub mod topology;
+pub mod routing;
+pub mod fabric;
+
+pub use fabric::Fabric;
+pub use link::{LinkKind, LinkParams};
+pub use routing::Path;
+pub use switch::SwitchParams;
+pub use topology::{NodeId, NodeKind, Topology, TopologyKind};

@@ -1,0 +1,72 @@
+//! PHY-layer characteristics (Table 1's "PHY" row).
+//!
+//! Each interconnect family rides a different physical layer with different
+//! encoding/FEC cost. The numbers are latency *adders* in ns, applied once
+//! per link traversal in each direction; bandwidth efficiency scales the
+//! raw signaling rate down to usable payload rate.
+
+/// Physical-layer family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phy {
+    /// NVLink's proprietary NRZ/PAM4 signaling: minimal latency adder.
+    Proprietary,
+    /// Ethernet-based (UALink): PAM4 + lightweight FEC.
+    Ethernet,
+    /// PCIe-based (CXL, plain PCIe): 1b/1b flit mode encoding + FEC (Gen6)
+    /// or 128b/130b (Gen5).
+    Pcie,
+    /// InfiniBand PHY (also used for the RDMA baseline).
+    InfiniBand,
+}
+
+impl Phy {
+    /// One-way latency adder of the PHY (serdes + encode/decode + FEC), ns.
+    pub fn latency_ns(self) -> f64 {
+        match self {
+            Phy::Proprietary => 15.0, // custom serdes, no FEC on short reach
+            Phy::Ethernet => 60.0,    // PAM4 + RS-FEC lite
+            Phy::Pcie => 25.0,        // flit-mode FEC (Gen6-class)
+            Phy::InfiniBand => 50.0,
+        }
+    }
+
+    /// Fraction of raw signaling bandwidth available to the link layer
+    /// after encoding/FEC overhead.
+    pub fn efficiency(self) -> f64 {
+        match self {
+            Phy::Proprietary => 0.97,
+            Phy::Ethernet => 0.94,
+            Phy::Pcie => 0.95,
+            Phy::InfiniBand => 0.94,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phy::Proprietary => "Proprietary",
+            Phy::Ethernet => "Ethernet-based",
+            Phy::Pcie => "PCIe-based",
+            Phy::InfiniBand => "InfiniBand",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_phys_have_positive_latency_and_sane_efficiency() {
+        for p in [Phy::Proprietary, Phy::Ethernet, Phy::Pcie, Phy::InfiniBand] {
+            assert!(p.latency_ns() > 0.0);
+            assert!(p.efficiency() > 0.5 && p.efficiency() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn proprietary_is_fastest_phy() {
+        // Table 1: NVLink "very low" latency rests partly on its PHY
+        assert!(Phy::Proprietary.latency_ns() < Phy::Ethernet.latency_ns());
+        assert!(Phy::Proprietary.latency_ns() < Phy::Pcie.latency_ns());
+    }
+}

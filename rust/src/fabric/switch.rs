@@ -1,0 +1,99 @@
+//! Switch model: per-hop latency (the paper's "empirical measurements from
+//! our silicon prototypes"), radix, PBR routing decision cost, and a simple
+//! M/D/1 queuing adder for loaded ports (§6: "queuing behaviors at both
+//! link and transaction layers").
+
+use super::link::LinkKind;
+
+/// Parameters of one switch class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchParams {
+    /// Port count (radix).
+    pub radix: usize,
+    /// Fixed cut-through forwarding latency per hop, ns.
+    pub hop_ns: f64,
+    /// Extra per-hop cost of a PBR routing decision, ns (CXL 3.x port-based
+    /// routing table lookup; zero for fixed single-hop crossbars).
+    pub pbr_ns: f64,
+    /// Whether this switch can cascade into multi-level fabrics (CXL 3.x
+    /// switch cascading; XLink switches cannot).
+    pub cascadable: bool,
+}
+
+impl SwitchParams {
+    /// Default switch class for a link technology.
+    pub fn for_link(kind: LinkKind) -> SwitchParams {
+        match kind {
+            // NVSwitch complex (9 trays in an NVL72): single-stage
+            // crossbar, no routing flexibility; 72 GPU ports + uplinks
+            LinkKind::NvLink5 => SwitchParams { radix: 144, hop_ns: 100.0, pbr_ns: 0.0, cascadable: false },
+            // UALink switch: single-hop only per spec
+            LinkKind::UaLink => SwitchParams { radix: 128, hop_ns: 150.0, pbr_ns: 0.0, cascadable: false },
+            // CXL 3.x PBR switch — "empirical measurements from our silicon
+            // prototypes" (paper §6); cascading + PBR enabled
+            LinkKind::CxlCoherent => SwitchParams { radix: 64, hop_ns: 180.0, pbr_ns: 20.0, cascadable: true },
+            LinkKind::CxlCapacity => SwitchParams { radix: 64, hop_ns: 200.0, pbr_ns: 20.0, cascadable: true },
+            LinkKind::PcieGen5 => SwitchParams { radix: 32, hop_ns: 250.0, pbr_ns: 0.0, cascadable: true },
+            // IB switch ASIC
+            LinkKind::InfiniBandNdr => SwitchParams { radix: 64, hop_ns: 300.0, pbr_ns: 0.0, cascadable: true },
+        }
+    }
+
+    /// Total traversal latency of this switch, ns.
+    pub fn traversal_ns(&self) -> f64 {
+        self.hop_ns + self.pbr_ns
+    }
+
+    /// M/D/1 mean queuing delay adder at utilization `rho` for a mean
+    /// service time `service_ns` (per-flit). Saturates (capped) near 1.0
+    /// to keep the analytic model finite; the event-driven simulator in
+    /// `crate::sim` models the real queue.
+    pub fn queuing_ns(&self, rho: f64, service_ns: f64) -> f64 {
+        let rho = rho.clamp(0.0, 0.99);
+        // M/D/1: Wq = rho / (2 (1 - rho)) * service
+        rho / (2.0 * (1.0 - rho)) * service_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cxl_switches_cascade_xlink_do_not() {
+        // §2: "cascading enables multiple switches to interconnect
+        // hierarchically" is what distinguishes CXL from XLink
+        assert!(SwitchParams::for_link(LinkKind::CxlCoherent).cascadable);
+        assert!(SwitchParams::for_link(LinkKind::CxlCapacity).cascadable);
+        assert!(!SwitchParams::for_link(LinkKind::NvLink5).cascadable);
+        assert!(!SwitchParams::for_link(LinkKind::UaLink).cascadable);
+    }
+
+    #[test]
+    fn pbr_costs_only_on_cxl() {
+        assert!(SwitchParams::for_link(LinkKind::CxlCoherent).pbr_ns > 0.0);
+        assert_eq!(SwitchParams::for_link(LinkKind::NvLink5).pbr_ns, 0.0);
+    }
+
+    #[test]
+    fn queuing_grows_with_load() {
+        let s = SwitchParams::for_link(LinkKind::CxlCoherent);
+        let q1 = s.queuing_ns(0.1, 10.0);
+        let q2 = s.queuing_ns(0.5, 10.0);
+        let q3 = s.queuing_ns(0.9, 10.0);
+        assert!(q1 < q2 && q2 < q3);
+        assert_eq!(s.queuing_ns(0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn queuing_bounded_at_saturation() {
+        let s = SwitchParams::for_link(LinkKind::CxlCoherent);
+        assert!(s.queuing_ns(2.0, 10.0).is_finite());
+    }
+
+    #[test]
+    fn nvswitch_radix_covers_rack() {
+        // 72 GPUs per NVL72 rack + fabric uplinks must hang off the complex
+        assert!(SwitchParams::for_link(LinkKind::NvLink5).radix > 72);
+    }
+}

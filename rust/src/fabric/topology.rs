@@ -1,0 +1,333 @@
+//! Topology graph: endpoints (accelerators, CPUs, memory nodes) and
+//! switches joined by typed links, plus builders for the fabric shapes in
+//! Figure 4a: single-hop XLink domains, multi-level Clos, 3D-torus and
+//! DragonFly CXL fabrics.
+
+use super::link::{LinkKind, LinkParams};
+use super::switch::SwitchParams;
+
+/// Index of a node in a [`Topology`].
+pub type NodeId = usize;
+
+/// What a node is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// An accelerator endpoint (GPU or other XPU).
+    Accelerator,
+    /// A host CPU endpoint.
+    Cpu,
+    /// A CPU-less / accelerator-less tier-2 memory node (paper §5).
+    MemoryNode,
+    /// A switch (XLink crossbar or CXL PBR switch).
+    Switch,
+}
+
+/// A node in the fabric graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Switch parameters if kind == Switch.
+    pub switch: Option<SwitchParams>,
+    /// Free-form label for printing/debugging ("cluster0/gpu13").
+    pub label: String,
+}
+
+/// An undirected link between two nodes.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub params: LinkParams,
+}
+
+/// The fabric shape classes of Figure 4a.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    SingleHop,
+    MultiLevelClos,
+    Torus3d,
+    DragonFly,
+}
+
+/// A typed interconnect graph.
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// adjacency: node -> (neighbor, link index)
+    adj: Vec<Vec<(NodeId, usize)>>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Topology::default()
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind, label: impl Into<String>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind, switch: None, label: label.into() });
+        self.adj.push(Vec::new());
+        id
+    }
+
+    pub fn add_switch(&mut self, params: SwitchParams, label: impl Into<String>) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { kind: NodeKind::Switch, switch: Some(params), label: label.into() });
+        self.adj.push(Vec::new());
+        id
+    }
+
+    pub fn connect(&mut self, a: NodeId, b: NodeId, kind: LinkKind) -> usize {
+        self.connect_params(a, b, kind.params())
+    }
+
+    pub fn connect_params(&mut self, a: NodeId, b: NodeId, params: LinkParams) -> usize {
+        assert!(a < self.nodes.len() && b < self.nodes.len() && a != b);
+        let idx = self.links.len();
+        self.links.push(Link { a, b, params });
+        self.adj[a].push((b, idx));
+        self.adj[b].push((a, idx));
+        idx
+    }
+
+    pub fn neighbors(&self, n: NodeId) -> &[(NodeId, usize)] {
+        &self.adj[n]
+    }
+
+    pub fn node(&self, n: NodeId) -> &Node {
+        &self.nodes[n]
+    }
+
+    pub fn link(&self, l: usize) -> &Link {
+        &self.links[l]
+    }
+
+    /// Node ids of a given kind.
+    pub fn nodes_of(&self, kind: NodeKind) -> Vec<NodeId> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].kind == kind).collect()
+    }
+
+    /// Degree (port usage) of a node.
+    pub fn degree(&self, n: NodeId) -> usize {
+        self.adj[n].len()
+    }
+
+    /// Check no switch exceeds its radix.
+    pub fn validate_radix(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Some(sw) = &n.switch {
+                if self.degree(i) > sw.radix {
+                    return Err(format!(
+                        "switch {} ({}) degree {} exceeds radix {}",
+                        i,
+                        n.label,
+                        self.degree(i),
+                        sw.radix
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// True if the graph is connected (ignoring isolated zero-degree nodes
+    /// is NOT allowed — every node must be reachable from node 0).
+    pub fn is_connected(&self) -> bool {
+        if self.nodes.is_empty() {
+            return true;
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(n) = stack.pop() {
+            for &(m, _) in &self.adj[n] {
+                if !seen[m] {
+                    seen[m] = true;
+                    count += 1;
+                    stack.push(m);
+                }
+            }
+        }
+        count == self.nodes.len()
+    }
+
+    // ------------------------------------------------------------------
+    // builders (Figure 4a fabric shapes)
+    // ------------------------------------------------------------------
+
+    /// Single-hop XLink domain: `n` accelerators through one crossbar
+    /// switch complex (one-stage Clos) — the intra-cluster shape (§4).
+    pub fn single_hop(n: usize, kind: LinkKind, label: &str) -> Topology {
+        let mut t = Topology::new();
+        let sw = t.add_switch(SwitchParams::for_link(kind), format!("{label}/xswitch"));
+        for i in 0..n {
+            let a = t.add_node(NodeKind::Accelerator, format!("{label}/acc{i}"));
+            t.connect(a, sw, kind);
+        }
+        t
+    }
+
+    /// Multi-level Clos over `leaves` leaf switches with `spines` spine
+    /// switches; endpoints are attached later by the caller. Returns
+    /// (topology, leaf switch ids).
+    pub fn clos(leaves: usize, spines: usize, kind: LinkKind, label: &str) -> (Topology, Vec<NodeId>) {
+        let mut t = Topology::new();
+        let spine_ids: Vec<NodeId> = (0..spines)
+            .map(|i| t.add_switch(SwitchParams::for_link(kind), format!("{label}/spine{i}")))
+            .collect();
+        let leaf_ids: Vec<NodeId> = (0..leaves)
+            .map(|i| t.add_switch(SwitchParams::for_link(kind), format!("{label}/leaf{i}")))
+            .collect();
+        for &l in &leaf_ids {
+            for &s in &spine_ids {
+                t.connect(l, s, kind);
+            }
+        }
+        (t, leaf_ids)
+    }
+
+    /// 3D-torus of switches with dimensions (x, y, z). Returns (topology,
+    /// switch grid in x-major order).
+    pub fn torus3d(dims: (usize, usize, usize), kind: LinkKind, label: &str) -> (Topology, Vec<NodeId>) {
+        let (x, y, z) = dims;
+        assert!(x >= 1 && y >= 1 && z >= 1);
+        let mut t = Topology::new();
+        let idx = |i: usize, j: usize, k: usize| (i * y + j) * z + k;
+        let ids: Vec<NodeId> = (0..x * y * z)
+            .map(|n| t.add_switch(SwitchParams::for_link(kind), format!("{label}/sw{n}")))
+            .collect();
+        for i in 0..x {
+            for j in 0..y {
+                for k in 0..z {
+                    let me = ids[idx(i, j, k)];
+                    // +1 neighbor in each dimension (wrap); avoid double
+                    // connecting rings of length 2
+                    if x > 1 && (i + 1 < x || x > 2) {
+                        t.connect(me, ids[idx((i + 1) % x, j, k)], kind);
+                    }
+                    if y > 1 && (j + 1 < y || y > 2) {
+                        t.connect(me, ids[idx(i, (j + 1) % y, k)], kind);
+                    }
+                    if z > 1 && (k + 1 < z || z > 2) {
+                        t.connect(me, ids[idx(i, j, (k + 1) % z)], kind);
+                    }
+                }
+            }
+        }
+        (t, ids)
+    }
+
+    /// DragonFly: `groups` groups of `per_group` switches; all-to-all
+    /// within a group, one global link between every pair of groups.
+    /// Returns (topology, per-group switch ids).
+    pub fn dragonfly(groups: usize, per_group: usize, kind: LinkKind, label: &str) -> (Topology, Vec<Vec<NodeId>>) {
+        let mut t = Topology::new();
+        let mut gids = Vec::new();
+        for g in 0..groups {
+            let ids: Vec<NodeId> = (0..per_group)
+                .map(|i| t.add_switch(SwitchParams::for_link(kind), format!("{label}/g{g}s{i}")))
+                .collect();
+            for i in 0..per_group {
+                for j in i + 1..per_group {
+                    t.connect(ids[i], ids[j], kind);
+                }
+            }
+            gids.push(ids);
+        }
+        // global links: group g connects to group h via switch (h-1) mod per_group
+        for g in 0..groups {
+            for h in g + 1..groups {
+                let sg = gids[g][h % per_group];
+                let sh = gids[h][g % per_group];
+                t.connect(sg, sh, kind);
+            }
+        }
+        (t, gids)
+    }
+
+    /// Merge another topology into this one; returns the node id offset.
+    pub fn merge(&mut self, other: &Topology) -> usize {
+        let off = self.nodes.len();
+        for n in &other.nodes {
+            let id = self.nodes.len();
+            self.nodes.push(n.clone());
+            self.adj.push(Vec::new());
+            debug_assert_eq!(id, off + (id - off));
+        }
+        for l in &other.links {
+            self.connect_params(l.a + off, l.b + off, l.params);
+        }
+        off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_hop_shape() {
+        let t = Topology::single_hop(72, LinkKind::NvLink5, "rack0");
+        assert_eq!(t.nodes_of(NodeKind::Accelerator).len(), 72);
+        assert_eq!(t.nodes_of(NodeKind::Switch).len(), 1);
+        assert!(t.is_connected());
+        assert!(t.validate_radix().is_ok());
+    }
+
+    #[test]
+    fn single_hop_radix_violation_detected() {
+        let t = Topology::single_hop(200, LinkKind::NvLink5, "too-big");
+        assert!(t.validate_radix().is_err(), "NVSwitch radix 144 must reject 200 GPUs");
+    }
+
+    #[test]
+    fn clos_connects_all_leaves() {
+        let (t, leaves) = Topology::clos(8, 4, LinkKind::CxlCoherent, "fab");
+        assert_eq!(leaves.len(), 8);
+        assert!(t.is_connected());
+        assert_eq!(t.links.len(), 8 * 4);
+    }
+
+    #[test]
+    fn torus_is_connected_and_regular() {
+        let (t, ids) = Topology::torus3d((4, 4, 4), LinkKind::CxlCoherent, "torus");
+        assert_eq!(ids.len(), 64);
+        assert!(t.is_connected());
+        for &id in &ids {
+            assert_eq!(t.degree(id), 6, "interior torus switch must have degree 6");
+        }
+    }
+
+    #[test]
+    fn torus_degenerate_dims() {
+        let (t, ids) = Topology::torus3d((2, 1, 1), LinkKind::CxlCoherent, "line");
+        assert_eq!(ids.len(), 2);
+        assert!(t.is_connected());
+        assert_eq!(t.links.len(), 1, "2-ring must not double-link");
+    }
+
+    #[test]
+    fn dragonfly_connected_with_global_links() {
+        let (t, gids) = Topology::dragonfly(4, 4, LinkKind::CxlCoherent, "df");
+        assert!(t.is_connected());
+        assert_eq!(gids.len(), 4);
+        // intra: 4 groups * C(4,2)=6 links; global: C(4,2)=6
+        assert_eq!(t.links.len(), 4 * 6 + 6);
+    }
+
+    #[test]
+    fn merge_preserves_structure() {
+        let mut a = Topology::single_hop(4, LinkKind::NvLink5, "a");
+        let b = Topology::single_hop(4, LinkKind::UaLink, "b");
+        let off = a.merge(&b);
+        assert_eq!(a.nodes.len(), 10);
+        assert_eq!(a.links.len(), 8);
+        assert!(!a.is_connected(), "merged islands are disjoint until bridged");
+        // bridge the two switch nodes via CXL
+        let sa = 0;
+        let sb = off;
+        a.connect(sa, sb, LinkKind::CxlCoherent);
+        assert!(a.is_connected());
+    }
+}

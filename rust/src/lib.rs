@@ -1,0 +1,44 @@
+//! # ScalePool
+//!
+//! Reproduction of *"ScalePool: Hybrid XLink-CXL Fabric for Composable Resource
+//! Disaggregation in Unified Scale-up Domains"* (Panmnesia, 2025).
+//!
+//! ScalePool interconnects many accelerators through hardware interconnects
+//! instead of long-distance networking: XLink (NVLink / UALink) for
+//! intra-cluster accelerator communication, and hierarchical CXL switching
+//! fabrics for scalable, coherent inter-cluster memory sharing — plus an
+//! explicit two-tier memory hierarchy (tier-1 accelerator-local + coherence-
+//! centric CXL, tier-2 capacity-oriented CXL memory nodes).
+//!
+//! This crate is the Layer-3 (rust) side of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the fabric/cluster/memory simulator, the
+//!   Calculon-style LLM co-design model, and the ScalePool coordinator
+//!   (allocation, routing, tiering, job scheduling).
+//! * **L2 (python/compile/model.py)** — a JAX transformer LM fwd/bwd +
+//!   optimizer, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused attention,
+//!   tiled matmul, fused AdamW) called from L2, interpret-mode for CPU PJRT.
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT HLO
+//! artifacts through PJRT (the `xla` crate) and executes them from rust.
+//!
+//! See `DESIGN.md` for the full system inventory and per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod fabric;
+pub mod sim;
+pub mod coherence;
+pub mod memory;
+pub mod cluster;
+pub mod collective;
+pub mod calculon;
+pub mod workloads;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;
+pub mod bench;
+pub mod cli;
+
+pub use fabric::{Fabric, LinkKind, Topology};

@@ -1,0 +1,14 @@
+//! `scalepool` CLI — leader entrypoint for the ScalePool reproduction.
+//!
+//! Subcommands map onto the paper's evaluation:
+//! * `fig6`   — LLM training time, ScalePool vs RDMA baseline (Figure 6)
+//! * `fig7`   — tiered-memory latency sweep (Figure 7)
+//! * `table1` — CXL / UALink / NVLink link-characteristics table (Table 1)
+//! * `topo`   — build and inspect fabric topologies
+//! * `train`  — end-to-end: run the AOT-compiled JAX/Pallas train step on
+//!              PJRT under the ScalePool coordinator (hybrid emulation)
+//! * `simulate` — discrete-event memory-access simulation on a topology
+fn main() {
+    let code = scalepool::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

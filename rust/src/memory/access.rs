@@ -1,0 +1,164 @@
+//! Access-latency resolution: what it costs to touch one cache line,
+//! depending on where the page lives and which mechanism reaches it.
+//! This chain is what Figure 7 sweeps across working-set sizes.
+
+use crate::coherence::software::SoftwareCopyModel;
+use crate::memory::device::MemDevice;
+use crate::memory::tier::{waterfall_placement, TierSpec};
+
+/// Mechanism by which a (64 B) access is satisfied.
+#[derive(Clone, Copy, Debug)]
+pub enum AccessPath {
+    /// Accelerator-local HBM.
+    LocalHbm,
+    /// Peer accelerator HBM over non-coherent XLink: software-managed page
+    /// copy amortized over reuse, then local access to the copy.
+    XlinkSwCopy(SoftwareCopyModel),
+    /// Coherent CXL.cache access (tier-1 remote): request/data round trip
+    /// over the fabric plus the remote HBM access; no software.
+    CxlCoherent {
+        /// Fabric round-trip (request out + data back), ns.
+        fabric_rt_ns: f64,
+        /// Extra coherence-protocol messages amortized per access, ns
+        /// (directory lookups / occasional invalidations).
+        coherence_ns: f64,
+    },
+    /// Tier-2 capacity pool over capacity-oriented CXL (CXL.mem/io).
+    CxlTier2 { fabric_rt_ns: f64 },
+    /// RDMA to a remote cluster (the scale-out baseline's overflow path).
+    Rdma(SoftwareCopyModel),
+    /// External storage / distributed FS.
+    Storage,
+}
+
+impl AccessPath {
+    /// Mean latency of one access via this path, ns.
+    pub fn latency_ns(&self) -> f64 {
+        match *self {
+            AccessPath::LocalHbm => MemDevice::Hbm3e.access_ns(),
+            AccessPath::XlinkSwCopy(m) => m.per_access_ns() + MemDevice::Hbm3e.access_ns(),
+            AccessPath::CxlCoherent { fabric_rt_ns, coherence_ns } => {
+                fabric_rt_ns + coherence_ns + MemDevice::Hbm3e.access_ns()
+            }
+            AccessPath::CxlTier2 { fabric_rt_ns } => fabric_rt_ns + MemDevice::CxlDram.access_ns(),
+            AccessPath::Rdma(m) => m.per_access_ns() + MemDevice::Ddr5.access_ns(),
+            AccessPath::Storage => MemDevice::NvmeSsd.access_ns(),
+        }
+    }
+}
+
+/// One of Figure 7's three system configurations: an ordered tier list and
+/// the mechanism used for each tier.
+#[derive(Clone, Debug)]
+pub struct MemoryConfig {
+    pub name: String,
+    /// (capacity spec, access mechanism) from fastest to slowest.
+    pub levels: Vec<(TierSpec, AccessPath)>,
+}
+
+impl MemoryConfig {
+    /// Mean per-access latency for a working set accessed uniformly at
+    /// random (the memory-intensive workloads of §2 — KV cache lookups,
+    /// embedding gathers, RAG — have little locality, so residency share
+    /// equals access share).
+    pub fn mean_latency_ns(&self, working_set: f64) -> f64 {
+        let specs: Vec<TierSpec> = self.levels.iter().map(|(s, _)| *s).collect();
+        let placement = waterfall_placement(working_set, &specs);
+        let mut acc = 0.0;
+        // placement preserves level order; an extra trailing entry is the
+        // implicit storage spill
+        for (i, (_, bytes)) in placement.iter().enumerate() {
+            let frac = bytes / working_set;
+            let path = self.levels.get(i).map(|(_, p)| *p).unwrap_or(AccessPath::Storage);
+            acc += frac * path.latency_ns();
+        }
+        acc
+    }
+
+    /// Latency with a hot-fraction model: `hot_frac` of accesses go to the
+    /// fastest tier regardless of residency share (caching of hot pages in
+    /// local HBM), the rest are uniform over the whole working set.
+    pub fn mean_latency_with_locality(&self, working_set: f64, hot_frac: f64) -> f64 {
+        let uniform = self.mean_latency_ns(working_set);
+        let local = self.levels[0].1.latency_ns();
+        hot_frac * local + (1.0 - hot_frac) * uniform
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::tier::Tier;
+    use crate::util::units::GB;
+
+    fn cfgs() -> (MemoryConfig, MemoryConfig) {
+        let acc = 192.0 * GB;
+        let cluster = 72.0 * acc;
+        let baseline = MemoryConfig {
+            name: "baseline".into(),
+            levels: vec![
+                (TierSpec::tier1_local(acc), AccessPath::LocalHbm),
+                (
+                    TierSpec::tier1_remote(cluster - acc),
+                    AccessPath::XlinkSwCopy(SoftwareCopyModel::xlink_intra_rack()),
+                ),
+                (
+                    TierSpec { tier: Tier::Tier2Pool, device: MemDevice::Ddr5, capacity: 10.0 * cluster },
+                    AccessPath::Rdma(SoftwareCopyModel::rdma_inter_cluster()),
+                ),
+            ],
+        };
+        let scalepool = MemoryConfig {
+            name: "scalepool".into(),
+            levels: vec![
+                (TierSpec::tier1_local(acc), AccessPath::LocalHbm),
+                (
+                    TierSpec::tier1_remote(cluster - acc),
+                    AccessPath::CxlCoherent { fabric_rt_ns: 600.0, coherence_ns: 80.0 },
+                ),
+                (TierSpec::tier2(10.0 * cluster), AccessPath::CxlTier2 { fabric_rt_ns: 800.0 }),
+            ],
+        };
+        (baseline, scalepool)
+    }
+
+    #[test]
+    fn small_working_sets_identical() {
+        let (b, s) = cfgs();
+        let ws = 50.0 * GB;
+        assert!((b.mean_latency_ns(ws) - s.mean_latency_ns(ws)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_monotone_in_working_set() {
+        let (b, _) = cfgs();
+        let mut last = 0.0;
+        for ws in [10.0, 100.0, 1_000.0, 20_000.0, 100_000.0] {
+            let l = b.mean_latency_ns(ws * GB);
+            assert!(l >= last, "ws {ws} GB: {l} < {last}");
+            last = l;
+        }
+    }
+
+    #[test]
+    fn scalepool_wins_beyond_local_capacity() {
+        let (b, s) = cfgs();
+        let ws = 1_000.0 * GB; // beyond one accelerator, within cluster
+        assert!(s.mean_latency_ns(ws) < b.mean_latency_ns(ws));
+    }
+
+    #[test]
+    fn scalepool_wins_big_beyond_cluster() {
+        let (b, s) = cfgs();
+        let ws = 40_000.0 * GB; // beyond the 13.8 TB cluster
+        let ratio = b.mean_latency_ns(ws) / s.mean_latency_ns(ws);
+        assert!(ratio > 2.0, "expected large tier-2 win, got {ratio:.2}x");
+    }
+
+    #[test]
+    fn hot_fraction_reduces_latency() {
+        let (b, _) = cfgs();
+        let ws = 40_000.0 * GB;
+        assert!(b.mean_latency_with_locality(ws, 0.9) < b.mean_latency_ns(ws) * 0.3);
+    }
+}

@@ -1,0 +1,82 @@
+//! Memory device models: the raw media behind each tier.
+
+/// A memory device technology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemDevice {
+    /// On-package HBM3e (accelerator-local, tier-1).
+    Hbm3e,
+    /// CPU-attached (LP)DDR5 — where the RDMA baseline offloads to.
+    Ddr5,
+    /// DRAM behind a CXL memory-node controller (tier-2 media).
+    CxlDram,
+    /// NVMe SSD — what tier-2 replaces for capacity overflow ("such
+    /// scenarios traditionally rely on external storage ... with
+    /// millisecond- to second-level latencies").
+    NvmeSsd,
+}
+
+impl MemDevice {
+    /// Device-side access latency (row access + controller), ns.
+    pub fn access_ns(self) -> f64 {
+        match self {
+            MemDevice::Hbm3e => 100.0,
+            MemDevice::Ddr5 => 90.0,
+            MemDevice::CxlDram => 130.0, // DDR + CXL endpoint controller
+            MemDevice::NvmeSsd => 20_000.0, // read latency (optimistic)
+        }
+    }
+
+    /// Device bandwidth per stack/module, bytes/ns (GB/s).
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            MemDevice::Hbm3e => 1_000.0, // per-stack; B200 carries 8 stacks
+            MemDevice::Ddr5 => 64.0,     // per channel pair
+            MemDevice::CxlDram => 128.0, // bounded by the CXL x16 port
+            MemDevice::NvmeSsd => 14.0,
+        }
+    }
+
+    /// Typical capacity per unit (stack / DIMM set / module / drive), bytes.
+    pub fn unit_capacity(self) -> f64 {
+        match self {
+            MemDevice::Hbm3e => 24.0 * 1e9 * 8.0 / 8.0, // 24 GB per stack
+            MemDevice::Ddr5 => 128.0 * 1e9,
+            MemDevice::CxlDram => 512.0 * 1e9, // dense memory-node module
+            MemDevice::NvmeSsd => 4.0 * 1e12,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemDevice::Hbm3e => "HBM3e",
+            MemDevice::Ddr5 => "DDR5",
+            MemDevice::CxlDram => "CXL-DRAM",
+            MemDevice::NvmeSsd => "NVMe-SSD",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_ordering_matches_hierarchy() {
+        assert!(MemDevice::Ddr5.access_ns() <= MemDevice::Hbm3e.access_ns() + 20.0);
+        assert!(MemDevice::Hbm3e.access_ns() < MemDevice::CxlDram.access_ns());
+        assert!(MemDevice::CxlDram.access_ns() * 100.0 < MemDevice::NvmeSsd.access_ns());
+    }
+
+    #[test]
+    fn hbm_bandwidth_dominates() {
+        assert!(MemDevice::Hbm3e.bandwidth() > 5.0 * MemDevice::CxlDram.bandwidth());
+    }
+
+    #[test]
+    fn tier2_replaces_storage_not_dram() {
+        // the paper's pitch: tier-2 turns ms-scale overflow into sub-µs
+        let t2 = MemDevice::CxlDram.access_ns();
+        let ssd = MemDevice::NvmeSsd.access_ns();
+        assert!(ssd / t2 > 100.0);
+    }
+}

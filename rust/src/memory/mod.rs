@@ -1,0 +1,13 @@
+//! Memory subsystem: device models, the two-tier hierarchy of §5, the
+//! composable pool allocator, and the access-latency resolution chain that
+//! Figure 7 sweeps.
+
+pub mod device;
+pub mod tier;
+pub mod pool;
+pub mod access;
+
+pub use access::{AccessPath, MemoryConfig};
+pub use device::MemDevice;
+pub use pool::{MemoryPool, PoolError, Region};
+pub use tier::{Tier, TierSpec};

@@ -1,0 +1,275 @@
+//! Composable memory-pool allocator: the mechanism behind "dynamic
+//! aggregation of distributed memory resources into composable memory
+//! pools" (§4). Regions live on fabric nodes (accelerator HBM carve-outs
+//! or tier-2 memory nodes); allocations may interleave across regions.
+
+use crate::fabric::NodeId;
+use crate::memory::tier::Tier;
+
+/// A contributing region of a pool.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub node: NodeId,
+    pub tier: Tier,
+    pub capacity: f64,
+    pub used: f64,
+}
+
+/// An allocation handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AllocId(pub u64);
+
+/// One allocation: bytes per region.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub id: AllocId,
+    pub total: f64,
+    /// (region index, bytes) placements.
+    pub extents: Vec<(usize, f64)>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PoolError {
+    #[error("out of memory: requested {requested} bytes, {available} available")]
+    OutOfMemory { requested: f64, available: f64 },
+    #[error("unknown allocation")]
+    UnknownAlloc,
+}
+
+/// Placement policy for new allocations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Fill regions in order (locality-first: caller orders regions from
+    /// nearest to farthest).
+    FirstFit,
+    /// Split evenly across all regions with space (bandwidth-interleaved).
+    Interleave,
+    /// Prefer the region with most free space (load balance).
+    WorstFit,
+}
+
+/// A composable pool over multiple regions.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryPool {
+    regions: Vec<Region>,
+    allocs: Vec<Option<Allocation>>,
+    next_id: u64,
+}
+
+impl MemoryPool {
+    pub fn new() -> Self {
+        MemoryPool::default()
+    }
+
+    pub fn add_region(&mut self, node: NodeId, tier: Tier, capacity: f64) -> usize {
+        self.regions.push(Region { node, tier, capacity, used: 0.0 });
+        self.regions.len() - 1
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.regions.iter().map(|r| r.capacity).sum()
+    }
+
+    pub fn used(&self) -> f64 {
+        self.regions.iter().map(|r| r.used).sum()
+    }
+
+    pub fn available(&self) -> f64 {
+        self.capacity() - self.used()
+    }
+
+    /// Allocate `bytes` with the given policy.
+    pub fn alloc(&mut self, bytes: f64, policy: Placement) -> Result<Allocation, PoolError> {
+        assert!(bytes > 0.0);
+        if bytes > self.available() + 1e-9 {
+            return Err(PoolError::OutOfMemory { requested: bytes, available: self.available() });
+        }
+        let mut extents = Vec::new();
+        match policy {
+            Placement::FirstFit => {
+                let mut rest = bytes;
+                for (i, r) in self.regions.iter_mut().enumerate() {
+                    let free = r.capacity - r.used;
+                    if free <= 0.0 {
+                        continue;
+                    }
+                    let take = rest.min(free);
+                    r.used += take;
+                    extents.push((i, take));
+                    rest -= take;
+                    if rest <= 1e-9 {
+                        break;
+                    }
+                }
+            }
+            Placement::Interleave => {
+                // proportional split over free space, single pass
+                let frees: Vec<f64> = self.regions.iter().map(|r| r.capacity - r.used).collect();
+                let total_free: f64 = frees.iter().sum();
+                let mut assigned = 0.0;
+                let n = self.regions.len();
+                for (i, r) in self.regions.iter_mut().enumerate() {
+                    let share = if i + 1 == n {
+                        bytes - assigned // absorb rounding
+                    } else {
+                        bytes * frees[i] / total_free
+                    };
+                    let take = share.min(r.capacity - r.used);
+                    if take > 0.0 {
+                        r.used += take;
+                        extents.push((i, take));
+                        assigned += take;
+                    }
+                }
+            }
+            Placement::WorstFit => {
+                let mut rest = bytes;
+                while rest > 1e-9 {
+                    let (i, free) = self
+                        .regions
+                        .iter()
+                        .enumerate()
+                        .map(|(i, r)| (i, r.capacity - r.used))
+                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                        .unwrap();
+                    if free <= 1e-9 {
+                        break;
+                    }
+                    let take = rest.min(free);
+                    self.regions[i].used += take;
+                    // merge with an existing extent on the same region
+                    if let Some(e) = extents.iter_mut().find(|(ri, _): &&mut (usize, f64)| *ri == i) {
+                        e.1 += take;
+                    } else {
+                        extents.push((i, take));
+                    }
+                    rest -= take;
+                }
+            }
+        }
+        let placed: f64 = extents.iter().map(|(_, b)| b).sum();
+        debug_assert!((placed - bytes).abs() < 1e-6, "placed {placed} != {bytes}");
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        let alloc = Allocation { id, total: bytes, extents };
+        self.allocs.push(Some(alloc.clone()));
+        Ok(alloc)
+    }
+
+    /// Free an allocation.
+    pub fn free(&mut self, id: AllocId) -> Result<(), PoolError> {
+        let slot = self
+            .allocs
+            .get_mut(id.0 as usize)
+            .ok_or(PoolError::UnknownAlloc)?
+            .take()
+            .ok_or(PoolError::UnknownAlloc)?;
+        for (i, b) in slot.extents {
+            self.regions[i].used -= b;
+            debug_assert!(self.regions[i].used >= -1e-6);
+        }
+        Ok(())
+    }
+
+    /// Invariant check: per-region usage equals the sum of live extents and
+    /// never exceeds capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut per_region = vec![0.0; self.regions.len()];
+        for a in self.allocs.iter().flatten() {
+            for &(i, b) in &a.extents {
+                per_region[i] += b;
+            }
+        }
+        for (i, r) in self.regions.iter().enumerate() {
+            let tol = 1e-6f64.max(1e-12 * r.used.abs());
+            if (r.used - per_region[i]).abs() > tol {
+                return Err(format!("region {i}: used {} != live extents {}", r.used, per_region[i]));
+            }
+            if r.used > r.capacity + tol {
+                return Err(format!("region {i}: used {} > capacity {}", r.used, r.capacity));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool3() -> MemoryPool {
+        let mut p = MemoryPool::new();
+        p.add_region(0, Tier::Tier1Local, 100.0);
+        p.add_region(1, Tier::Tier1Remote, 200.0);
+        p.add_region(2, Tier::Tier2Pool, 400.0);
+        p
+    }
+
+    #[test]
+    fn first_fit_prefers_early_regions() {
+        let mut p = pool3();
+        let a = p.alloc(80.0, Placement::FirstFit).unwrap();
+        assert_eq!(a.extents, vec![(0, 80.0)]);
+        let b = p.alloc(50.0, Placement::FirstFit).unwrap();
+        assert_eq!(b.extents, vec![(0, 20.0), (1, 30.0)]);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn interleave_spreads() {
+        let mut p = pool3();
+        let a = p.alloc(70.0, Placement::Interleave).unwrap();
+        assert_eq!(a.extents.len(), 3);
+        // proportional to free space 100:200:400
+        assert!((a.extents[0].1 - 10.0).abs() < 1e-6);
+        assert!((a.extents[1].1 - 20.0).abs() < 1e-6);
+        assert!((a.extents[2].1 - 40.0).abs() < 1e-6);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn worst_fit_targets_biggest_region() {
+        let mut p = pool3();
+        let a = p.alloc(100.0, Placement::WorstFit).unwrap();
+        assert_eq!(a.extents, vec![(2, 100.0)]);
+    }
+
+    #[test]
+    fn oom_detected() {
+        let mut p = pool3();
+        let e = p.alloc(701.0, Placement::FirstFit).unwrap_err();
+        assert!(matches!(e, PoolError::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn free_returns_space() {
+        let mut p = pool3();
+        let a = p.alloc(600.0, Placement::FirstFit).unwrap();
+        assert!(p.alloc(200.0, Placement::FirstFit).is_err());
+        p.free(a.id).unwrap();
+        assert_eq!(p.used(), 0.0);
+        assert!(p.alloc(200.0, Placement::FirstFit).is_ok());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut p = pool3();
+        let a = p.alloc(10.0, Placement::FirstFit).unwrap();
+        p.free(a.id).unwrap();
+        assert_eq!(p.free(a.id), Err(PoolError::UnknownAlloc));
+    }
+
+    #[test]
+    fn exact_fill() {
+        let mut p = pool3();
+        let a = p.alloc(700.0, Placement::FirstFit).unwrap();
+        assert_eq!(a.total, 700.0);
+        assert!(p.available() < 1e-9);
+        p.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,105 @@
+//! The two-tier memory hierarchy of §5.
+
+use super::device::MemDevice;
+
+/// Which tier a page/allocation lives in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Tier-1: accelerator-local HBM, unified intra-cluster by XLink and
+    /// (in ScalePool) made coherent by coherence-centric CXL.
+    Tier1Local,
+    /// Tier-1 remote: another accelerator's HBM in the same or another
+    /// cluster, reached over XLink (non-coherent) or CXL.cache (coherent).
+    Tier1Remote,
+    /// Tier-2: capacity-oriented CXL memory nodes (no CPUs/accelerators).
+    Tier2Pool,
+    /// Overflow beyond the pool: external storage / distributed FS.
+    Storage,
+}
+
+/// Capacity specification of a tier within one ScalePool deployment.
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    pub tier: Tier,
+    pub device: MemDevice,
+    /// Total capacity of this tier visible to one accelerator's workload,
+    /// bytes.
+    pub capacity: f64,
+}
+
+impl TierSpec {
+    pub fn tier1_local(capacity: f64) -> TierSpec {
+        TierSpec { tier: Tier::Tier1Local, device: MemDevice::Hbm3e, capacity }
+    }
+    pub fn tier1_remote(capacity: f64) -> TierSpec {
+        TierSpec { tier: Tier::Tier1Remote, device: MemDevice::Hbm3e, capacity }
+    }
+    pub fn tier2(capacity: f64) -> TierSpec {
+        TierSpec { tier: Tier::Tier2Pool, device: MemDevice::CxlDram, capacity }
+    }
+    pub fn storage(capacity: f64) -> TierSpec {
+        TierSpec { tier: Tier::Storage, device: MemDevice::NvmeSsd, capacity }
+    }
+}
+
+/// Split a working set across an ordered tier list (waterfall placement:
+/// hottest data to the fastest tier). Returns (spec, bytes-resident) pairs.
+pub fn waterfall_placement(working_set: f64, tiers: &[TierSpec]) -> Vec<(TierSpec, f64)> {
+    let mut rest = working_set;
+    let mut out = Vec::with_capacity(tiers.len());
+    for &t in tiers {
+        let here = rest.min(t.capacity);
+        out.push((t, here));
+        rest -= here;
+        if rest <= 0.0 {
+            break;
+        }
+    }
+    if rest > 0.0 {
+        // anything left spills to (implicit, unbounded) storage
+        out.push((TierSpec::storage(f64::INFINITY), rest));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GB;
+
+    #[test]
+    fn fits_in_first_tier() {
+        let tiers = [TierSpec::tier1_local(192.0 * GB), TierSpec::tier2(1e4 * GB)];
+        let p = waterfall_placement(100.0 * GB, &tiers);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].1, 100.0 * GB);
+    }
+
+    #[test]
+    fn overflows_in_order() {
+        let tiers = [TierSpec::tier1_local(192.0 * GB), TierSpec::tier1_remote(800.0 * GB), TierSpec::tier2(1e4 * GB)];
+        let p = waterfall_placement(1_500.0 * GB, &tiers);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].1, 192.0 * GB);
+        assert_eq!(p[1].1, 800.0 * GB);
+        assert!((p[2].1 - 508.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn spills_to_storage_when_all_full() {
+        let tiers = [TierSpec::tier1_local(10.0 * GB)];
+        let p = waterfall_placement(25.0 * GB, &tiers);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].0.tier, Tier::Storage);
+        assert_eq!(p[1].1, 15.0 * GB);
+    }
+
+    #[test]
+    fn conservation_of_bytes() {
+        let tiers = [TierSpec::tier1_local(7.0), TierSpec::tier1_remote(11.0), TierSpec::tier2(13.0)];
+        for ws in [0.5, 7.0, 10.0, 31.0, 100.0] {
+            let placed: f64 = waterfall_placement(ws, &tiers).iter().map(|(_, b)| b).sum();
+            assert!((placed - ws).abs() < 1e-9, "ws {ws} placed {placed}");
+        }
+    }
+}

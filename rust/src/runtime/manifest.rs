@@ -1,0 +1,140 @@
+//! The flat-I/O ABI between the AOT python side and the rust runtime,
+//! parsed from `artifacts/<preset>.manifest.json`.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype of one tensor in the flat I/O list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "s32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").and_then(Json::as_str).context("tensor name")?.to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor shape")?
+            .iter()
+            .map(|d| d.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let dtype = j.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One entry point (train_step / init / eval).
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub artifact: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntryPoint {
+    fn from_json(dir: &Path, j: &Json) -> Result<EntryPoint> {
+        let artifact = dir.join(j.get("artifact").and_then(Json::as_str).context("artifact path")?);
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("entry {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(EntryPoint { artifact, inputs: specs("inputs")?, outputs: specs("outputs")? })
+    }
+}
+
+/// The whole per-preset manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub preset: String,
+    pub param_count: u64,
+    /// Parameter names, in flat order.
+    pub params: Vec<String>,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub train_step: EntryPoint,
+    pub init: EntryPoint,
+    pub eval: EntryPoint,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/<preset>.manifest.json`.
+    pub fn load(dir: &Path, preset: &str) -> Result<ArtifactManifest> {
+        let path = dir.join(format!("{preset}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let hp = j.get("hyperparams").context("hyperparams")?;
+        let u = |k: &str| hp.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+        Ok(ArtifactManifest {
+            preset: j.get("preset").and_then(Json::as_str).context("preset")?.to_string(),
+            param_count: j.get("param_count").and_then(Json::as_u64).unwrap_or(0),
+            params: j
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("params")?
+                .iter()
+                .filter_map(|p| p.as_str().map(str::to_string))
+                .collect(),
+            n_params: j.get("n_params").and_then(Json::as_u64).unwrap_or(0) as usize,
+            vocab: u("vocab"),
+            seq: u("seq"),
+            batch: u("batch"),
+            train_step: EntryPoint::from_json(dir, j.get("train_step").context("train_step")?)?,
+            init: EntryPoint::from_json(dir, j.get("init").context("init")?)?,
+            eval: EntryPoint::from_json(dir, j.get("eval").context("eval")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("tiny.manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir, "tiny").unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.params.len(), m.n_params);
+        // train step IO: params*3 + [step, tokens, targets]
+        assert_eq!(m.train_step.inputs.len(), 3 * m.n_params + 3);
+        assert_eq!(m.train_step.outputs.len(), 3 * m.n_params + 2);
+        // init: seed -> params*3 + step
+        assert_eq!(m.init.inputs.len(), 1);
+        assert_eq!(m.init.outputs.len(), 3 * m.n_params + 1);
+        assert!(m.param_count > 0);
+        assert!(m.train_step.artifact.exists());
+        let toks = &m.train_step.inputs[3 * m.n_params + 1];
+        assert_eq!(toks.name, "tokens");
+        assert_eq!(toks.shape, vec![m.batch, m.seq]);
+        assert_eq!(toks.dtype, "s32");
+    }
+
+    #[test]
+    fn tensor_spec_from_json() {
+        let j = Json::parse(r#"{"name":"w","shape":[2,3],"dtype":"f32"}"#).unwrap();
+        let t = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.name, "w");
+    }
+}

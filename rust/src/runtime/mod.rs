@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from rust. Python never runs
+//! here — the interchange is `artifacts/*.hlo.txt` + `*.manifest.json`.
+//!
+//! * [`pjrt`] — thin wrapper over the `xla` crate (client, compile, exec).
+//! * [`manifest`] — the flat-I/O ABI descriptor parsed from the manifest.
+//! * [`trainer`] — training-loop state machine over the train/init/eval
+//!   executables (weights held as XLA literals between steps).
+//! * [`data`] — deterministic synthetic tiny-corpus token pipeline.
+
+pub mod pjrt;
+pub mod manifest;
+pub mod trainer;
+pub mod data;
+
+pub use data::SyntheticCorpus;
+pub use manifest::{ArtifactManifest, TensorSpec};
+pub use pjrt::PjrtEngine;
+pub use trainer::Trainer;
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env_or("SCALEPOOL_ARTIFACTS", "artifacts"))
+}
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// True if the artifacts for `preset` exist (used by tests to skip
+/// gracefully when `make artifacts` has not run).
+pub fn artifacts_available(preset: &str) -> bool {
+    default_artifacts_dir().join(format!("{preset}.manifest.json")).exists()
+}

@@ -1,0 +1,162 @@
+//! Thin PJRT wrapper: CPU client + HLO-text loading + execution.
+//!
+//! Interchange is HLO *text* (see aot.py and /opt/xla-example/README.md:
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
+//! proto path rejects; the text parser reassigns ids).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus compilation cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl PjrtEngine {
+    /// CPU client (the only backend in this environment).
+    pub fn cpu() -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+
+    /// Execute with literal inputs; the artifact returns one tuple, which
+    /// is decomposed into element literals.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal path): its C shim leaks every input device buffer
+    /// (`buffer.release()` with no matching free — xla_rs.cc:900), which
+    /// is ~1.3 GB/step for the base100m preset. We upload to buffers we
+    /// own and go through `execute_b`, so inputs are freed on drop.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        exe: &Executable,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut buffers = Vec::with_capacity(args.len());
+        for a in args {
+            buffers.push(
+                self.client
+                    .buffer_from_host_literal(None, a.borrow())
+                    .context("uploading input")?,
+            );
+        }
+        let out = exe
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {}", exe.name))?;
+        drop(buffers);
+        let tuple = out[0][0].to_literal_sync().context("fetching result")?;
+        tuple.to_tuple().context("untupling result")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+    let l = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        // scalar: reshape to rank 0
+        Ok(l.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(l.reshape(&dims)?)
+    }
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+    let l = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        Ok(l.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(l.reshape(&dims)?)
+    }
+}
+
+/// i32 scalar.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Extract an f32 scalar from a literal.
+pub fn get_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let e = PjrtEngine::cpu().unwrap();
+        assert!(e.device_count() >= 1);
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+    }
+
+    #[test]
+    fn literal_shapes() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let s = lit_i32_scalar(7);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn smoke_artifact_end_to_end() {
+        // the Pallas-matmul smoke artifact: fn(x, y) = (x @ y + 2,)
+        let dir = crate::runtime::default_artifacts_dir();
+        let path = dir.join("smoke.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", path.display());
+            return;
+        }
+        let e = PjrtEngine::cpu().unwrap();
+        let exe = e.load_hlo(&path).unwrap();
+        let x = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let y = lit_f32(&[1.0, 1.0, 1.0, 1.0], &[2, 2]).unwrap();
+        let out = e.run(&exe, &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+}

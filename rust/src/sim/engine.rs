@@ -1,0 +1,161 @@
+//! Core event loop: a min-heap of timestamped events dispatched in order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time in nanoseconds.
+pub type SimTime = f64;
+
+/// What an event does when it fires (interpreted by the driver).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Transaction `id` arrives at hop `hop` of its path.
+    Arrive { id: usize, hop: usize },
+    /// Transaction `id` finishes service at hop `hop`.
+    Depart { id: usize, hop: usize },
+    /// Transaction `id` completes end-to-end.
+    Complete { id: usize },
+    /// Driver-defined.
+    Custom { tag: u64 },
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    at: SimTime,
+    seq: u64, // tie-break: FIFO among simultaneous events
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + clock.
+#[derive(Debug, Default)]
+pub struct Engine {
+    heap: BinaryHeap<Event>,
+    now: SimTime,
+    seq: u64,
+    dispatched: u64,
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events dispatched so far.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Schedule `kind` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: SimTime, kind: EventKind) {
+        debug_assert!(at >= self.now, "schedule into the past: {at} < {}", self.now);
+        self.seq += 1;
+        self.heap.push(Event { at, seq: self.seq, kind });
+    }
+
+    /// Schedule `kind` after a delay.
+    pub fn after(&mut self, delay: SimTime, kind: EventKind) {
+        self.schedule(self.now + delay, kind);
+    }
+
+    /// Pop the next event, advancing the clock. None when drained.
+    pub fn next(&mut self) -> Option<(SimTime, EventKind)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now);
+        self.now = ev.at;
+        self.dispatched += 1;
+        Some((ev.at, ev.kind))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut e = Engine::new();
+        e.schedule(30.0, EventKind::Custom { tag: 3 });
+        e.schedule(10.0, EventKind::Custom { tag: 1 });
+        e.schedule(20.0, EventKind::Custom { tag: 2 });
+        let mut tags = Vec::new();
+        while let Some((_, EventKind::Custom { tag })) = e.next() {
+            tags.push(tag);
+        }
+        assert_eq!(tags, vec![1, 2, 3]);
+        assert_eq!(e.now(), 30.0);
+        assert_eq!(e.dispatched(), 3);
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut e = Engine::new();
+        for tag in 0..100 {
+            e.schedule(5.0, EventKind::Custom { tag });
+        }
+        let mut last = None;
+        while let Some((_, EventKind::Custom { tag })) = e.next() {
+            if let Some(l) = last {
+                assert!(tag > l, "FIFO violated: {tag} after {l}");
+            }
+            last = Some(tag);
+        }
+    }
+
+    #[test]
+    fn after_is_relative_to_now() {
+        let mut e = Engine::new();
+        e.schedule(100.0, EventKind::Custom { tag: 0 });
+        e.next();
+        e.after(50.0, EventKind::Custom { tag: 1 });
+        let (at, _) = e.next().unwrap();
+        assert_eq!(at, 150.0);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut e = Engine::new();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..1000 {
+            e.schedule(rng.f64() * 1e6, EventKind::Custom { tag: 0 });
+        }
+        let mut last = 0.0;
+        while let Some((at, _)) = e.next() {
+            assert!(at >= last);
+            last = at;
+        }
+    }
+}

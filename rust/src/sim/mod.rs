@@ -1,0 +1,18 @@
+//! Discrete-event simulation engine (transaction-level): event heap,
+//! links/switch ports as FCFS servers with real queuing, and a
+//! memory-transaction simulator used by Figure 7's detailed mode and the
+//! `scalepool simulate` subcommand.
+//!
+//! The analytic model in [`crate::fabric`] answers "what is the latency of
+//! one message on an idle/uniformly-loaded path"; this engine answers the
+//! same question under *actual* contention from a concrete transaction
+//! stream (the paper's "queuing behaviors at both link and transaction
+//! layers").
+
+pub mod engine;
+pub mod server;
+pub mod memsim;
+
+pub use engine::{Engine, EventKind};
+pub use memsim::{MemSim, MemSimReport, Transaction};
+pub use server::Server;

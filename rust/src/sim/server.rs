@@ -1,0 +1,100 @@
+//! FCFS server: models one link direction (or switch port) as a resource
+//! with a service rate; transactions queue when busy. This is the "real"
+//! queuing counterpart of the analytic M/D/1 adder in `fabric::switch`.
+
+use super::engine::SimTime;
+
+/// A first-come-first-served serial resource.
+#[derive(Clone, Debug, Default)]
+pub struct Server {
+    /// Time at which the server frees up.
+    free_at: SimTime,
+    /// Cumulative busy time (for utilization reporting).
+    busy: f64,
+    /// Number of serviced jobs.
+    served: u64,
+    /// Cumulative queueing delay experienced by jobs.
+    queued: f64,
+}
+
+impl Server {
+    pub fn new() -> Server {
+        Server::default()
+    }
+
+    /// Admit a job arriving at `now` needing `service` time units.
+    /// Returns the completion time; updates occupancy accounting.
+    pub fn admit(&mut self, now: SimTime, service: f64) -> SimTime {
+        let start = now.max(self.free_at);
+        self.queued += start - now;
+        self.free_at = start + service;
+        self.busy += service;
+        self.served += 1;
+        self.free_at
+    }
+
+    /// Earliest start time for a job arriving at `now` (without admitting).
+    pub fn earliest_start(&self, now: SimTime) -> SimTime {
+        now.max(self.free_at)
+    }
+
+    pub fn utilization(&self, horizon: SimTime) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            (self.busy / horizon).min(1.0)
+        }
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    pub fn mean_queue_delay(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.queued / self.served as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_server_serves_immediately() {
+        let mut s = Server::new();
+        assert_eq!(s.admit(10.0, 5.0), 15.0);
+        assert_eq!(s.mean_queue_delay(), 0.0);
+    }
+
+    #[test]
+    fn busy_server_queues() {
+        let mut s = Server::new();
+        s.admit(0.0, 10.0); // busy until 10
+        let done = s.admit(2.0, 5.0); // waits 8
+        assert_eq!(done, 15.0);
+        assert_eq!(s.mean_queue_delay(), 4.0); // (0 + 8) / 2
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = Server::new();
+        s.admit(0.0, 30.0);
+        s.admit(50.0, 20.0);
+        assert!((s.utilization(100.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.served(), 2);
+    }
+
+    #[test]
+    fn back_to_back_jobs_serialize() {
+        let mut s = Server::new();
+        let mut done = 0.0;
+        for _ in 0..10 {
+            done = s.admit(0.0, 7.0);
+        }
+        assert_eq!(done, 70.0);
+    }
+}

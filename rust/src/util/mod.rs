@@ -1,0 +1,12 @@
+//! Self-contained utilities (the offline vendor set has no rand/serde/
+//! criterion/proptest, so the pieces we need are implemented here).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod units;
+pub mod prop;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;

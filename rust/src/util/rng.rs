@@ -1,0 +1,254 @@
+//! Deterministic PRNG: splitmix64 seeding + xoshiro256++ core.
+//!
+//! Used by workload generators, the discrete-event simulator, and the
+//! property-test harness. No external crates (offline build).
+
+/// xoshiro256++ with splitmix64 seeding. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut st = seed;
+        let s = [
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+            splitmix64(&mut st),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX - n + 1) % n;
+        loop {
+            let v = self.next_u64();
+            if v <= zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with given rate.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `theta` (0 = uniform).
+    /// Inverse-CDF by binary search over the precomputed harmonic table is
+    /// overkill here; we use the approximation of Gray et al. (quick and
+    /// adequate for workload skew). The zeta constants are memoized per
+    /// (n, theta) — recomputing the truncated harmonic per draw dominated
+    /// the workload generators before (§Perf).
+    pub fn zipf(&mut self, n: u64, theta: f64) -> u64 {
+        if theta <= 1e-9 {
+            return self.below(n);
+        }
+        let (zetan, eta) = zipf_constants(n, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let u = self.f64();
+        let uz = u * zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(theta) {
+            return 1;
+        }
+        ((n as f64) * (eta * u - eta + 1.0).powf(alpha)) as u64 % n
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a child RNG with decorrelated state (for parallel streams).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// Memoized (zeta(n, theta), eta) pairs — a tiny thread-local map; the
+/// workload generators only ever use a handful of distinct (n, theta).
+fn zipf_constants(n: u64, theta: f64) -> (f64, f64) {
+    use std::cell::RefCell;
+    thread_local! {
+        static CACHE: RefCell<Vec<((u64, u64), (f64, f64))>> = const { RefCell::new(Vec::new()) };
+    }
+    let key = (n, theta.to_bits());
+    CACHE.with(|c| {
+        if let Some(&(_, v)) = c.borrow().iter().find(|(k, _)| *k == key) {
+            return v;
+        }
+        let zetan = zeta(n, theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta(2, theta) / zetan);
+        let mut b = c.borrow_mut();
+        if b.len() > 64 {
+            b.clear(); // unbounded growth guard
+        }
+        b.push((key, (zetan, eta)));
+        (zetan, eta)
+    })
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // truncated harmonic; capped term count keeps workload gen O(1) amortized
+    let cap = n.min(10_000);
+    let mut sum = 0.0;
+    for i in 1..=cap {
+        sum += 1.0 / (i as f64).powf(theta);
+    }
+    if n > cap {
+        // integral tail approximation
+        sum += ((n as f64).powf(1.0 - theta) - (cap as f64).powf(1.0 - theta)) / (1.0 - theta);
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skews_low_ranks() {
+        let mut r = Rng::new(13);
+        let mut lo = 0;
+        for _ in 0..10_000 {
+            if r.zipf(1000, 0.99) < 10 {
+                lo += 1;
+            }
+        }
+        // with theta=0.99 the first 10 ranks should draw a large share
+        assert!(lo > 2_000, "zipf low-rank share {lo}");
+    }
+
+    #[test]
+    fn zipf_zero_theta_uniformish() {
+        let mut r = Rng::new(13);
+        let mut lo = 0;
+        for _ in 0..10_000 {
+            if r.zipf(1000, 0.0) < 10 {
+                lo += 1;
+            }
+        }
+        assert!(lo < 300, "uniform low-rank share {lo}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

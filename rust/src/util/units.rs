@@ -1,0 +1,78 @@
+//! Unit helpers: byte sizes, times in nanoseconds, bandwidths in bytes/s.
+//!
+//! The entire simulator works in **f64 nanoseconds** and **f64 bytes/second**
+//! — latencies in this domain span 6 orders of magnitude (sub-ns wire delay
+//! to ms-scale storage), so floating point is the right currency.
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const TIB: f64 = 1024.0 * GIB;
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+pub const TB: f64 = 1e12;
+
+pub const US: f64 = 1_000.0; // ns
+pub const MS: f64 = 1_000_000.0; // ns
+pub const SEC: f64 = 1e9; // ns
+
+/// GB/s -> bytes/ns (the simulator's bandwidth unit).
+pub const fn gbps(gb_per_s: f64) -> f64 {
+    gb_per_s // 1 GB/s == 1 byte/ns exactly (decimal GB)
+}
+
+/// Human-format a nanosecond duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human-format a byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b < KIB {
+        format!("{b:.0} B")
+    } else if b < MIB {
+        format!("{:.1} KiB", b / KIB)
+    } else if b < GIB {
+        format!("{:.1} MiB", b / MIB)
+    } else if b < TIB {
+        format!("{:.2} GiB", b / GIB)
+    } else {
+        format!("{:.2} TiB", b / TIB)
+    }
+}
+
+/// Human-format bandwidth given bytes/ns.
+pub fn fmt_bw(bytes_per_ns: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gb_per_s_is_bytes_per_ns() {
+        assert_eq!(gbps(100.0), 100.0);
+        // 100 GB/s * 1 ns = 100 bytes
+        assert_eq!(gbps(100.0) * 1.0, 100.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500.0 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3.2e6), "3.20 ms");
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2.0 * GIB), "2.00 GiB");
+    }
+}

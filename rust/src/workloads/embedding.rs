@@ -1,0 +1,79 @@
+//! Recommendation-model embedding-lookup workload (§2: "embedding
+//! lookups"): many small gathers over a huge table, Zipf-skewed — the
+//! classic capacity-over-bandwidth consumer.
+
+use super::memws::{Access, AccessTrace};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EmbeddingWorkload {
+    /// Number of embedding rows.
+    pub rows: u64,
+    /// Bytes per row (dim * dtype).
+    pub row_bytes: u32,
+    /// Lookups per batch.
+    pub lookups_per_batch: usize,
+    /// Batches to generate.
+    pub batches: usize,
+    /// Popularity skew.
+    pub theta: f64,
+    pub seed: u64,
+}
+
+impl Default for EmbeddingWorkload {
+    fn default() -> Self {
+        EmbeddingWorkload {
+            rows: 400_000_000,  // 400M-row table
+            row_bytes: 512,     // 128-dim fp32
+            lookups_per_batch: 4096,
+            batches: 8,
+            theta: 0.9,
+            seed: 13,
+        }
+    }
+}
+
+impl EmbeddingWorkload {
+    pub fn table_bytes(&self) -> f64 {
+        self.rows as f64 * self.row_bytes as f64
+    }
+
+    pub fn trace(&self) -> AccessTrace {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut accesses = Vec::with_capacity(self.batches * self.lookups_per_batch);
+        for _ in 0..self.batches {
+            for _ in 0..self.lookups_per_batch {
+                let row = rng.zipf(self.rows, self.theta);
+                t += rng.exp(1.0);
+                accesses.push(Access { offset: row * self.row_bytes as u64, bytes: self.row_bytes, at: t });
+            }
+            t += 1_000.0; // inter-batch gap
+        }
+        AccessTrace { working_set: self.table_bytes(), accesses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_exceeds_accelerator_memory() {
+        let w = EmbeddingWorkload::default();
+        assert!(w.table_bytes() > 192e9, "table {:.2e} B", w.table_bytes());
+    }
+
+    #[test]
+    fn lookups_are_skewed() {
+        let trace = EmbeddingWorkload::default().trace();
+        let hot = trace.fraction_below(trace.working_set * 0.001);
+        assert!(hot > 0.15, "hot 0.1% share {hot}");
+    }
+
+    #[test]
+    fn trace_size() {
+        let w = EmbeddingWorkload::default();
+        assert_eq!(w.trace().accesses.len(), w.batches * w.lookups_per_batch);
+    }
+}

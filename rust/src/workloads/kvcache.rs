@@ -1,0 +1,114 @@
+//! KV-cache serving workload (§2: "KV caching and RAG require extensive
+//! memory capacities combined with high I/O bandwidth"): per-request
+//! sequential reads of a conversation's KV blocks, with a long-tail
+//! distribution of context lengths.
+
+use super::memws::{Access, AccessTrace};
+use crate::util::Rng;
+
+/// A batched-decoding KV-cache access generator.
+#[derive(Clone, Debug)]
+pub struct KvCacheWorkload {
+    /// Concurrent conversations resident in the cache.
+    pub conversations: usize,
+    /// KV bytes per token per layer-stack (2 * layers * hidden * kv_heads
+    /// ratio * dtype — precomputed).
+    pub bytes_per_token: f64,
+    /// Mean context length, tokens (exponential tail).
+    pub mean_context: f64,
+    /// Decode steps to simulate.
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for KvCacheWorkload {
+    fn default() -> Self {
+        KvCacheWorkload {
+            conversations: 256,
+            bytes_per_token: 160.0 * 1024.0, // ~160 KB/token (70B-class)
+            mean_context: 2_048.0,
+            steps: 32,
+            seed: 11,
+        }
+    }
+}
+
+impl KvCacheWorkload {
+    /// Total cache footprint, bytes.
+    pub fn footprint(&self, contexts: &[u64]) -> f64 {
+        contexts.iter().map(|&c| c as f64 * self.bytes_per_token).sum()
+    }
+
+    /// Generate the trace: each decode step reads every conversation's
+    /// whole KV prefix (attention over the full context), block by block.
+    pub fn trace(&self) -> AccessTrace {
+        let mut rng = Rng::new(self.seed);
+        let contexts: Vec<u64> =
+            (0..self.conversations).map(|_| (rng.exp(1.0 / self.mean_context)).max(16.0) as u64).collect();
+        // conversation base offsets laid out back to back
+        let mut bases = Vec::with_capacity(contexts.len());
+        let mut cursor = 0u64;
+        for &c in &contexts {
+            bases.push(cursor);
+            cursor += (c as f64 * self.bytes_per_token) as u64;
+        }
+        let block = 16.0 * 1024.0; // paged-attention block
+        let mut t = 0.0;
+        let mut accesses = Vec::new();
+        for _step in 0..self.steps {
+            for (i, &c) in contexts.iter().enumerate() {
+                let total = c as f64 * self.bytes_per_token;
+                let blocks = (total / block).ceil() as u64;
+                // sample a subset of blocks per step to bound trace size
+                let stride = (blocks / 16).max(1);
+                let mut b = 0;
+                while b < blocks {
+                    t += rng.exp(1.0 / 5.0);
+                    accesses.push(Access {
+                        offset: bases[i] + b * block as u64,
+                        bytes: block as u32,
+                        at: t,
+                    });
+                    b += stride;
+                }
+            }
+        }
+        AccessTrace { working_set: cursor as f64, accesses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_exceeds_hbm_at_scale() {
+        // the paper's motivation: serving KV caches outgrow one GPU
+        let w = KvCacheWorkload { conversations: 2048, ..Default::default() };
+        let trace = w.trace();
+        assert!(trace.working_set > 192e9, "footprint {:.2e}", trace.working_set);
+    }
+
+    #[test]
+    fn accesses_within_working_set() {
+        let trace = KvCacheWorkload::default().trace();
+        for a in &trace.accesses {
+            assert!((a.offset as f64) < trace.working_set);
+        }
+    }
+
+    #[test]
+    fn sequential_within_conversation() {
+        let trace = KvCacheWorkload { conversations: 1, steps: 1, ..Default::default() }.trace();
+        let offs: Vec<u64> = trace.accesses.iter().map(|a| a.offset).collect();
+        assert!(offs.windows(2).all(|w| w[0] < w[1]), "per-conversation reads are sequential");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = KvCacheWorkload::default().trace();
+        let b = KvCacheWorkload::default().trace();
+        assert_eq!(a.accesses.len(), b.accesses.len());
+        assert_eq!(a.accesses.first(), b.accesses.first());
+    }
+}

@@ -1,0 +1,135 @@
+//! The Figure 7 workload: a synthetic access stream over a configurable
+//! working set, swept from "fits in one accelerator's HBM" to "exceeds the
+//! whole cluster" — plus the trace representation shared by all workloads.
+
+use crate::util::Rng;
+
+/// One memory access in a trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Access {
+    /// Byte offset into the working set.
+    pub offset: u64,
+    /// Access size, bytes.
+    pub bytes: u32,
+    /// Issue time relative to trace start, ns.
+    pub at: f64,
+}
+
+/// A generated access trace over a working set.
+#[derive(Clone, Debug)]
+pub struct AccessTrace {
+    pub working_set: f64,
+    pub accesses: Vec<Access>,
+}
+
+impl AccessTrace {
+    /// Fraction of accesses whose offset falls below `boundary` bytes.
+    pub fn fraction_below(&self, boundary: f64) -> f64 {
+        if self.accesses.is_empty() {
+            return 0.0;
+        }
+        let n = self.accesses.iter().filter(|a| (a.offset as f64) < boundary).count();
+        n as f64 / self.accesses.len() as f64
+    }
+}
+
+/// Sweep generator for Figure 7.
+#[derive(Clone, Debug)]
+pub struct WorkingSetSweep {
+    /// Access granularity, bytes (64 B cache line by default).
+    pub access_bytes: u32,
+    /// Accesses per trace point.
+    pub accesses: usize,
+    /// Zipf skew (0 = uniform — the paper's capacity-bound regime).
+    pub theta: f64,
+    /// Mean issue interval, ns (Poisson arrivals).
+    pub interval_ns: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkingSetSweep {
+    fn default() -> Self {
+        WorkingSetSweep { access_bytes: 64, accesses: 10_000, theta: 0.0, interval_ns: 10.0, seed: 7 }
+    }
+}
+
+impl WorkingSetSweep {
+    /// Working-set sizes (bytes) to sweep, anchored on the two capacity
+    /// thresholds of Figure 7: one accelerator's HBM and one cluster.
+    pub fn sweep_points(accel_hbm: f64, cluster_hbm: f64, beyond: f64) -> Vec<f64> {
+        vec![
+            0.25 * accel_hbm,
+            0.5 * accel_hbm,
+            1.0 * accel_hbm,
+            4.0 * accel_hbm,
+            16.0 * accel_hbm,
+            0.5 * cluster_hbm,
+            1.0 * cluster_hbm,
+            2.0 * cluster_hbm,
+            4.0 * cluster_hbm,
+            beyond * cluster_hbm,
+        ]
+    }
+
+    /// Generate a trace over `working_set` bytes.
+    pub fn trace(&self, working_set: f64) -> AccessTrace {
+        let mut rng = Rng::new(self.seed);
+        let lines = (working_set / self.access_bytes as f64).max(1.0) as u64;
+        let mut t = 0.0;
+        let accesses = (0..self.accesses)
+            .map(|_| {
+                let line = if self.theta > 0.0 { rng.zipf(lines, self.theta) } else { rng.below(lines) };
+                t += rng.exp(1.0 / self.interval_ns);
+                Access { offset: line * self.access_bytes as u64, bytes: self.access_bytes, at: t }
+            })
+            .collect();
+        AccessTrace { working_set, accesses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GB;
+
+    #[test]
+    fn sweep_points_bracket_thresholds() {
+        let pts = WorkingSetSweep::sweep_points(192.0 * GB, 72.0 * 192.0 * GB, 8.0);
+        assert!(pts.first().unwrap() < &(192.0 * GB));
+        assert!(pts.last().unwrap() > &(72.0 * 192.0 * GB));
+        assert!(pts.windows(2).all(|w| w[0] < w[1]), "sweep must be increasing");
+    }
+
+    #[test]
+    fn uniform_trace_spans_working_set() {
+        let sweep = WorkingSetSweep { accesses: 20_000, ..Default::default() };
+        let ws = 1.0 * GB;
+        let trace = sweep.trace(ws);
+        assert_eq!(trace.accesses.len(), 20_000);
+        // uniform: about half the accesses below the midpoint
+        let f = trace.fraction_below(ws / 2.0);
+        assert!((f - 0.5).abs() < 0.02, "uniform split {f}");
+        assert!(trace.accesses.iter().all(|a| (a.offset as f64) < ws));
+    }
+
+    #[test]
+    fn zipf_trace_skews_low_offsets() {
+        let sweep = WorkingSetSweep { theta: 0.99, accesses: 20_000, ..Default::default() };
+        let ws = 1.0 * GB;
+        let trace = sweep.trace(ws);
+        assert!(trace.fraction_below(ws * 0.01) > 0.3, "zipf must concentrate low offsets");
+    }
+
+    #[test]
+    fn issue_times_increase() {
+        let trace = WorkingSetSweep::default().trace(1e6);
+        assert!(trace.accesses.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkingSetSweep::default().trace(1e6);
+        let b = WorkingSetSweep::default().trace(1e6);
+        assert_eq!(a.accesses, b.accesses);
+    }
+}

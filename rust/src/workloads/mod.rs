@@ -1,0 +1,13 @@
+//! Workload generators: the Figure 7 working-set sweep plus the three
+//! memory-intensive access patterns the paper motivates (§2): KV-cache
+//! serving, embedding-table lookups, and RAG retrieval.
+
+pub mod memws;
+pub mod kvcache;
+pub mod embedding;
+pub mod rag;
+
+pub use embedding::EmbeddingWorkload;
+pub use kvcache::KvCacheWorkload;
+pub use memws::{AccessTrace, WorkingSetSweep};
+pub use rag::RagWorkload;

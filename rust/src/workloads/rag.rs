@@ -1,0 +1,99 @@
+//! Retrieval-augmented-generation workload (§2): per-query ANN probes over
+//! a sharded vector index plus bulk chunk fetches from the knowledge base —
+//! a mix of small random reads and medium sequential reads.
+
+use super::memws::{Access, AccessTrace};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RagWorkload {
+    /// Knowledge-base size, bytes.
+    pub kb_bytes: f64,
+    /// Vector-index size, bytes (probed randomly).
+    pub index_bytes: f64,
+    /// Queries to generate.
+    pub queries: usize,
+    /// Index probes per query (IVF list scans).
+    pub probes_per_query: usize,
+    /// Retrieved chunks per query.
+    pub chunks_per_query: usize,
+    /// Chunk size, bytes.
+    pub chunk_bytes: u32,
+    pub seed: u64,
+}
+
+impl Default for RagWorkload {
+    fn default() -> Self {
+        RagWorkload {
+            kb_bytes: 2e12,     // 2 TB corpus
+            index_bytes: 200e9, // 200 GB index
+            queries: 64,
+            probes_per_query: 32,
+            chunks_per_query: 8,
+            chunk_bytes: 64 * 1024,
+            seed: 17,
+        }
+    }
+}
+
+impl RagWorkload {
+    pub fn working_set(&self) -> f64 {
+        self.kb_bytes + self.index_bytes
+    }
+
+    pub fn trace(&self) -> AccessTrace {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut accesses = Vec::new();
+        for _ in 0..self.queries {
+            // index probes: small random reads in [0, index_bytes)
+            for _ in 0..self.probes_per_query {
+                t += rng.exp(1.0 / 3.0);
+                let off = rng.below(self.index_bytes as u64 / 64) * 64;
+                accesses.push(Access { offset: off, bytes: 4096, at: t });
+            }
+            // chunk fetches: medium reads in [index_bytes, index+kb)
+            for _ in 0..self.chunks_per_query {
+                t += rng.exp(1.0 / 2.0);
+                let span = (self.kb_bytes as u64 - self.chunk_bytes as u64) / 64;
+                let off = self.index_bytes as u64 + rng.below(span) * 64;
+                accesses.push(Access { offset: off, bytes: self.chunk_bytes, at: t });
+            }
+            t += 500.0;
+        }
+        AccessTrace { working_set: self.working_set(), accesses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn working_set_is_pool_scale() {
+        // RAG is the tier-2 poster child: way beyond cluster HBM
+        assert!(RagWorkload::default().working_set() > 1e12);
+    }
+
+    #[test]
+    fn mixes_probe_and_chunk_reads() {
+        let w = RagWorkload::default();
+        let trace = w.trace();
+        let small = trace.accesses.iter().filter(|a| a.bytes == 4096).count();
+        let big = trace.accesses.iter().filter(|a| a.bytes == w.chunk_bytes).count();
+        assert_eq!(small, w.queries * w.probes_per_query);
+        assert_eq!(big, w.queries * w.chunks_per_query);
+    }
+
+    #[test]
+    fn probes_hit_index_chunks_hit_kb() {
+        let w = RagWorkload::default();
+        for a in w.trace().accesses {
+            if a.bytes == 4096 {
+                assert!((a.offset as f64) < w.index_bytes);
+            } else {
+                assert!((a.offset as f64) >= w.index_bytes);
+            }
+        }
+    }
+}

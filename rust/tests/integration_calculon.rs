@@ -1,0 +1,96 @@
+//! Integration: the calculon execution model against the collective cost
+//! models and the Figure 6 harness — cross-module consistency checks on
+//! the quantities the paper reports.
+
+use scalepool::calculon::execution::SystemProfile;
+use scalepool::calculon::presets::{megatron_530b, paper_workloads};
+use scalepool::calculon::{ExecutionModel, Parallelism};
+use scalepool::collective::{Algorithm, CollectiveModel};
+use scalepool::experiments::fig6;
+
+/// The full Figure 6 run satisfies the paper's structural claims.
+#[test]
+fn fig6_structural_claims() {
+    let res = fig6::run_fig6();
+    assert_eq!(res.rows.len(), 5);
+    for r in &res.rows {
+        // every workload gains, and gains come from inter-cluster comm
+        assert!(r.speedup() > 1.0, "{}", r.name);
+        assert!(r.comm_speedup() > r.speedup(), "{}: comm speedup must exceed total", r.name);
+        // compute identical
+        assert_eq!(r.baseline.compute_ns, r.scalepool.compute_ns);
+        // normalized bars: baseline sums to 1
+        let [b, s] = r.normalized();
+        assert!((b.0 + b.1 + b.2 - 1.0).abs() < 1e-9);
+        assert!(s.0 + s.1 + s.2 < 1.0, "scalepool bar must be shorter");
+    }
+}
+
+/// Scaling behavior: doubling the DP degree cannot reduce inter-cluster
+/// communication time on the RDMA baseline.
+#[test]
+fn dp_scaling_monotone_on_baseline() {
+    let w = megatron_530b();
+    let model = ExecutionModel::new(SystemProfile::baseline_rdma());
+    let mut last = 0.0;
+    for dp in [4, 8, 16, 32] {
+        let par = Parallelism { dp, ..w.par };
+        let e = model.estimate(&w.model, &par);
+        // dp shards the same gradient volume across more slower-joined
+        // replicas: ring volume per rank stays ~constant, latency terms grow
+        assert!(e.dp_comm_ns >= last * 0.8, "dp={dp}: {} vs {last}", e.dp_comm_ns);
+        last = e.dp_comm_ns;
+    }
+}
+
+/// Microbatch size trades TP message count against message size; the
+/// model must be consistent: total TP bytes moved is conserved.
+#[test]
+fn tp_volume_conserved_across_microbatching() {
+    let w = paper_workloads().into_iter().next().unwrap();
+    let model = ExecutionModel::new(SystemProfile::scalepool_cxl());
+    let e1 = model.estimate(&w.model, &Parallelism { microbatch: 1, ..w.par });
+    let e2 = model.estimate(&w.model, &Parallelism { microbatch: 2, ..w.par });
+    // 2x bigger messages, half as many: bandwidth term identical, latency
+    // term halves -> tp time must not increase
+    assert!(e2.tp_comm_ns <= e1.tp_comm_ns * 1.001);
+    assert!(e2.tp_comm_ns >= e1.tp_comm_ns * 0.5);
+}
+
+/// The hierarchical collective the coordinator would use for DP beats the
+/// flat ring over the slow inter-cluster transport for rack-aligned groups.
+#[test]
+fn hierarchical_dp_is_an_improvement() {
+    let base = SystemProfile::baseline_rdma();
+    let flat = CollectiveModel::flat(base.inter_rack);
+    let hier = CollectiveModel::hierarchical(base.inter_rack, base.intra_rack, 8);
+    let bytes = 4e9; // a 2 GB gradient shard
+    let n = 64;
+    let f = flat.all_reduce(n, bytes, Algorithm::Ring);
+    let h = hier.all_reduce(n, bytes, Algorithm::Hierarchical);
+    assert!(h < f, "hierarchical {h} !< flat {f}");
+}
+
+/// Offload exposure: with a slow enough offload path the exposed time
+/// appears in "other" and is identical in structure across configs.
+#[test]
+fn offload_exposure_behaves() {
+    let w = paper_workloads().into_iter().next().unwrap();
+    let mut slow = SystemProfile::baseline_rdma();
+    slow.offload_bw = 1.0; // 1 GB/s: clearly exposed
+    let e_slow = ExecutionModel::new(slow).estimate(&w.model, &w.par);
+    let e_fast = ExecutionModel::new(SystemProfile::baseline_rdma()).estimate(&w.model, &w.par);
+    assert!(e_slow.offload_ns > e_fast.offload_ns * 5.0);
+    assert!(e_slow.other_ns() > e_fast.other_ns());
+}
+
+/// GPU-count sanity: per-GPU compute time shrinks as GPUs grow for a
+/// fixed model+batch (weak scaling of the estimator).
+#[test]
+fn compute_scales_with_gpus() {
+    let w = paper_workloads().into_iter().next().unwrap();
+    let model = ExecutionModel::new(SystemProfile::scalepool_cxl());
+    let small = model.estimate(&w.model, &Parallelism { dp: 8, ..w.par });
+    let big = model.estimate(&w.model, &Parallelism { dp: 32, ..w.par });
+    assert!(big.compute_ns < small.compute_ns);
+}

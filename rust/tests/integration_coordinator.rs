@@ -1,0 +1,150 @@
+//! Integration: the coordinator (manager + router + tiering) operating a
+//! whole ScalePool system through realistic job churn and data movement.
+
+use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use scalepool::coordinator::{
+    DataMovementRouter, JobSpec, RouteClass, ScalePoolManager, TieringEngine, TieringPolicy,
+};
+use scalepool::fabric::TopologyKind;
+use scalepool::memory::pool::MemoryPool;
+use scalepool::memory::Tier;
+use scalepool::util::Rng;
+
+fn system() -> scalepool::cluster::ScalePoolSystem {
+    ScalePoolBuilder::new()
+        .racks((0..4).map(|i| Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 8).unwrap()))
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 4,
+            mem_node_capacity: 4e12,
+            ..Default::default()
+        })
+        .build()
+}
+
+/// A multi-tenant day in the life: admissions, routing for each job's
+/// traffic, tiering churn, releases — all invariants hold throughout.
+#[test]
+fn multi_tenant_lifecycle() {
+    let sys = system();
+    let mut mgr = ScalePoolManager::new(&sys);
+    let router = DataMovementRouter::new(&sys);
+
+    let mut t1 = MemoryPool::new();
+    for (i, r) in sys.racks.iter().enumerate() {
+        t1.add_region(r.acc_ids[0], Tier::Tier1Local, sys.rack_hbm_capacity(i));
+    }
+    let mut t2 = MemoryPool::new();
+    for &m in &sys.mem_nodes {
+        t2.add_region(m, Tier::Tier2Pool, sys.config.mem_node_capacity);
+    }
+    let mut tiering = TieringEngine::new(t1, t2, TieringPolicy::default());
+
+    let mut rng = Rng::new(31);
+    let mut jobs = Vec::new();
+    let mut objects = Vec::new();
+    for round in 0..300 {
+        match rng.below(4) {
+            0 => {
+                let accs = 1 + rng.below(12) as usize;
+                if let Ok(g) = mgr.admit(&JobSpec {
+                    name: format!("job{round}"),
+                    accelerators: accs,
+                    pool_bytes: rng.f64_range(0.0, 1e12),
+                }) {
+                    jobs.push(g.job);
+                }
+            }
+            1 => {
+                if let Some(&job) = jobs.first() {
+                    if rng.f64() < 0.5 {
+                        mgr.release(job);
+                        jobs.remove(0);
+                    }
+                }
+            }
+            2 => {
+                if let Ok(id) = tiering.alloc(rng.f64_range(1e9, 5e11)) {
+                    objects.push(id);
+                }
+            }
+            _ => {
+                if !objects.is_empty() {
+                    let id = objects[rng.below(objects.len() as u64) as usize];
+                    tiering.touch(id);
+                    if rng.f64() < 0.2 {
+                        let idx = objects.iter().position(|&o| o == id).unwrap();
+                        objects.swap_remove(idx);
+                        tiering.free(id).unwrap();
+                    }
+                }
+            }
+        }
+        // route a random transfer and check the class is sane
+        let src = sys.racks[rng.below(4) as usize].acc_ids[rng.below(8) as usize];
+        let d = router.route(src, sys.mem_nodes[rng.below(4) as usize], 16384.0);
+        assert_eq!(d.class, RouteClass::CxlTier2);
+        assert!(d.est_latency_ns > 0.0);
+
+        mgr.check_invariants().unwrap();
+        tiering.check_invariants().unwrap();
+    }
+    assert!(mgr.metrics.counter("jobs_admitted") > 20);
+}
+
+/// Admission is work-conserving: a job that fits always lands, and the
+/// manager never grants the same accelerator twice.
+#[test]
+fn admission_never_double_books() {
+    let sys = system();
+    let mut mgr = ScalePoolManager::new(&sys);
+    let mut granted = std::collections::HashSet::new();
+    let mut rng = Rng::new(7);
+    loop {
+        let want = 1 + rng.below(6) as usize;
+        match mgr.admit(&JobSpec { name: "x".into(), accelerators: want, pool_bytes: 0.0 }) {
+            Ok(g) => {
+                for (rack, accs) in &g.accelerators {
+                    for &a in accs {
+                        assert!(granted.insert((*rack, a)), "double-booked ({rack},{a})");
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    assert_eq!(granted.len(), 32, "all 32 accelerators eventually granted");
+    assert_eq!(mgr.free_accelerators(), 0);
+}
+
+/// Tiering under sustained pressure: demotions free tier-1, hot objects
+/// come back, accounting stays exact.
+#[test]
+fn tiering_pressure_cycle() {
+    let mut t1 = MemoryPool::new();
+    t1.add_region(0, Tier::Tier1Local, 100.0);
+    let mut t2 = MemoryPool::new();
+    t2.add_region(1, Tier::Tier2Pool, 10_000.0);
+    let mut e = TieringEngine::new(t1, t2, TieringPolicy { t1_high_watermark: 0.95, promote_heat: 4 });
+
+    // fill tier-1
+    let residents: Vec<u64> = (0..9).map(|_| e.alloc(10.0).unwrap()).collect();
+    for &r in &residents {
+        assert_eq!(e.tier_of(r), Some(Tier::Tier1Local));
+    }
+    // next allocations spill
+    let spilled: Vec<u64> = (0..5).map(|_| e.alloc(10.0).unwrap()).collect();
+    for &s in &spilled {
+        assert_eq!(e.tier_of(s), Some(Tier::Tier2Pool));
+    }
+    // make room, heat a spilled object, watch it promote
+    e.demote_coldest().unwrap();
+    e.demote_coldest().unwrap();
+    for _ in 0..4 {
+        e.touch(spilled[0]);
+    }
+    assert_eq!(e.tier_of(spilled[0]), Some(Tier::Tier1Local));
+    let st = e.stats();
+    assert!(st.promotions >= 1 && st.demotions >= 2 && st.tier2_spills >= 5);
+    e.check_invariants().unwrap();
+}

@@ -1,0 +1,139 @@
+//! Integration: topologies + routing + latency model + event simulation
+//! composed across modules, at sizes closer to the paper's deployment.
+
+use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+use scalepool::fabric::{Fabric, LinkKind, NodeKind, Topology, TopologyKind};
+use scalepool::sim::{MemSim, Transaction};
+use scalepool::util::Rng;
+
+/// A full NVL72 rack: 72 GPUs on one switch complex, paper's Table-1
+/// latency class end to end.
+#[test]
+fn nvl72_rack_latency_class() {
+    let t = Topology::single_hop(72, LinkKind::NvLink5, "nvl72");
+    let accs = t.nodes_of(NodeKind::Accelerator);
+    let f = Fabric::new(t);
+    let lat = f.latency_ns(accs[0], accs[71], 256.0).unwrap();
+    assert!(lat < 500.0, "NVL72 device-to-device 256 B: {lat} ns (paper: <500 ns)");
+}
+
+/// Full-size ScalePool: 8 NVL72 racks + tier-2 nodes over a CXL Clos.
+/// (Direct per-accelerator CXL ports are disabled at this scale — a
+/// 64-radix leaf cannot take 72 endpoints; the rack uplink model applies.)
+#[test]
+fn eight_rack_scalepool_is_sound() {
+    let sys = ScalePoolBuilder::new()
+        .racks((0..8).map(|i| Rack::nvl72(&format!("rack{i}"))))
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: 16,
+            fabric_width: 4,
+            direct_cxl_ports: false,
+            ..Default::default()
+        })
+        .build();
+    assert_eq!(sys.accelerator_count(), 576);
+    assert!(sys.fabric.topo.is_connected());
+    sys.fabric.topo.validate_radix().unwrap();
+
+    // latency hierarchy: intra-rack < inter-rack
+    let intra = sys.acc_latency_ns((0, 0), (0, 71), 64.0);
+    let inter = sys.acc_latency_ns((0, 0), (7, 71), 64.0);
+    assert!(intra < inter);
+    let t2 = sys.tier2_rt_ns(0).unwrap();
+    assert!(t2 < 4.0 * inter, "tier-2 rt {t2} should not dwarf inter-rack {inter}");
+}
+
+/// The three CXL fabric shapes of Figure 4a all produce working systems
+/// with bounded diameter.
+#[test]
+fn all_fabric_shapes_work() {
+    for kind in [TopologyKind::MultiLevelClos, TopologyKind::Torus3d, TopologyKind::DragonFly] {
+        let sys = ScalePoolBuilder::new()
+            .racks((0..6).map(|i| {
+                Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 8).unwrap()
+            }))
+            .config(SystemConfig { inter: InterCluster::Cxl(kind), mem_nodes: 6, ..Default::default() })
+            .build();
+        assert!(sys.fabric.topo.is_connected(), "{kind:?}");
+        for i in 1..6 {
+            let p = sys.fabric.path(sys.racks[0].acc_ids[0], sys.racks[i].acc_ids[0]).unwrap();
+            assert!(p.hops() <= 10, "{kind:?}: {} hops to rack {i}", p.hops());
+        }
+    }
+}
+
+/// Event simulation agrees with the analytic model on an uncontended
+/// path within the cut-through modeling band, and degrades under load.
+#[test]
+fn event_sim_vs_analytic_consistency() {
+    let sys = ScalePoolBuilder::new()
+        .racks((0..2).map(|i| Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 8).unwrap()))
+        .config(SystemConfig::default())
+        .build();
+    let src = sys.racks[0].acc_ids[0];
+    let dst = sys.racks[1].acc_ids[0];
+    let analytic = sys.fabric.latency_ns(src, dst, 4096.0).unwrap();
+
+    let mut sim = MemSim::new(&sys.fabric);
+    let solo = sim
+        .run(vec![Transaction { src, dst, at: 0.0, bytes: 4096.0, device_ns: 0.0 }])
+        .latency
+        .mean();
+    let ratio = solo / analytic;
+    assert!(
+        (0.7..3.0).contains(&ratio),
+        "solo sim {solo} vs analytic {analytic} (ratio {ratio})"
+    );
+
+    // heavy fan-in must queue well beyond the solo latency
+    let mut rng = Rng::new(9);
+    let mut at = 0.0;
+    let all: Vec<_> = sys.racks.iter().flat_map(|r| r.acc_ids.iter().copied()).collect();
+    let txs: Vec<Transaction> = (0..5_000)
+        .map(|_| {
+            at += rng.exp(1.0 / 2.0); // near-saturation arrivals
+            Transaction { src: all[rng.below(16) as usize], dst, at, bytes: 4096.0, device_ns: 0.0 }
+        })
+        .filter(|t| t.src != t.dst)
+        .collect();
+    let mut sim2 = MemSim::new(&sys.fabric);
+    let loaded = sim2.run(txs);
+    assert!(loaded.latency.mean() > 1.5 * solo, "contention must show up");
+}
+
+/// PBR routing tables stay consistent with shortest paths on a big torus.
+#[test]
+fn pbr_consistency_on_torus() {
+    let (t, ids) = Topology::torus3d((5, 5, 5), LinkKind::CxlCoherent, "torus");
+    let f = Fabric::new(t);
+    let r = f.router();
+    let mut rng = Rng::new(17);
+    for _ in 0..200 {
+        let a = ids[rng.below(125) as usize];
+        let b = ids[rng.below(125) as usize];
+        let p = r.path(a, b).unwrap();
+        // walk PBR ports and land at b in exactly p.hops() steps
+        let mut cur = a;
+        for &l in &p.links {
+            assert_eq!(r.pbr_port(cur, b), Some(l));
+            let link = f.topo.link(l);
+            cur = if link.a == cur { link.b } else { link.a };
+        }
+        assert_eq!(cur, b);
+    }
+}
+
+/// Degenerate systems: single rack (no inter-cluster), two-node fabric.
+#[test]
+fn degenerate_systems() {
+    let sys = ScalePoolBuilder::new()
+        .rack(Rack::homogeneous("solo", Accelerator::b200(), 2).unwrap())
+        .config(SystemConfig { mem_nodes: 1, ..Default::default() })
+        .build();
+    assert!(sys.fabric.topo.is_connected());
+    assert!(sys.inter_rack_rt_ns().is_none());
+    assert!(sys.tier2_rt_ns(0).is_some());
+    let l = sys.acc_latency_ns((0, 0), (0, 1), 64.0);
+    assert!(l > 0.0 && l < 1_000.0);
+}

@@ -1,0 +1,129 @@
+//! Integration: memory tiers + pools + coherence + workloads + the Fig 7
+//! harness — the capacity/latency story of §5 end to end.
+
+use scalepool::coherence::{Directory, SoftwareCopyModel};
+use scalepool::experiments::fig7;
+use scalepool::memory::pool::{MemoryPool, Placement};
+use scalepool::memory::Tier;
+use scalepool::util::units::GB;
+use scalepool::workloads::{EmbeddingWorkload, KvCacheWorkload, RagWorkload, WorkingSetSweep};
+
+/// Figure 7 crossovers land where the capacities say they must.
+#[test]
+fn fig7_crossovers_at_capacity_boundaries() {
+    let rows = fig7::run_fig7();
+    // below one accelerator: all three identical
+    let below = rows.iter().filter(|r| r.working_set <= fig7::ACCEL_HBM).count();
+    assert!(below >= 3);
+    for r in rows.iter().take(below) {
+        assert!((r.baseline_ns - r.tiered_ns).abs() < 1.0);
+    }
+    // between accelerator and cluster: tiered wins, the other two tie
+    for r in rows.iter().filter(|r| {
+        r.working_set > fig7::ACCEL_HBM && r.working_set <= fig7::CLUSTER_HBM
+    }) {
+        assert!(r.tiered_ns < r.baseline_ns);
+        assert!((r.baseline_ns - r.acc_clusters_ns).abs() < 1.0);
+    }
+    // beyond the cluster: strict ordering tiered < acc-clusters < baseline
+    for r in rows.iter().filter(|r| r.working_set > fig7::CLUSTER_HBM) {
+        assert!(r.tiered_ns < r.acc_clusters_ns);
+        assert!(r.acc_clusters_ns < r.baseline_ns);
+    }
+}
+
+/// The three motivating workloads of §2 actually exceed the capacities
+/// that make tier-2 worthwhile.
+#[test]
+fn motivating_workloads_exceed_hbm() {
+    let kv = KvCacheWorkload { conversations: 2048, ..Default::default() }.trace();
+    assert!(kv.working_set > fig7::ACCEL_HBM);
+
+    let emb = EmbeddingWorkload::default();
+    assert!(emb.table_bytes() > fig7::ACCEL_HBM);
+
+    let rag = RagWorkload::default();
+    assert!(rag.working_set() > fig7::ACCEL_HBM);
+    // and each one's mean latency is better on the tiered config
+    let p = fig7::Fig7Params::reference();
+    let [base, _acc, tier] = fig7::configs(&p);
+    for ws in [kv.working_set, emb.table_bytes(), rag.working_set()] {
+        assert!(
+            tier.mean_latency_ns(ws) <= base.mean_latency_ns(ws),
+            "ws {ws:.2e}"
+        );
+    }
+}
+
+/// A pooled allocation spanning tiers keeps pool invariants through a
+/// realistic allocate/access/free lifecycle driven by a workload trace.
+#[test]
+fn pool_lifecycle_with_trace() {
+    let mut pool = MemoryPool::new();
+    pool.add_region(0, Tier::Tier1Local, 192.0 * GB);
+    pool.add_region(1, Tier::Tier2Pool, 4096.0 * GB);
+
+    let sweep = WorkingSetSweep { accesses: 1000, ..Default::default() };
+    let trace = sweep.trace(1000.0 * GB);
+    // allocate the working set across the pool
+    let a = pool.alloc(trace.working_set, Placement::FirstFit).unwrap();
+    assert_eq!(a.extents.len(), 2, "must span both tiers");
+    assert!((a.extents[0].1 - 192.0 * GB).abs() < 1.0);
+    pool.check_invariants().unwrap();
+
+    // fraction of accesses landing in tier-1 equals its share of the WS
+    let f = trace.fraction_below(192.0 * GB);
+    assert!((f - 0.192).abs() < 0.05, "tier-1 access share {f}");
+
+    pool.free(a.id).unwrap();
+    assert_eq!(pool.used(), 0.0);
+}
+
+/// Coherent sharing vs software copies: the directory's message counts
+/// times fabric latency reproduce the ordering the Fig 7 middle region
+/// depends on.
+#[test]
+fn coherence_beats_software_copy_for_sparse_sharing() {
+    let mut dir = Directory::new(4);
+    let mut rng = scalepool::util::Rng::new(23);
+    let mut msgs = 0u64;
+    let n = 50_000;
+    for _ in 0..n {
+        let a = rng.below(4) as usize;
+        let block = rng.below(1_000_000); // sparse: almost no reuse
+        msgs += dir.read(a, block).total() as u64;
+    }
+    dir.check_invariants().unwrap();
+    let per_msg_ns = 300.0; // one fabric traversal per protocol message
+    let coherent_ns = msgs as f64 / n as f64 * per_msg_ns + 100.0;
+    let sw = SoftwareCopyModel::xlink_intra_rack().per_access_ns() + 100.0;
+    assert!(
+        coherent_ns < sw,
+        "coherent {coherent_ns:.0} ns/access must beat sw-copy {sw:.0} ns/access on sparse sharing"
+    );
+}
+
+/// Fig 7 params derived from different reference topologies give the same
+/// qualitative result (the conclusion is not an artifact of one build).
+#[test]
+fn fig7_robust_to_fabric_shape() {
+    use scalepool::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+    use scalepool::fabric::TopologyKind;
+    for kind in [TopologyKind::MultiLevelClos, TopologyKind::DragonFly] {
+        let sys = ScalePoolBuilder::new()
+            .racks((0..4).map(|i| {
+                Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 8).unwrap()
+            }))
+            .config(SystemConfig { inter: InterCluster::Cxl(kind), mem_nodes: 4, ..Default::default() })
+            .build();
+        let p = fig7::Fig7Params::from_system(&sys);
+        let rows = fig7::run_fig7_with(&p);
+        let r3 = rows.iter().find(|r| r.working_set == 8.0 * fig7::CLUSTER_HBM).unwrap();
+        assert!(
+            r3.speedup_vs_baseline() > 2.0,
+            "{kind:?}: region-3 speedup {:.2}",
+            r3.speedup_vs_baseline()
+        );
+        assert!(r3.speedup_vs_acc_clusters() > 1.0, "{kind:?}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the PJRT runtime over real AOT artifacts — the three-layer
+//! contract. These tests skip (with a message) when `make artifacts` has
+//! not run; the Makefile runs it before `cargo test`.
+
+use scalepool::calculon::Parallelism;
+use scalepool::coordinator::{EmulatedCluster, TrainJobScheduler};
+use scalepool::runtime::{self, ArtifactManifest, SyntheticCorpus, Trainer};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    if runtime::artifacts_available("tiny") {
+        Some(runtime::default_artifacts_dir())
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// init -> N steps -> eval, loss decreasing, deterministic across runs.
+#[test]
+fn train_loop_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let run = |seed: i32| -> Vec<f32> {
+        let mut t = Trainer::load(&dir, "tiny").unwrap();
+        t.init(seed).unwrap();
+        let m = t.manifest().clone();
+        let mut corpus = SyntheticCorpus::new(m.vocab, 9);
+        (0..8)
+            .map(|_| {
+                let (toks, tgts) = corpus.batch(m.batch, m.seq);
+                t.step(&toks, &tgts).unwrap().loss
+            })
+            .collect()
+    };
+    let a = run(0);
+    let b = run(0);
+    assert_eq!(a, b, "same seed, same losses");
+    let c = run(1);
+    assert_ne!(a, c, "different init seed changes the trajectory");
+}
+
+/// The eval artifact agrees with the train artifact's loss on identical
+/// parameters and batch (two independently lowered programs).
+#[test]
+fn eval_matches_train_loss() {
+    let Some(dir) = artifacts() else { return };
+    let mut t = Trainer::load(&dir, "tiny").unwrap();
+    t.init(3).unwrap();
+    let m = t.manifest().clone();
+    let mut corpus = SyntheticCorpus::new(m.vocab, 5);
+    let (toks, tgts) = corpus.batch(m.batch, m.seq);
+    // eval before the step sees the same params the step starts from
+    let ev = t.eval(&toks, &tgts).unwrap();
+    let st = t.step(&toks, &tgts).unwrap();
+    let rel = (ev - st.loss).abs() / st.loss;
+    assert!(rel < 1e-4, "eval {ev} vs train-step loss {} (rel {rel})", st.loss);
+}
+
+/// Manifest ABI matches what the executables actually accept (wrong-shape
+/// inputs must be rejected, right-shape accepted).
+#[test]
+fn abi_shape_enforcement() {
+    let Some(dir) = artifacts() else { return };
+    let mut t = Trainer::load(&dir, "tiny").unwrap();
+    t.init(0).unwrap();
+    let m = t.manifest().clone();
+    let good = vec![0i32; m.batch * m.seq];
+    assert!(t.step(&good, &good).is_ok());
+    let bad = vec![0i32; m.batch * m.seq + 1];
+    assert!(t.step(&bad, &good).is_err(), "oversized batch must be rejected");
+}
+
+/// Scheduler end-to-end on the real runtime: loss decreases, emulated
+/// clocks advance, ScalePool beats baseline.
+#[test]
+fn scheduler_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let trainer = Trainer::load(&dir, "tiny").unwrap();
+    let m = trainer.manifest().clone();
+    let cluster = EmulatedCluster::for_preset(
+        m.vocab,
+        64,
+        2,
+        2,
+        m.seq,
+        256,
+        Parallelism { tp: 4, pp: 2, dp: 8, microbatch: 1 },
+    );
+    let mut sched = TrainJobScheduler::new(trainer, cluster, 1);
+    sched.init(0).unwrap();
+    sched.run(20).unwrap();
+    let log = sched.log();
+    assert_eq!(log.len(), 20);
+    let first: f32 = log[..5].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    let last: f32 = log[15..].iter().map(|l| l.loss).sum::<f32>() / 5.0;
+    assert!(last < first, "avg loss must decrease: {first} -> {last}");
+    assert!(sched.emulated_speedup() > 1.0);
+}
+
+/// All generated presets have consistent manifests.
+#[test]
+fn all_built_presets_manifest_consistency() {
+    let Some(dir) = artifacts() else { return };
+    for preset in ["tiny", "small25m", "base100m"] {
+        if !runtime::artifacts_available(preset) {
+            continue;
+        }
+        let m = ArtifactManifest::load(&dir, preset).unwrap();
+        assert_eq!(m.preset, preset);
+        assert_eq!(m.train_step.inputs.len(), 3 * m.n_params + 3, "{preset}");
+        // param count equals the sum of parameter tensor elements
+        let total: usize = m.train_step.inputs[..m.n_params].iter().map(|t| t.elements()).sum();
+        assert_eq!(total as u64, m.param_count, "{preset}");
+        assert!(m.train_step.artifact.exists() && m.init.artifact.exists() && m.eval.artifact.exists());
+    }
+}
