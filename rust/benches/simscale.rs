@@ -1,0 +1,403 @@
+//! Bench SIMSCALE — the perf trajectory of the simulation hot path at
+//! rack (72), row (~1k) and pod (~4k) endpoint counts:
+//!
+//! * `Router::build` (flat parallel PBR table) vs the seed serial
+//!   nested-table BFS (`fabric::routing::reference::SerialRouter`);
+//! * sustained `MemSim` events/sec (slab engine + interned paths +
+//!   precomputed direction bits) vs a faithful replica of the seed loop
+//!   (payload-carrying heap events, one `Vec` path clone per transaction,
+//!   per-event link-endpoint direction derivation);
+//! * raw engine schedule/dispatch throughput, slab vs seed-style heap.
+//!
+//! Writes machine-readable results to `BENCH_simscale.json` (override the
+//! path with `SCALEPOOL_BENCH_OUT`). Acceptance bar (ISSUE 1): >= 5x
+//! router build at pod scale, >= 3x MemSim events/sec.
+//!
+//! Run with: `cargo bench --bench simscale` (see `scripts/bench.sh`).
+
+use scalepool::bench::black_box;
+use scalepool::fabric::routing::reference::SerialRouter;
+use scalepool::fabric::{Fabric, LinkKind, NodeKind, Router, Topology};
+use scalepool::sim::{Engine, EventKind, MemSim, Server, Transaction};
+use scalepool::util::Json;
+use scalepool::workloads::{AccessTrace, WorkingSetSweep};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// seed replicas (the pre-overhaul implementations, measured as baselines)
+// ---------------------------------------------------------------------------
+
+/// Seed event heap: full payload-carrying events moved through every sift.
+#[derive(Clone, Debug)]
+struct SeedEvent {
+    at: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for SeedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for SeedEvent {}
+impl PartialOrd for SeedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SeedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Default)]
+struct SeedEngine {
+    heap: BinaryHeap<SeedEvent>,
+    now: f64,
+    seq: u64,
+    dispatched: u64,
+}
+
+impl SeedEngine {
+    fn schedule(&mut self, at: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(SeedEvent { at, seq: self.seq, kind });
+    }
+    fn after(&mut self, delay: f64, kind: EventKind) {
+        let at = self.now + delay;
+        self.schedule(at, kind);
+    }
+    fn next(&mut self) -> Option<(f64, EventKind)> {
+        let ev = self.heap.pop()?;
+        self.now = ev.at;
+        self.dispatched += 1;
+        Some((ev.at, ev.kind))
+    }
+}
+
+struct SeedInFlight {
+    src: usize,
+    issued: f64,
+    bytes: f64,
+    device_ns: f64,
+    path_links: Vec<usize>,
+}
+
+#[derive(Clone, Copy)]
+struct SeedLinkConsts {
+    inv_rate: f64,
+    fixed_ns: f64,
+    switch_ns: [f64; 2],
+}
+
+/// The seed `MemSim::run` loop, verbatim in structure: nested-table
+/// routing, a cloned `path_links` vector per transaction, and the hop
+/// direction re-derived from link endpoints on every Arrive event.
+fn seed_sim_run(fabric: &Fabric, router: &SerialRouter, txs: &[Transaction]) -> (u64, u64) {
+    let topo = &fabric.topo;
+    let mut servers: Vec<[Server; 2]> =
+        (0..topo.links.len()).map(|_| [Server::new(), Server::new()]).collect();
+    let consts: Vec<SeedLinkConsts> = topo
+        .links
+        .iter()
+        .map(|l| {
+            let p = &l.params;
+            let sw =
+                |n: usize| topo.node(n).switch.as_ref().map(|s| s.traversal_ns()).unwrap_or(0.0);
+            SeedLinkConsts {
+                inv_rate: 1.0 / (p.raw_bw * p.phy.efficiency()),
+                fixed_ns: p.prop_ns + p.phy.latency_ns() + p.flit_overhead_ns,
+                switch_ns: [sw(l.a), sw(l.b)],
+            }
+        })
+        .collect();
+
+    let mut engine = SeedEngine::default();
+    let mut inflight: Vec<Option<SeedInFlight>> = Vec::with_capacity(txs.len());
+    let mut links = Vec::new();
+    for tx in txs {
+        if !router.links_into(tx.src, tx.dst, &mut links) && tx.src != tx.dst {
+            panic!("no path {} -> {}", tx.src, tx.dst);
+        }
+        let id = inflight.len();
+        engine.schedule(tx.at, EventKind::Arrive { id, hop: 0 });
+        inflight.push(Some(SeedInFlight {
+            src: tx.src,
+            issued: tx.at,
+            bytes: tx.bytes,
+            device_ns: tx.device_ns,
+            path_links: links.clone(),
+        }));
+    }
+
+    let mut completed = 0u64;
+    let mut latency_acc = 0.0f64;
+    while let Some((now, ev)) = engine.next() {
+        match ev {
+            EventKind::Arrive { id, hop } => {
+                let fl = inflight[id].as_ref().unwrap();
+                if hop >= fl.path_links.len() {
+                    let dev = fl.device_ns;
+                    engine.after(dev, EventKind::Complete { id });
+                    continue;
+                }
+                let link_idx = fl.path_links[hop];
+                let link = topo.link(link_idx);
+                let c = &consts[link_idx];
+                let from = if hop == 0 {
+                    fl.src
+                } else {
+                    let prev = topo.link(fl.path_links[hop - 1]);
+                    if prev.a == link.a || prev.b == link.a {
+                        link.a
+                    } else {
+                        link.b
+                    }
+                };
+                let dir = if from == link.a { 0 } else { 1 };
+                let service = link.params.flit.wire_bytes(fl.bytes) * c.inv_rate;
+                let done = servers[link_idx][dir].admit(now, service);
+                let sw = c.switch_ns[1 - dir];
+                engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+            }
+            EventKind::Complete { id } => {
+                let fl = inflight[id].take().unwrap();
+                latency_acc += now - fl.issued;
+                completed += 1;
+            }
+            _ => {}
+        }
+    }
+    black_box(latency_acc);
+    (completed, engine.dispatched)
+}
+
+// ---------------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------------
+
+struct ScaleSpec {
+    name: &'static str,
+    leaves: usize,
+    spines: usize,
+    eps_per_leaf: usize,
+}
+
+/// Build the scale's topology and return (fabric-less topology, endpoint ids).
+fn build_topology(s: &ScaleSpec) -> (Topology, Vec<usize>) {
+    if s.leaves == 0 {
+        // rack: 72 endpoints through one crossbar
+        let t = Topology::single_hop(72, LinkKind::NvLink5, "rack");
+        let eps = t.nodes_of(NodeKind::Accelerator);
+        return (t, eps);
+    }
+    let (mut t, leaf_ids) = Topology::clos(s.leaves, s.spines, LinkKind::CxlCoherent, s.name);
+    let mut eps = Vec::with_capacity(s.leaves * s.eps_per_leaf);
+    for (i, &l) in leaf_ids.iter().enumerate() {
+        for e in 0..s.eps_per_leaf {
+            let n = t.add_node(NodeKind::Accelerator, format!("{}/ep{i}-{e}", s.name));
+            t.connect(n, l, LinkKind::CxlCoherent);
+            eps.push(n);
+        }
+    }
+    (t, eps)
+}
+
+/// Map a working-set access trace onto endpoint-to-endpoint transactions.
+fn txs_from_trace(trace: &AccessTrace, eps: &[usize], bytes: f64) -> Vec<Transaction> {
+    let n = eps.len() as u64;
+    trace
+        .accesses
+        .iter()
+        .map(|a| {
+            let line = a.offset / 64;
+            let s = (line % n) as usize;
+            let mut d = ((line / n) % n) as usize;
+            if d == s {
+                d = (d + 1) % eps.len();
+            }
+            Transaction { src: eps[s], dst: eps[d], at: a.at, bytes, device_ns: 130.0 }
+        })
+        .collect()
+}
+
+/// Best-of-k wall time of `f`, in ns.
+fn best_of<T>(k: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..k {
+        let t0 = Instant::now();
+        black_box(f());
+        best = best.min(t0.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
+fn main() {
+    let scales = [
+        ScaleSpec { name: "rack", leaves: 0, spines: 0, eps_per_leaf: 0 },
+        ScaleSpec { name: "row", leaves: 16, spines: 4, eps_per_leaf: 64 },
+        ScaleSpec { name: "pod", leaves: 64, spines: 8, eps_per_leaf: 64 },
+    ];
+    let accesses = 200_000;
+    let tx_bytes = 4096.0;
+
+    // trace generation for all scales at once (exercises the parallel
+    // WorkingSetSweep::traces path)
+    let sweep = WorkingSetSweep { accesses, ..Default::default() };
+    let working_sets: Vec<f64> = scales.iter().map(|_| 1e12).collect();
+    let traces = sweep.traces(&working_sets);
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("=== simscale: router build + sustained events/sec ===");
+    for (s, trace) in scales.iter().zip(&traces) {
+        let (topo, eps) = build_topology(s);
+        let n_nodes = topo.nodes.len();
+        let iters = if n_nodes > 2000 {
+            3
+        } else if n_nodes > 500 {
+            5
+        } else {
+            20
+        };
+
+        // --- router build: flat parallel vs seed serial nested ----------
+        let build_new = best_of(iters, || Router::build(&topo));
+        let build_seed = best_of(iters, || SerialRouter::build(&topo));
+        let build_speedup = build_seed / build_new;
+
+        // --- memsim throughput ------------------------------------------
+        let fabric = Fabric::new(topo.clone());
+        let seed_router = SerialRouter::build(&topo);
+        let txs = txs_from_trace(trace, &eps, tx_bytes);
+        let cross_hops = fabric.hops(eps[0], eps[eps.len() - 1]).unwrap();
+
+        // clone the transaction stream outside the timed region (the seed
+        // path borrows it, so the new path must not pay a clone in-window)
+        let mut tx_pool: Vec<Vec<Transaction>> = (0..3).map(|_| txs.clone()).collect();
+        let mut new_events = 0u64;
+        let sim_new = best_of(3, || {
+            let mut sim = MemSim::new(&fabric);
+            let rep = sim.run(tx_pool.pop().expect("one pre-cloned stream per iteration"));
+            assert_eq!(rep.completed, txs.len() as u64);
+            new_events = rep.events;
+            rep.events
+        });
+        let mut seed_events = 0u64;
+        let sim_seed = best_of(3, || {
+            let (completed, events) = seed_sim_run(&fabric, &seed_router, &txs);
+            assert_eq!(completed, txs.len() as u64);
+            seed_events = events;
+            events
+        });
+        let eps_new = new_events as f64 / (sim_new / 1e9);
+        let eps_seed = seed_events as f64 / (sim_seed / 1e9);
+        let sim_speedup = eps_new / eps_seed;
+
+        println!(
+            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x)",
+            s.name,
+            n_nodes,
+            build_new / 1e6,
+            build_seed / 1e6,
+            build_speedup,
+            eps_new / 1e6,
+            eps_seed / 1e6,
+            sim_speedup,
+        );
+
+        rows.push(Json::obj(vec![
+            ("scale", Json::str(s.name)),
+            ("nodes", Json::num(n_nodes as f64)),
+            ("cross_fabric_hops", Json::num(cross_hops as f64)),
+            ("endpoints", Json::num(eps.len() as f64)),
+            ("transactions", Json::num(txs.len() as f64)),
+            ("router_build_ms", Json::num(build_new / 1e6)),
+            ("router_build_seed_ms", Json::num(build_seed / 1e6)),
+            ("router_build_speedup", Json::num(build_speedup)),
+            ("memsim_events_per_sec", Json::num(eps_new)),
+            ("memsim_events_per_sec_seed", Json::num(eps_seed)),
+            ("memsim_speedup", Json::num(sim_speedup)),
+        ]));
+    }
+
+    // --- raw engine throughput: slab vs seed-style heap --------------------
+    let engine_events = 1_000_000usize;
+    let slab_ns = best_of(3, || {
+        let mut e = Engine::new();
+        // rolling window of 1024 pending events, like a live simulation
+        for i in 0..1024u64 {
+            e.schedule(i as f64, EventKind::Custom { tag: i });
+        }
+        let mut fired = 0usize;
+        while fired < engine_events {
+            let (now, _) = e.next().unwrap();
+            e.schedule(now + 1024.0, EventKind::Custom { tag: 0 });
+            fired += 1;
+        }
+        fired
+    });
+    let seed_heap_ns = best_of(3, || {
+        let mut e = SeedEngine::default();
+        for i in 0..1024u64 {
+            e.schedule(i as f64, EventKind::Custom { tag: i });
+        }
+        let mut fired = 0usize;
+        while fired < engine_events {
+            let (now, _) = e.next().unwrap();
+            e.schedule(now + 1024.0, EventKind::Custom { tag: 0 });
+            fired += 1;
+        }
+        fired
+    });
+    let engine_new = engine_events as f64 / (slab_ns / 1e9);
+    let engine_seed = engine_events as f64 / (seed_heap_ns / 1e9);
+    println!(
+        "engine schedule+dispatch: {:.2} M ev/s slab vs {:.2} M ev/s seed heap ({:.2}x)",
+        engine_new / 1e6,
+        engine_seed / 1e6,
+        engine_new / engine_seed
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("simscale")),
+        ("generated_by", Json::str("rust/benches/simscale.rs")),
+        ("threads", Json::num(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1) as f64)),
+        ("scales", Json::Arr(rows)),
+        (
+            "engine",
+            Json::obj(vec![
+                ("slab_events_per_sec", Json::num(engine_new)),
+                ("seed_heap_events_per_sec", Json::num(engine_seed)),
+                ("speedup", Json::num(engine_new / engine_seed)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("SCALEPOOL_BENCH_OUT").unwrap_or_else(|_| "BENCH_simscale.json".into());
+    std::fs::write(&path, out.to_string()).expect("writing bench output");
+    println!("wrote {path}");
+
+    // machine-readable summary line (consumed by EXPERIMENTS.md tooling)
+    let pod = rows_summary(&out);
+    println!("RESULT simscale {pod}");
+}
+
+fn rows_summary(out: &Json) -> String {
+    let scales = out.get("scales").and_then(Json::as_arr).unwrap_or(&[]);
+    let pod = scales.iter().find(|r| r.get("scale").and_then(Json::as_str) == Some("pod"));
+    match pod {
+        Some(p) => format!(
+            "pod_router_build_speedup={:.2} pod_memsim_speedup={:.2}",
+            p.get("router_build_speedup").and_then(Json::as_f64).unwrap_or(0.0),
+            p.get("memsim_speedup").and_then(Json::as_f64).unwrap_or(0.0)
+        ),
+        None => "no pod row".into(),
+    }
+}

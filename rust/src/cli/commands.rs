@@ -1,16 +1,21 @@
 //! Subcommand implementations.
 
 use super::args::Args;
+#[cfg(feature = "pjrt")]
 use crate::calculon::Parallelism;
 use crate::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{EmulatedCluster, TrainJobScheduler};
 use crate::experiments;
 use crate::fabric::TopologyKind;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{PjrtEngine, Trainer};
 use crate::sim::{MemSim, Transaction};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{ensure, Context};
+use crate::util::error::{bail, Error, Result};
 use crate::util::units::{fmt_bytes, fmt_ns};
 use crate::util::{Json, Rng};
-use anyhow::{bail, Context, Result};
 
 pub fn table1() -> Result<()> {
     let rows = experiments::run_table1();
@@ -67,8 +72,8 @@ fn build_system(kind: &str, racks: usize, accels: usize) -> Result<crate::cluste
 
 pub fn topo(args: &mut Args) -> Result<()> {
     let kind = args.get_or("kind", "clos");
-    let racks = args.usize_or("racks", 4).map_err(anyhow::Error::msg)?;
-    let accels = args.usize_or("accels", 8).map_err(anyhow::Error::msg)?;
+    let racks = args.usize_or("racks", 4).map_err(Error::msg)?;
+    let accels = args.usize_or("accels", 8).map_err(Error::msg)?;
     let sys = build_system(&kind, racks, accels)?;
     println!(
         "fabric '{kind}': {} nodes, {} links, {} racks x {accels} accelerators, {} memory nodes",
@@ -77,7 +82,7 @@ pub fn topo(args: &mut Args) -> Result<()> {
         sys.racks.len(),
         sys.mem_nodes.len()
     );
-    sys.fabric.topo.validate_radix().map_err(anyhow::Error::msg)?;
+    sys.fabric.topo.validate_radix().map_err(Error::msg)?;
     println!("radix check: ok; connected: {}", sys.fabric.topo.is_connected());
     if racks >= 2 {
         println!(
@@ -103,11 +108,11 @@ pub fn topo(args: &mut Args) -> Result<()> {
 }
 
 pub fn simulate(args: &mut Args) -> Result<()> {
-    let racks = args.usize_or("racks", 2).map_err(anyhow::Error::msg)?;
-    let accels = args.usize_or("accels", 8).map_err(anyhow::Error::msg)?;
-    let txs = args.usize_or("txs", 10_000).map_err(anyhow::Error::msg)?;
-    let bytes = args.f64_or("bytes", 4096.0).map_err(anyhow::Error::msg)?;
-    let seed = args.usize_or("seed", 7).map_err(anyhow::Error::msg)? as u64;
+    let racks = args.usize_or("racks", 2).map_err(Error::msg)?;
+    let accels = args.usize_or("accels", 8).map_err(Error::msg)?;
+    let txs = args.usize_or("txs", 10_000).map_err(Error::msg)?;
+    let bytes = args.f64_or("bytes", 4096.0).map_err(Error::msg)?;
+    let seed = args.usize_or("seed", 7).map_err(Error::msg)? as u64;
     let sys = build_system("clos", racks, accels)?;
 
     let mut rng = Rng::new(seed);
@@ -156,6 +161,19 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// `smoke`/`train` need the PJRT runtime; without the `pjrt` feature they
+/// fail with an actionable message instead of not existing.
+#[cfg(not(feature = "pjrt"))]
+pub fn smoke(_args: &mut Args) -> Result<()> {
+    bail!("the 'smoke' command needs the PJRT runtime: rebuild with --features pjrt (requires the xla crate)")
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn train(_args: &mut Args) -> Result<()> {
+    bail!("the 'train' command needs the PJRT runtime: rebuild with --features pjrt (requires the xla crate)")
+}
+
+#[cfg(feature = "pjrt")]
 pub fn smoke(args: &mut Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let engine = PjrtEngine::cpu()?;
@@ -165,16 +183,17 @@ pub fn smoke(args: &mut Args) -> Result<()> {
     let y = crate::runtime::pjrt::lit_f32(&[1.0, 1.0, 1.0, 1.0], &[2, 2])?;
     let out = engine.run(&exe, &[x, y])?;
     let v = out[0].to_vec::<f32>()?;
-    anyhow::ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "smoke mismatch: {v:?}");
+    ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "smoke mismatch: {v:?}");
     println!("smoke (Pallas tiled matmul via AOT HLO): {v:?} — OK");
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 pub fn train(args: &mut Args) -> Result<()> {
     let preset = args.get_or("preset", "tiny");
-    let steps = args.usize_or("steps", 30).map_err(anyhow::Error::msg)?;
-    let seed = args.usize_or("seed", 0).map_err(anyhow::Error::msg)? as i32;
-    let log_every = args.usize_or("log-every", 10).map_err(anyhow::Error::msg)?.max(1);
+    let steps = args.usize_or("steps", 30).map_err(Error::msg)?;
+    let seed = args.usize_or("seed", 0).map_err(Error::msg)? as i32;
+    let log_every = args.usize_or("log-every", 10).map_err(Error::msg)?.max(1);
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
 
     let trainer = Trainer::load(&dir, &preset)

@@ -29,6 +29,8 @@ COMMANDS:
     smoke     [--artifacts <dir>]
                                Load + run the Pallas smoke artifact
     help                       Show this message
+
+NOTE: train/smoke need the PJRT runtime (build with --features pjrt).
 ";
 
 /// Entry point: parse and dispatch. Returns the process exit code.

@@ -6,15 +6,30 @@ use super::accelerator::{Accelerator, Vendor};
 use crate::fabric::LinkKind;
 
 /// Why a device cannot join an XLink domain.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum XlinkError {
-    #[error("mixing {0:?} and {1:?} in one XLink domain: incompatible PHY/flit formats")]
     MixedLink(LinkKind, LinkKind),
-    #[error("NVLink domain requires at least one NVIDIA component (NVLink Fusion policy)")]
     NvlinkNeedsNvidia,
-    #[error("domain full: {0} accelerators is the practical per-rack limit")]
     DomainFull(usize),
 }
+
+impl std::fmt::Display for XlinkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XlinkError::MixedLink(a, b) => {
+                write!(f, "mixing {a:?} and {b:?} in one XLink domain: incompatible PHY/flit formats")
+            }
+            XlinkError::NvlinkNeedsNvidia => {
+                write!(f, "NVLink domain requires at least one NVIDIA component (NVLink Fusion policy)")
+            }
+            XlinkError::DomainFull(n) => {
+                write!(f, "domain full: {n} accelerators is the practical per-rack limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for XlinkError {}
 
 /// A single-hop XLink domain (one rack-scale cluster's interconnect).
 #[derive(Clone, Debug)]

@@ -30,13 +30,26 @@ pub struct Grant {
     pub pool_bytes: f64,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AdmitError {
-    #[error("not enough accelerators: requested {requested}, {free} free")]
     Accelerators { requested: usize, free: usize },
-    #[error("not enough tier-2 pool: requested {requested:.2e} B, {free:.2e} free")]
     Pool { requested: f64, free: f64 },
 }
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Accelerators { requested, free } => {
+                write!(f, "not enough accelerators: requested {requested}, {free} free")
+            }
+            AdmitError::Pool { requested, free } => {
+                write!(f, "not enough tier-2 pool: requested {requested:.2e} B, {free:.2e} free")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 /// The allocation manager.
 pub struct ScalePoolManager<'s> {

@@ -14,5 +14,7 @@ pub mod scheduler;
 pub use manager::{JobId, JobSpec, ScalePoolManager};
 pub use metrics::Metrics;
 pub use router::{DataMovementRouter, RouteClass, RouteDecision};
-pub use scheduler::{EmulatedCluster, TrainJobScheduler};
+pub use scheduler::EmulatedCluster;
+#[cfg(feature = "pjrt")]
+pub use scheduler::TrainJobScheduler;
 pub use tiering::{TieringEngine, TieringPolicy, TieringStats};

@@ -8,12 +8,19 @@
 //! This is the end-to-end validation driver: it proves L3 (this crate),
 //! L2 (the lowered JAX model) and L1 (the Pallas kernels inside it)
 //! compose on a real workload.
+//!
+//! [`TrainJobScheduler`] drives the PJRT runtime and is only available
+//! with the `pjrt` feature (the `xla` crate is not in the offline vendor
+//! set); [`EmulatedCluster`] is pure modeling and always available.
 
 use crate::calculon::execution::SystemProfile;
 use crate::calculon::{ExecutionModel, LlmModel, Parallelism, TrainingEstimate};
+#[cfg(feature = "pjrt")]
 use crate::coordinator::metrics::Metrics;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{SyntheticCorpus, Trainer};
-use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Result;
 
 /// The emulated deployment a training job runs on.
 #[derive(Clone, Debug)]
@@ -63,6 +70,7 @@ impl EmulatedCluster {
 }
 
 /// One scheduled step's record.
+#[cfg(feature = "pjrt")]
 #[derive(Clone, Copy, Debug)]
 pub struct StepLog {
     pub step: u64,
@@ -76,6 +84,7 @@ pub struct StepLog {
 }
 
 /// The scheduler.
+#[cfg(feature = "pjrt")]
 pub struct TrainJobScheduler {
     trainer: Trainer,
     corpus: SyntheticCorpus,
@@ -87,6 +96,7 @@ pub struct TrainJobScheduler {
     scalepool_clock: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainJobScheduler {
     pub fn new(trainer: Trainer, cluster: EmulatedCluster, seed: u64) -> TrainJobScheduler {
         let vocab = trainer.manifest().vocab;
@@ -168,6 +178,7 @@ mod tests {
         assert_eq!(b.compute_ns, s.compute_ns);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn end_to_end_tiny_schedule() {
         if !crate::runtime::artifacts_available("tiny") {

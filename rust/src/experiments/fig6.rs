@@ -68,6 +68,8 @@ pub fn run_fig6() -> Fig6Result {
 }
 
 /// Run Figure 6 with custom profiles / workloads (used by ablation benches).
+/// Workloads are independent, so each row is estimated on its own scoped
+/// worker thread (order-preserving — §Perf).
 pub fn run_fig6_with(
     baseline: SystemProfile,
     scalepool: SystemProfile,
@@ -75,15 +77,12 @@ pub fn run_fig6_with(
 ) -> Fig6Result {
     let bm = ExecutionModel::new(baseline);
     let sm = ExecutionModel::new(scalepool);
-    let rows = workloads
-        .iter()
-        .map(|w| Fig6Row {
-            name: w.model.name.clone(),
-            gpus: w.par.gpus(),
-            baseline: bm.estimate(&w.model, &w.par),
-            scalepool: sm.estimate(&w.model, &w.par),
-        })
-        .collect();
+    let rows = crate::util::par::par_map(workloads, |w| Fig6Row {
+        name: w.model.name.clone(),
+        gpus: w.par.gpus(),
+        baseline: bm.estimate(&w.model, &w.par),
+        scalepool: sm.estimate(&w.model, &w.par),
+    });
     Fig6Result { rows }
 }
 

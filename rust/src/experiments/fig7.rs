@@ -160,17 +160,17 @@ pub fn run_fig7() -> Vec<Fig7Row> {
     run_fig7_with(&p)
 }
 
+/// Sweep points are independent, so they are evaluated on scoped worker
+/// threads (order-preserving — §Perf).
 pub fn run_fig7_with(p: &Fig7Params) -> Vec<Fig7Row> {
     let [base, acc, tier] = configs(p);
-    WorkingSetSweep::sweep_points(ACCEL_HBM, CLUSTER_HBM, 8.0)
-        .into_iter()
-        .map(|ws| Fig7Row {
-            working_set: ws,
-            baseline_ns: base.mean_latency_ns(ws),
-            acc_clusters_ns: acc.mean_latency_ns(ws),
-            tiered_ns: tier.mean_latency_ns(ws),
-        })
-        .collect()
+    let points = WorkingSetSweep::sweep_points(ACCEL_HBM, CLUSTER_HBM, 8.0);
+    crate::util::par::par_map(&points, |&ws| Fig7Row {
+        working_set: ws,
+        baseline_ns: base.mean_latency_ns(ws),
+        acc_clusters_ns: acc.mean_latency_ns(ws),
+        tiered_ns: tier.mean_latency_ns(ws),
+    })
 }
 
 /// Render the paper-style series.

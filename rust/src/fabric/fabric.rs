@@ -36,6 +36,10 @@ impl LatencyBreakdown {
 }
 
 impl Fabric {
+    /// Build a fabric over `topo`. Routing-table construction is the
+    /// dominant cost at pod scale and runs one BFS per destination across
+    /// all hardware threads into a flat PBR table (see
+    /// [`crate::fabric::routing`] §Perf).
     pub fn new(topo: Topology) -> Fabric {
         let router = Router::build(&topo);
         let load = vec![0.0; topo.links.len()];
@@ -50,6 +54,12 @@ impl Fabric {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// Hop count src -> dst, walked over the PBR table without
+    /// materializing the node/link lists.
+    pub fn hops(&self, src: NodeId, dst: NodeId) -> Option<usize> {
+        self.router.hops(src, dst)
     }
 
     /// Set background utilization (0..1) on a link.

@@ -19,6 +19,6 @@ pub mod fabric;
 
 pub use fabric::Fabric;
 pub use link::{LinkKind, LinkParams};
-pub use routing::Path;
+pub use routing::{Path, Router};
 pub use switch::SwitchParams;
 pub use topology::{NodeId, NodeKind, Topology, TopologyKind};

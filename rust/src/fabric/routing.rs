@@ -1,9 +1,25 @@
 //! Routing over the fabric graph: BFS shortest paths and precomputed PBR
 //! (port-based routing) tables — §2's "PBR allows traffic routing decisions
 //! to be determined at each switch port".
+//!
+//! # Performance architecture (§Perf)
+//!
+//! The PBR table is a single contiguous `Box<[(u32, u32)]>` indexed by
+//! `dst * n + node` (8 bytes/entry, one allocation) rather than a nested
+//! `Vec<Vec<(usize, usize)>>` (16 bytes/entry plus a heap row per
+//! destination). Construction runs one BFS per destination over a CSR
+//! copy of the adjacency, with destinations partitioned across
+//! `std::thread::scope` workers operating on disjoint row chunks — no
+//! locks, no external deps. The BFS uses the table row itself as its
+//! visited set (a row entry is written exactly when its node is first
+//! discovered), so per-destination scratch is just a reused flat queue.
+//!
+//! Per-destination discovery order is identical to the pre-flattening
+//! serial implementation (kept as [`reference::SerialRouter`] for parity
+//! tests and the `benches/simscale.rs` baseline), so the produced paths
+//! are byte-identical — parallelism is across destinations only.
 
 use super::topology::{NodeId, Topology};
-use std::collections::VecDeque;
 
 /// A routed path: the node sequence and the link indices between them.
 #[derive(Clone, Debug, PartialEq)]
@@ -27,42 +43,133 @@ impl Path {
     }
 }
 
+/// Flat-table entry marking "no route" (also covers the diagonal
+/// `next[dst * n + dst]`, which no lookup ever consults).
+const UNREACH: (u32, u32) = (u32::MAX, u32::MAX);
+
 /// Precomputed routing state for a topology.
+///
+/// `next[dst * n + node] = (next node, link idx)` on the shortest path
+/// node -> dst, or [`UNREACH`] when unreachable. This *is* the PBR table:
+/// each switch consults its own row for the destination.
 #[derive(Clone, Debug)]
 pub struct Router {
-    /// next_hop[dst][node] = (next node, link idx) on the shortest path
-    /// node -> dst, or usize::MAX when unreachable. This *is* the PBR
-    /// table: each switch consults its own row for the destination.
-    next: Vec<Vec<(NodeId, usize)>>,
+    n: usize,
+    next: Box<[(u32, u32)]>,
 }
 
-const UNREACH: (NodeId, usize) = (usize::MAX, usize::MAX);
+/// Adjacency in CSR form: one contiguous scan per node instead of a
+/// nested-Vec pointer chase, shared read-only by all BFS workers.
+struct Csr {
+    off: Vec<u32>,
+    adj: Vec<(u32, u32)>,
+}
 
-impl Router {
-    /// Build routing tables with one BFS per destination. O(V * (V + E)):
-    /// fine for rack/row-scale fabrics (thousands of nodes).
-    pub fn build(topo: &Topology) -> Router {
+impl Csr {
+    fn build(topo: &Topology) -> Csr {
         let n = topo.nodes.len();
-        let mut next = vec![vec![UNREACH; n]; n];
-        let mut queue = VecDeque::new();
-        for dst in 0..n {
-            let row = &mut next[dst];
-            let mut seen = vec![false; n];
-            seen[dst] = true;
-            queue.clear();
-            queue.push_back(dst);
-            while let Some(u) = queue.pop_front() {
-                for &(v, l) in topo.neighbors(u) {
-                    if !seen[v] {
-                        seen[v] = true;
-                        // first-found hop v -> u is on a shortest path v -> dst
-                        row[v] = (u, l);
-                        queue.push_back(v);
-                    }
-                }
+        let mut off = vec![0u32; n + 1];
+        for u in 0..n {
+            off[u + 1] = off[u] + topo.neighbors(u).len() as u32;
+        }
+        let mut adj = Vec::with_capacity(off[n] as usize);
+        for u in 0..n {
+            for &(v, l) in topo.neighbors(u) {
+                adj.push((v as u32, l as u32));
             }
         }
-        Router { next }
+        Csr { off, adj }
+    }
+}
+
+/// One BFS rooted at `dst`, writing next-hops into that destination's row.
+/// The row doubles as the visited set: an entry is non-UNREACH exactly
+/// when its node has been discovered (the root holds a sentinel during
+/// the search and is restored to UNREACH afterwards, matching the
+/// reference implementation's table byte-for-byte).
+fn bfs_row(csr: &Csr, dst: usize, row: &mut [(u32, u32)], queue: &mut Vec<u32>) {
+    row[dst] = (dst as u32, u32::MAX); // visited sentinel, never read back
+    queue.clear();
+    queue.push(dst as u32);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head] as usize;
+        head += 1;
+        for &(v, l) in &csr.adj[csr.off[u] as usize..csr.off[u + 1] as usize] {
+            let e = &mut row[v as usize];
+            if *e == UNREACH {
+                // first-found hop v -> u is on a shortest path v -> dst
+                *e = (u as u32, l);
+                queue.push(v);
+            }
+        }
+    }
+    row[dst] = UNREACH;
+}
+
+impl Router {
+    /// Build routing tables with one BFS per destination — O(V * (V + E))
+    /// work, partitioned across all hardware threads (serial below 64
+    /// nodes, where spawn overhead dominates).
+    pub fn build(topo: &Topology) -> Router {
+        let n = topo.nodes.len();
+        let threads = if n < 64 { 1 } else { crate::util::par::workers_for(n) };
+        Router::build_with_threads(topo, threads)
+    }
+
+    /// Build with an explicit worker count, honored exactly (1 = serial;
+    /// used by tests and the simscale bench to isolate the parallel
+    /// speedup and to exercise the partitioning on small graphs).
+    pub fn build_with_threads(topo: &Topology, threads: usize) -> Router {
+        let n = topo.nodes.len();
+        if n == 0 {
+            return Router { n, next: Vec::new().into_boxed_slice() };
+        }
+        let csr = Csr::build(topo);
+        // (u32::MAX, u32::MAX) is an all-ones byte pattern: this fill
+        // lowers to one memset-class pass over the table
+        let mut next = vec![UNREACH; n * n].into_boxed_slice();
+        let threads = threads.clamp(1, n);
+        if threads == 1 {
+            let mut queue = Vec::with_capacity(n);
+            for (dst, row) in next.chunks_mut(n).enumerate() {
+                bfs_row(&csr, dst, row, &mut queue);
+            }
+        } else {
+            let rows_per = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (w, chunk) in next.chunks_mut(rows_per * n).enumerate() {
+                    let csr = &csr;
+                    s.spawn(move || {
+                        let mut queue = Vec::with_capacity(n);
+                        for (i, row) in chunk.chunks_mut(n).enumerate() {
+                            bfs_row(csr, w * rows_per + i, row, &mut queue);
+                        }
+                    });
+                }
+            });
+        }
+        Router { n, next }
+    }
+
+    /// Number of nodes the table covers.
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    /// Raw PBR entry: (next node, link) on the path `at -> dst`, or None
+    /// when unreachable (or `at == dst`).
+    #[inline]
+    pub fn next_hop(&self, at: NodeId, dst: NodeId) -> Option<(NodeId, usize)> {
+        if at == dst {
+            return None;
+        }
+        let (nxt, link) = self.next[dst * self.n + at];
+        if nxt == u32::MAX {
+            None
+        } else {
+            Some((nxt as NodeId, link as usize))
+        }
     }
 
     /// Shortest path src -> dst, or None if unreachable.
@@ -74,23 +181,31 @@ impl Router {
         let mut links = Vec::new();
         let mut cur = src;
         while cur != dst {
-            let (nxt, link) = self.next[dst][cur];
-            if nxt == usize::MAX {
-                return None;
-            }
+            let (nxt, link) = self.next_hop(cur, dst)?;
             nodes.push(nxt);
             links.push(link);
             cur = nxt;
-            if links.len() > self.next.len() {
+            if links.len() > self.n {
                 unreachable!("routing loop");
             }
         }
         Some(Path { nodes, links })
     }
 
-    /// Hop count src -> dst (None if unreachable).
+    /// Hop count src -> dst (None if unreachable), counted by walking the
+    /// PBR table without materializing the node/link lists.
     pub fn hops(&self, src: NodeId, dst: NodeId) -> Option<usize> {
-        self.path(src, dst).map(|p| p.hops())
+        let mut cur = src;
+        let mut h = 0;
+        while cur != dst {
+            let (nxt, _) = self.next_hop(cur, dst)?;
+            cur = nxt;
+            h += 1;
+            if h > self.n {
+                unreachable!("routing loop");
+            }
+        }
+        Some(h)
     }
 
     /// Fill `out` with the link indices of the shortest path src -> dst
@@ -100,13 +215,16 @@ impl Router {
         out.clear();
         let mut cur = src;
         while cur != dst {
-            let (nxt, link) = self.next[dst][cur];
-            if nxt == usize::MAX {
-                out.clear();
-                return false;
+            match self.next_hop(cur, dst) {
+                Some((nxt, link)) => {
+                    out.push(link);
+                    cur = nxt;
+                }
+                None => {
+                    out.clear();
+                    return false;
+                }
             }
-            out.push(link);
-            cur = nxt;
         }
         true
     }
@@ -114,14 +232,87 @@ impl Router {
     /// The PBR table row a switch would hold for `dst`: port (link index)
     /// to forward on, per possible current node.
     pub fn pbr_port(&self, at: NodeId, dst: NodeId) -> Option<usize> {
-        if at == dst {
-            return None;
+        self.next_hop(at, dst).map(|(_, link)| link)
+    }
+}
+
+pub mod reference {
+    //! The pre-flattening serial router, preserved verbatim as (a) the
+    //! parity oracle for `tests/prop_invariants.rs` and (b) the seed
+    //! baseline that `benches/simscale.rs` measures speedups against.
+    //! Not used on any hot path.
+
+    use super::{Path, Topology};
+    use crate::fabric::topology::NodeId;
+    use std::collections::VecDeque;
+
+    const UNREACH: (NodeId, usize) = (usize::MAX, usize::MAX);
+
+    /// Nested-table serial router: one BFS per destination into
+    /// `Vec<Vec<(usize, usize)>>`.
+    pub struct SerialRouter {
+        next: Vec<Vec<(NodeId, usize)>>,
+    }
+
+    impl SerialRouter {
+        pub fn build(topo: &Topology) -> SerialRouter {
+            let n = topo.nodes.len();
+            let mut next = vec![vec![UNREACH; n]; n];
+            let mut queue = VecDeque::new();
+            for dst in 0..n {
+                let row = &mut next[dst];
+                let mut seen = vec![false; n];
+                seen[dst] = true;
+                queue.clear();
+                queue.push_back(dst);
+                while let Some(u) = queue.pop_front() {
+                    for &(v, l) in topo.neighbors(u) {
+                        if !seen[v] {
+                            seen[v] = true;
+                            row[v] = (u, l);
+                            queue.push_back(v);
+                        }
+                    }
+                }
+            }
+            SerialRouter { next }
         }
-        let (nxt, link) = self.next[dst][at];
-        if nxt == usize::MAX {
-            None
-        } else {
-            Some(link)
+
+        pub fn path(&self, src: NodeId, dst: NodeId) -> Option<Path> {
+            if src == dst {
+                return Some(Path { nodes: vec![src], links: vec![] });
+            }
+            let mut nodes = vec![src];
+            let mut links = Vec::new();
+            let mut cur = src;
+            while cur != dst {
+                let (nxt, link) = self.next[dst][cur];
+                if nxt == usize::MAX {
+                    return None;
+                }
+                nodes.push(nxt);
+                links.push(link);
+                cur = nxt;
+                if links.len() > self.next.len() {
+                    unreachable!("routing loop");
+                }
+            }
+            Some(Path { nodes, links })
+        }
+
+        pub fn links_into(&self, src: NodeId, dst: NodeId, out: &mut Vec<usize>) -> bool {
+            out.clear();
+            let mut cur = src;
+            while cur != dst {
+                let (nxt, link) = self.next[dst][cur];
+                if nxt == usize::MAX {
+                    out.clear();
+                    return false;
+                }
+                out.push(link);
+                cur = nxt;
+            }
+            true
         }
     }
 }
@@ -157,6 +348,9 @@ mod tests {
         let r = Router::build(&t);
         assert!(r.path(0, lonely).is_none());
         assert!(r.hops(lonely, 0).is_none());
+        let mut links = Vec::new();
+        assert!(!r.links_into(0, lonely, &mut links));
+        assert!(links.is_empty());
     }
 
     #[test]
@@ -217,6 +411,37 @@ mod tests {
                 for &b in g {
                     assert!(r.hops(a, b).unwrap() <= 3, "dragonfly switch-to-switch > 3 hops");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_flat_build() {
+        let (t, ids) = Topology::torus3d((4, 4, 4), LinkKind::CxlCoherent, "t");
+        let par = Router::build_with_threads(&t, 4);
+        let ser = Router::build_with_threads(&t, 1);
+        assert_eq!(par.next, ser.next, "worker partitioning changed the table");
+        for &a in &ids {
+            for &b in &ids {
+                assert_eq!(par.path(a, b), ser.path(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn flat_build_matches_reference_serial_router() {
+        let (mut t, leaves) = Topology::clos(5, 3, LinkKind::CxlCoherent, "f");
+        let mut eps = Vec::new();
+        for (i, &l) in leaves.iter().enumerate() {
+            let e = t.add_node(NodeKind::Accelerator, format!("ep{i}"));
+            t.connect(e, l, LinkKind::CxlCoherent);
+            eps.push(e);
+        }
+        let flat = Router::build(&t);
+        let seed = reference::SerialRouter::build(&t);
+        for a in 0..t.nodes.len() {
+            for b in 0..t.nodes.len() {
+                assert_eq!(flat.path(a, b), seed.path(a, b), "paths diverge {a}->{b}");
             }
         }
     }

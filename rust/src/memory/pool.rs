@@ -28,13 +28,24 @@ pub struct Allocation {
     pub extents: Vec<(usize, f64)>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PoolError {
-    #[error("out of memory: requested {requested} bytes, {available} available")]
     OutOfMemory { requested: f64, available: f64 },
-    #[error("unknown allocation")]
     UnknownAlloc,
 }
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::OutOfMemory { requested, available } => {
+                write!(f, "out of memory: requested {requested} bytes, {available} available")
+            }
+            PoolError::UnknownAlloc => write!(f, "unknown allocation"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 /// Placement policy for new allocations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

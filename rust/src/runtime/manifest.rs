@@ -1,8 +1,8 @@
 //! The flat-I/O ABI between the AOT python side and the rust runtime,
 //! parsed from `artifacts/<preset>.manifest.json`.
 
+use crate::util::error::{Context, Result};
 use crate::util::Json;
-use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Shape/dtype of one tensor in the flat I/O list.

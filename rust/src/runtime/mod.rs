@@ -8,14 +8,21 @@
 //!   executables (weights held as XLA literals between steps).
 //! * [`data`] — deterministic synthetic tiny-corpus token pipeline.
 
+// The PJRT client and trainer need the external `xla` crate, which is
+// not in the offline vendor set; they are gated behind the `pjrt`
+// feature. The manifest/data layers are pure rust and always built.
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod data;
 
 pub use data::SyntheticCorpus;
 pub use manifest::{ArtifactManifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;
 
 /// Default artifacts directory relative to the repo root.

@@ -4,7 +4,7 @@
 //! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
 //! proto path rejects; the text parser reassigns ids).
 
-use anyhow::{Context, Result};
+use crate::util::error::{ensure, Context, Result};
 use std::path::Path;
 
 /// A PJRT client plus compilation cache.
@@ -83,7 +83,7 @@ impl PjrtEngine {
 /// f32 literal of the given shape.
 pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product::<usize>().max(1);
-    anyhow::ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+    ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
     let l = xla::Literal::vec1(data);
     if shape.is_empty() {
         // scalar: reshape to rank 0
@@ -97,7 +97,7 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 /// i32 literal of the given shape.
 pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product::<usize>().max(1);
-    anyhow::ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
+    ensure!(n == data.len(), "shape {shape:?} wants {n} elements, got {}", data.len());
     let l = xla::Literal::vec1(data);
     if shape.is_empty() {
         Ok(l.reshape(&[])?)

@@ -3,7 +3,7 @@
 
 use super::manifest::ArtifactManifest;
 use super::pjrt::{lit_i32, lit_i32_scalar, Executable, PjrtEngine};
-use anyhow::{ensure, Context, Result};
+use crate::util::error::{ensure, Context, Result};
 use std::path::Path;
 use std::time::Instant;
 

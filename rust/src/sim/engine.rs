@@ -1,4 +1,13 @@
 //! Core event loop: a min-heap of timestamped events dispatched in order.
+//!
+//! # Performance architecture (§Perf)
+//!
+//! The heap holds lean `(time, seq, u32 handle)` keys; event payloads sit
+//! in a slot slab indexed by the handle and recycled through a free list.
+//! Heap sift operations therefore move 24-byte keys instead of full
+//! payload-carrying events, and the slab's high-water mark equals the
+//! maximum number of *concurrently pending* events, not the total
+//! scheduled — a million-transaction run recycles a few thousand slots.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -7,51 +16,50 @@ use std::collections::BinaryHeap;
 pub type SimTime = f64;
 
 /// What an event does when it fires (interpreted by the driver).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
     /// Transaction `id` arrives at hop `hop` of its path.
     Arrive { id: usize, hop: usize },
-    /// Transaction `id` finishes service at hop `hop`.
-    Depart { id: usize, hop: usize },
     /// Transaction `id` completes end-to-end.
     Complete { id: usize },
     /// Driver-defined.
     Custom { tag: u64 },
 }
 
-#[derive(Clone, Debug)]
-struct Event {
+/// Heap key: ordering state only; the payload lives in the slab.
+#[derive(Clone, Copy, Debug)]
+struct HeapKey {
     at: SimTime,
     seq: u64, // tie-break: FIFO among simultaneous events
-    kind: EventKind,
+    slot: u32,
 }
 
-impl PartialEq for Event {
+impl PartialEq for HeapKey {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
-impl Eq for Event {}
-impl PartialOrd for Event {
+impl Eq for HeapKey {}
+impl PartialOrd for HeapKey {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for Event {
+impl Ord for HeapKey {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // BinaryHeap is a max-heap: invert for earliest-first. `at` is
+        // guaranteed finite by `schedule`, so total_cmp agrees with the
+        // numeric order.
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
 /// The event queue + clock.
 #[derive(Debug, Default)]
 pub struct Engine {
-    heap: BinaryHeap<Event>,
+    heap: BinaryHeap<HeapKey>,
+    slab: Vec<EventKind>,
+    free: Vec<u32>,
     now: SimTime,
     seq: u64,
     dispatched: u64,
@@ -71,11 +79,24 @@ impl Engine {
         self.dispatched
     }
 
-    /// Schedule `kind` at absolute time `at` (>= now).
+    /// Schedule `kind` at absolute time `at` (>= now). Panics on NaN or
+    /// infinite timestamps: a non-finite key would silently corrupt the
+    /// heap order (float comparison has no total order across NaN).
     pub fn schedule(&mut self, at: SimTime, kind: EventKind) {
+        assert!(at.is_finite(), "non-finite event time {at}");
         debug_assert!(at >= self.now, "schedule into the past: {at} < {}", self.now);
         self.seq += 1;
-        self.heap.push(Event { at, seq: self.seq, kind });
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = kind;
+                s
+            }
+            None => {
+                self.slab.push(kind);
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.heap.push(HeapKey { at, seq: self.seq, slot });
     }
 
     /// Schedule `kind` after a delay.
@@ -84,12 +105,17 @@ impl Engine {
     }
 
     /// Pop the next event, advancing the clock. None when drained.
+    /// (Deliberately not an `Iterator`: callers interleave `schedule`.)
+    #[allow(clippy::should_implement_trait)]
+    #[inline]
     pub fn next(&mut self) -> Option<(SimTime, EventKind)> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.at >= self.now);
-        self.now = ev.at;
+        let k = self.heap.pop()?;
+        debug_assert!(k.at >= self.now);
+        self.now = k.at;
         self.dispatched += 1;
-        Some((ev.at, ev.kind))
+        let kind = self.slab[k.slot as usize];
+        self.free.push(k.slot);
+        Some((k.at, kind))
     }
 
     pub fn is_empty(&self) -> bool {
@@ -98,6 +124,12 @@ impl Engine {
 
     pub fn pending(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Slab high-water mark: the max number of simultaneously pending
+    /// events seen so far (capacity telemetry for the §Perf design).
+    pub fn slab_slots(&self) -> usize {
+        self.slab.len()
     }
 }
 
@@ -157,5 +189,47 @@ mod tests {
             assert!(at >= last);
             last = at;
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_timestamp_rejected() {
+        let mut e = Engine::new();
+        e.schedule(f64::NAN, EventKind::Custom { tag: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_timestamp_rejected() {
+        let mut e = Engine::new();
+        e.schedule(f64::INFINITY, EventKind::Custom { tag: 0 });
+    }
+
+    #[test]
+    fn slab_slots_bounded_by_peak_concurrency() {
+        let mut e = Engine::new();
+        // repeated schedule/drain cycles: never more than 8 pending at
+        // once, so the slab must not grow past 8 slots
+        for round in 0..100u64 {
+            for i in 0..8 {
+                e.schedule(round as f64 * 10.0 + i as f64, EventKind::Custom { tag: i });
+            }
+            for _ in 0..8 {
+                e.next().unwrap();
+            }
+        }
+        assert!(e.slab_slots() <= 8, "slab leaked: {} slots", e.slab_slots());
+        assert_eq!(e.dispatched(), 800);
+    }
+
+    #[test]
+    fn payloads_survive_slot_recycling() {
+        let mut e = Engine::new();
+        e.schedule(1.0, EventKind::Arrive { id: 7, hop: 3 });
+        assert_eq!(e.next(), Some((1.0, EventKind::Arrive { id: 7, hop: 3 })));
+        // the freed slot is reused; the new payload must win
+        e.schedule(2.0, EventKind::Complete { id: 9 });
+        assert_eq!(e.slab_slots(), 1);
+        assert_eq!(e.next(), Some((2.0, EventKind::Complete { id: 9 })));
     }
 }

@@ -2,11 +2,24 @@
 //! transaction walks its routed path hop by hop; every link direction is an
 //! FCFS [`Server`] sized by that link's serialization time, so contention
 //! and head-of-line blocking emerge rather than being assumed.
+//!
+//! # Performance architecture (§Perf)
+//!
+//! Routed paths are *interned* per `(src, dst)` pair: the N-transactions-
+//! per-pair case (every workload sweep) shares one contiguous hop slice in
+//! a common arena instead of cloning a `Vec<usize>` per transaction. Each
+//! arena entry packs `(link << 1) | direction` — the hop's direction bit
+//! is computed once at path-build time, so the per-event handler never
+//! re-derives it by comparing link endpoints. Combined with the slab
+//! [`Engine`] this keeps the Arrive hot path to: one inflight load, one
+//! arena load, one `LinkConsts` load, one server admit, one schedule.
 
 use super::engine::{Engine, EventKind};
 use super::server::Server;
+use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
 use crate::util::stats::Welford;
+use std::collections::HashMap;
 
 /// One memory transaction (request; the response is modeled by doubling
 /// the one-way latency contribution of symmetric protocol phases).
@@ -33,14 +46,18 @@ pub struct MemSimReport {
     pub events: u64,
 }
 
+/// Per-transaction state: issue time plus a borrowed slice of the shared
+/// hop arena (start/len), not an owned path.
 struct InFlight {
-    tx: Transaction,
-    path_links: Vec<usize>,
     issued: f64,
+    bytes: f64,
+    device_ns: f64,
+    path_start: u32,
+    path_len: u32,
 }
 
 /// Precomputed per-link hot-path constants (§Perf: avoids re-deriving
-/// PHY/flit math on every arrival event).
+/// PHY/flit math and link-struct lookups on every arrival event).
 #[derive(Clone, Copy)]
 struct LinkConsts {
     /// 1 / (raw_bw * phy_efficiency), ns per wire byte.
@@ -49,6 +66,9 @@ struct LinkConsts {
     fixed_ns: f64,
     /// switch traversal at node a / node b (0 if not a switch).
     switch_ns: [f64; 2],
+    /// Flit format, copied out of the link so the handler touches no
+    /// topology memory.
+    flit: FlitFormat,
 }
 
 /// The simulator.
@@ -57,6 +77,10 @@ pub struct MemSim<'f> {
     /// one server per (link, direction)
     servers: Vec<[Server; 2]>,
     consts: Vec<LinkConsts>,
+    /// interned hops, `(link << 1) | dir`, contiguous per path
+    hop_arena: Vec<u32>,
+    /// (src, dst) -> (start, len) into `hop_arena`
+    path_cache: HashMap<(u32, u32), (u32, u32)>,
 }
 
 impl<'f> MemSim<'f> {
@@ -68,36 +92,80 @@ impl<'f> MemSim<'f> {
             .iter()
             .map(|l| {
                 let p = &l.params;
-                let sw = |n: crate::fabric::NodeId| {
+                let sw = |n: NodeId| {
                     fabric.topo.node(n).switch.as_ref().map(|s| s.traversal_ns()).unwrap_or(0.0)
                 };
                 LinkConsts {
                     inv_rate: 1.0 / (p.raw_bw * p.phy.efficiency()),
                     fixed_ns: p.prop_ns + p.phy.latency_ns() + p.flit_overhead_ns,
                     switch_ns: [sw(l.a), sw(l.b)],
+                    flit: p.flit,
                 }
             })
             .collect();
-        MemSim { fabric, servers, consts }
+        MemSim {
+            fabric,
+            servers,
+            consts,
+            hop_arena: Vec::new(),
+            path_cache: HashMap::new(),
+        }
+    }
+
+    /// Intern the routed path src -> dst: returns (start, len) into the
+    /// hop arena, building (with per-hop direction bits) on first use.
+    /// None when unreachable.
+    fn intern_path(&mut self, src: NodeId, dst: NodeId) -> Option<(u32, u32)> {
+        let key = (src as u32, dst as u32);
+        if let Some(&r) = self.path_cache.get(&key) {
+            return Some(r);
+        }
+        let fabric = self.fabric;
+        let router = fabric.router();
+        let start = self.hop_arena.len() as u32;
+        let mut cur = src;
+        while cur != dst {
+            let Some((nxt, link)) = router.next_hop(cur, dst) else {
+                self.hop_arena.truncate(start as usize);
+                return None;
+            };
+            // direction bit decided once here, not per event: 0 = a -> b
+            let dir = if fabric.topo.link(link).a == cur { 0u32 } else { 1u32 };
+            self.hop_arena.push(((link as u32) << 1) | dir);
+            cur = nxt;
+        }
+        let entry = (start, self.hop_arena.len() as u32 - start);
+        self.path_cache.insert(key, entry);
+        Some(entry)
+    }
+
+    /// Number of distinct (src, dst) paths interned so far.
+    pub fn interned_paths(&self) -> usize {
+        self.path_cache.len()
     }
 
     /// Run all transactions to completion; returns latency statistics.
     /// Transactions must be pre-sorted by issue time (asserted).
     pub fn run(&mut self, txs: Vec<Transaction>) -> MemSimReport {
         let mut engine = Engine::new();
-        let mut inflight: Vec<Option<InFlight>> = Vec::with_capacity(txs.len());
+        let mut inflight: Vec<InFlight> = Vec::with_capacity(txs.len());
         let mut last = f64::NEG_INFINITY;
-        let router = self.fabric.router();
-        let mut links = Vec::new();
         for tx in txs {
             assert!(tx.at >= last, "transactions must be sorted by issue time");
             last = tx.at;
-            if !router.links_into(tx.src, tx.dst, &mut links) && tx.src != tx.dst {
-                panic!("no path {} -> {}", tx.src, tx.dst);
-            }
+            let (path_start, path_len) = match self.intern_path(tx.src, tx.dst) {
+                Some(r) => r,
+                None => panic!("no path {} -> {}", tx.src, tx.dst),
+            };
             let id = inflight.len();
             engine.schedule(tx.at, EventKind::Arrive { id, hop: 0 });
-            inflight.push(Some(InFlight { issued: tx.at, path_links: links.clone(), tx }));
+            inflight.push(InFlight {
+                issued: tx.at,
+                bytes: tx.bytes,
+                device_ns: tx.device_ns,
+                path_start,
+                path_len,
+            });
         }
 
         let mut latency = Welford::new();
@@ -105,26 +173,17 @@ impl<'f> MemSim<'f> {
         while let Some((now, ev)) = engine.next() {
             match ev {
                 EventKind::Arrive { id, hop } => {
-                    let fl = inflight[id].as_ref().unwrap();
-                    if hop >= fl.path_links.len() {
+                    let fl = &inflight[id];
+                    if hop >= fl.path_len as usize {
                         // reached destination: pay device service then complete
-                        let dev = fl.tx.device_ns;
-                        engine.after(dev, EventKind::Complete { id });
+                        engine.after(fl.device_ns, EventKind::Complete { id });
                         continue;
                     }
-                    let link_idx = fl.path_links[hop];
-                    let link = self.fabric.topo.link(link_idx);
+                    let h = self.hop_arena[fl.path_start as usize + hop];
+                    let link_idx = (h >> 1) as usize;
+                    let dir = (h & 1) as usize;
                     let c = &self.consts[link_idx];
-                    // direction: 0 = a->b
-                    let from = if hop == 0 {
-                        fl.tx.src
-                    } else {
-                        let prev = self.fabric.topo.link(fl.path_links[hop - 1]);
-                        // the node shared between prev and this link
-                        if prev.a == link.a || prev.b == link.a { link.a } else { link.b }
-                    };
-                    let dir = if from == link.a { 0 } else { 1 };
-                    let service = link.params.flit.wire_bytes(fl.tx.bytes) * c.inv_rate;
+                    let service = c.flit.wire_bytes(fl.bytes) * c.inv_rate;
                     let done = self.servers[link_idx][dir].admit(now, service);
                     // fixed per-hop latency + switch traversal at the
                     // receiving node (precomputed — §Perf)
@@ -132,11 +191,14 @@ impl<'f> MemSim<'f> {
                     engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
                 }
                 EventKind::Complete { id } => {
-                    let fl = inflight[id].take().unwrap();
-                    latency.push(now - fl.issued);
+                    latency.push(now - inflight[id].issued);
                     completed += 1;
                 }
-                _ => {}
+                // exhaustive on purpose: a new EventKind must be handled
+                // here explicitly, not dropped by a catch-all arm
+                EventKind::Custom { tag } => {
+                    unreachable!("MemSim schedules no Custom events (tag {tag})")
+                }
             }
         }
         MemSimReport { completed, latency, makespan_ns: engine.now(), events: engine.dispatched() }
@@ -235,5 +297,48 @@ mod tests {
         let min_makespan = 100.0 * 1e6 / 100.0; // bytes / (bytes/ns)
         assert!(rep.makespan_ns > min_makespan, "makespan {} below wire limit {min_makespan}", rep.makespan_ns);
         assert!(sim.peak_utilization(rep.makespan_ns) > 0.9);
+    }
+
+    #[test]
+    fn paths_are_interned_per_pair() {
+        let (f, accs) = rack(8);
+        // 1000 transactions over only 3 distinct (src, dst) pairs
+        let pairs = [(0usize, 1usize), (2, 3), (4, 5)];
+        let txs: Vec<_> = (0..1000)
+            .map(|i| {
+                let (s, d) = pairs[i % 3];
+                Transaction { src: accs[s], dst: accs[d], at: i as f64, bytes: 256.0, device_ns: 0.0 }
+            })
+            .collect();
+        let mut sim = MemSim::new(&f);
+        let rep = sim.run(txs);
+        assert_eq!(rep.completed, 1000);
+        assert_eq!(sim.interned_paths(), 3, "one arena path per distinct pair");
+    }
+
+    #[test]
+    fn self_transaction_pays_only_device_time() {
+        let (f, accs) = rack(2);
+        let mut sim = MemSim::new(&f);
+        let rep = sim.run(vec![Transaction { src: accs[0], dst: accs[0], at: 5.0, bytes: 64.0, device_ns: 300.0 }]);
+        assert_eq!(rep.completed, 1);
+        assert!((rep.latency.mean() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interned_directions_match_link_endpoints() {
+        // a -> sw -> b: first hop leaves from the endpoint side recorded
+        // on the link, second hop leaves from the switch side; the
+        // direction bits must route each hop onto its own server
+        let (f, accs) = rack(4);
+        let mut sim = MemSim::new(&f);
+        let rep = sim.run(vec![
+            Transaction { src: accs[0], dst: accs[1], at: 0.0, bytes: 4096.0, device_ns: 0.0 },
+            Transaction { src: accs[1], dst: accs[0], at: 0.0, bytes: 4096.0, device_ns: 0.0 },
+        ]);
+        // opposite directions of the same two links: full-duplex, so no
+        // queuing — both finish with identical latency
+        assert_eq!(rep.completed, 2);
+        assert!((rep.latency.max() - rep.latency.min()).abs() < 1e-9, "duplex paths interfered");
     }
 }

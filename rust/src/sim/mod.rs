@@ -8,6 +8,12 @@
 //! same question under *actual* contention from a concrete transaction
 //! stream (the paper's "queuing behaviors at both link and transaction
 //! layers").
+//!
+//! Hot-path design (§Perf, see `benches/simscale.rs` for the numbers):
+//! the [`Engine`] heap carries lean `(time, seq, handle)` keys with
+//! payloads in a recycled slab, and [`MemSim`] interns routed paths per
+//! `(src, dst)` pair with precomputed per-hop direction bits — sized for
+//! millions of transactions over multi-thousand-node fabrics.
 
 pub mod engine;
 pub mod server;

@@ -24,6 +24,7 @@ impl Server {
 
     /// Admit a job arriving at `now` needing `service` time units.
     /// Returns the completion time; updates occupancy accounting.
+    #[inline]
     pub fn admit(&mut self, now: SimTime, service: f64) -> SimTime {
         let start = now.max(self.free_at);
         self.queued += start - now;

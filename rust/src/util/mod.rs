@@ -6,7 +6,10 @@ pub mod stats;
 pub mod json;
 pub mod units;
 pub mod prop;
+pub mod error;
+pub mod par;
 
 pub use json::Json;
+pub use par::par_map;
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,80 @@
+//! Scoped-thread data parallelism (rayon is not in the offline vendor
+//! set): an order-preserving `par_map` over slices, used by the routing
+//! table builder, the experiment sweeps and the workload generators.
+//!
+//! Work is split into one contiguous chunk per worker; results come back
+//! in input order. Falls back to a plain serial map when there is a single
+//! hardware thread or at most one item, so callers never pay spawn
+//! overhead on trivial inputs.
+
+/// Number of worker threads to use for a job of `items` independent units.
+pub fn workers_for(items: usize) -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(items.max(1))
+}
+
+/// Map `f` over `items` across scoped threads, preserving order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers_for(n);
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut parts: Vec<Vec<R>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = par_map(&xs, |&x| x * x);
+        assert_eq!(ys.len(), 1000);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = vec![];
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[41u32], |&x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn matches_serial_map_on_shared_state() {
+        // closures capture by shared reference only; results must be
+        // identical to the serial map regardless of scheduling
+        let base = vec![3.0f64, 1.5, 9.25, -2.0, 0.0, 7.125];
+        let scale = 2.5f64;
+        let par = par_map(&base, |&x| x * scale);
+        let ser: Vec<f64> = base.iter().map(|&x| x * scale).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn workers_bounded_by_items() {
+        assert_eq!(workers_for(0), 1);
+        assert!(workers_for(1) <= 1);
+        assert!(workers_for(1_000_000) >= 1);
+    }
+}

@@ -71,6 +71,19 @@ impl WorkingSetSweep {
         ]
     }
 
+    /// Generate traces for a whole sweep at once, one scoped worker
+    /// thread per point (§Perf: trace generation is the setup cost of
+    /// every event-simulated sweep). Each point derives its own seed from
+    /// the base seed and its index, so the result is deterministic and
+    /// identical to calling [`Self::trace`] point by point with those
+    /// seeds.
+    pub fn traces(&self, working_sets: &[f64]) -> Vec<AccessTrace> {
+        let indexed: Vec<(usize, f64)> = working_sets.iter().copied().enumerate().collect();
+        crate::util::par::par_map(&indexed, |&(i, ws)| {
+            WorkingSetSweep { seed: self.seed.wrapping_add(i as u64), ..self.clone() }.trace(ws)
+        })
+    }
+
     /// Generate a trace over `working_set` bytes.
     pub fn trace(&self, working_set: f64) -> AccessTrace {
         let mut rng = Rng::new(self.seed);
@@ -131,5 +144,19 @@ mod tests {
         let a = WorkingSetSweep::default().trace(1e6);
         let b = WorkingSetSweep::default().trace(1e6);
         assert_eq!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn parallel_traces_match_serial_per_point() {
+        let sweep = WorkingSetSweep { accesses: 2000, ..Default::default() };
+        let points = [1e6, 4e6, 16e6, 64e6, 256e6];
+        let par = sweep.traces(&points);
+        assert_eq!(par.len(), points.len());
+        for (i, (&ws, trace)) in points.iter().zip(&par).enumerate() {
+            let serial =
+                WorkingSetSweep { seed: sweep.seed.wrapping_add(i as u64), ..sweep.clone() }.trace(ws);
+            assert_eq!(trace.accesses, serial.accesses, "point {i} diverged");
+            assert_eq!(trace.working_set, ws);
+        }
     }
 }

@@ -1,6 +1,9 @@
 //! Integration: the PJRT runtime over real AOT artifacts — the three-layer
 //! contract. These tests skip (with a message) when `make artifacts` has
-//! not run; the Makefile runs it before `cargo test`.
+//! not run; the Makefile runs it before `cargo test`. The whole suite
+//! needs the `pjrt` feature (the xla crate is not in the offline vendor
+//! set).
+#![cfg(feature = "pjrt")]
 
 use scalepool::calculon::Parallelism;
 use scalepool::coordinator::{EmulatedCluster, TrainJobScheduler};

@@ -82,6 +82,105 @@ fn prop_routing_sound_on_random_graphs() {
     );
 }
 
+/// Routing parity: the flattened, parallel-built PBR table must yield
+/// byte-identical paths to the reference serial BFS (the pre-flattening
+/// implementation, kept in `fabric::routing::reference`) on randomized
+/// topologies of all four Figure-4a shapes — and identical tables
+/// regardless of worker count.
+#[test]
+fn prop_flat_parallel_routing_matches_serial_reference() {
+    use scalepool::fabric::routing::reference::SerialRouter;
+    use scalepool::fabric::Router;
+    forall_res(
+        Config { cases: 48, seed: 0xF1A7 },
+        |rng: &mut Rng| {
+            let t = match rng.below(4) {
+                0 => Topology::single_hop(2 + rng.below(30) as usize, LinkKind::NvLink5, "r"),
+                1 => {
+                    let (mut t, leaves) = Topology::clos(
+                        2 + rng.below(6) as usize,
+                        1 + rng.below(4) as usize,
+                        LinkKind::CxlCoherent,
+                        "c",
+                    );
+                    let eps = 1 + rng.below(3) as usize;
+                    for (i, &l) in leaves.iter().enumerate() {
+                        for e in 0..eps {
+                            let n = t.add_node(NodeKind::Accelerator, format!("ep{i}-{e}"));
+                            t.connect(n, l, LinkKind::CxlCoherent);
+                        }
+                    }
+                    t
+                }
+                2 => {
+                    Topology::torus3d(
+                        (
+                            1 + rng.below(4) as usize,
+                            1 + rng.below(4) as usize,
+                            1 + rng.below(4) as usize,
+                        ),
+                        LinkKind::CxlCoherent,
+                        "t",
+                    )
+                    .0
+                }
+                _ => {
+                    Topology::dragonfly(
+                        2 + rng.below(4) as usize,
+                        2 + rng.below(4) as usize,
+                        LinkKind::CxlCoherent,
+                        "d",
+                    )
+                    .0
+                }
+            };
+            let n = t.nodes.len();
+            let probes: Vec<(usize, usize)> = (0..24)
+                .map(|_| (rng.below(n as u64) as usize, rng.below(n as u64) as usize))
+                .collect();
+            let threads = 1 + rng.below(4) as usize;
+            (t, probes, threads)
+        },
+        |(t, probes, threads)| {
+            let flat = Router::build(t);
+            let flat_t = Router::build_with_threads(t, *threads);
+            let oracle = SerialRouter::build(t);
+            let n = t.nodes.len();
+            // exhaustive on small graphs, sampled on larger ones
+            let pairs: Vec<(usize, usize)> = if n <= 24 {
+                (0..n).flat_map(|a| (0..n).map(move |b| (a, b))).collect()
+            } else {
+                probes.clone()
+            };
+            for (a, b) in pairs {
+                let want = oracle.path(a, b);
+                if flat.path(a, b) != want {
+                    return Err(format!("flat path {a}->{b} != serial reference"));
+                }
+                if flat_t.path(a, b) != want {
+                    return Err(format!("{threads}-thread path {a}->{b} != serial reference"));
+                }
+                // the hot-path link walk must agree with the full path
+                let mut links = Vec::new();
+                let reachable = flat.links_into(a, b, &mut links);
+                match want {
+                    Some(p) => {
+                        if !reachable || links != p.links {
+                            return Err(format!("links_into {a}->{b} != reference links"));
+                        }
+                    }
+                    None => {
+                        if reachable {
+                            return Err(format!("links_into {a}->{b} found a phantom path"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Pool allocator: random alloc/free sequences conserve bytes, never
 /// overcommit a region, and every policy places exactly what was asked.
 #[test]

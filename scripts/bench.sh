@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Run the bench binaries and refresh the BENCH_*.json records at the repo
+# root. The simscale bench writes BENCH_simscale.json itself (path via
+# SCALEPOOL_BENCH_OUT); the figure benches print RESULT lines that are
+# captured into BENCH_figs.json.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+MANIFEST=rust/Cargo.toml
+
+echo "== simscale (router build + events/sec trajectory) =="
+SCALEPOOL_BENCH_OUT=BENCH_simscale.json \
+    cargo bench --manifest-path "$MANIFEST" --bench simscale
+
+echo "== figure benches =="
+fig_results=$(
+    cargo bench --manifest-path "$MANIFEST" --bench fig6_llm_training | tee /dev/stderr | grep '^RESULT' || true
+    cargo bench --manifest-path "$MANIFEST" --bench fig7_tiered_memory | tee /dev/stderr | grep '^RESULT' || true
+)
+
+# RESULT <name> k=v k=v ... -> {"name": {"k": v, ...}, ...}
+python3 - "$fig_results" <<'EOF'
+import json, sys
+out = {}
+for line in sys.argv[1].splitlines():
+    parts = line.split()
+    if len(parts) < 2 or parts[0] != "RESULT":
+        continue
+    name, kvs = parts[1], parts[2:]
+    out[name] = {k: float(v) for k, v in (kv.split("=", 1) for kv in kvs)}
+with open("BENCH_figs.json", "w") as f:
+    json.dump(out, f, indent=2)
+print("wrote BENCH_figs.json")
+EOF
+
+echo "== micro_fabric (informational, no JSON) =="
+cargo bench --manifest-path "$MANIFEST" --bench micro_fabric
