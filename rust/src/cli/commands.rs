@@ -10,7 +10,8 @@ use crate::experiments;
 use crate::fabric::TopologyKind;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{PjrtEngine, Trainer};
-use crate::sim::{MemSim, Transaction};
+use crate::sim::{MemSim, TrafficSource, Transaction};
+use crate::workloads::SyntheticTraffic;
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Context};
 use crate::util::error::{bail, Error, Result};
@@ -50,6 +51,54 @@ pub fn fig6(args: &mut Args) -> Result<()> {
 pub fn fig7() -> Result<()> {
     let rows = experiments::run_fig7();
     print!("{}", experiments::fig7::render(&rows));
+    Ok(())
+}
+
+pub fn mixed(args: &mut Args) -> Result<()> {
+    let cfg = experiments::MixedConfig {
+        racks: args.usize_or("racks", 4).map_err(Error::msg)?,
+        accels: args.usize_or("accels", 8).map_err(Error::msg)?,
+        mem_nodes: args.usize_or("mem-nodes", 4).map_err(Error::msg)?,
+        coherence_ops: args.usize_or("coh-ops", 2_000).map_err(Error::msg)? as u64,
+        tiering_ops: args.usize_or("tier-ops", 300).map_err(Error::msg)? as u64,
+        collective_bytes: args.f64_or("bytes", 32.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
+        collective_repeats: args.usize_or("repeats", 1).map_err(Error::msg)?,
+        hierarchical: args.get_or("algo", "hier") != "ring",
+        t1_bytes_per_acc: args.f64_or("t1-bytes", 2.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
+        seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
+    };
+    let t0 = std::time::Instant::now();
+    let rep = experiments::run_mixed(&cfg);
+    print!("{}", experiments::mixed::render(&rep));
+    println!("wall {:?}", t0.elapsed());
+    if let Some(path) = args.get("out") {
+        let rows: Vec<Json> = rep
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("class", Json::str(r.class.name())),
+                    ("completed", Json::num(r.completed as f64)),
+                    ("bytes", Json::num(r.bytes)),
+                    ("solo_tx_ns", Json::num(r.solo_tx_ns)),
+                    ("mixed_tx_ns", Json::num(r.mixed_tx_ns)),
+                    ("tx_inflation", Json::num(r.tx_inflation())),
+                    ("solo_domain_ns", Json::num(r.solo_domain_ns)),
+                    ("mixed_domain_ns", Json::num(r.mixed_domain_ns)),
+                    ("domain_inflation", Json::num(r.domain_inflation())),
+                ])
+            })
+            .collect();
+        let out = Json::obj(vec![
+            ("makespan_ns", Json::num(rep.mixed_makespan_ns)),
+            ("events", Json::num(rep.mixed_events as f64)),
+            ("peak_utilization", Json::num(rep.mixed_peak_utilization)),
+            ("max_tx_inflation", Json::num(rep.max_tx_inflation())),
+            ("classes", Json::Arr(rows)),
+        ]);
+        std::fs::write(path, out.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -114,10 +163,46 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     let bytes = args.f64_or("bytes", 4096.0).map_err(Error::msg)?;
     let seed = args.usize_or("seed", 7).map_err(Error::msg)? as u64;
     let sys = build_system("clos", racks, accels)?;
+    let all = sys.accelerators();
+
+    if args.flag("streamed") {
+        // streamed injection: transactions are generated as the clock
+        // reaches them — memory stays O(peak in-flight) however large
+        // --txs gets
+        let mut src =
+            SyntheticTraffic::new(all, sys.mem_nodes.clone(), txs as u64, bytes, 50.0, seed);
+        let t0 = std::time::Instant::now();
+        let mut sim = MemSim::new(&sys.fabric);
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sim.run_streamed(&mut sources)
+        };
+        let wall = t0.elapsed();
+        println!(
+            "streamed {} transactions of {} in {} simulated time (peak in-flight {})",
+            rep.total.completed,
+            fmt_bytes(bytes),
+            fmt_ns(rep.total.makespan_ns),
+            rep.peak_inflight
+        );
+        println!(
+            "latency: mean {} min {} max {}",
+            fmt_ns(rep.total.latency.mean()),
+            fmt_ns(rep.total.latency.min()),
+            fmt_ns(rep.total.latency.max())
+        );
+        println!(
+            "engine: {} events in {:?} ({:.2} M events/s); peak link utilization {:.1}%",
+            rep.total.events,
+            wall,
+            rep.total.events as f64 / wall.as_secs_f64() / 1e6,
+            100.0 * sim.peak_utilization(rep.total.makespan_ns)
+        );
+        return Ok(());
+    }
 
     let mut rng = Rng::new(seed);
     let mut at = 0.0;
-    let all: Vec<_> = sys.racks.iter().flat_map(|r| r.acc_ids.iter().copied()).collect();
     let txv: Vec<Transaction> = (0..txs)
         .map(|_| {
             at += rng.exp(1.0 / 50.0);

@@ -18,10 +18,18 @@ COMMANDS:
     table1                     Regenerate Table 1 (link characteristics)
     fig6                       Regenerate Figure 6 (LLM training, 5 models)
     fig7                       Regenerate Figure 7 (tiered-memory sweep)
+    mixed     [--racks <N>] [--accels <N>] [--mem-nodes <N>] [--coh-ops <N>]
+              [--tier-ops <N>] [--bytes <N>] [--repeats <N>]
+              [--algo <hier|ring>] [--seed <N>] [--out <file>]
+                               Coherence + tiering + collective traffic
+                               concurrently on one fabric; per-class
+                               latency under interference
     topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
                                Build a fabric and print its shape/latencies
     simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
-                               Event-driven memory-access simulation
+              [--streamed]     Event-driven memory-access simulation
+                               (--streamed: pull-based injection, O(peak
+                               in-flight) memory)
     train     --preset <tiny|small25m|base100m> --steps <N> [--seed <N>]
               [--artifacts <dir>] [--log-every <N>] [--out <file>]
                                End-to-end PJRT training under the emulated
@@ -53,6 +61,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "table1" => commands::table1(),
         "fig6" => commands::fig6(&mut args),
         "fig7" => commands::fig7(),
+        "mixed" => commands::mixed(&mut args),
         "topo" => commands::topo(&mut args),
         "simulate" => commands::simulate(&mut args),
         "train" => commands::train(&mut args),

@@ -211,6 +211,36 @@ impl ScalePoolSystem {
         self.racks.iter().map(|r| r.acc_ids.len()).sum()
     }
 
+    /// All accelerator node ids, rack-major order.
+    pub fn accelerators(&self) -> Vec<NodeId> {
+        self.racks.iter().flat_map(|r| r.acc_ids.iter().copied()).collect()
+    }
+
+    /// Accelerator node ids grouped per rack (the hierarchical-collective
+    /// group structure).
+    pub fn rack_groups(&self) -> Vec<Vec<NodeId>> {
+        self.racks.iter().map(|r| r.acc_ids.clone()).collect()
+    }
+
+    /// Build the two tiering pools with regions on real fabric nodes:
+    /// tier-1 is an HBM carve-out of `t1_bytes_per_acc` on every
+    /// accelerator, tier-2 spreads `config.mem_node_capacity` across the
+    /// CXL memory nodes — so migrations between them route over the
+    /// actual tier-1→tier-2 paths.
+    pub fn tier_pools(&self, t1_bytes_per_acc: f64) -> (crate::memory::pool::MemoryPool, crate::memory::pool::MemoryPool) {
+        use crate::memory::pool::MemoryPool;
+        use crate::memory::Tier;
+        let mut t1 = MemoryPool::new();
+        for acc in self.accelerators() {
+            t1.add_region(acc, Tier::Tier1Local, t1_bytes_per_acc);
+        }
+        let mut t2 = MemoryPool::new();
+        for &m in &self.mem_nodes {
+            t2.add_region(m, Tier::Tier2Pool, self.config.mem_node_capacity);
+        }
+        (t1, t2)
+    }
+
     /// Tier-1 capacity of one rack (bytes) — the Fig 7 "cluster" threshold.
     pub fn rack_hbm_capacity(&self, rack: usize) -> f64 {
         self.racks[rack].rack.hbm_capacity()

@@ -7,6 +7,16 @@
 //! (accelerators). `read`/`write` drive the state machine and return the
 //! *message count breakdown* of the transaction, from which the latency
 //! model derives coherent-access cost (each message crosses the fabric).
+//!
+//! # Fabric-backed mode
+//!
+//! The `*_routed` variants additionally emit the individual protocol
+//! messages *with endpoints* ([`ProtocolMsg`]): dir-request from the
+//! requester to the block's home, interventions from the home to each
+//! holder, data cache-to-cache or from the home, and acks. The
+//! [`CoherenceTraffic`](super::CoherenceTraffic) source turns each message
+//! into a routed fabric transaction, so coherent-access latency emerges
+//! from link contention instead of `Messages::total() × hop_cost`.
 
 use std::collections::HashMap;
 
@@ -38,6 +48,33 @@ impl Messages {
     }
 }
 
+/// Endpoint of a routed protocol message: a caching agent, or the block's
+/// home (the directory plus backing memory — on ScalePool, CXL home-agent
+/// logic at a memory node).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CohEndpoint {
+    Agent(usize),
+    Home,
+}
+
+/// Which protocol phase a routed message belongs to. Causal order within
+/// one transaction: `DirReq` -> `Intervention`* -> `Data` -> `Ack`*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    DirReq,
+    Intervention,
+    Data,
+    Ack,
+}
+
+/// One protocol message with endpoints, for fabric-backed simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProtocolMsg {
+    pub kind: MsgKind,
+    pub src: CohEndpoint,
+    pub dst: CohEndpoint,
+}
+
 /// Cumulative statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DirStats {
@@ -52,7 +89,8 @@ pub struct DirStats {
 /// Directory state for one block.
 #[derive(Clone, Debug, Default)]
 struct BlockEntry {
-    /// agents holding the block in S
+    /// agents holding the block in S (unordered — removal is O(1)
+    /// swap-remove; nothing in the protocol depends on sharer order)
     sharers: Vec<usize>,
     /// agent holding M/E, if any
     owner: Option<usize>,
@@ -96,6 +134,16 @@ impl Directory {
 
     /// Agent `a` reads `block`. Returns the protocol messages incurred.
     pub fn read(&mut self, a: usize, block: u64) -> Messages {
+        self.read_inner(a, block, None)
+    }
+
+    /// Like [`read`](Directory::read), additionally appending each
+    /// message with endpoints to `out` (fabric-backed mode).
+    pub fn read_routed(&mut self, a: usize, block: u64, out: &mut Vec<ProtocolMsg>) -> Messages {
+        self.read_inner(a, block, Some(out))
+    }
+
+    fn read_inner(&mut self, a: usize, block: u64, mut sink: Option<&mut Vec<ProtocolMsg>>) -> Messages {
         assert!(a < self.agents);
         self.stats.reads += 1;
         let e = self.blocks.entry(block).or_default();
@@ -106,12 +154,20 @@ impl Directory {
             return m;
         }
         m.dir_req = 1;
+        if let Some(out) = sink.as_mut() {
+            out.push(ProtocolMsg { kind: MsgKind::DirReq, src: CohEndpoint::Agent(a), dst: CohEndpoint::Home });
+        }
         match e.owner {
             Some(o) => {
                 // owner forwards data, downgrades to S
                 m.interventions = 1;
                 m.data = 1;
                 m.acks = 1;
+                if let Some(out) = sink.as_mut() {
+                    out.push(ProtocolMsg { kind: MsgKind::Intervention, src: CohEndpoint::Home, dst: CohEndpoint::Agent(o) });
+                    out.push(ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Agent(o), dst: CohEndpoint::Agent(a) });
+                    out.push(ProtocolMsg { kind: MsgKind::Ack, src: CohEndpoint::Agent(o), dst: CohEndpoint::Home });
+                }
                 e.sharers.push(o);
                 e.sharers.push(a);
                 e.owner = None;
@@ -120,6 +176,9 @@ impl Directory {
             None => {
                 // from memory (home node)
                 m.data = 1;
+                if let Some(out) = sink.as_mut() {
+                    out.push(ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Home, dst: CohEndpoint::Agent(a) });
+                }
                 if e.sharers.is_empty() {
                     // grant E
                     e.owner = Some(a);
@@ -134,6 +193,16 @@ impl Directory {
 
     /// Agent `a` writes `block`.
     pub fn write(&mut self, a: usize, block: u64) -> Messages {
+        self.write_inner(a, block, None)
+    }
+
+    /// Like [`write`](Directory::write), additionally appending each
+    /// message with endpoints to `out` (fabric-backed mode).
+    pub fn write_routed(&mut self, a: usize, block: u64, out: &mut Vec<ProtocolMsg>) -> Messages {
+        self.write_inner(a, block, Some(out))
+    }
+
+    fn write_inner(&mut self, a: usize, block: u64, mut sink: Option<&mut Vec<ProtocolMsg>>) -> Messages {
         assert!(a < self.agents);
         self.stats.writes += 1;
         let e = self.blocks.entry(block).or_default();
@@ -143,6 +212,9 @@ impl Directory {
             return m; // already M/E: silent upgrade
         }
         m.dir_req = 1;
+        if let Some(out) = sink.as_mut() {
+            out.push(ProtocolMsg { kind: MsgKind::DirReq, src: CohEndpoint::Agent(a), dst: CohEndpoint::Home });
+        }
         // invalidate all other holders
         let mut inv = 0;
         if let Some(o) = e.owner.take() {
@@ -150,15 +222,39 @@ impl Directory {
                 inv += 1;
                 m.data = 1; // dirty data forwarded
                 self.stats.cache_to_cache += 1;
+                if let Some(out) = sink.as_mut() {
+                    out.push(ProtocolMsg { kind: MsgKind::Intervention, src: CohEndpoint::Home, dst: CohEndpoint::Agent(o) });
+                    out.push(ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Agent(o), dst: CohEndpoint::Agent(a) });
+                    out.push(ProtocolMsg { kind: MsgKind::Ack, src: CohEndpoint::Agent(o), dst: CohEndpoint::Agent(a) });
+                }
             }
         }
-        inv += e.sharers.iter().filter(|&&s| s != a).count() as u32;
+        for &s in e.sharers.iter() {
+            if s == a {
+                continue;
+            }
+            inv += 1;
+            if let Some(out) = sink.as_mut() {
+                out.push(ProtocolMsg { kind: MsgKind::Intervention, src: CohEndpoint::Home, dst: CohEndpoint::Agent(s) });
+                out.push(ProtocolMsg { kind: MsgKind::Ack, src: CohEndpoint::Agent(s), dst: CohEndpoint::Agent(a) });
+            }
+        }
         let had_data = m.data > 0;
         if !had_data {
             m.data = 1; // from memory
+            if let Some(out) = sink.as_mut() {
+                out.push(ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Home, dst: CohEndpoint::Agent(a) });
+            }
         }
         m.interventions = inv;
         m.acks = inv.max(1);
+        if inv == 0 {
+            // nothing to invalidate: the single ack is the completion
+            // notice back to the directory
+            if let Some(out) = sink.as_mut() {
+                out.push(ProtocolMsg { kind: MsgKind::Ack, src: CohEndpoint::Agent(a), dst: CohEndpoint::Home });
+            }
+        }
         self.stats.invalidations += inv as u64;
         e.sharers.clear();
         e.owner = Some(a);
@@ -169,14 +265,29 @@ impl Directory {
     /// Evict `block` from `agent` (capacity/conflict): silent for S/E,
     /// writeback message for M (approximated as always-writeback for owner).
     pub fn evict(&mut self, a: usize, block: u64) -> Messages {
+        self.evict_inner(a, block, None)
+    }
+
+    /// Like [`evict`](Directory::evict), additionally appending the
+    /// writeback message (if any) to `out`.
+    pub fn evict_routed(&mut self, a: usize, block: u64, out: &mut Vec<ProtocolMsg>) -> Messages {
+        self.evict_inner(a, block, Some(out))
+    }
+
+    fn evict_inner(&mut self, a: usize, block: u64, sink: Option<&mut Vec<ProtocolMsg>>) -> Messages {
         let mut m = Messages::default();
         if let Some(e) = self.blocks.get_mut(&block) {
             if e.owner == Some(a) {
                 e.owner = None;
                 m.data = 1; // writeback
                 self.stats.messages += 1;
-            } else {
-                e.sharers.retain(|&s| s != a);
+                if let Some(out) = sink {
+                    out.push(ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Agent(a), dst: CohEndpoint::Home });
+                }
+            } else if let Some(pos) = e.sharers.iter().position(|&s| s == a) {
+                // O(1) swap-remove instead of an O(n) retain scan; sharer
+                // order is protocol-irrelevant (see BlockEntry)
+                e.sharers.swap_remove(pos);
             }
             if e.owner.is_none() && e.sharers.is_empty() {
                 self.blocks.remove(&block);
@@ -185,17 +296,26 @@ impl Directory {
         m
     }
 
-    /// Protocol invariant: a block with an owner has no sharers (SWMR).
+    /// Protocol invariants: single-writer-multiple-readers — every tracked
+    /// block has an owner XOR a non-empty sharer set (never both, and
+    /// empty entries are reclaimed, never retained) — plus no duplicate
+    /// or out-of-range holders.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (b, e) in &self.blocks {
             if e.owner.is_some() && !e.sharers.is_empty() {
                 return Err(format!("block {b:#x}: owner and sharers coexist"));
+            }
+            if e.owner.is_none() && e.sharers.is_empty() {
+                return Err(format!("block {b:#x}: empty entry retained"));
             }
             let mut s = e.sharers.clone();
             s.sort();
             s.dedup();
             if s.len() != e.sharers.len() {
                 return Err(format!("block {b:#x}: duplicate sharers"));
+            }
+            if s.last().is_some_and(|&m| m >= self.agents) {
+                return Err(format!("block {b:#x}: bogus sharer"));
             }
             if let Some(o) = e.owner {
                 if o >= self.agents {
@@ -290,5 +410,118 @@ mod tests {
         }
         assert!(d.stats().invalidations >= 9);
         d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharer_swap_remove_keeps_set_semantics() {
+        let mut d = Directory::new(6);
+        d.write(0, 0x40);
+        for a in 1..6 {
+            d.read(a, 0x40);
+        }
+        // evict a middle sharer: the remaining set must stay intact
+        d.evict(2, 0x40);
+        assert_eq!(d.state_of(2, 0x40), MesiState::Invalid);
+        for a in [0, 1, 3, 4, 5] {
+            assert_eq!(d.state_of(a, 0x40), MesiState::Shared, "agent {a} lost its copy");
+        }
+        d.check_invariants().unwrap();
+    }
+
+    // ------------------------------------------------------------------
+    // fabric-backed (routed) mode
+    // ------------------------------------------------------------------
+
+    fn count_kind(msgs: &[ProtocolMsg], kind: MsgKind) -> u32 {
+        msgs.iter().filter(|m| m.kind == kind).count() as u32
+    }
+
+    fn assert_routed_matches(msgs: &[ProtocolMsg], m: Messages) {
+        assert_eq!(count_kind(msgs, MsgKind::DirReq), m.dir_req);
+        assert_eq!(count_kind(msgs, MsgKind::Intervention), m.interventions);
+        assert_eq!(count_kind(msgs, MsgKind::Data), m.data);
+        assert_eq!(count_kind(msgs, MsgKind::Ack), m.acks);
+        assert_eq!(msgs.len() as u32, m.total());
+    }
+
+    #[test]
+    fn routed_read_miss_from_memory() {
+        let mut d = Directory::new(4);
+        let mut out = Vec::new();
+        let m = d.read_routed(0, 0x40, &mut out);
+        assert_routed_matches(&out, m);
+        assert_eq!(out[0], ProtocolMsg { kind: MsgKind::DirReq, src: CohEndpoint::Agent(0), dst: CohEndpoint::Home });
+        assert_eq!(out[1], ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Home, dst: CohEndpoint::Agent(0) });
+    }
+
+    #[test]
+    fn routed_read_forwarded_from_owner() {
+        let mut d = Directory::new(4);
+        d.write(2, 0x80);
+        let mut out = Vec::new();
+        let m = d.read_routed(1, 0x80, &mut out);
+        assert_routed_matches(&out, m);
+        // data must travel cache-to-cache from the old owner
+        assert!(out.contains(&ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Agent(2), dst: CohEndpoint::Agent(1) }));
+    }
+
+    #[test]
+    fn routed_write_invalidation_fanout() {
+        let mut d = Directory::new(8);
+        d.read(1, 0x100);
+        d.read(2, 0x100);
+        d.read(3, 0x100);
+        let mut out = Vec::new();
+        let m = d.write_routed(0, 0x100, &mut out);
+        assert_routed_matches(&out, m);
+        // one intervention per sharer, each from the home
+        for s in 1..=3 {
+            assert!(out.contains(&ProtocolMsg { kind: MsgKind::Intervention, src: CohEndpoint::Home, dst: CohEndpoint::Agent(s) }));
+            assert!(out.contains(&ProtocolMsg { kind: MsgKind::Ack, src: CohEndpoint::Agent(s), dst: CohEndpoint::Agent(0) }));
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn routed_hit_emits_nothing() {
+        let mut d = Directory::new(2);
+        d.write(0, 0x1);
+        let mut out = Vec::new();
+        let m = d.write_routed(0, 0x1, &mut out);
+        assert_eq!(m.total(), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn routed_evict_owner_writeback() {
+        let mut d = Directory::new(2);
+        d.write(0, 0x1);
+        let mut out = Vec::new();
+        let m = d.evict_routed(0, 0x1, &mut out);
+        assert_routed_matches(&out, m);
+        assert_eq!(out[0], ProtocolMsg { kind: MsgKind::Data, src: CohEndpoint::Agent(0), dst: CohEndpoint::Home });
+    }
+
+    #[test]
+    fn routed_counts_match_plain_counts() {
+        // the routed and plain state machines must be the same machine
+        let mut plain = Directory::new(5);
+        let mut routed = Directory::new(5);
+        let mut rng = crate::util::Rng::new(31);
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            let a = rng.below(5) as usize;
+            let b = rng.below(16);
+            let op = rng.below(3);
+            out.clear();
+            let (mp, mr) = match op {
+                0 => (plain.read(a, b), routed.read_routed(a, b, &mut out)),
+                1 => (plain.write(a, b), routed.write_routed(a, b, &mut out)),
+                _ => (plain.evict(a, b), routed.evict_routed(a, b, &mut out)),
+            };
+            assert_eq!(mp, mr);
+            assert_routed_matches(&out, mr);
+            routed.check_invariants().unwrap();
+        }
     }
 }

@@ -2,7 +2,12 @@
 //!
 //! * [`directory`] — a MESI directory protocol engine (the semantics CXL.cache
 //!   provides at instruction granularity): real state machine, message
-//!   counting, invariant checks.
+//!   counting, invariant checks — plus a fabric-backed mode that emits
+//!   each protocol message with endpoints ([`directory::ProtocolMsg`]).
+//! * [`traffic`] — the [`CoherenceTraffic`] source that routes those
+//!   messages over the shared fabric backend, so coherent-access latency
+//!   emerges from link contention (the `mixed` experiment's coherence
+//!   class).
 //! * [`software`] — the non-coherent XLink alternative: sharing beyond the
 //!   static partition requires explicit software-managed page copies.
 //!
@@ -12,6 +17,8 @@
 
 pub mod directory;
 pub mod software;
+pub mod traffic;
 
-pub use directory::{Directory, DirStats, MesiState};
+pub use directory::{CohEndpoint, Directory, DirStats, MesiState, MsgKind, ProtocolMsg};
 pub use software::SoftwareCopyModel;
+pub use traffic::{CoherenceConfig, CoherenceTraffic};

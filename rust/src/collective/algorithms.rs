@@ -94,20 +94,34 @@ impl CollectiveModel {
     }
 }
 
+/// Steps of a full ring all-reduce over `n` ranks (reduce-scatter +
+/// all-gather). Shared with the event-driven
+/// [`EventDrivenCollective`](super::EventDrivenCollective) so the
+/// analytic and simulated schedules stay structurally identical.
+pub fn ring_all_reduce_steps(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        2 * (n - 1)
+    }
+}
+
+/// Steps of one ring pass (reduce-scatter or all-gather) over `n` ranks.
+pub fn ring_phase_steps(n: usize) -> usize {
+    n.saturating_sub(1)
+}
+
 fn ring_all_reduce(t: &Transport, n: usize, bytes: f64) -> f64 {
     // 2(n-1) steps, each moving bytes/n
-    let steps = 2 * (n - 1);
-    steps as f64 * t.message_ns(bytes / n as f64)
+    ring_all_reduce_steps(n) as f64 * t.message_ns(bytes / n as f64)
 }
 
 fn ring_reduce_scatter(t: &Transport, n: usize, bytes: f64) -> f64 {
-    let steps = n - 1;
-    steps as f64 * t.message_ns(bytes / n as f64)
+    ring_phase_steps(n) as f64 * t.message_ns(bytes / n as f64)
 }
 
 fn ring_all_gather(t: &Transport, n: usize, bytes: f64) -> f64 {
-    let steps = n - 1;
-    steps as f64 * t.message_ns(bytes / n as f64)
+    ring_phase_steps(n) as f64 * t.message_ns(bytes / n as f64)
 }
 
 fn tree_all_reduce(t: &Transport, n: usize, bytes: f64) -> f64 {

@@ -4,11 +4,20 @@
 //! (§4: "protocol-level coherence ... enables efficient collective
 //! communication by eliminating explicit synchronization and redundant
 //! data copying overhead").
+//!
+//! Two complementary forms of the same algorithms:
+//! * [`algorithms`] — closed-form alpha-beta costs on an idle fabric;
+//! * [`schedule`] — the [`EventDrivenCollective`] traffic source that
+//!   issues every per-step chunk transfer through the shared event
+//!   backend, validated against the closed form when uncontended and
+//!   exposing contention when not (the `mixed` experiment).
 
 pub mod transport;
 pub mod rdma;
 pub mod algorithms;
+pub mod schedule;
 
-pub use algorithms::{Algorithm, CollectiveModel};
+pub use algorithms::{ring_all_reduce_steps, ring_phase_steps, Algorithm, CollectiveModel};
 pub use rdma::RdmaStack;
+pub use schedule::{EventDrivenCollective, RingPhase};
 pub use transport::Transport;

@@ -39,6 +39,39 @@ impl Transport {
         Some(Transport { base_latency_ns: small, sw_overhead_ns: 0.0, bw, bw_efficiency: 1.0 })
     }
 
+    /// Derive the transport that reproduces the *event simulator's*
+    /// store-and-forward walk of the routed `src -> dst` path for
+    /// messages of about `calib_bytes`: base latency is the per-hop
+    /// fixed cost (prop + PHY + framing + receiving-switch traversal)
+    /// summed over the path, and bandwidth is calibrated so
+    /// `message_ns(calib_bytes)` equals the sum of per-hop wire
+    /// serializations. This is the analytic counterpart the event-driven
+    /// collective is validated against on an uncontended fabric.
+    pub fn from_sim_path(fabric: &Fabric, src: NodeId, dst: NodeId, calib_bytes: f64) -> Option<Transport> {
+        let p = fabric.path(src, dst)?;
+        if p.links.is_empty() {
+            return Some(Transport { base_latency_ns: 0.0, sw_overhead_ns: 0.0, bw: 1e18, bw_efficiency: 1.0 });
+        }
+        let mut fixed = 0.0;
+        let mut ser = 0.0;
+        for (i, &l) in p.links.iter().enumerate() {
+            let lp = &fabric.topo.link(l).params;
+            fixed += lp.prop_ns + lp.phy.latency_ns() + lp.flit_overhead_ns;
+            // switch traversal is paid at the receiving node of each hop
+            let recv = p.nodes[i + 1];
+            if let Some(sw) = &fabric.topo.node(recv).switch {
+                fixed += sw.traversal_ns();
+            }
+            ser += lp.flit.wire_bytes(calib_bytes) / (lp.raw_bw * lp.phy.efficiency());
+        }
+        Some(Transport {
+            base_latency_ns: fixed,
+            sw_overhead_ns: 0.0,
+            bw: calib_bytes / ser,
+            bw_efficiency: 1.0,
+        })
+    }
+
     pub fn with_software(mut self, sw_overhead_ns: f64, bw_efficiency: f64) -> Transport {
         self.sw_overhead_ns = sw_overhead_ns;
         self.bw_efficiency = bw_efficiency;

@@ -8,6 +8,7 @@
 pub mod metrics;
 pub mod router;
 pub mod tiering;
+pub mod traffic;
 pub mod manager;
 pub mod scheduler;
 
@@ -17,4 +18,5 @@ pub use router::{DataMovementRouter, RouteClass, RouteDecision};
 pub use scheduler::EmulatedCluster;
 #[cfg(feature = "pjrt")]
 pub use scheduler::TrainJobScheduler;
-pub use tiering::{TieringEngine, TieringPolicy, TieringStats};
+pub use tiering::{MigrationKind, MigrationRecord, TieringEngine, TieringPolicy, TieringStats};
+pub use traffic::{TieringTraffic, TieringTrafficConfig};

@@ -1,10 +1,24 @@
 //! Runtime memory tiering over the composable pools: allocations land in
 //! tier-1 while it has headroom and spill to tier-2; hot spilled objects
 //! are promoted back when tier-1 frees up (§5's operational story).
+//!
+//! Every tier crossing (spill, promotion, demotion) is a real data
+//! movement over the tier-1→tier-2 fabric paths. With
+//! [`record_migrations`](TieringEngine::record_migrations) enabled the
+//! engine logs each one as a [`MigrationRecord`] with the region nodes
+//! involved; [`TieringTraffic`](super::TieringTraffic) replays the log as
+//! fabric transactions so migration cost emerges from link contention.
+//!
+//! Objects live in a `BTreeMap` keyed by object id: every scan
+//! (promotion, coldest-victim selection) walks in ascending `obj_id`
+//! order, so which objects land in tier-1 is identical run to run — a
+//! `HashMap` walk here made promotion order, and therefore placement,
+//! nondeterministic.
 
-use crate::memory::pool::{AllocId, MemoryPool, Placement, PoolError};
+use crate::fabric::NodeId;
+use crate::memory::pool::{AllocId, Allocation, MemoryPool, Placement, PoolError};
 use crate::memory::Tier;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Tiering statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -15,6 +29,31 @@ pub struct TieringStats {
     pub promotions: u64,
     pub demotions: u64,
     pub rejected: u64,
+}
+
+/// Why bytes crossed a tier boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationKind {
+    /// New allocation placed in tier-2 because tier-1 lacked headroom.
+    Spill,
+    /// Hot tier-2 object moved up to tier-1.
+    Promotion,
+    /// Cold tier-1 object pushed down to tier-2.
+    Demotion,
+}
+
+/// One logged tier crossing. `src`/`dst` are the fabric nodes of the
+/// first extent's region on each side; `None` when the movement
+/// originates outside the pools (a spill's payload comes from the
+/// allocating agent, which the pools cannot know — the traffic source
+/// fills it in).
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationRecord {
+    pub kind: MigrationKind,
+    pub obj: u64,
+    pub bytes: f64,
+    pub src: Option<NodeId>,
+    pub dst: Option<NodeId>,
 }
 
 /// Where one object currently lives.
@@ -43,23 +82,56 @@ impl Default for TieringPolicy {
     }
 }
 
+/// Fabric node of an allocation's first extent.
+fn primary_node(pool: &MemoryPool, alloc: &Allocation) -> Option<NodeId> {
+    alloc.extents.first().map(|&(r, _)| pool.regions()[r].node)
+}
+
 /// The tiering engine over two pools.
 pub struct TieringEngine {
     pub tier1: MemoryPool,
     pub tier2: MemoryPool,
     policy: TieringPolicy,
-    objects: HashMap<u64, Object>,
+    objects: BTreeMap<u64, Object>,
     next_obj: u64,
     stats: TieringStats,
+    record: bool,
+    migrations: Vec<MigrationRecord>,
 }
 
 impl TieringEngine {
     pub fn new(tier1: MemoryPool, tier2: MemoryPool, policy: TieringPolicy) -> Self {
-        TieringEngine { tier1, tier2, policy, objects: HashMap::new(), next_obj: 0, stats: TieringStats::default() }
+        TieringEngine {
+            tier1,
+            tier2,
+            policy,
+            objects: BTreeMap::new(),
+            next_obj: 0,
+            stats: TieringStats::default(),
+            record: false,
+            migrations: Vec::new(),
+        }
     }
 
     pub fn stats(&self) -> TieringStats {
         self.stats
+    }
+
+    /// Enable/disable the migration log (off by default: callers that
+    /// never drain it must not accumulate records).
+    pub fn record_migrations(&mut self, on: bool) {
+        self.record = on;
+    }
+
+    /// Drain the migration log (records since the last call).
+    pub fn take_migrations(&mut self) -> Vec<MigrationRecord> {
+        std::mem::take(&mut self.migrations)
+    }
+
+    fn log(&mut self, kind: MigrationKind, obj: u64, bytes: f64, src: Option<NodeId>, dst: Option<NodeId>) {
+        if self.record {
+            self.migrations.push(MigrationRecord { kind, obj, bytes, src, dst });
+        }
     }
 
     fn t1_util_after(&self, bytes: f64) -> f64 {
@@ -78,10 +150,13 @@ impl TieringEngine {
                 }
                 Err(_) => {
                     self.stats.tier2_spills += 1;
-                    (Tier::Tier2Pool, self.tier2.alloc(bytes, Placement::WorstFit).inspect_err(|_| {}).map_err(|e| {
-                        self.stats.rejected += 1;
-                        e
-                    })?)
+                    match self.tier2.alloc(bytes, Placement::WorstFit) {
+                        Ok(a) => (Tier::Tier2Pool, a),
+                        Err(e) => {
+                            self.stats.rejected += 1;
+                            return Err(e);
+                        }
+                    }
                 }
             }
         } else {
@@ -96,33 +171,79 @@ impl TieringEngine {
         };
         let id = self.next_obj;
         self.next_obj += 1;
+        if tier == Tier::Tier2Pool {
+            let dst = primary_node(&self.tier2, &alloc);
+            self.log(MigrationKind::Spill, id, bytes, None, dst);
+        }
         self.objects.insert(id, Object { bytes, tier, alloc: alloc.id, heat: 0 });
         Ok(id)
+    }
+
+    /// Try to move object `id` (must be tier-2) up into tier-1; true on
+    /// success. Respects the watermark.
+    fn try_promote(&mut self, id: u64) -> bool {
+        let Some(o) = self.objects.get(&id) else { return false };
+        if o.tier != Tier::Tier2Pool {
+            return false;
+        }
+        let (bytes, old) = (o.bytes, o.alloc);
+        if self.t1_util_after(bytes) > self.policy.t1_high_watermark {
+            return false;
+        }
+        let Ok(a1) = self.tier1.alloc(bytes, Placement::FirstFit) else { return false };
+        let src = self.tier2.get(old).and_then(|al| primary_node(&self.tier2, al));
+        let dst = primary_node(&self.tier1, &a1);
+        let o = self.objects.get_mut(&id).unwrap();
+        o.alloc = a1.id;
+        o.tier = Tier::Tier1Local;
+        o.heat = 0;
+        self.tier2.free(old).expect("tier2 free");
+        self.stats.promotions += 1;
+        self.log(MigrationKind::Promotion, id, bytes, src, dst);
+        true
     }
 
     /// Record an access to an object; may trigger promotion.
     pub fn touch(&mut self, id: u64) -> Option<Tier> {
         // split borrow: decide first, mutate after
-        let (needs_promote, bytes) = {
+        let needs_promote = {
             let o = self.objects.get_mut(&id)?;
             o.heat += 1;
-            (o.tier == Tier::Tier2Pool && o.heat >= self.policy.promote_heat, o.bytes)
+            o.tier == Tier::Tier2Pool && o.heat >= self.policy.promote_heat
         };
-        if needs_promote && self.t1_util_after(bytes) <= self.policy.t1_high_watermark {
-            if let Ok(a1) = self.tier1.alloc(bytes, Placement::FirstFit) {
-                let o = self.objects.get_mut(&id).unwrap();
-                let old = o.alloc;
-                o.alloc = a1.id;
-                o.tier = Tier::Tier1Local;
-                o.heat = 0;
-                self.tier2.free(old).expect("tier2 free");
-                self.stats.promotions += 1;
-            }
+        if needs_promote {
+            self.try_promote(id);
         }
         self.objects.get(&id).map(|o| o.tier)
     }
 
-    /// Demote the coldest tier-1 object to tier-2 (called under pressure).
+    /// Promotion scan: walk tier-2 objects in ascending `obj_id` order
+    /// (deterministic — see module docs) and promote every one whose
+    /// heat crossed the threshold, while tier-1 headroom lasts. Returns
+    /// the promoted ids, at most `limit`.
+    pub fn promote_ready(&mut self, limit: usize) -> Vec<u64> {
+        let candidates: Vec<u64> = self
+            .objects
+            .iter()
+            .filter(|(_, o)| o.tier == Tier::Tier2Pool && o.heat >= self.policy.promote_heat)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut promoted = Vec::new();
+        for id in candidates {
+            if promoted.len() >= limit {
+                break;
+            }
+            if self.try_promote(id) {
+                promoted.push(id);
+            }
+        }
+        promoted
+    }
+
+    /// Demote the coldest tier-1 object to tier-2 (called under
+    /// pressure). Heat ties resolve to the smallest `obj_id`
+    /// (deterministic: the `BTreeMap` walk is id-ordered and `min_by_key`
+    /// keeps the first minimum).
     pub fn demote_coldest(&mut self) -> Option<u64> {
         let (&id, _) = self
             .objects
@@ -131,12 +252,15 @@ impl TieringEngine {
             .min_by_key(|(_, o)| o.heat)?;
         let bytes = self.objects[&id].bytes;
         let a2 = self.tier2.alloc(bytes, Placement::WorstFit).ok()?;
+        let old = self.objects[&id].alloc;
+        let src = self.tier1.get(old).and_then(|al| primary_node(&self.tier1, al));
+        let dst = primary_node(&self.tier2, &a2);
         let o = self.objects.get_mut(&id).unwrap();
-        let old = o.alloc;
         o.alloc = a2.id;
         o.tier = Tier::Tier2Pool;
         self.tier1.free(old).expect("tier1 free");
         self.stats.demotions += 1;
+        self.log(MigrationKind::Demotion, id, bytes, src, dst);
         Some(id)
     }
 
@@ -153,19 +277,33 @@ impl TieringEngine {
         self.objects.get(&id).map(|o| o.tier)
     }
 
-    /// Cross-pool invariants.
+    /// Live object ids, ascending.
+    pub fn object_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.objects.keys().copied()
+    }
+
+    /// Cross-pool invariants: per-pool extent accounting plus byte
+    /// conservation — the sum of each pool's `used` equals the live
+    /// objects mapped to it, after any op sequence.
     pub fn check_invariants(&self) -> Result<(), String> {
         self.tier1.check_invariants()?;
         self.tier2.check_invariants()?;
-        let t1: f64 = self
-            .objects
-            .values()
-            .filter(|o| o.tier != Tier::Tier2Pool)
-            .map(|o| o.bytes)
-            .sum();
-        let tol = 1e-6f64.max(1e-12 * self.tier1.used().abs());
-        if (t1 - self.tier1.used()).abs() > tol {
+        let sum_tier = |t2: bool| -> f64 {
+            self.objects
+                .values()
+                .filter(|o| (o.tier == Tier::Tier2Pool) == t2)
+                .map(|o| o.bytes)
+                .sum()
+        };
+        let t1 = sum_tier(false);
+        let tol1 = 1e-6f64.max(1e-12 * self.tier1.used().abs());
+        if (t1 - self.tier1.used()).abs() > tol1 {
             return Err(format!("tier1 accounting: objects {t1} vs pool {}", self.tier1.used()));
+        }
+        let t2 = sum_tier(true);
+        let tol2 = 1e-6f64.max(1e-12 * self.tier2.used().abs());
+        if (t2 - self.tier2.used()).abs() > tol2 {
+            return Err(format!("tier2 accounting: objects {t2} vs pool {}", self.tier2.used()));
         }
         Ok(())
     }
@@ -232,6 +370,16 @@ mod tests {
     }
 
     #[test]
+    fn demote_ties_resolve_to_smallest_id() {
+        let mut e = engine(100.0, 1000.0);
+        let first = e.alloc(30.0).unwrap();
+        let _second = e.alloc(30.0).unwrap();
+        let _third = e.alloc(30.0).unwrap();
+        // all heat 0: the id-ordered scan must pick the first object
+        assert_eq!(e.demote_coldest(), Some(first));
+    }
+
+    #[test]
     fn rejects_when_everything_full() {
         let mut e = engine(10.0, 10.0);
         assert!(e.alloc(8.0).is_ok());
@@ -244,5 +392,56 @@ mod tests {
     fn free_unknown_rejected() {
         let mut e = engine(10.0, 10.0);
         assert!(e.free(99).is_err());
+    }
+
+    #[test]
+    fn migration_log_records_tier_crossings() {
+        let mut e = engine(100.0, 1000.0);
+        e.record_migrations(true);
+        let a = e.alloc(85.0).unwrap();
+        let b = e.alloc(20.0).unwrap(); // spill
+        e.free(a).unwrap();
+        for _ in 0..8 {
+            e.touch(b); // promotion
+        }
+        let _c = e.alloc(60.0).unwrap(); // fits tier-1 (80% < watermark)
+        e.demote_coldest().unwrap(); // demotion
+        let log = e.take_migrations();
+        let kinds: Vec<MigrationKind> = log.iter().map(|m| m.kind).collect();
+        assert_eq!(kinds, vec![MigrationKind::Spill, MigrationKind::Promotion, MigrationKind::Demotion]);
+        // spill destination and promotion source are tier-2's node
+        assert_eq!(log[0].dst, Some(100));
+        assert_eq!(log[0].src, None, "spill payload comes from the agent");
+        assert_eq!(log[1].src, Some(100));
+        assert_eq!(log[1].dst, Some(0));
+        assert!(e.take_migrations().is_empty(), "drained");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promotion_scan_is_id_ordered_and_bounded() {
+        let mut e = engine(100.0, 1000.0);
+        let blocker = e.alloc(85.0).unwrap();
+        // three spilled objects, all hot
+        let ids: Vec<u64> = (0..3).map(|_| e.alloc(30.0).unwrap()).collect();
+        for &id in &ids {
+            for _ in 0..20 {
+                e.touch(id);
+            }
+        }
+        assert!(ids.iter().all(|&i| e.tier_of(i) == Some(Tier::Tier2Pool)));
+        e.free(blocker).unwrap();
+        let promoted = e.promote_ready(2);
+        // id order, respecting the limit; the third stays in tier-2
+        assert_eq!(promoted, vec![ids[0], ids[1]]);
+        assert_eq!(e.tier_of(ids[2]), Some(Tier::Tier2Pool));
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn log_disabled_by_default() {
+        let mut e = engine(10.0, 1000.0);
+        let _ = e.alloc(50.0).unwrap(); // spill, unrecorded
+        assert!(e.take_migrations().is_empty());
     }
 }

@@ -1,0 +1,272 @@
+//! Tiering as fabric traffic: a [`TrafficSource`] that drives a
+//! [`TieringEngine`] with a synthetic allocate/touch/free schedule and
+//! replays the engine's migration log (spills, promotions, demotions) as
+//! transactions over the real tier-1→tier-2 paths. Migration cost — and
+//! the interference it inflicts on coherence and collective traffic —
+//! emerges from link contention instead of being a free byte-counter
+//! update.
+
+use super::tiering::{MigrationRecord, TieringEngine};
+use crate::fabric::NodeId;
+use crate::sim::{Pull, SourcedTx, TrafficClass, TrafficSource, Transaction};
+use crate::util::stats::Welford;
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Workload knobs for [`TieringTraffic`].
+#[derive(Clone, Copy, Debug)]
+pub struct TieringTrafficConfig {
+    /// Allocate/touch/free operations to issue.
+    pub ops: u64,
+    /// Mean op interarrival, ns (exponential).
+    pub mean_interarrival_ns: f64,
+    /// Fraction of ops that allocate a new object.
+    pub alloc_frac: f64,
+    /// Fraction of ops that free a live object (the rest touch).
+    pub free_frac: f64,
+    /// Object size range, bytes (log-uniform).
+    pub min_bytes: f64,
+    pub max_bytes: f64,
+    /// Touches per touch-op (drives promotion heat).
+    pub touch_burst: u64,
+    /// Every `pressure_every` ops, demote the coldest tier-1 object if
+    /// utilization sits above the relief threshold.
+    pub pressure_every: u64,
+    pub pressure_util: f64,
+    /// Memory device service at the migration destination, ns.
+    pub device_ns: f64,
+}
+
+impl Default for TieringTrafficConfig {
+    fn default() -> Self {
+        TieringTrafficConfig {
+            ops: 2_000,
+            mean_interarrival_ns: 2_000.0,
+            alloc_frac: 0.45,
+            free_frac: 0.15,
+            min_bytes: 64.0 * 1024.0,
+            max_bytes: 8.0 * 1024.0 * 1024.0,
+            touch_burst: 4,
+            pressure_every: 64,
+            pressure_util: 0.8,
+            device_ns: 130.0,
+        }
+    }
+}
+
+/// The tiering traffic source (see module docs).
+pub struct TieringTraffic {
+    engine: TieringEngine,
+    /// Accelerators issuing allocations; a spill's payload source (and
+    /// the fallback endpoint when a pool region has no node).
+    agents: Vec<NodeId>,
+    cfg: TieringTrafficConfig,
+    rng: Rng,
+    issued: u64,
+    next_issue_at: f64,
+    live: Vec<u64>,
+    pending: VecDeque<(f64, Transaction)>,
+    fabric_inflight: usize,
+    migration_latency: Welford,
+    migrated_bytes: f64,
+}
+
+impl TieringTraffic {
+    /// `engine` should be freshly built over pools whose regions carry
+    /// real fabric node ids; the migration log is enabled here.
+    pub fn new(mut engine: TieringEngine, agents: Vec<NodeId>, cfg: TieringTrafficConfig, seed: u64) -> TieringTraffic {
+        assert!(!agents.is_empty(), "need at least one issuing agent");
+        engine.record_migrations(true);
+        TieringTraffic {
+            engine,
+            agents,
+            cfg,
+            rng: Rng::new(seed),
+            issued: 0,
+            next_issue_at: 0.0,
+            live: Vec::new(),
+            pending: VecDeque::new(),
+            fabric_inflight: 0,
+            migration_latency: Welford::new(),
+            migrated_bytes: 0.0,
+        }
+    }
+
+    /// End-to-end migration transfer latency, ns.
+    pub fn migration_latency(&self) -> &Welford {
+        &self.migration_latency
+    }
+
+    pub fn migrated_bytes(&self) -> f64 {
+        self.migrated_bytes
+    }
+
+    /// The engine (for stats and invariant checks after a run).
+    pub fn engine(&self) -> &TieringEngine {
+        &self.engine
+    }
+
+    fn log_uniform_bytes(&mut self) -> f64 {
+        let lo = self.cfg.min_bytes.ln();
+        let hi = self.cfg.max_bytes.ln();
+        (lo + self.rng.f64() * (hi - lo)).exp()
+    }
+
+    /// Map a migration record onto a fabric transaction issued by
+    /// `agent` at time `at`.
+    fn stage(&mut self, rec: MigrationRecord, agent: NodeId, at: f64) {
+        let src = rec.src.unwrap_or(agent);
+        let dst = rec.dst.unwrap_or(agent);
+        self.pending.push_back((
+            at,
+            Transaction { src, dst, at, bytes: rec.bytes, device_ns: self.cfg.device_ns },
+        ));
+    }
+
+    /// Run one schedule op at time `t`; migrations it causes are staged.
+    fn run_op(&mut self, t: f64) {
+        let agent = self.agents[self.rng.below(self.agents.len() as u64) as usize];
+        let r = self.rng.f64();
+        if r < self.cfg.alloc_frac || self.live.is_empty() {
+            let bytes = self.log_uniform_bytes();
+            match self.engine.alloc(bytes) {
+                Ok(id) => self.live.push(id),
+                Err(_) => {
+                    // full: retire the oldest live object and move on
+                    if !self.live.is_empty() {
+                        let id = self.live.remove(0);
+                        let _ = self.engine.free(id);
+                    }
+                }
+            }
+        } else if r < self.cfg.alloc_frac + self.cfg.free_frac {
+            let i = self.rng.below(self.live.len() as u64) as usize;
+            let id = self.live.swap_remove(i);
+            let _ = self.engine.free(id);
+        } else {
+            let i = self.rng.below(self.live.len() as u64) as usize;
+            let id = self.live[i];
+            for _ in 0..self.cfg.touch_burst {
+                self.engine.touch(id);
+            }
+            // the deterministic promotion scan picks up other hot
+            // spilled objects the touch path could not move yet
+            self.engine.promote_ready(2);
+        }
+        if self.cfg.pressure_every > 0 && self.issued % self.cfg.pressure_every == 0 {
+            let util = self.engine.tier1.used() / self.engine.tier1.capacity().max(1.0);
+            if util > self.cfg.pressure_util {
+                self.engine.demote_coldest();
+            }
+        }
+        for rec in self.engine.take_migrations() {
+            self.stage(rec, agent, t);
+        }
+    }
+}
+
+impl TrafficSource for TieringTraffic {
+    fn class(&self) -> TrafficClass {
+        TrafficClass::Tiering
+    }
+
+    fn pull(&mut self, now: f64) -> Pull {
+        loop {
+            if let Some((at, mut tx)) = self.pending.pop_front() {
+                tx.at = at.max(now);
+                self.fabric_inflight += 1;
+                self.migrated_bytes += tx.bytes;
+                // the issue time rides in the token so on_complete can
+                // measure transfer latency without a side table
+                return Pull::Tx(SourcedTx { token: tx.at.to_bits(), tx });
+            }
+            if self.issued >= self.cfg.ops {
+                return if self.fabric_inflight > 0 { Pull::Blocked } else { Pull::Done };
+            }
+            // open loop: ops fire on the schedule regardless of fabric
+            // state (migrations are asynchronous writebacks/fills)
+            let t = self.next_issue_at;
+            self.next_issue_at += self.rng.exp(1.0 / self.cfg.mean_interarrival_ns);
+            self.issued += 1;
+            self.run_op(t);
+        }
+    }
+
+    fn on_complete(&mut self, token: u64, now: f64) {
+        self.fabric_inflight -= 1;
+        self.migration_latency.push(now - f64::from_bits(token));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiering::TieringPolicy;
+    use crate::fabric::{Fabric, LinkKind, NodeKind, Topology};
+    use crate::memory::pool::MemoryPool;
+    use crate::memory::Tier;
+    use crate::sim::MemSim;
+
+    fn build(seed: u64, ops: u64) -> (Fabric, TieringTraffic) {
+        let t = Topology::single_hop(8, LinkKind::CxlCoherent, "r");
+        let accs = t.nodes_of(NodeKind::Accelerator);
+        let fabric = Fabric::new(t);
+        // tier-1 = HBM carve-outs on the first 6 accelerators, tier-2 =
+        // the last two endpoints standing in as memory nodes
+        let mut t1 = MemoryPool::new();
+        for &a in &accs[..6] {
+            t1.add_region(a, Tier::Tier1Local, 32.0 * 1024.0 * 1024.0);
+        }
+        let mut t2 = MemoryPool::new();
+        for &m in &accs[6..] {
+            t2.add_region(m, Tier::Tier2Pool, 4096.0 * 1024.0 * 1024.0);
+        }
+        let engine = TieringEngine::new(t1, t2, TieringPolicy::default());
+        let cfg = TieringTrafficConfig { ops, ..Default::default() };
+        let src = TieringTraffic::new(engine, accs[..6].to_vec(), cfg, seed);
+        (fabric, src)
+    }
+
+    #[test]
+    fn migrations_flow_and_invariants_hold() {
+        let (fabric, mut src) = build(5, 1500);
+        let mut sim = MemSim::new(&fabric);
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sim.run_streamed(&mut sources)
+        };
+        let stats = src.engine().stats();
+        assert!(stats.tier2_spills > 0, "workload must overflow tier-1");
+        assert_eq!(
+            rep.class(TrafficClass::Tiering).completed,
+            rep.total.completed,
+            "all traffic is tiering-class"
+        );
+        // every spill/promotion/demotion produced exactly one transfer
+        // (rejected allocations count as spills but move no bytes)
+        assert_eq!(
+            rep.total.completed,
+            stats.tier2_spills - stats.rejected + stats.promotions + stats.demotions,
+        );
+        assert!((src.migrated_bytes() - rep.class(TrafficClass::Tiering).bytes).abs() < 1e-6);
+        assert_eq!(src.migration_latency().count(), rep.total.completed);
+        src.engine().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (fa, mut a) = build(9, 800);
+        let (fb, mut b) = build(9, 800);
+        let ra = {
+            let mut sa: [&mut dyn TrafficSource; 1] = [&mut a];
+            MemSim::new(&fa).run_streamed(&mut sa)
+        };
+        let rb = {
+            let mut sb: [&mut dyn TrafficSource; 1] = [&mut b];
+            MemSim::new(&fb).run_streamed(&mut sb)
+        };
+        assert_eq!(ra.total.completed, rb.total.completed);
+        assert!((ra.total.makespan_ns - rb.total.makespan_ns).abs() < 1e-12);
+        assert_eq!(a.engine().stats(), b.engine().stats());
+    }
+}

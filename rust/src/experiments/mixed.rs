@@ -1,0 +1,351 @@
+//! The `mixed` experiment: all three traffic classes — coherent CXL.cache
+//! message flows, tier-2 migration streams, and collective all-reduce
+//! chunk schedules — run *concurrently* on one [`ScalePoolSystem`] fabric,
+//! and per-class latency is reported solo vs under interference.
+//!
+//! This is the scenario class the paper's §6 tier-2 claims are about and
+//! that no closed-form figure can express: DFabric shows
+//! hybrid-interconnect results hinge on cross-traffic interference on
+//! shared links, and CXL-CCL shows collectives over a CXL pool contend
+//! with memory traffic. Each class is simulated alone (its own
+//! self-contention only) and then together; the inflation ratio is the
+//! interference.
+
+use crate::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, ScalePoolSystem, SystemConfig};
+use crate::coherence::{CoherenceConfig, CoherenceTraffic};
+use crate::collective::{Algorithm, CollectiveModel, EventDrivenCollective, Transport};
+use crate::coordinator::{TieringEngine, TieringPolicy, TieringTraffic, TieringTrafficConfig};
+use crate::fabric::TopologyKind;
+use crate::sim::{MemSim, StreamReport, TrafficClass, TrafficSource};
+use crate::util::stats::Welford;
+
+/// Scenario knobs.
+#[derive(Clone, Debug)]
+pub struct MixedConfig {
+    pub racks: usize,
+    pub accels: usize,
+    pub mem_nodes: usize,
+    /// Coherent operations issued by the sharing workload.
+    pub coherence_ops: u64,
+    /// Allocate/touch/free ops driving the tiering engine.
+    pub tiering_ops: u64,
+    /// All-reduce buffer per rank, bytes.
+    pub collective_bytes: f64,
+    /// Back-to-back all-reduces.
+    pub collective_repeats: usize,
+    /// Hierarchical (rack-grouped) schedule instead of one flat ring.
+    pub hierarchical: bool,
+    /// Tier-1 HBM carve-out per accelerator for the tiering pools, bytes.
+    pub t1_bytes_per_acc: f64,
+    pub seed: u64,
+}
+
+impl Default for MixedConfig {
+    fn default() -> Self {
+        MixedConfig {
+            racks: 4,
+            accels: 8,
+            mem_nodes: 4,
+            coherence_ops: 2_000,
+            tiering_ops: 300,
+            collective_bytes: 32.0 * 1024.0 * 1024.0,
+            collective_repeats: 1,
+            hierarchical: true,
+            t1_bytes_per_acc: 2.0 * 1024.0 * 1024.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-class outcome: transaction-level and domain-level latency, solo
+/// vs mixed.
+#[derive(Clone, Debug)]
+pub struct MixedClassRow {
+    pub class: TrafficClass,
+    /// Transactions completed in the mixed run.
+    pub completed: u64,
+    /// Payload bytes moved in the mixed run.
+    pub bytes: f64,
+    /// Mean fabric transaction latency, alone on the fabric, ns.
+    pub solo_tx_ns: f64,
+    /// Same, under cross-traffic.
+    pub mixed_tx_ns: f64,
+    /// Domain metric alone (coherent op / migration transfer / all-reduce
+    /// repeat), ns.
+    pub solo_domain_ns: f64,
+    /// Same, under cross-traffic.
+    pub mixed_domain_ns: f64,
+}
+
+impl MixedClassRow {
+    /// Interference inflation of mean transaction latency.
+    pub fn tx_inflation(&self) -> f64 {
+        if self.solo_tx_ns > 0.0 {
+            self.mixed_tx_ns / self.solo_tx_ns
+        } else {
+            1.0
+        }
+    }
+
+    /// Interference inflation of the domain-level latency.
+    pub fn domain_inflation(&self) -> f64 {
+        if self.solo_domain_ns > 0.0 {
+            self.mixed_domain_ns / self.solo_domain_ns
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Full experiment result.
+#[derive(Clone, Debug)]
+pub struct MixedReport {
+    pub rows: Vec<MixedClassRow>,
+    pub mixed_makespan_ns: f64,
+    pub mixed_events: u64,
+    pub mixed_peak_utilization: f64,
+    pub peak_inflight: usize,
+}
+
+impl MixedReport {
+    /// Largest per-class transaction-latency inflation — the headline
+    /// interference number.
+    pub fn max_tx_inflation(&self) -> f64 {
+        self.rows.iter().map(MixedClassRow::tx_inflation).fold(1.0, f64::max)
+    }
+
+    pub fn row(&self, class: TrafficClass) -> Option<&MixedClassRow> {
+        self.rows.iter().find(|r| r.class == class)
+    }
+}
+
+fn build_system(cfg: &MixedConfig) -> ScalePoolSystem {
+    assert!(cfg.racks >= 2, "mixed experiment needs >= 2 racks");
+    assert!(cfg.accels >= 2);
+    ScalePoolBuilder::new()
+        .racks(
+            (0..cfg.racks)
+                .map(|i| Rack::homogeneous(&format!("rack{i}"), Accelerator::b200(), cfg.accels).unwrap()),
+        )
+        .config(SystemConfig {
+            inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+            mem_nodes: cfg.mem_nodes,
+            ..Default::default()
+        })
+        .build()
+}
+
+/// Rough collective duration on an idle fabric — the shared horizon the
+/// coherence and tiering schedules are paced against so all classes
+/// overlap in time.
+fn horizon_estimate(sys: &ScalePoolSystem, cfg: &MixedConfig) -> f64 {
+    let n = sys.accelerator_count();
+    let chunk = (cfg.collective_bytes / n.max(1) as f64).max(64.0);
+    let a = sys.racks[0].acc_ids[0];
+    let b = sys.racks[1].acc_ids[0];
+    let t = Transport::from_sim_path(&sys.fabric, a, b, chunk).expect("connected system");
+    let m = CollectiveModel::flat(t);
+    (m.all_reduce(n, cfg.collective_bytes, Algorithm::Ring) * cfg.collective_repeats as f64)
+        .max(50_000.0)
+}
+
+fn coherence_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> CoherenceTraffic {
+    let agents = sys.accelerators();
+    let window = agents.len().max(8);
+    let ccfg = CoherenceConfig {
+        ops: cfg.coherence_ops,
+        mean_interarrival_ns: (horizon_ns / cfg.coherence_ops.max(1) as f64).max(1.0),
+        window,
+        ..Default::default()
+    };
+    CoherenceTraffic::new(agents, sys.mem_nodes.clone(), ccfg, cfg.seed)
+}
+
+fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> TieringTraffic {
+    let (t1, t2) = sys.tier_pools(cfg.t1_bytes_per_acc);
+    let engine = TieringEngine::new(t1, t2, TieringPolicy::default());
+    let tcfg = TieringTrafficConfig {
+        ops: cfg.tiering_ops,
+        mean_interarrival_ns: (horizon_ns / cfg.tiering_ops.max(1) as f64).max(1.0),
+        ..Default::default()
+    };
+    TieringTraffic::new(engine, sys.accelerators(), tcfg, cfg.seed.wrapping_add(1))
+}
+
+fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> EventDrivenCollective {
+    if cfg.hierarchical {
+        EventDrivenCollective::hierarchical(sys.rack_groups(), cfg.collective_bytes, cfg.collective_repeats)
+    } else {
+        EventDrivenCollective::ring(sys.accelerators(), cfg.collective_bytes, cfg.collective_repeats)
+    }
+}
+
+fn run_once(sys: &ScalePoolSystem, sources: &mut [&mut dyn TrafficSource]) -> (StreamReport, f64) {
+    let mut sim = MemSim::new(&sys.fabric);
+    let rep = sim.run_streamed(sources);
+    let util = sim.peak_utilization(rep.total.makespan_ns);
+    (rep, util)
+}
+
+fn mean_or_zero(w: &Welford) -> f64 {
+    if w.count() == 0 {
+        0.0
+    } else {
+        w.mean()
+    }
+}
+
+/// Run the experiment: three solo runs (per-class baselines) plus the
+/// mixed run, all on identically-built fabrics and identically-seeded
+/// workloads.
+pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
+    let sys = build_system(cfg);
+    let horizon = horizon_estimate(&sys, cfg);
+
+    // --- solo baselines --------------------------------------------------
+    let (coh_solo_tx, coh_solo_op) = {
+        let mut src = coherence_source(&sys, cfg, horizon);
+        let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut solo);
+        (rep.class(TrafficClass::Coherence).latency.mean(), mean_or_zero(src.op_latency()))
+    };
+    let (tier_solo_tx, tier_solo_mig) = {
+        let mut src = tiering_source(&sys, cfg, horizon);
+        let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut solo);
+        (mean_or_zero(&rep.class(TrafficClass::Tiering).latency), mean_or_zero(src.migration_latency()))
+    };
+    let (col_solo_tx, col_solo_rep) = {
+        let mut src = collective_source(&sys, cfg);
+        let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut solo);
+        (rep.class(TrafficClass::Collective).latency.mean(), mean_or_zero(src.repeat_latency()))
+    };
+
+    // --- mixed run -------------------------------------------------------
+    let mut coh = coherence_source(&sys, cfg, horizon);
+    let mut tier = tiering_source(&sys, cfg, horizon);
+    let mut col = collective_source(&sys, cfg);
+    let (mixed, util) = {
+        let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
+        run_once(&sys, &mut sources)
+    };
+
+    let row = |class: TrafficClass, solo_tx: f64, solo_domain: f64, mixed_domain: f64| {
+        let c = mixed.class(class);
+        MixedClassRow {
+            class,
+            completed: c.completed,
+            bytes: c.bytes,
+            solo_tx_ns: solo_tx,
+            mixed_tx_ns: mean_or_zero(&c.latency),
+            solo_domain_ns: solo_domain,
+            mixed_domain_ns: mixed_domain,
+        }
+    };
+    let rows = vec![
+        row(TrafficClass::Coherence, coh_solo_tx, coh_solo_op, mean_or_zero(coh.op_latency())),
+        row(TrafficClass::Tiering, tier_solo_tx, tier_solo_mig, mean_or_zero(tier.migration_latency())),
+        row(TrafficClass::Collective, col_solo_tx, col_solo_rep, mean_or_zero(col.repeat_latency())),
+    ];
+    MixedReport {
+        rows,
+        mixed_makespan_ns: mixed.total.makespan_ns,
+        mixed_events: mixed.total.events,
+        mixed_peak_utilization: util,
+        peak_inflight: mixed.peak_inflight,
+    }
+}
+
+/// Paper-style table.
+pub fn render(r: &MixedReport) -> String {
+    use crate::util::units::{fmt_bytes, fmt_ns};
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>7}\n",
+        "class", "txns", "bytes", "solo tx", "mixed tx", "infl", "solo dom", "mixed dom", "infl"
+    ));
+    out.push_str(&"-".repeat(100));
+    out.push('\n');
+    for row in &r.rows {
+        out.push_str(&format!(
+            "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>6.2}x\n",
+            row.class.name(),
+            row.completed,
+            fmt_bytes(row.bytes),
+            fmt_ns(row.solo_tx_ns),
+            fmt_ns(row.mixed_tx_ns),
+            row.tx_inflation(),
+            fmt_ns(row.solo_domain_ns),
+            fmt_ns(row.mixed_domain_ns),
+            row.domain_inflation(),
+        ));
+    }
+    out.push_str(&format!(
+        "mixed makespan {} | {} events | peak link utilization {:.1}% | peak in-flight {}\n",
+        fmt_ns(r.mixed_makespan_ns),
+        r.mixed_events,
+        100.0 * r.mixed_peak_utilization,
+        r.peak_inflight
+    ));
+    out.push_str(&format!(
+        "RESULT mixed max_tx_inflation={:.3}\n",
+        r.max_tx_inflation()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MixedConfig {
+        MixedConfig {
+            coherence_ops: 800,
+            tiering_ops: 200,
+            collective_bytes: 8.0 * 1024.0 * 1024.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_classes_complete_traffic() {
+        let r = run_mixed(&small());
+        for row in &r.rows {
+            assert!(row.completed > 0, "{} moved no transactions", row.class.name());
+            assert!(row.solo_tx_ns > 0.0 && row.mixed_tx_ns > 0.0);
+        }
+        assert!(r.mixed_makespan_ns > 0.0);
+    }
+
+    #[test]
+    fn interference_is_measurable() {
+        // the acceptance bar: concurrent classes on shared links must
+        // inflate someone's latency — the effect the silo models
+        // structurally could not produce
+        let r = run_mixed(&small());
+        assert!(
+            r.max_tx_inflation() > 1.02,
+            "no interference visible: max inflation {:.3}",
+            r.max_tx_inflation()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_mixed(&small());
+        let b = run_mixed(&small());
+        assert_eq!(a.mixed_events, b.mixed_events);
+        assert!((a.mixed_makespan_ns - b.mixed_makespan_ns).abs() < 1e-12);
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert!((ra.mixed_tx_ns - rb.mixed_tx_ns).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flat_ring_variant_runs() {
+        let cfg = MixedConfig { hierarchical: false, ..small() };
+        let r = run_mixed(&cfg);
+        assert!(r.row(TrafficClass::Collective).unwrap().completed > 0);
+    }
+}

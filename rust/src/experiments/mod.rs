@@ -1,17 +1,22 @@
 //! Experiment harnesses that regenerate every table and figure of the
-//! paper's evaluation (§6). Shared by the CLI, the examples and the bench
-//! binaries — one implementation, three entry points.
+//! paper's evaluation (§6), plus the cross-traffic interference scenario
+//! (`mixed`) the closed-form figures cannot express. Shared by the CLI,
+//! the examples and the bench binaries — one implementation, three entry
+//! points.
 //!
 //! | id | paper artifact | harness |
 //! |----|----------------|---------|
 //! | T1 | Table 1 (link characteristics)            | [`table1`] |
 //! | F6 | Figure 6 (LLM training, 5 models)         | [`fig6`]   |
 //! | F7 | Figure 7 (tiered memory, working-set sweep)| [`fig7`]  |
+//! | MX | §6 tier-2 traffic under interference      | [`mixed`]  |
 
 pub mod table1;
 pub mod fig6;
 pub mod fig7;
+pub mod mixed;
 
 pub use fig6::{run_fig6, Fig6Row};
 pub use fig7::{run_fig7, Fig7Row};
+pub use mixed::{run_mixed, MixedConfig, MixedReport};
 pub use table1::{run_table1, Table1Row};

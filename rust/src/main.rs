@@ -3,6 +3,8 @@
 //! Subcommands map onto the paper's evaluation:
 //! * `fig6`   — LLM training time, ScalePool vs RDMA baseline (Figure 6)
 //! * `fig7`   — tiered-memory latency sweep (Figure 7)
+//! * `mixed`  — coherence + tiering + collective traffic concurrently on
+//!              one fabric; per-class latency under interference
 //! * `table1` — CXL / UALink / NVLink link-characteristics table (Table 1)
 //! * `topo`   — build and inspect fabric topologies
 //! * `train`  — end-to-end: run the AOT-compiled JAX/Pallas train step on

@@ -171,6 +171,11 @@ impl MemoryPool {
         Ok(alloc)
     }
 
+    /// Look up a live allocation by handle.
+    pub fn get(&self, id: AllocId) -> Option<&Allocation> {
+        self.allocs.get(id.0 as usize)?.as_ref()
+    }
+
     /// Free an allocation.
     pub fn free(&mut self, id: AllocId) -> Result<(), PoolError> {
         let slot = self

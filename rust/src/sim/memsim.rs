@@ -7,15 +7,27 @@
 //!
 //! Routed paths are *interned* per `(src, dst)` pair: the N-transactions-
 //! per-pair case (every workload sweep) shares one contiguous hop slice in
-//! a common arena instead of cloning a `Vec<usize>` per transaction. Each
-//! arena entry packs `(link << 1) | direction` — the hop's direction bit
-//! is computed once at path-build time, so the per-event handler never
-//! re-derives it by comparing link endpoints. Combined with the slab
-//! [`Engine`] this keeps the Arrive hot path to: one inflight load, one
-//! arena load, one `LinkConsts` load, one server admit, one schedule.
+//! a common arena instead of cloning a `Vec<usize>` per transaction. The
+//! cache key packs `(src << 32) | dst` into one `u64`, so the hot-path
+//! probe hashes a single word instead of a tuple. Each arena entry packs
+//! `(link << 1) | direction` — the hop's direction bit is computed once at
+//! path-build time, so the per-event handler never re-derives it by
+//! comparing link endpoints. Combined with the slab [`Engine`] this keeps
+//! the Arrive hot path to: one inflight load, one arena load, one
+//! `LinkConsts` load, one server admit, one schedule.
+//!
+//! # Streamed injection
+//!
+//! The core loop is [`MemSim::run_streamed`]: [`TrafficSource`]s are
+//! pulled one transaction ahead as the clock advances, and in-flight slots
+//! are recycled through a free list — a million-transaction run holds the
+//! peak *concurrent* transaction count in memory, never the whole
+//! workload. [`MemSim::run`] is the batch adapter over the same loop
+//! (a [`BatchSource`] wrapping the pre-sorted `Vec<Transaction>`).
 
 use super::engine::{Engine, EventKind};
 use super::server::Server;
+use super::traffic::{BatchSource, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
 use crate::util::stats::Welford;
@@ -42,18 +54,24 @@ pub struct MemSimReport {
     pub latency: Welford,
     /// Simulated makespan, ns.
     pub makespan_ns: f64,
-    /// Events dispatched (engine throughput metric).
+    /// Events dispatched (engine throughput metric; streamed runs count
+    /// one injection event per transaction on top of the hop events).
     pub events: u64,
 }
 
 /// Per-transaction state: issue time plus a borrowed slice of the shared
-/// hop arena (start/len), not an owned path.
+/// hop arena (start/len), not an owned path. Slots are recycled through a
+/// free list, so the table size equals peak concurrency.
 struct InFlight {
     issued: f64,
     bytes: f64,
     device_ns: f64,
     path_start: u32,
     path_len: u32,
+    /// Index of the emitting source.
+    source: u32,
+    /// Source-defined token echoed back on completion.
+    token: u64,
 }
 
 /// Precomputed per-link hot-path constants (§Perf: avoids re-deriving
@@ -71,6 +89,15 @@ struct LinkConsts {
     flit: FlitFormat,
 }
 
+/// Lifecycle of a source inside the streamed loop.
+#[derive(Clone, Copy, PartialEq)]
+enum SrcState {
+    Active,
+    /// Waiting on one of its own completions (`Pull::Blocked`).
+    Blocked,
+    Done,
+}
+
 /// The simulator.
 pub struct MemSim<'f> {
     fabric: &'f Fabric,
@@ -79,8 +106,8 @@ pub struct MemSim<'f> {
     consts: Vec<LinkConsts>,
     /// interned hops, `(link << 1) | dir`, contiguous per path
     hop_arena: Vec<u32>,
-    /// (src, dst) -> (start, len) into `hop_arena`
-    path_cache: HashMap<(u32, u32), (u32, u32)>,
+    /// `(src << 32) | dst` -> (start, len) into `hop_arena`
+    path_cache: HashMap<u64, (u32, u32)>,
 }
 
 impl<'f> MemSim<'f> {
@@ -116,7 +143,7 @@ impl<'f> MemSim<'f> {
     /// hop arena, building (with per-hop direction bits) on first use.
     /// None when unreachable.
     fn intern_path(&mut self, src: NodeId, dst: NodeId) -> Option<(u32, u32)> {
-        let key = (src as u32, dst as u32);
+        let key = ((src as u64) << 32) | dst as u64;
         if let Some(&r) = self.path_cache.get(&key) {
             return Some(r);
         }
@@ -144,64 +171,153 @@ impl<'f> MemSim<'f> {
         self.path_cache.len()
     }
 
+    /// Advance transaction `id` (state `fl`) arriving at hop `hop`: admit
+    /// it to the link-direction server, or pay device time and complete.
+    /// Shared by injection (hop 0, inline) and the Arrive handler.
+    #[inline]
+    fn step(&mut self, engine: &mut Engine, fl: &InFlight, now: f64, id: usize, hop: usize) {
+        if hop >= fl.path_len as usize {
+            // reached destination: pay device service then complete
+            engine.after(fl.device_ns, EventKind::Complete { id });
+            return;
+        }
+        let h = self.hop_arena[fl.path_start as usize + hop];
+        let link_idx = (h >> 1) as usize;
+        let dir = (h & 1) as usize;
+        let c = &self.consts[link_idx];
+        let service = c.flit.wire_bytes(fl.bytes) * c.inv_rate;
+        let done = self.servers[link_idx][dir].admit(now, service);
+        // fixed per-hop latency + switch traversal at the receiving node
+        // (precomputed — §Perf)
+        let sw = c.switch_ns[1 - dir];
+        engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+    }
+
     /// Run all transactions to completion; returns latency statistics.
-    /// Transactions must be pre-sorted by issue time (asserted).
+    /// Transactions must be pre-sorted by issue time (asserted). This is
+    /// the batch adapter over [`MemSim::run_streamed`].
     pub fn run(&mut self, txs: Vec<Transaction>) -> MemSimReport {
-        let mut engine = Engine::new();
-        let mut inflight: Vec<InFlight> = Vec::with_capacity(txs.len());
         let mut last = f64::NEG_INFINITY;
-        for tx in txs {
+        for tx in &txs {
             assert!(tx.at >= last, "transactions must be sorted by issue time");
             last = tx.at;
-            let (path_start, path_len) = match self.intern_path(tx.src, tx.dst) {
-                Some(r) => r,
-                None => panic!("no path {} -> {}", tx.src, tx.dst),
-            };
-            let id = inflight.len();
-            engine.schedule(tx.at, EventKind::Arrive { id, hop: 0 });
-            inflight.push(InFlight {
-                issued: tx.at,
-                bytes: tx.bytes,
-                device_ns: tx.device_ns,
-                path_start,
-                path_len,
-            });
+        }
+        let mut batch = BatchSource::new(txs, TrafficClass::Generic);
+        let mut sources: [&mut dyn TrafficSource; 1] = [&mut batch];
+        self.run_streamed(&mut sources).total
+    }
+
+    /// The streamed core: pull each source one transaction ahead, inject
+    /// at issue time, dispatch hop/completion events, and route
+    /// completions back to their source (which may unblock reactive
+    /// emissions). Panics if a source goes `Blocked` with nothing in
+    /// flight (a deadlock by the streaming contract) or a transaction's
+    /// endpoints are unreachable.
+    pub fn run_streamed(&mut self, sources: &mut [&mut dyn TrafficSource]) -> StreamReport {
+        let n = sources.len();
+        let mut engine = Engine::new();
+        let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
+        let mut staged: Vec<Option<SourcedTx>> = (0..n).map(|_| None).collect();
+        let mut state = vec![SrcState::Active; n];
+        let mut inflight_count = vec![0usize; n];
+        let mut slots: Vec<InFlight> = Vec::new();
+        let mut free_slots: Vec<u32> = Vec::new();
+        let mut report = StreamReport::new();
+
+        // Pull source `i` once (if active and unstaged) and schedule its
+        // injection event.
+        fn pump(
+            i: usize,
+            now: f64,
+            sources: &mut [&mut dyn TrafficSource],
+            staged: &mut [Option<SourcedTx>],
+            state: &mut [SrcState],
+            inflight_count: &[usize],
+            engine: &mut Engine,
+        ) {
+            if state[i] != SrcState::Active || staged[i].is_some() {
+                return;
+            }
+            match sources[i].pull(now) {
+                Pull::Tx(stx) => {
+                    let at = stx.tx.at.max(now);
+                    engine.schedule(at, EventKind::Custom { tag: i as u64 });
+                    staged[i] = Some(stx);
+                }
+                Pull::Blocked => {
+                    assert!(
+                        inflight_count[i] > 0,
+                        "traffic source {i} blocked with nothing in flight (deadlock)"
+                    );
+                    state[i] = SrcState::Blocked;
+                }
+                Pull::Done => state[i] = SrcState::Done,
+            }
         }
 
-        let mut latency = Welford::new();
-        let mut completed = 0u64;
+        for i in 0..n {
+            pump(i, 0.0, sources, &mut staged, &mut state, &inflight_count, &mut engine);
+        }
+
         while let Some((now, ev)) = engine.next() {
             match ev {
+                // injection: the staged transaction of source `tag`
+                // reaches its issue time
+                EventKind::Custom { tag } => {
+                    let i = tag as usize;
+                    let stx = staged[i].take().expect("staged transaction for injection event");
+                    let tx = stx.tx;
+                    let (path_start, path_len) = match self.intern_path(tx.src, tx.dst) {
+                        Some(r) => r,
+                        None => panic!("no path {} -> {}", tx.src, tx.dst),
+                    };
+                    let entry = InFlight {
+                        issued: now,
+                        bytes: tx.bytes,
+                        device_ns: tx.device_ns,
+                        path_start,
+                        path_len,
+                        source: i as u32,
+                        token: stx.token,
+                    };
+                    let id = match free_slots.pop() {
+                        Some(s) => {
+                            slots[s as usize] = entry;
+                            s as usize
+                        }
+                        None => {
+                            slots.push(entry);
+                            slots.len() - 1
+                        }
+                    };
+                    inflight_count[i] += 1;
+                    self.step(&mut engine, &slots[id], now, id, 0);
+                    pump(i, now, sources, &mut staged, &mut state, &inflight_count, &mut engine);
+                }
                 EventKind::Arrive { id, hop } => {
-                    let fl = &inflight[id];
-                    if hop >= fl.path_len as usize {
-                        // reached destination: pay device service then complete
-                        engine.after(fl.device_ns, EventKind::Complete { id });
-                        continue;
-                    }
-                    let h = self.hop_arena[fl.path_start as usize + hop];
-                    let link_idx = (h >> 1) as usize;
-                    let dir = (h & 1) as usize;
-                    let c = &self.consts[link_idx];
-                    let service = c.flit.wire_bytes(fl.bytes) * c.inv_rate;
-                    let done = self.servers[link_idx][dir].admit(now, service);
-                    // fixed per-hop latency + switch traversal at the
-                    // receiving node (precomputed — §Perf)
-                    let sw = c.switch_ns[1 - dir];
-                    engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+                    self.step(&mut engine, &slots[id], now, id, hop);
                 }
                 EventKind::Complete { id } => {
-                    latency.push(now - inflight[id].issued);
-                    completed += 1;
-                }
-                // exhaustive on purpose: a new EventKind must be handled
-                // here explicitly, not dropped by a catch-all arm
-                EventKind::Custom { tag } => {
-                    unreachable!("MemSim schedules no Custom events (tag {tag})")
+                    let fl = &slots[id];
+                    let i = fl.source as usize;
+                    let token = fl.token;
+                    report.record(classes[i], now - fl.issued, fl.bytes);
+                    free_slots.push(id as u32);
+                    inflight_count[i] -= 1;
+                    sources[i].on_complete(token, now);
+                    if state[i] == SrcState::Blocked {
+                        state[i] = SrcState::Active;
+                    }
+                    pump(i, now, sources, &mut staged, &mut state, &inflight_count, &mut engine);
                 }
             }
         }
-        MemSimReport { completed, latency, makespan_ns: engine.now(), events: engine.dispatched() }
+        report.total.makespan_ns = engine.now();
+        report.total.events = engine.dispatched();
+        // the slot table's high-water mark IS the peak concurrency (slots
+        // recycle through the free list) — the streaming memory contract
+        report.peak_inflight = slots.len();
+        report
     }
 
     /// Utilization of the busiest link direction over the makespan.
@@ -340,5 +456,130 @@ mod tests {
         // queuing — both finish with identical latency
         assert_eq!(rep.completed, 2);
         assert!((rep.latency.max() - rep.latency.min()).abs() < 1e-9, "duplex paths interfered");
+    }
+
+    // ------------------------------------------------------------------
+    // streamed-injection behavior
+    // ------------------------------------------------------------------
+
+    /// A reactive source: emits a chain of K transactions, each issued
+    /// only after the previous one completes (serial dependency).
+    struct ChainSource {
+        src: NodeId,
+        dst: NodeId,
+        remaining: usize,
+        waiting: bool,
+        completions: Vec<f64>,
+    }
+
+    impl TrafficSource for ChainSource {
+        fn class(&self) -> TrafficClass {
+            TrafficClass::Generic
+        }
+        fn pull(&mut self, now: f64) -> Pull {
+            if self.remaining == 0 {
+                return Pull::Done;
+            }
+            if self.waiting {
+                return Pull::Blocked;
+            }
+            self.remaining -= 1;
+            self.waiting = true;
+            Pull::Tx(SourcedTx {
+                tx: Transaction { src: self.src, dst: self.dst, at: now, bytes: 4096.0, device_ns: 0.0 },
+                token: self.remaining as u64,
+            })
+        }
+        fn on_complete(&mut self, _token: u64, now: f64) {
+            self.waiting = false;
+            self.completions.push(now);
+        }
+    }
+
+    #[test]
+    fn reactive_chain_serializes_on_completions() {
+        let (f, accs) = rack(2);
+        let mut sim = MemSim::new(&f);
+        let mut chain = ChainSource { src: accs[0], dst: accs[1], remaining: 5, waiting: false, completions: Vec::new() };
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut chain];
+            sim.run_streamed(&mut sources)
+        };
+        assert_eq!(rep.total.completed, 5);
+        assert_eq!(chain.completions.len(), 5);
+        // strictly increasing completion times: each tx waited for its
+        // predecessor, so the makespan is ~5x the single-tx latency
+        for w in chain.completions.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        let single = chain.completions[0];
+        assert!((rep.total.makespan_ns - 5.0 * single).abs() / rep.total.makespan_ns < 0.01);
+    }
+
+    #[test]
+    fn per_class_stats_are_partitioned() {
+        let (f, accs) = rack(4);
+        let mk = |at: f64, s: usize, d: usize| Transaction { src: accs[s], dst: accs[d], at, bytes: 1024.0, device_ns: 0.0 };
+        let mut a = BatchSource::new(vec![mk(0.0, 0, 1), mk(10.0, 0, 1)], TrafficClass::Coherence);
+        let mut b = BatchSource::new(vec![mk(5.0, 2, 3)], TrafficClass::Tiering);
+        let mut sim = MemSim::new(&f);
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 2] = [&mut a, &mut b];
+            sim.run_streamed(&mut sources)
+        };
+        assert_eq!(rep.total.completed, 3);
+        assert_eq!(rep.class(TrafficClass::Coherence).completed, 2);
+        assert_eq!(rep.class(TrafficClass::Tiering).completed, 1);
+        assert_eq!(rep.class(TrafficClass::Collective).completed, 0);
+        assert!((rep.class(TrafficClass::Coherence).bytes - 2048.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn blocked_source_with_nothing_in_flight_panics() {
+        struct Stuck;
+        impl TrafficSource for Stuck {
+            fn class(&self) -> TrafficClass {
+                TrafficClass::Generic
+            }
+            fn pull(&mut self, _now: f64) -> Pull {
+                Pull::Blocked
+            }
+        }
+        let (f, _) = rack(2);
+        let mut sim = MemSim::new(&f);
+        let mut s = Stuck;
+        let mut sources: [&mut dyn TrafficSource; 1] = [&mut s];
+        sim.run_streamed(&mut sources);
+    }
+
+    #[test]
+    fn streamed_equals_batch_on_identical_transactions() {
+        let (f, accs) = rack(8);
+        let mut rng = crate::util::Rng::new(99);
+        let mut at = 0.0;
+        let txs: Vec<Transaction> = (0..500)
+            .map(|_| {
+                at += rng.exp(1.0 / 40.0);
+                let s = rng.below(8) as usize;
+                let mut d = rng.below(8) as usize;
+                if d == s {
+                    d = (d + 1) % 8;
+                }
+                Transaction { src: accs[s], dst: accs[d], at, bytes: 2048.0, device_ns: 50.0 }
+            })
+            .collect();
+        let mut sim_a = MemSim::new(&f);
+        let batch = sim_a.run(txs.clone());
+        let mut sim_b = MemSim::new(&f);
+        let mut src = BatchSource::new(txs, TrafficClass::Generic);
+        let streamed = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sim_b.run_streamed(&mut sources)
+        };
+        assert_eq!(batch.completed, streamed.total.completed);
+        assert!((batch.makespan_ns - streamed.total.makespan_ns).abs() < 1e-9);
+        assert!((batch.latency.mean() - streamed.total.latency.mean()).abs() < 1e-9);
+        assert!((batch.latency.max() - streamed.total.latency.max()).abs() < 1e-9);
     }
 }

@@ -1,7 +1,8 @@
 //! Discrete-event simulation engine (transaction-level): event heap,
 //! links/switch ports as FCFS servers with real queuing, and a
-//! memory-transaction simulator used by Figure 7's detailed mode and the
-//! `scalepool simulate` subcommand.
+//! memory-transaction simulator used by Figure 7's detailed mode, the
+//! `scalepool simulate` subcommand, and the unified traffic layer behind
+//! the `mixed` experiment.
 //!
 //! The analytic model in [`crate::fabric`] answers "what is the latency of
 //! one message on an idle/uniformly-loaded path"; this engine answers the
@@ -9,16 +10,33 @@
 //! stream (the paper's "queuing behaviors at both link and transaction
 //! layers").
 //!
+//! # The traffic layer
+//!
+//! [`traffic::TrafficSource`] is the single abstraction every workload
+//! class plugs into: coherence protocol flows
+//! ([`crate::coherence::CoherenceTraffic`]), tier-2 migrations
+//! ([`crate::coordinator::TieringTraffic`]), collective schedules
+//! ([`crate::collective::EventDrivenCollective`]) and synthetic load
+//! ([`crate::workloads::SyntheticTraffic`]) all emit transactions into
+//! the same slab-engine backend via [`MemSim::run_streamed`], so
+//! cross-class interference on shared links emerges instead of each
+//! class being modeled in a closed-form silo.
+//!
 //! Hot-path design (§Perf, see `benches/simscale.rs` for the numbers):
 //! the [`Engine`] heap carries lean `(time, seq, handle)` keys with
 //! payloads in a recycled slab, and [`MemSim`] interns routed paths per
-//! `(src, dst)` pair with precomputed per-hop direction bits — sized for
-//! millions of transactions over multi-thousand-node fabrics.
+//! `(src, dst)` pair (packed into one `u64` key) with precomputed per-hop
+//! direction bits — sized for millions of transactions over
+//! multi-thousand-node fabrics. Streamed injection pulls sources one
+//! transaction ahead and recycles in-flight slots, so memory scales with
+//! peak concurrency, not workload length.
 
 pub mod engine;
 pub mod server;
 pub mod memsim;
+pub mod traffic;
 
 pub use engine::{Engine, EventKind};
 pub use memsim::{MemSim, MemSimReport, Transaction};
 pub use server::Server;
+pub use traffic::{BatchSource, ClassReport, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};

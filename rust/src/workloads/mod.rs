@@ -6,8 +6,10 @@ pub mod memws;
 pub mod kvcache;
 pub mod embedding;
 pub mod rag;
+pub mod traffic;
 
 pub use embedding::EmbeddingWorkload;
 pub use kvcache::KvCacheWorkload;
 pub use memws::{AccessTrace, WorkingSetSweep};
 pub use rag::RagWorkload;
+pub use traffic::SyntheticTraffic;

@@ -3,12 +3,14 @@
 //! coherence, collectives and the latency models — randomized inputs,
 //! seed-reported failures.
 
-use scalepool::coherence::Directory;
+use scalepool::coherence::{Directory, MsgKind, ProtocolMsg};
 use scalepool::collective::{Algorithm, CollectiveModel, Transport};
+use scalepool::coordinator::{TieringEngine, TieringPolicy};
 use scalepool::fabric::{Fabric, LinkKind, NodeKind, Topology};
 use scalepool::memory::pool::{MemoryPool, Placement};
 use scalepool::memory::tier::{waterfall_placement, TierSpec};
 use scalepool::memory::Tier;
+use scalepool::sim::{BatchSource, MemSim, TrafficClass, TrafficSource, Transaction};
 use scalepool::util::prop::{forall_res, Config};
 use scalepool::util::Rng;
 
@@ -406,6 +408,188 @@ fn prop_no_absurd_detours() {
                 + sys.fabric.latency_ns(mid, b, bytes).unwrap();
             if direct > 3.0 * relay.max(1.0) {
                 return Err(format!("direct {direct} vs relay {relay}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Tiering byte conservation: after ANY sequence of alloc / touch /
+/// free / demote / promotion-scan ops, the sum of each pool's `used`
+/// equals the live objects mapped to it (checked per step by the
+/// engine's cross-pool invariant, which covers both tiers).
+#[test]
+fn prop_tiering_byte_conservation() {
+    forall_res(
+        Config { cases: 80, seed: 0x7143 },
+        |rng: &mut Rng| {
+            let t1_regions = 1 + rng.below(4) as usize;
+            let t1_cap = rng.f64_range(50.0, 400.0);
+            let t2_cap = rng.f64_range(500.0, 5_000.0);
+            let ops: Vec<(u8, f64)> = (0..120)
+                .map(|_| (rng.below(5) as u8, rng.f64_range(1.0, 120.0)))
+                .collect();
+            (t1_regions, t1_cap, t2_cap, ops)
+        },
+        |(t1_regions, t1_cap, t2_cap, ops)| {
+            let mut t1 = MemoryPool::new();
+            for i in 0..*t1_regions {
+                t1.add_region(i, Tier::Tier1Local, *t1_cap);
+            }
+            let mut t2 = MemoryPool::new();
+            t2.add_region(100, Tier::Tier2Pool, *t2_cap);
+            let mut e = TieringEngine::new(t1, t2, TieringPolicy { t1_high_watermark: 0.85, promote_heat: 3 });
+            e.record_migrations(true);
+            let mut live: Vec<u64> = Vec::new();
+            for &(op, bytes) in ops {
+                match op {
+                    0 | 1 => {
+                        if let Ok(id) = e.alloc(bytes) {
+                            live.push(id);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let id = live.remove(0);
+                            e.free(id).map_err(|er| er.to_string())?;
+                        }
+                    }
+                    3 => {
+                        if let Some(&id) = live.last() {
+                            for _ in 0..4 {
+                                e.touch(id);
+                            }
+                            e.promote_ready(2);
+                        }
+                    }
+                    _ => {
+                        e.demote_coldest();
+                    }
+                }
+                e.check_invariants()?;
+            }
+            // every logged migration's bytes match a live or once-live
+            // object (sanity on the record stream)
+            for m in e.take_migrations() {
+                if m.bytes <= 0.0 {
+                    return Err(format!("migration of {} bytes", m.bytes));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Routed-mode directory: the emitted message multiset always matches
+/// the count breakdown, endpoints never degenerate, and the
+/// owner-XOR-sharers invariant (strengthened: no empty entries) holds
+/// under arbitrary interleavings.
+#[test]
+fn prop_directory_routed_consistent() {
+    forall_res(
+        Config { cases: 60, seed: 0xC0DE },
+        |rng: &mut Rng| {
+            let agents = 2 + rng.below(7) as usize;
+            let ops: Vec<(usize, u64, u8)> = (0..250)
+                .map(|_| (rng.below(agents as u64) as usize, rng.below(24), rng.below(3) as u8))
+                .collect();
+            (agents, ops)
+        },
+        |(agents, ops)| {
+            let mut d = Directory::new(*agents);
+            let mut out: Vec<ProtocolMsg> = Vec::new();
+            for &(a, block, op) in ops {
+                out.clear();
+                let m = match op {
+                    0 => d.read_routed(a, block, &mut out),
+                    1 => d.write_routed(a, block, &mut out),
+                    _ => d.evict_routed(a, block, &mut out),
+                };
+                let count = |k: MsgKind| out.iter().filter(|x| x.kind == k).count() as u32;
+                if count(MsgKind::DirReq) != m.dir_req
+                    || count(MsgKind::Intervention) != m.interventions
+                    || count(MsgKind::Data) != m.data
+                    || count(MsgKind::Ack) != m.acks
+                {
+                    return Err(format!("routed messages disagree with counts: {m:?} vs {out:?}"));
+                }
+                for msg in &out {
+                    if msg.src == msg.dst {
+                        return Err(format!("degenerate message {msg:?}"));
+                    }
+                }
+                d.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Streamed-vs-batch equivalence: the same transaction set, run as one
+/// pre-sorted batch or split across several streamed sources, produces
+/// the identical report (completions, latency stats, makespan).
+#[test]
+fn prop_streamed_matches_batch() {
+    forall_res(
+        Config { cases: 40, seed: 0x57E4 },
+        |rng: &mut Rng| {
+            let n = 4 + rng.below(12) as usize;
+            let txs = 50 + rng.below(400) as usize;
+            let sources = 2 + rng.below(4) as usize;
+            let bytes = rng.f64_range(64.0, 65_536.0);
+            (n, txs, sources, bytes, rng.below(1 << 30))
+        },
+        |&(n, txs, sources, bytes, seed)| {
+            let t = Topology::single_hop(n, LinkKind::NvLink5, "r");
+            let accs = t.nodes_of(NodeKind::Accelerator);
+            let f = Fabric::new(t);
+            let mut rng = Rng::new(seed);
+            let mut at = 0.0;
+            let all: Vec<Transaction> = (0..txs)
+                .map(|_| {
+                    at += rng.exp(1.0 / 30.0);
+                    let s = rng.below(n as u64) as usize;
+                    let mut d = rng.below(n as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % n;
+                    }
+                    Transaction { src: accs[s], dst: accs[d], at, bytes, device_ns: 80.0 }
+                })
+                .collect();
+
+            let mut sim_batch = MemSim::new(&f);
+            let batch = sim_batch.run(all.clone());
+
+            // round-robin split: each sub-stream stays time-sorted
+            let mut parts: Vec<Vec<Transaction>> = vec![Vec::new(); sources];
+            for (i, tx) in all.into_iter().enumerate() {
+                parts[i % sources].push(tx);
+            }
+            let mut srcs: Vec<BatchSource> =
+                parts.into_iter().map(|p| BatchSource::new(p, TrafficClass::Generic)).collect();
+            let mut refs: Vec<&mut dyn TrafficSource> =
+                srcs.iter_mut().map(|s| s as &mut dyn TrafficSource).collect();
+            let mut sim_stream = MemSim::new(&f);
+            let streamed = sim_stream.run_streamed(&mut refs);
+
+            if batch.completed != streamed.total.completed {
+                return Err(format!(
+                    "completed {} vs {}",
+                    batch.completed, streamed.total.completed
+                ));
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0);
+            if !close(batch.makespan_ns, streamed.total.makespan_ns) {
+                return Err(format!(
+                    "makespan {} vs {}",
+                    batch.makespan_ns, streamed.total.makespan_ns
+                ));
+            }
+            if !close(batch.latency.mean(), streamed.total.latency.mean())
+                || !close(batch.latency.max(), streamed.total.latency.max())
+                || !close(batch.latency.min(), streamed.total.latency.min())
+            {
+                return Err("latency stats diverged".into());
             }
             Ok(())
         },
