@@ -3,22 +3,28 @@
 //!
 //! * `Router::build` (flat parallel PBR table) vs the seed serial
 //!   nested-table BFS (`fabric::routing::reference::SerialRouter`);
-//! * sustained `MemSim` events/sec (slab engine + interned paths +
+//! * sustained `MemSim` events/sec (calendar engine + interned paths +
 //!   precomputed direction bits) vs a faithful replica of the seed loop
 //!   (payload-carrying heap events, one `Vec` path clone per transaction,
 //!   per-event link-endpoint direction derivation);
-//! * raw engine schedule/dispatch throughput, slab vs seed-style heap.
+//! * sharded multi-core streamed simulation (`run_streamed_sharded`) vs
+//!   the serial streamed backend, on scales whose topology yields more
+//!   than one domain (the single-crossbar rack does not shard);
+//! * raw engine schedule/dispatch throughput, calendar vs seed-style heap.
 //!
 //! Writes machine-readable results to `BENCH_simscale.json` (override the
-//! path with `SCALEPOOL_BENCH_OUT`). Acceptance bar (ISSUE 1): >= 5x
-//! router build at pod scale, >= 3x MemSim events/sec.
+//! path with `SCALEPOOL_BENCH_OUT`; bound the run with
+//! `SCALEPOOL_BENCH_SCALES=rack,row` and `SCALEPOOL_BENCH_ACCESSES=N` —
+//! the CI smoke uses both). Acceptance bars: >= 5x router build and
+//! >= 3x events/sec at pod scale (ISSUE 1); sharded >= 2x the serial
+//! streamed backend at pod scale on >= 4 cores (ISSUE 3).
 //!
 //! Run with: `cargo bench --bench simscale` (see `scripts/bench.sh`).
 
 use scalepool::bench::black_box;
 use scalepool::fabric::routing::reference::SerialRouter;
 use scalepool::fabric::{Fabric, LinkKind, NodeKind, Router, Topology};
-use scalepool::sim::{Engine, EventKind, MemSim, Server, Transaction};
+use scalepool::sim::{BatchSource, Engine, EventKind, MemSim, Server, TrafficClass, TrafficSource, Transaction};
 use scalepool::util::Json;
 use scalepool::workloads::{AccessTrace, WorkingSetSweep};
 use std::cmp::Ordering;
@@ -241,23 +247,42 @@ fn best_of<T>(k: usize, mut f: impl FnMut() -> T) -> f64 {
 }
 
 fn main() {
-    let scales = [
+    let all_scales = [
         ScaleSpec { name: "rack", leaves: 0, spines: 0, eps_per_leaf: 0 },
         ScaleSpec { name: "row", leaves: 16, spines: 4, eps_per_leaf: 64 },
         ScaleSpec { name: "pod", leaves: 64, spines: 8, eps_per_leaf: 64 },
     ];
-    let accesses = 200_000;
+    // bounded runs (CI smoke): SCALEPOOL_BENCH_SCALES=rack limits the
+    // sweep, SCALEPOOL_BENCH_ACCESSES shrinks the workload
+    let scale_filter = std::env::var("SCALEPOOL_BENCH_SCALES").ok();
+    let scales: Vec<&ScaleSpec> = all_scales
+        .iter()
+        .filter(|s| {
+            scale_filter
+                .as_deref()
+                .map(|f| f.split(',').any(|n| n.trim() == s.name))
+                .unwrap_or(true)
+        })
+        .collect();
+    assert!(!scales.is_empty(), "SCALEPOOL_BENCH_SCALES matched no scale");
+    let accesses: usize = std::env::var("SCALEPOOL_BENCH_ACCESSES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
     let tx_bytes = 4096.0;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
 
     // trace generation for all scales at once (exercises the parallel
-    // WorkingSetSweep::traces path)
-    let sweep = WorkingSetSweep { accesses, ..Default::default() };
+    // WorkingSetSweep::traces path); 2 ns mean interarrival puts the run
+    // in the heavy-traffic regime the sharded backend is built for (the
+    // conservative windows amortize their barrier over event density)
+    let sweep = WorkingSetSweep { accesses, interval_ns: 2.0, ..Default::default() };
     let working_sets: Vec<f64> = scales.iter().map(|_| 1e12).collect();
     let traces = sweep.traces(&working_sets);
 
     let mut rows: Vec<Json> = Vec::new();
     println!("=== simscale: router build + sustained events/sec ===");
-    for (s, trace) in scales.iter().zip(&traces) {
+    for (&s, trace) in scales.iter().zip(&traces) {
         let (topo, eps) = build_topology(s);
         let n_nodes = topo.nodes.len();
         let iters = if n_nodes > 2000 {
@@ -305,8 +330,47 @@ fn main() {
         let eps_seed = seed_events as f64 / (sim_seed / 1e9);
         let sim_speedup = eps_new / eps_seed;
 
+        // --- sharded streamed backend (ISSUE 3) -------------------------
+        // only meaningful where the topology yields >1 domain and there
+        // is more than one core; the single-crossbar rack is one domain
+        let domains = {
+            let d = fabric.topo.partition_domains(threads);
+            d.iter().copied().max().map(|m| m as usize + 1).unwrap_or(1)
+        };
+        let sharded = if threads >= 2 && domains >= 2 {
+            let shards = threads.min(domains);
+            let mut pool: Vec<Vec<Transaction>> = (0..3).map(|_| txs.clone()).collect();
+            let mut sharded_events = 0u64;
+            let wall = best_of(3, || {
+                let mut sim = MemSim::new(&fabric);
+                let mut src = BatchSource::new(
+                    pool.pop().expect("one pre-cloned stream per iteration"),
+                    TrafficClass::Generic,
+                );
+                let rep = {
+                    let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+                    sim.run_streamed_sharded_with(&mut sources, shards)
+                };
+                assert_eq!(rep.total.completed, txs.len() as u64);
+                // same event-mix normalization as the serial number: one
+                // injection-equivalent event per transaction excluded
+                sharded_events = rep.total.events - rep.total.completed;
+                rep.total.events
+            });
+            let eps_sharded = sharded_events as f64 / (wall / 1e9);
+            Some((shards, eps_sharded, eps_sharded / eps_new))
+        } else {
+            None
+        };
+
+        let sharded_str = match sharded {
+            Some((shards, eps_sh, sp)) => {
+                format!(" | sharded x{shards} {:>6.2} M ev/s ({sp:>5.2}x serial)", eps_sh / 1e6)
+            }
+            None => String::new(),
+        };
         println!(
-            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x)",
+            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x){sharded_str}",
             s.name,
             n_nodes,
             build_new / 1e6,
@@ -317,7 +381,7 @@ fn main() {
             sim_speedup,
         );
 
-        rows.push(Json::obj(vec![
+        let mut row = vec![
             ("scale", Json::str(s.name)),
             ("nodes", Json::num(n_nodes as f64)),
             ("cross_fabric_hops", Json::num(cross_hops as f64)),
@@ -329,10 +393,16 @@ fn main() {
             ("memsim_events_per_sec", Json::num(eps_new)),
             ("memsim_events_per_sec_seed", Json::num(eps_seed)),
             ("memsim_speedup", Json::num(sim_speedup)),
-        ]));
+        ];
+        if let Some((shards, eps_sh, sp)) = sharded {
+            row.push(("sharded_shards", Json::num(shards as f64)));
+            row.push(("sharded_events_per_sec", Json::num(eps_sh)));
+            row.push(("sharded_speedup", Json::num(sp)));
+        }
+        rows.push(Json::obj(row));
     }
 
-    // --- raw engine throughput: slab vs seed-style heap --------------------
+    // --- raw engine throughput: calendar queue vs seed-style heap ----------
     let engine_events = 1_000_000usize;
     let slab_ns = best_of(3, || {
         let mut e = Engine::new();
@@ -364,7 +434,7 @@ fn main() {
     let engine_new = engine_events as f64 / (slab_ns / 1e9);
     let engine_seed = engine_events as f64 / (seed_heap_ns / 1e9);
     println!(
-        "engine schedule+dispatch: {:.2} M ev/s slab vs {:.2} M ev/s seed heap ({:.2}x)",
+        "engine schedule+dispatch: {:.2} M ev/s calendar vs {:.2} M ev/s seed heap ({:.2}x)",
         engine_new / 1e6,
         engine_seed / 1e6,
         engine_new / engine_seed
@@ -373,12 +443,12 @@ fn main() {
     let out = Json::obj(vec![
         ("bench", Json::str("simscale")),
         ("generated_by", Json::str("rust/benches/simscale.rs")),
-        ("threads", Json::num(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1) as f64)),
+        ("threads", Json::num(threads as f64)),
         ("scales", Json::Arr(rows)),
         (
             "engine",
             Json::obj(vec![
-                ("slab_events_per_sec", Json::num(engine_new)),
+                ("calendar_events_per_sec", Json::num(engine_new)),
                 ("seed_heap_events_per_sec", Json::num(engine_seed)),
                 ("speedup", Json::num(engine_new / engine_seed)),
             ]),
@@ -397,11 +467,17 @@ fn rows_summary(out: &Json) -> String {
     let scales = out.get("scales").and_then(Json::as_arr).unwrap_or(&[]);
     let pod = scales.iter().find(|r| r.get("scale").and_then(Json::as_str) == Some("pod"));
     match pod {
-        Some(p) => format!(
-            "pod_router_build_speedup={:.2} pod_memsim_speedup={:.2}",
-            p.get("router_build_speedup").and_then(Json::as_f64).unwrap_or(0.0),
-            p.get("memsim_speedup").and_then(Json::as_f64).unwrap_or(0.0)
-        ),
+        Some(p) => {
+            let mut s = format!(
+                "pod_router_build_speedup={:.2} pod_memsim_speedup={:.2}",
+                p.get("router_build_speedup").and_then(Json::as_f64).unwrap_or(0.0),
+                p.get("memsim_speedup").and_then(Json::as_f64).unwrap_or(0.0)
+            );
+            if let Some(sp) = p.get("sharded_speedup").and_then(Json::as_f64) {
+                s.push_str(&format!(" pod_sharded_speedup={sp:.2}"));
+            }
+            s
+        }
         None => "no pod row".into(),
     }
 }

@@ -48,7 +48,32 @@ pub fn fig6(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-pub fn fig7() -> Result<()> {
+pub fn fig7(args: &mut Args) -> Result<()> {
+    if args.flag("detailed") {
+        // event-driven mode: the working-set sweep rides run_streamed
+        // (optionally sharded), sharing the traffic layer's backend
+        let cfg = experiments::Fig7DetailedConfig {
+            racks: args.usize_or("racks", 4).map_err(Error::msg)?,
+            accels: args.usize_or("accels", 8).map_err(Error::msg)?,
+            mem_nodes: args.usize_or("mem-nodes", 4).map_err(Error::msg)?,
+            accesses: args.usize_or("accesses", 20_000).map_err(Error::msg)? as u64,
+            interval_ns: args.f64_or("interval", 10.0).map_err(Error::msg)?,
+            seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
+            sharded: args.flag("sharded"),
+        };
+        let t0 = std::time::Instant::now();
+        let rows = experiments::run_fig7_detailed(&cfg);
+        print!("{}", experiments::fig7::render(&rows));
+        println!("wall {:?}", t0.elapsed());
+        if let Some(last) = rows.last() {
+            println!(
+                "RESULT fig7_detailed vs_baseline={:.3} vs_acc_clusters={:.3}",
+                last.speedup_vs_baseline(),
+                last.speedup_vs_acc_clusters()
+            );
+        }
+        return Ok(());
+    }
     let rows = experiments::run_fig7();
     print!("{}", experiments::fig7::render(&rows));
     Ok(())
@@ -165,21 +190,29 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     let sys = build_system("clos", racks, accels)?;
     let all = sys.accelerators();
 
-    if args.flag("streamed") {
+    if args.flag("streamed") || args.flag("sharded") {
         // streamed injection: transactions are generated as the clock
         // reaches them — memory stays O(peak in-flight) however large
-        // --txs gets
+        // --txs gets. --sharded streams one calendar engine per fabric
+        // domain on its own core (conservative lookahead; open-loop only)
+        let sharded = args.flag("sharded");
+        let shards = args.usize_or("shards", crate::util::par::shards_for(usize::MAX)).map_err(Error::msg)?;
         let mut src =
             SyntheticTraffic::new(all, sys.mem_nodes.clone(), txs as u64, bytes, 50.0, seed);
         let t0 = std::time::Instant::now();
         let mut sim = MemSim::new(&sys.fabric);
         let rep = {
             let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
-            sim.run_streamed(&mut sources)
+            if sharded {
+                sim.run_streamed_sharded_with(&mut sources, shards)
+            } else {
+                sim.run_streamed(&mut sources)
+            }
         };
         let wall = t0.elapsed();
         println!(
-            "streamed {} transactions of {} in {} simulated time (peak in-flight {})",
+            "{} {} transactions of {} in {} simulated time (peak in-flight {})",
+            if sharded { "sharded-streamed" } else { "streamed" },
             rep.total.completed,
             fmt_bytes(bytes),
             fmt_ns(rep.total.makespan_ns),

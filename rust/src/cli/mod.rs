@@ -17,7 +17,12 @@ USAGE:
 COMMANDS:
     table1                     Regenerate Table 1 (link characteristics)
     fig6                       Regenerate Figure 6 (LLM training, 5 models)
-    fig7                       Regenerate Figure 7 (tiered-memory sweep)
+    fig7      [--detailed] [--racks <N>] [--accels <N>] [--mem-nodes <N>]
+              [--accesses <N>] [--interval <ns>] [--seed <N>] [--sharded]
+                               Regenerate Figure 7 (tiered-memory sweep);
+                               --detailed replays the sweep event-driven
+                               through the streamed simulator (--sharded:
+                               multi-core conservative backend)
     mixed     [--racks <N>] [--accels <N>] [--mem-nodes <N>] [--coh-ops <N>]
               [--tier-ops <N>] [--bytes <N>] [--repeats <N>]
               [--algo <hier|ring>] [--seed <N>] [--out <file>]
@@ -27,9 +32,11 @@ COMMANDS:
     topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
                                Build a fabric and print its shape/latencies
     simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
-              [--streamed]     Event-driven memory-access simulation
+              [--streamed] [--sharded [--shards <N>]]
+                               Event-driven memory-access simulation
                                (--streamed: pull-based injection, O(peak
-                               in-flight) memory)
+                               in-flight) memory; --sharded: one engine
+                               per fabric domain across cores)
     train     --preset <tiny|small25m|base100m> --steps <N> [--seed <N>]
               [--artifacts <dir>] [--log-every <N>] [--out <file>]
                                End-to-end PJRT training under the emulated
@@ -60,7 +67,7 @@ pub fn run(argv: Vec<String>) -> i32 {
     let result = match cmd.as_str() {
         "table1" => commands::table1(),
         "fig6" => commands::fig6(&mut args),
-        "fig7" => commands::fig7(),
+        "fig7" => commands::fig7(&mut args),
         "mixed" => commands::mixed(&mut args),
         "topo" => commands::topo(&mut args),
         "simulate" => commands::simulate(&mut args),

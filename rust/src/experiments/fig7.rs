@@ -173,6 +173,124 @@ pub fn run_fig7_with(p: &Fig7Params) -> Vec<Fig7Row> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// detailed mode: the same sweep, event-driven on run_streamed
+// ---------------------------------------------------------------------------
+
+/// Knobs of the event-driven detailed mode: instead of the closed-form
+/// waterfall, every access becomes a fabric transaction on a *built*
+/// system for each of the three configurations (RDMA baseline /
+/// CXL-joined accelerator clusters / ScalePool with tier-2 memory
+/// nodes), streamed through [`MemSim::run_streamed`](crate::sim::MemSim)
+/// — the working-set sweep and the traffic layer share one backend
+/// end-to-end, and link-level queuing emerges instead of being assumed.
+#[derive(Clone, Debug)]
+pub struct Fig7DetailedConfig {
+    pub racks: usize,
+    pub accels: usize,
+    /// Tier-2 memory nodes on the ScalePool system.
+    pub mem_nodes: usize,
+    /// Accesses per sweep point (per configuration).
+    pub accesses: u64,
+    /// Mean access interarrival, ns.
+    pub interval_ns: f64,
+    pub seed: u64,
+    /// Run each point through the sharded conservative backend
+    /// ([`MemSim::run_streamed_sharded`](crate::sim::MemSim::run_streamed_sharded)).
+    pub sharded: bool,
+}
+
+impl Default for Fig7DetailedConfig {
+    fn default() -> Self {
+        Fig7DetailedConfig {
+            racks: 4,
+            accels: 8,
+            mem_nodes: 4,
+            accesses: 20_000,
+            interval_ns: 10.0,
+            seed: 7,
+            sharded: false,
+        }
+    }
+}
+
+/// Event-driven Figure 7: sweep the same working-set points over three
+/// built systems, measuring mean end-to-end access latency from the
+/// streamed simulator. Points run on scoped worker threads (serial when
+/// `sharded`, which parallelizes inside each point instead).
+pub fn run_fig7_detailed(cfg: &Fig7DetailedConfig) -> Vec<Fig7Row> {
+    use crate::memory::device::MemDevice;
+    use crate::sim::{MemSim, TrafficSource};
+    use crate::workloads::{WorkingSetTraffic, WorkingSetTrafficConfig};
+
+    let build = |inter: InterCluster, mem_nodes: usize| {
+        ScalePoolBuilder::new()
+            .racks((0..cfg.racks).map(|i| {
+                Rack::homogeneous(&format!("rack{i}"), crate::cluster::Accelerator::b200(), cfg.accels)
+                    .unwrap()
+            }))
+            .config(SystemConfig { inter, mem_nodes, ..Default::default() })
+            .build()
+    };
+    let base_sys = build(InterCluster::RdmaInfiniBand, 0);
+    let acc_sys = build(InterCluster::Cxl(TopologyKind::MultiLevelClos), 0);
+    let tier_sys = build(InterCluster::Cxl(TopologyKind::MultiLevelClos), cfg.mem_nodes);
+
+    let hbm = MemDevice::Hbm3e.access_ns();
+    let xlink_sw = SoftwareCopyModel::xlink_intra_rack().per_access_ns();
+    let rdma_sw = SoftwareCopyModel::rdma_inter_cluster().per_access_ns();
+    let coherence_ns = 80.0; // matches Fig7Params::reference()
+
+    // (system, beyond-cluster targets, remote device ns, mid adder, far adder)
+    let remote_accs = |sys: &ScalePoolSystem| -> Vec<usize> {
+        sys.racks[1..].iter().flat_map(|r| r.acc_ids.iter().copied()).collect()
+    };
+    let shapes: [(&ScalePoolSystem, Vec<usize>, f64, f64, f64); 3] = [
+        (&base_sys, remote_accs(&base_sys), MemDevice::Ddr5.access_ns(), xlink_sw, rdma_sw),
+        (&acc_sys, remote_accs(&acc_sys), hbm, xlink_sw, coherence_ns),
+        (&tier_sys, tier_sys.mem_nodes.clone(), MemDevice::CxlDram.access_ns(), coherence_ns, 0.0),
+    ];
+
+    let point = |ws: f64| -> Fig7Row {
+        let mut lat = [0.0f64; 3];
+        for (k, (sys, remote, remote_dev, mid, far)) in shapes.iter().enumerate() {
+            let wcfg = WorkingSetTrafficConfig {
+                working_set: ws,
+                accel_capacity: ACCEL_HBM,
+                cluster_capacity: CLUSTER_HBM,
+                line_bytes: 64,
+                interval_ns: cfg.interval_ns,
+                accesses: cfg.accesses,
+                seed: cfg.seed,
+                hbm_ns: hbm,
+                remote_device_ns: *remote_dev,
+                mid_extra_ns: *mid,
+                far_extra_ns: *far,
+            };
+            let mut src = WorkingSetTraffic::new(wcfg, sys.racks[0].acc_ids.clone(), remote.clone());
+            let mut sim = MemSim::new(&sys.fabric);
+            let rep = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+                if cfg.sharded {
+                    sim.run_streamed_sharded(&mut sources)
+                } else {
+                    sim.run_streamed(&mut sources)
+                }
+            };
+            assert_eq!(rep.total.completed, cfg.accesses, "detailed point dropped accesses");
+            lat[k] = rep.total.latency.mean();
+        }
+        Fig7Row { working_set: ws, baseline_ns: lat[0], acc_clusters_ns: lat[1], tiered_ns: lat[2] }
+    };
+
+    let points = WorkingSetSweep::sweep_points(ACCEL_HBM, CLUSTER_HBM, 8.0);
+    if cfg.sharded {
+        points.iter().map(|&ws| point(ws)).collect()
+    } else {
+        crate::util::par::par_map(&points, |&ws| point(ws))
+    }
+}
+
 /// Render the paper-style series.
 pub fn render(rows: &[Fig7Row]) -> String {
     let mut out = String::new();
@@ -239,6 +357,42 @@ mod tests {
             assert!(w[1].baseline_ns >= w[0].baseline_ns - 1e-9);
             assert!(w[1].acc_clusters_ns >= w[0].acc_clusters_ns - 1e-9);
             assert!(w[1].tiered_ns >= w[0].tiered_ns - 1e-9);
+        }
+    }
+
+    #[test]
+    fn detailed_mode_matches_paper_shape() {
+        // the event-driven sweep must reproduce the closed-form figure's
+        // structure: identical below one accelerator's HBM (all three
+        // configs are local hits of the same access stream), ScalePool
+        // ordering beyond the cluster boundary
+        let cfg = Fig7DetailedConfig { accesses: 4_000, ..Default::default() };
+        let rows = run_fig7_detailed(&cfg);
+        assert_eq!(rows.len(), WorkingSetSweep::sweep_points(ACCEL_HBM, CLUSTER_HBM, 8.0).len());
+        for r in rows.iter().filter(|r| r.working_set <= ACCEL_HBM) {
+            assert!((r.baseline_ns - r.tiered_ns).abs() < 1e-9, "region 1 must be identical");
+            assert!((r.acc_clusters_ns - r.tiered_ns).abs() < 1e-9);
+        }
+        let last = rows.last().unwrap();
+        assert!(
+            last.tiered_ns < last.acc_clusters_ns && last.acc_clusters_ns < last.baseline_ns,
+            "region-3 ordering violated: {} / {} / {}",
+            last.baseline_ns,
+            last.acc_clusters_ns,
+            last.tiered_ns
+        );
+        assert!(last.speedup_vs_baseline() > 1.5, "tier-2 win too small: {:.2}x", last.speedup_vs_baseline());
+    }
+
+    #[test]
+    fn detailed_mode_deterministic_given_seed() {
+        let cfg = Fig7DetailedConfig { accesses: 1_500, ..Default::default() };
+        let a = run_fig7_detailed(&cfg);
+        let b = run_fig7_detailed(&cfg);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.working_set, rb.working_set);
+            assert!((ra.baseline_ns - rb.baseline_ns).abs() < 1e-12);
+            assert!((ra.tiered_ns - rb.tiered_ns).abs() < 1e-12);
         }
     }
 

@@ -17,6 +17,6 @@ pub mod fig7;
 pub mod mixed;
 
 pub use fig6::{run_fig6, Fig6Row};
-pub use fig7::{run_fig7, Fig7Row};
+pub use fig7::{run_fig7, run_fig7_detailed, Fig7DetailedConfig, Fig7Row};
 pub use mixed::{run_mixed, MixedConfig, MixedReport};
 pub use table1::{run_table1, Table1Row};

@@ -152,6 +152,55 @@ impl Topology {
         count == self.nodes.len()
     }
 
+    /// Partition the nodes into at most `max_domains` topology-derived
+    /// domains for sharded simulation: every endpoint joins the subtree of
+    /// its first switch neighbor (its rack crossbar / CXL leaf), switches
+    /// anchor their own subtree, and the subtrees are packed in node-id
+    /// order into balanced domains. Returns one dense domain id per node
+    /// (`0..k`, `k <= max_domains`); deterministic for a given topology.
+    pub fn partition_domains(&self, max_domains: usize) -> Vec<u32> {
+        let n = self.nodes.len();
+        let max_domains = max_domains.max(1);
+        if n == 0 {
+            return Vec::new();
+        }
+        // anchor: the switch subtree each node belongs to
+        let anchor: Vec<usize> = (0..n)
+            .map(|i| {
+                if self.nodes[i].kind == NodeKind::Switch {
+                    i
+                } else {
+                    self.neighbors(i)
+                        .iter()
+                        .find(|&&(m, _)| self.nodes[m].kind == NodeKind::Switch)
+                        .map(|&(m, _)| m)
+                        .unwrap_or(i)
+                }
+            })
+            .collect();
+        let mut size = vec![0usize; n];
+        for &a in &anchor {
+            size[a] += 1;
+        }
+        let anchors: Vec<usize> = (0..n).filter(|&i| size[i] > 0).collect();
+        let k = max_domains.min(anchors.len()).max(1);
+        // pack subtrees (ascending anchor id) into k bins of ~equal node
+        // count; a bin closes once it reaches the target share
+        let target = n.div_ceil(k);
+        let mut bin_of = vec![0u32; n];
+        let mut bin = 0usize;
+        let mut acc = 0usize;
+        for &a in &anchors {
+            bin_of[a] = bin as u32;
+            acc += size[a];
+            if acc >= target && bin + 1 < k {
+                bin += 1;
+                acc = 0;
+            }
+        }
+        (0..n).map(|i| bin_of[anchor[i]]).collect()
+    }
+
     // ------------------------------------------------------------------
     // builders (Figure 4a fabric shapes)
     // ------------------------------------------------------------------
@@ -314,6 +363,51 @@ mod tests {
         assert_eq!(gids.len(), 4);
         // intra: 4 groups * C(4,2)=6 links; global: C(4,2)=6
         assert_eq!(t.links.len(), 4 * 6 + 6);
+    }
+
+    #[test]
+    fn partition_single_hop_is_one_domain() {
+        let t = Topology::single_hop(16, LinkKind::NvLink5, "r");
+        let doms = t.partition_domains(8);
+        assert_eq!(doms.len(), t.nodes.len());
+        assert!(doms.iter().all(|&d| d == 0), "one crossbar subtree = one domain");
+    }
+
+    #[test]
+    fn partition_clos_groups_leaf_subtrees() {
+        let (mut t, leaves) = Topology::clos(8, 2, LinkKind::CxlCoherent, "c");
+        let mut eps = Vec::new();
+        for (i, &l) in leaves.iter().enumerate() {
+            for e in 0..4 {
+                let n = t.add_node(NodeKind::Accelerator, format!("ep{i}-{e}"));
+                t.connect(n, l, LinkKind::CxlCoherent);
+                eps.push((n, l));
+            }
+        }
+        let doms = t.partition_domains(4);
+        let k = doms.iter().copied().max().unwrap() as usize + 1;
+        assert!(k > 1 && k <= 4, "expected 2..=4 domains, got {k}");
+        // ids are dense
+        for d in 0..k as u32 {
+            assert!(doms.iter().any(|&x| x == d), "domain {d} empty");
+        }
+        // every endpoint shares its leaf switch's domain (subtree integrity)
+        for &(n, l) in &eps {
+            assert_eq!(doms[n], doms[l], "endpoint {n} split from its leaf {l}");
+        }
+        // deterministic
+        assert_eq!(doms, t.partition_domains(4));
+    }
+
+    #[test]
+    fn partition_respects_max_domains() {
+        let (t, _) = Topology::torus3d((4, 4, 4), LinkKind::CxlCoherent, "t");
+        for max in [1, 2, 3, 7, 64, 1000] {
+            let doms = t.partition_domains(max);
+            let k = doms.iter().copied().max().unwrap() as usize + 1;
+            assert!(k <= max.min(t.nodes.len()), "max {max}: got {k} domains");
+        }
+        assert!(t.partition_domains(1).iter().all(|&d| d == 0));
     }
 
     #[test]

@@ -1,16 +1,32 @@
-//! Core event loop: a min-heap of timestamped events dispatched in order.
+//! Core event loop: a calendar-queue (timing-wheel) scheduler dispatching
+//! timestamped events in order.
 //!
 //! # Performance architecture (§Perf)
 //!
-//! The heap holds lean `(time, seq, u32 handle)` keys; event payloads sit
-//! in a slot slab indexed by the handle and recycled through a free list.
-//! Heap sift operations therefore move 24-byte keys instead of full
-//! payload-carrying events, and the slab's high-water mark equals the
-//! maximum number of *concurrently pending* events, not the total
-//! scheduled — a million-transaction run recycles a few thousand slots.
+//! The scheduler is a **bucketed calendar queue** (Brown '88): virtual
+//! bucket `floor(at / width)` maps onto a power-of-two wheel of sorted
+//! mini-queues, so `schedule` is a bucket append (plus a short sorted
+//! insert when arrivals land out of order inside one bucket) and `next`
+//! is a pop from the front of the current bucket — O(1) amortized against
+//! the binary heap's O(log n) sift, and without moving payloads: the
+//! wheel carries lean `(time, seq, u32 handle)` keys while event payloads
+//! sit in a slot slab recycled through a free list (the slab's high-water
+//! mark equals peak *concurrently pending* events, not total scheduled).
+//!
+//! Far-future events (beyond one wheel rotation) park in an **overflow
+//! list** and are refiled when the wheel drains into them. The wheel
+//! **resizes on skew**: whenever occupancy outgrows the bucket count or a
+//! rotation completes, the bucket width is recomputed from the live
+//! event-time span (floored at the caller's granularity hint — for the
+//! fabric simulator, the serialization-time quantum of the fastest link)
+//! and every pending event is refiled. Dispatch order is byte-identical
+//! to the reference binary heap kept in [`reference::HeapEngine`],
+//! including FIFO `seq` tie-breaks at equal timestamps — pinned by
+//! `calendar_queue_matches_heap_reference` in `tests/prop_invariants.rs`,
+//! mirroring the PR-1 `SerialRouter` oracle pattern.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::VecDeque;
 
 /// Simulation time in nanoseconds.
 pub type SimTime = f64;
@@ -26,38 +42,50 @@ pub enum EventKind {
     Custom { tag: u64 },
 }
 
-/// Heap key: ordering state only; the payload lives in the slab.
+/// Wheel key: ordering state only; the payload lives in the slab.
 #[derive(Clone, Copy, Debug)]
-struct HeapKey {
+struct CalEntry {
     at: SimTime,
     seq: u64, // tie-break: FIFO among simultaneous events
     slot: u32,
 }
 
-impl PartialEq for HeapKey {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for HeapKey {}
-impl PartialOrd for HeapKey {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapKey {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first. `at` is
-        // guaranteed finite by `schedule`, so total_cmp agrees with the
-        // numeric order.
-        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+impl CalEntry {
+    /// Total order matching the reference heap: earliest time first,
+    /// FIFO (`seq`) among equals. `at` is guaranteed finite by
+    /// `schedule`, so `total_cmp` agrees with the numeric order.
+    #[inline]
+    fn cmp_key(&self, other: &CalEntry) -> Ordering {
+        self.at.total_cmp(&other.at).then_with(|| self.seq.cmp(&other.seq))
     }
 }
 
+/// Smallest wheel; below this, bucket bookkeeping costs more than it saves.
+const MIN_BUCKETS: usize = 64;
+/// Largest wheel (bounds the memory of a skew-triggered grow).
+const MAX_BUCKETS: usize = 1 << 17;
+
 /// The event queue + clock.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Engine {
-    heap: BinaryHeap<HeapKey>,
+    /// The wheel: virtual bucket `v` lives at `v & mask`, each bucket
+    /// sorted ascending by `(at, seq)` so the front is the bucket minimum.
+    buckets: Vec<VecDeque<CalEntry>>,
+    mask: u64,
+    /// Reciprocal of the bucket width (the hot path multiplies; the width
+    /// itself is re-derived from the live event span on every rebuild).
+    inv_width: f64,
+    /// Floor for `width` on rebuilds: the caller's granularity hint.
+    min_width: f64,
+    /// Virtual bucket currently being drained (all pending wheel entries
+    /// have a virtual bucket >= this).
+    cur_vb: u64,
+    /// First virtual bucket that files to `overflow` instead of the wheel.
+    horizon_vb: u64,
+    /// Entries currently on the wheel (excludes `overflow`).
+    wheel_len: usize,
+    /// Far-future events, unsorted; refiled when the wheel drains.
+    overflow: Vec<CalEntry>,
     slab: Vec<EventKind>,
     free: Vec<u32>,
     now: SimTime,
@@ -65,9 +93,39 @@ pub struct Engine {
     dispatched: u64,
 }
 
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::new()
+    }
+}
+
 impl Engine {
     pub fn new() -> Engine {
-        Engine::default()
+        Engine::with_granularity(1.0)
+    }
+
+    /// Build an engine whose bucket width never shrinks below
+    /// `granularity` ns — callers pass the finest meaningful event
+    /// spacing (the fabric's serialization-time quantum) so dense bursts
+    /// do not degenerate into per-event buckets. The width itself is
+    /// re-derived from the live event distribution on every rebuild.
+    pub fn with_granularity(granularity: f64) -> Engine {
+        let min_width = if granularity.is_finite() && granularity > 1e-9 { granularity } else { 1e-9 };
+        Engine {
+            buckets: (0..MIN_BUCKETS).map(|_| VecDeque::new()).collect(),
+            mask: MIN_BUCKETS as u64 - 1,
+            inv_width: 1.0 / min_width,
+            min_width,
+            cur_vb: 0,
+            horizon_vb: MIN_BUCKETS as u64,
+            wheel_len: 0,
+            overflow: Vec::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            now: 0.0,
+            seq: 0,
+            dispatched: 0,
+        }
     }
 
     pub fn now(&self) -> SimTime {
@@ -79,12 +137,20 @@ impl Engine {
         self.dispatched
     }
 
+    #[inline]
+    fn vb_of(&self, at: SimTime) -> u64 {
+        // truncation == floor for the non-negative times `schedule` allows
+        (at * self.inv_width) as u64
+    }
+
     /// Schedule `kind` at absolute time `at` (>= now). Panics on NaN or
-    /// infinite timestamps: a non-finite key would silently corrupt the
-    /// heap order (float comparison has no total order across NaN).
+    /// infinite timestamps (a non-finite key would silently corrupt the
+    /// dispatch order) and on scheduling into the past — a real assert,
+    /// not a debug one: a negative `after` delay in a release build would
+    /// otherwise silently corrupt causality.
     pub fn schedule(&mut self, at: SimTime, kind: EventKind) {
         assert!(at.is_finite(), "non-finite event time {at}");
-        debug_assert!(at >= self.now, "schedule into the past: {at} < {}", self.now);
+        assert!(at >= self.now, "schedule into the past: {at} < {}", self.now);
         self.seq += 1;
         let slot = match self.free.pop() {
             Some(s) => {
@@ -96,7 +162,82 @@ impl Engine {
                 (self.slab.len() - 1) as u32
             }
         };
-        self.heap.push(HeapKey { at, seq: self.seq, slot });
+        self.file(CalEntry { at, seq: self.seq, slot });
+        // grow on skew: occupancy past ~2 entries/bucket means the sorted
+        // per-bucket inserts start paying; refile at a data-derived width
+        let nbuckets = self.buckets.len();
+        if self.wheel_len + self.overflow.len() > 2 * nbuckets && nbuckets < MAX_BUCKETS {
+            self.rebuild();
+        }
+    }
+
+    /// File an entry into its wheel bucket (sorted ascending) or the
+    /// overflow list, maintaining the `cur_vb` lower-bound invariant.
+    fn file(&mut self, e: CalEntry) {
+        let vb = self.vb_of(e.at);
+        if vb >= self.horizon_vb {
+            self.overflow.push(e);
+            return;
+        }
+        if vb < self.cur_vb {
+            // an insert behind the scan position (legal: the scan may have
+            // advanced past empty buckets ahead of `now`) rewinds the scan
+            self.cur_vb = vb;
+        }
+        let q = &mut self.buckets[(vb & self.mask) as usize];
+        // common case: appended at the back (nondecreasing arrivals)
+        if q.back().map(|b| b.cmp_key(&e) == Ordering::Less).unwrap_or(true) {
+            q.push_back(e);
+        } else {
+            let pos = q.partition_point(|x| x.cmp_key(&e) == Ordering::Less);
+            q.insert(pos, e);
+        }
+        self.wheel_len += 1;
+    }
+
+    /// Gather every pending entry, re-derive the wheel geometry from the
+    /// live time distribution (~1 entry/bucket, width floored at the
+    /// granularity hint), and refile — the resize-on-skew step, also the
+    /// path that pulls the overflow list back in.
+    fn rebuild(&mut self) {
+        let mut all: Vec<CalEntry> = Vec::with_capacity(self.wheel_len + self.overflow.len());
+        for q in &mut self.buckets {
+            all.extend(q.drain(..));
+        }
+        all.append(&mut self.overflow);
+        self.wheel_len = 0;
+        if all.is_empty() {
+            self.cur_vb = self.vb_of(self.now);
+            self.horizon_vb = self.cur_vb.saturating_add(self.buckets.len() as u64);
+            return;
+        }
+        let mut min_at = f64::INFINITY;
+        let mut max_at = f64::NEG_INFINITY;
+        for e in &all {
+            min_at = min_at.min(e.at);
+            max_at = max_at.max(e.at);
+        }
+        let n = all.len();
+        let mut w = (max_at - min_at) / n as f64;
+        if !w.is_finite() || w < self.min_width {
+            w = self.min_width;
+        }
+        // keep virtual bucket indices well inside u64 range
+        let w_floor = max_at / 1e15;
+        if w < w_floor {
+            w = w_floor;
+        }
+        let nb = n.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        if nb != self.buckets.len() {
+            self.buckets.resize_with(nb, VecDeque::new);
+        }
+        self.mask = nb as u64 - 1;
+        self.inv_width = 1.0 / w;
+        self.cur_vb = self.vb_of(min_at);
+        self.horizon_vb = self.cur_vb.saturating_add(nb as u64);
+        for e in all {
+            self.file(e);
+        }
     }
 
     /// Schedule `kind` after a delay.
@@ -104,32 +245,186 @@ impl Engine {
         self.schedule(self.now + delay, kind);
     }
 
+    /// Time of the earliest pending event, positioning the wheel scan so
+    /// the following [`Engine::next`] pops it in O(1). `&mut` because the
+    /// scan position (and, on a drained rotation, the wheel geometry)
+    /// advances; the observable queue state is unchanged.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        loop {
+            if self.wheel_len == 0 {
+                if self.overflow.is_empty() {
+                    return None;
+                }
+                self.rebuild(); // rotation drained: pull the overflow in
+                continue;
+            }
+            // all wheel entries are earlier than everything in overflow
+            // (filing splits strictly at horizon_vb), so scanning forward
+            // from cur_vb finds the global minimum
+            let mut scanned = 0usize;
+            loop {
+                let q = &self.buckets[(self.cur_vb & self.mask) as usize];
+                if let Some(front) = q.front() {
+                    // the front is this bucket's minimum; it belongs to the
+                    // current virtual bucket or a later rotation
+                    if self.vb_of(front.at) == self.cur_vb {
+                        return Some(front.at);
+                    }
+                }
+                self.cur_vb += 1;
+                scanned += 1;
+                if scanned > self.buckets.len() {
+                    // a full idle rotation: geometry is stale, recompute
+                    self.rebuild();
+                    break;
+                }
+            }
+        }
+    }
+
     /// Pop the next event, advancing the clock. None when drained.
     /// (Deliberately not an `Iterator`: callers interleave `schedule`.)
     #[allow(clippy::should_implement_trait)]
     #[inline]
     pub fn next(&mut self) -> Option<(SimTime, EventKind)> {
-        let k = self.heap.pop()?;
-        debug_assert!(k.at >= self.now);
-        self.now = k.at;
+        let at = self.peek_time()?;
+        let q = &mut self.buckets[(self.cur_vb & self.mask) as usize];
+        let e = q.pop_front().expect("peek_time positioned a non-empty bucket");
+        debug_assert!(e.at == at);
+        debug_assert!(e.at >= self.now);
+        self.wheel_len -= 1;
+        self.now = e.at;
         self.dispatched += 1;
-        let kind = self.slab[k.slot as usize];
-        self.free.push(k.slot);
-        Some((k.at, kind))
+        let kind = self.slab[e.slot as usize];
+        self.free.push(e.slot);
+        Some((e.at, kind))
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.wheel_len == 0 && self.overflow.is_empty()
     }
 
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.wheel_len + self.overflow.len()
     }
 
     /// Slab high-water mark: the max number of simultaneously pending
     /// events seen so far (capacity telemetry for the §Perf design).
     pub fn slab_slots(&self) -> usize {
         self.slab.len()
+    }
+}
+
+/// The pre-calendar binary-heap engine, kept verbatim as the parity
+/// oracle for the calendar queue (the PR-1 `SerialRouter` pattern): the
+/// property test `calendar_queue_matches_heap_reference` pins dispatch
+/// order — including `seq` tie-breaks — byte-identical between the two.
+pub mod reference {
+    use super::{EventKind, SimTime};
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    /// Heap key: ordering state only; the payload lives in the slab.
+    #[derive(Clone, Copy, Debug)]
+    struct HeapKey {
+        at: SimTime,
+        seq: u64,
+        slot: u32,
+    }
+
+    impl PartialEq for HeapKey {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for HeapKey {}
+    impl PartialOrd for HeapKey {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for HeapKey {
+        fn cmp(&self, other: &Self) -> Ordering {
+            // BinaryHeap is a max-heap: invert for earliest-first
+            other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    /// The binary-heap event queue + clock (reference implementation).
+    #[derive(Debug, Default)]
+    pub struct HeapEngine {
+        heap: BinaryHeap<HeapKey>,
+        slab: Vec<EventKind>,
+        free: Vec<u32>,
+        now: SimTime,
+        seq: u64,
+        dispatched: u64,
+    }
+
+    impl HeapEngine {
+        pub fn new() -> HeapEngine {
+            HeapEngine::default()
+        }
+
+        pub fn now(&self) -> SimTime {
+            self.now
+        }
+
+        pub fn dispatched(&self) -> u64 {
+            self.dispatched
+        }
+
+        /// Schedule `kind` at absolute time `at` (>= now); same panics as
+        /// [`super::Engine::schedule`].
+        pub fn schedule(&mut self, at: SimTime, kind: EventKind) {
+            assert!(at.is_finite(), "non-finite event time {at}");
+            assert!(at >= self.now, "schedule into the past: {at} < {}", self.now);
+            self.seq += 1;
+            let slot = match self.free.pop() {
+                Some(s) => {
+                    self.slab[s as usize] = kind;
+                    s
+                }
+                None => {
+                    self.slab.push(kind);
+                    (self.slab.len() - 1) as u32
+                }
+            };
+            self.heap.push(HeapKey { at, seq: self.seq, slot });
+        }
+
+        pub fn after(&mut self, delay: SimTime, kind: EventKind) {
+            self.schedule(self.now + delay, kind);
+        }
+
+        /// Time of the earliest pending event (`&mut` only for signature
+        /// parity with the calendar engine).
+        pub fn peek_time(&mut self) -> Option<SimTime> {
+            self.heap.peek().map(|k| k.at)
+        }
+
+        #[allow(clippy::should_implement_trait)]
+        pub fn next(&mut self) -> Option<(SimTime, EventKind)> {
+            let k = self.heap.pop()?;
+            debug_assert!(k.at >= self.now);
+            self.now = k.at;
+            self.dispatched += 1;
+            let kind = self.slab[k.slot as usize];
+            self.free.push(k.slot);
+            Some((k.at, kind))
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.heap.is_empty()
+        }
+
+        pub fn pending(&self) -> usize {
+            self.heap.len()
+        }
+
+        pub fn slab_slots(&self) -> usize {
+            self.slab.len()
+        }
     }
 }
 
@@ -165,6 +460,7 @@ mod tests {
             }
             last = Some(tag);
         }
+        assert_eq!(last, Some(99));
     }
 
     #[test]
@@ -185,10 +481,27 @@ mod tests {
             e.schedule(rng.f64() * 1e6, EventKind::Custom { tag: 0 });
         }
         let mut last = 0.0;
+        let mut n = 0;
         while let Some((at, _)) = e.next() {
             assert!(at >= last);
             last = at;
+            n += 1;
         }
+        assert_eq!(n, 1000);
+    }
+
+    #[test]
+    fn peek_matches_next() {
+        let mut e = Engine::new();
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..500 {
+            e.schedule(rng.f64() * 1e4, EventKind::Custom { tag: 0 });
+        }
+        while let Some(t) = e.peek_time() {
+            let (at, _) = e.next().unwrap();
+            assert_eq!(at, t, "peek_time disagreed with next");
+        }
+        assert!(e.is_empty());
     }
 
     #[test]
@@ -203,6 +516,25 @@ mod tests {
     fn infinite_timestamp_rejected() {
         let mut e = Engine::new();
         e.schedule(f64::INFINITY, EventKind::Custom { tag: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule into the past")]
+    fn past_scheduling_rejected_in_release_too() {
+        let mut e = Engine::new();
+        e.schedule(100.0, EventKind::Custom { tag: 0 });
+        e.next();
+        // a negative delay must not silently corrupt causality
+        e.after(-50.0, EventKind::Custom { tag: 1 });
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule into the past")]
+    fn reference_heap_also_rejects_past_scheduling() {
+        let mut e = reference::HeapEngine::new();
+        e.schedule(100.0, EventKind::Custom { tag: 0 });
+        e.next();
+        e.after(-50.0, EventKind::Custom { tag: 1 });
     }
 
     #[test]
@@ -231,5 +563,79 @@ mod tests {
         e.schedule(2.0, EventKind::Complete { id: 9 });
         assert_eq!(e.slab_slots(), 1);
         assert_eq!(e.next(), Some((2.0, EventKind::Complete { id: 9 })));
+    }
+
+    #[test]
+    fn far_future_overflow_round_trips() {
+        // events far beyond the initial wheel horizon must park in the
+        // overflow list and come back in order once the wheel drains
+        let mut e = Engine::new();
+        e.schedule(1e9, EventKind::Custom { tag: 2 });
+        e.schedule(0.5, EventKind::Custom { tag: 0 });
+        e.schedule(2e9, EventKind::Custom { tag: 3 });
+        e.schedule(1.5, EventKind::Custom { tag: 1 });
+        assert_eq!(e.pending(), 4);
+        let mut tags = Vec::new();
+        while let Some((_, EventKind::Custom { tag })) = e.next() {
+            tags.push(tag);
+        }
+        assert_eq!(tags, vec![0, 1, 2, 3]);
+        assert_eq!(e.now(), 2e9);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_dispatch_stay_ordered() {
+        // rolling window, like a live simulation: each dispatch schedules
+        // a new event one window ahead
+        let mut e = Engine::with_granularity(0.25);
+        for i in 0..256u64 {
+            e.schedule(i as f64, EventKind::Custom { tag: i });
+        }
+        let mut fired = 0u64;
+        let mut last = 0.0;
+        while fired < 20_000 {
+            let (now, _) = e.next().unwrap();
+            assert!(now >= last);
+            last = now;
+            e.schedule(now + 256.0, EventKind::Custom { tag: 0 });
+            fired += 1;
+        }
+        assert_eq!(e.pending(), 256);
+    }
+
+    #[test]
+    fn matches_reference_heap_on_random_interleavings() {
+        // inline smoke version of the full property test in
+        // tests/prop_invariants.rs
+        let mut rng = crate::util::Rng::new(0xCA1);
+        let mut cal = Engine::new();
+        let mut heap = reference::HeapEngine::new();
+        let mut out_cal = Vec::new();
+        let mut out_heap = Vec::new();
+        for step in 0..5_000u64 {
+            if rng.f64() < 0.6 {
+                // mix of near, same-timestamp, and far-future schedules
+                let base = cal.now();
+                let at = match rng.below(4) {
+                    0 => base,
+                    1 => base + rng.f64() * 10.0,
+                    2 => base + rng.f64() * 1_000.0,
+                    _ => base + 1e7 + rng.f64() * 1e9,
+                };
+                cal.schedule(at, EventKind::Custom { tag: step });
+                heap.schedule(at, EventKind::Custom { tag: step });
+            } else {
+                out_cal.push(cal.next());
+                out_heap.push(heap.next());
+            }
+        }
+        while let Some(ev) = cal.next() {
+            out_cal.push(Some(ev));
+        }
+        while let Some(ev) = heap.next() {
+            out_heap.push(Some(ev));
+        }
+        assert_eq!(out_cal, out_heap);
+        assert_eq!(cal.dispatched(), heap.dispatched());
     }
 }

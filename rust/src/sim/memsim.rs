@@ -76,17 +76,18 @@ struct InFlight {
 
 /// Precomputed per-link hot-path constants (§Perf: avoids re-deriving
 /// PHY/flit math and link-struct lookups on every arrival event).
+/// `pub(crate)` so the sharded workers in [`super::shard`] share them.
 #[derive(Clone, Copy)]
-struct LinkConsts {
+pub(crate) struct LinkConsts {
     /// 1 / (raw_bw * phy_efficiency), ns per wire byte.
-    inv_rate: f64,
+    pub(crate) inv_rate: f64,
     /// prop + phy + framing, ns.
-    fixed_ns: f64,
+    pub(crate) fixed_ns: f64,
     /// switch traversal at node a / node b (0 if not a switch).
-    switch_ns: [f64; 2],
+    pub(crate) switch_ns: [f64; 2],
     /// Flit format, copied out of the link so the handler touches no
     /// topology memory.
-    flit: FlitFormat,
+    pub(crate) flit: FlitFormat,
 }
 
 /// Lifecycle of a source inside the streamed loop.
@@ -100,10 +101,13 @@ enum SrcState {
 
 /// The simulator.
 pub struct MemSim<'f> {
-    fabric: &'f Fabric,
+    pub(crate) fabric: &'f Fabric,
     /// one server per (link, direction)
-    servers: Vec<[Server; 2]>,
-    consts: Vec<LinkConsts>,
+    pub(crate) servers: Vec<[Server; 2]>,
+    pub(crate) consts: Vec<LinkConsts>,
+    /// Serialization-time quantum of the fastest link: the calendar
+    /// engine's bucket-width floor (§Perf).
+    pub(crate) granularity: f64,
     /// interned hops, `(link << 1) | dir`, contiguous per path
     hop_arena: Vec<u32>,
     /// `(src << 32) | dst` -> (start, len) into `hop_arena`
@@ -113,7 +117,7 @@ pub struct MemSim<'f> {
 impl<'f> MemSim<'f> {
     pub fn new(fabric: &'f Fabric) -> Self {
         let servers = (0..fabric.topo.links.len()).map(|_| [Server::new(), Server::new()]).collect();
-        let consts = fabric
+        let consts: Vec<LinkConsts> = fabric
             .topo
             .links
             .iter()
@@ -130,10 +134,18 @@ impl<'f> MemSim<'f> {
                 }
             })
             .collect();
+        // calendar bucket-width floor: the wire time of one cache line on
+        // the fastest link — no two hop events of one flow land closer
+        let granularity = consts
+            .iter()
+            .map(|c| c.flit.wire_bytes(64.0) * c.inv_rate)
+            .fold(f64::INFINITY, f64::min)
+            .clamp(1e-3, 1e3);
         MemSim {
             fabric,
             servers,
             consts,
+            granularity,
             hop_arena: Vec::new(),
             path_cache: HashMap::new(),
         }
@@ -215,7 +227,7 @@ impl<'f> MemSim<'f> {
     /// endpoints are unreachable.
     pub fn run_streamed(&mut self, sources: &mut [&mut dyn TrafficSource]) -> StreamReport {
         let n = sources.len();
-        let mut engine = Engine::new();
+        let mut engine = Engine::with_granularity(self.granularity);
         let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
         let mut staged: Vec<Option<SourcedTx>> = (0..n).map(|_| None).collect();
         let mut state = vec![SrcState::Active; n];
@@ -269,7 +281,15 @@ impl<'f> MemSim<'f> {
                     let tx = stx.tx;
                     let (path_start, path_len) = match self.intern_path(tx.src, tx.dst) {
                         Some(r) => r,
-                        None => panic!("no path {} -> {}", tx.src, tx.dst),
+                        None => panic!(
+                            "no path {} ({}) -> {} ({}) for traffic source {} (class {})",
+                            tx.src,
+                            self.fabric.topo.node(tx.src).label,
+                            tx.dst,
+                            self.fabric.topo.node(tx.dst).label,
+                            i,
+                            classes[i].name()
+                        ),
                     };
                     let entry = InFlight {
                         issued: now,
@@ -318,6 +338,37 @@ impl<'f> MemSim<'f> {
         // recycle through the free list) — the streaming memory contract
         report.peak_inflight = slots.len();
         report
+    }
+
+    /// Multi-core sibling of [`MemSim::run_streamed`]: partition the
+    /// fabric into topology-derived domains (rack/leaf subtrees), run one
+    /// calendar engine per shard on scoped worker threads, and hand
+    /// cross-shard transactions off through per-shard mailboxes under
+    /// conservative lookahead (bounded below by the minimum
+    /// cross-partition hop latency). Per-class completed counts, byte
+    /// totals and the per-transaction latency multiset match the serial
+    /// backend exactly (pinned by `prop_sharded_matches_serial`).
+    ///
+    /// Falls back to the serial loop when sharding cannot help or cannot
+    /// be conservative: a single shard, non-positive lookahead, or any
+    /// reactive (non-[`TrafficSource::open_loop`]) source.
+    pub fn run_streamed_sharded(&mut self, sources: &mut [&mut dyn TrafficSource]) -> StreamReport {
+        let shards = crate::util::par::shards_for(usize::MAX);
+        self.run_streamed_sharded_with(sources, shards)
+    }
+
+    /// As [`MemSim::run_streamed_sharded`] with an explicit shard-count
+    /// cap (the actual count is `min(max_shards, topology domains)`).
+    pub fn run_streamed_sharded_with(
+        &mut self,
+        sources: &mut [&mut dyn TrafficSource],
+        max_shards: usize,
+    ) -> StreamReport {
+        let open = sources.iter().all(|s| s.open_loop());
+        match super::shard::plan(self.fabric, &self.consts, max_shards) {
+            Some(plan) if open => super::shard::run(self, sources, &plan),
+            _ => self.run_streamed(sources),
+        }
     }
 
     /// Utilization of the busiest link direction over the makespan.

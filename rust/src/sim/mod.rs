@@ -23,17 +23,24 @@
 //! class being modeled in a closed-form silo.
 //!
 //! Hot-path design (§Perf, see `benches/simscale.rs` for the numbers):
-//! the [`Engine`] heap carries lean `(time, seq, handle)` keys with
-//! payloads in a recycled slab, and [`MemSim`] interns routed paths per
+//! the [`Engine`] is a calendar queue (timing wheel) carrying lean
+//! `(time, seq, handle)` keys with payloads in a recycled slab (the
+//! pre-calendar binary heap survives as `engine::reference::HeapEngine`,
+//! the dispatch-order oracle), and [`MemSim`] interns routed paths per
 //! `(src, dst)` pair (packed into one `u64` key) with precomputed per-hop
 //! direction bits — sized for millions of transactions over
 //! multi-thousand-node fabrics. Streamed injection pulls sources one
 //! transaction ahead and recycles in-flight slots, so memory scales with
-//! peak concurrency, not workload length.
+//! peak concurrency, not workload length. For pod-scale open-loop runs,
+//! [`MemSim::run_streamed_sharded`] partitions the fabric into
+//! topology-derived domains and streams one engine per shard under
+//! conservative lookahead (module `shard`), matching the serial backend's
+//! per-class counts, byte totals and latency multiset exactly.
 
 pub mod engine;
 pub mod server;
 pub mod memsim;
+mod shard;
 pub mod traffic;
 
 pub use engine::{Engine, EventKind};

@@ -1,0 +1,711 @@
+//! Sharded conservative execution of the streamed simulation: the fabric
+//! is partitioned into topology-derived domains (rack/leaf subtrees, see
+//! [`Topology::partition_domains`](crate::fabric::Topology::partition_domains)),
+//! each shard owns the FCFS servers of its links and runs its own
+//! calendar [`Engine`] on a scoped worker thread, and transactions whose
+//! next hop leaves the shard are handed off through per-shard mailboxes.
+//!
+//! # Conservative synchronization
+//!
+//! Parallelism is *conservative* (no rollback): simulation advances in
+//! epochs `[T0, T0 + L)` where `T0` is the earliest pending event or
+//! injection anywhere and `L` is the **lookahead** — the minimum latency
+//! any transaction needs to cross a partition boundary, computed as the
+//! minimum over boundary-forwarding link directions of
+//! `fixed_ns + switch_traversal` (a handoff's arrival time is
+//! `server_done + fixed + switch`, and `server_done >= now`, so every
+//! cross-shard message generated inside an epoch is stamped `>= T0 + L`
+//! and can safely be delivered at the epoch barrier). With `L <= 0` or a
+//! single domain the caller falls back to the serial loop.
+//!
+//! Sources stay on the coordinator thread: only **open-loop** sources
+//! ([`TrafficSource::open_loop`]) are eligible, so injections can be
+//! staged ahead of the window and `on_complete` is telemetry-only
+//! (invoked at the barrier in completion-time order). A reactive source's
+//! zero-delay completion→emission chain could cross shards faster than
+//! any fabric lookahead — those workloads keep the exact serial loop.
+//!
+//! # Equivalence
+//!
+//! Within a shard events dispatch in `(time, seq)` order and every
+//! per-server admission sequence is time-ordered exactly as in the serial
+//! loop, so per-class completed counts, byte totals and the sorted
+//! per-transaction latency multiset match the serial backend
+//! (`tests/prop_invariants.rs::prop_sharded_matches_serial`). Event
+//! *counts* use the same convention as the serial streamed loop (one
+//! injection event per transaction on top of the hop events).
+
+use super::engine::{Engine, EventKind};
+use super::memsim::{LinkConsts, MemSim};
+use super::server::Server;
+use super::traffic::{Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
+use crate::fabric::{Fabric, NodeKind};
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+/// Per-source injections staged beyond the current window are bounded, so
+/// streamed memory stays O(peak in-flight) even under infinite lookahead
+/// (fully disjoint shards).
+const MAX_STAGE_PER_SOURCE: usize = 4096;
+
+/// The partition and its conservative bound.
+pub(crate) struct ShardPlan {
+    pub(crate) node_shard: Vec<u32>,
+    pub(crate) link_shard: Vec<u32>,
+    pub(crate) nshards: usize,
+    /// Minimum cross-partition hop latency, ns (`f64::INFINITY` when no
+    /// path crosses a boundary — shards then run fully decoupled).
+    pub(crate) lookahead: f64,
+}
+
+/// Transaction state carried across shard boundaries by value (each shard
+/// interns paths locally, so messages stay plain scalars).
+#[derive(Clone, Copy)]
+struct ShardTx {
+    issued: f64,
+    bytes: f64,
+    device_ns: f64,
+    src: u32,
+    dst: u32,
+    source: u32,
+    token: u64,
+}
+
+/// A mailbox message: "transaction `tx` arrives at hop `hop` at `at`".
+/// Injections are the `hop == 0` case.
+struct Handoff {
+    at: f64,
+    hop: u32,
+    tx: ShardTx,
+}
+
+struct LocalTx {
+    tx: ShardTx,
+    path_start: u32,
+    path_len: u32,
+}
+
+enum Cmd {
+    Epoch { t1: f64, inbox: Vec<Handoff> },
+    Finish,
+}
+
+struct Completion {
+    at: f64,
+    latency: f64,
+    bytes: f64,
+    source: u32,
+    token: u64,
+}
+
+enum Resp {
+    Epoch {
+        shard: usize,
+        /// Cross-shard handoffs generated this epoch: `(target, message)`.
+        out: Vec<(u32, Handoff)>,
+        completions: Vec<Completion>,
+        /// Earliest still-pending local event (INFINITY when idle).
+        next_event: f64,
+    },
+    Final {
+        shard: usize,
+        servers: Vec<[Server; 2]>,
+        now: f64,
+        dispatched: u64,
+        peak_slots: usize,
+    },
+}
+
+/// Derive the shard plan: topology domains, link ownership and the
+/// conservative lookahead. `None` when sharding cannot help (one domain,
+/// one requested shard, or a non-positive lookahead) — callers fall back
+/// to the serial loop.
+pub(crate) fn plan(fabric: &Fabric, consts: &[LinkConsts], max_shards: usize) -> Option<ShardPlan> {
+    if max_shards <= 1 {
+        return None;
+    }
+    let topo = &fabric.topo;
+    let node_shard = topo.partition_domains(max_shards);
+    let nshards = node_shard.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    if nshards <= 1 {
+        return None;
+    }
+    // a link lives with its endpoint's subtree (the endpoint side when one
+    // side is an endpoint, else node `a`'s domain) — every link is owned
+    // by exactly one shard, which owns both direction servers
+    let link_shard: Vec<u32> = topo
+        .links
+        .iter()
+        .map(|l| {
+            if topo.node(l.a).kind != NodeKind::Switch {
+                node_shard[l.a]
+            } else if topo.node(l.b).kind != NodeKind::Switch {
+                node_shard[l.b]
+            } else {
+                node_shard[l.a]
+            }
+        })
+        .collect();
+    let first = link_shard.first().copied();
+    if link_shard.iter().all(|&s| Some(s) == first) {
+        return None; // every link in one shard: nothing to parallelize
+    }
+    // gateway nodes: incident links span more than one shard — the only
+    // places a path can change shards
+    let mut gateway = vec![false; topo.nodes.len()];
+    for (n, g) in gateway.iter_mut().enumerate() {
+        let mut s0 = None;
+        for &(_, l) in topo.neighbors(n) {
+            match s0 {
+                None => s0 = Some(link_shard[l]),
+                Some(x) if x != link_shard[l] => {
+                    *g = true;
+                    break;
+                }
+                _ => {}
+            }
+        }
+    }
+    // lookahead: a handoff out of link (l, dir) arrives at
+    // done + fixed + switch_at_receiver with done >= now, so minimize
+    // fixed + switch over directions whose receiving node is a gateway
+    // (usually a switch; a non-switch gateway contributes switch_ns = 0,
+    // which keeps the bound conservative on graphs that route through
+    // endpoints)
+    let mut lookahead = f64::INFINITY;
+    for (li, l) in topo.links.iter().enumerate() {
+        for (side, node) in [(0usize, l.a), (1usize, l.b)] {
+            if gateway[node] {
+                lookahead = lookahead.min(consts[li].fixed_ns + consts[li].switch_ns[side]);
+            }
+        }
+    }
+    if lookahead <= 0.0 {
+        return None; // a zero-latency boundary hop: cannot be conservative
+    }
+    Some(ShardPlan { node_shard, link_shard, nshards, lookahead })
+}
+
+/// Pull source `i` once so it is staged one transaction ahead (the
+/// `(clamped issue time, tx)` pair), marking it done when exhausted.
+/// The clamp `at = tx.at.max(last_issue)` replicates the serial pump,
+/// whose `now` at pull time is the source's previous injection time.
+fn stage_next(
+    i: usize,
+    sources: &mut [&mut dyn TrafficSource],
+    staged: &mut [Option<(f64, SourcedTx)>],
+    src_done: &mut [bool],
+    last_issue: &[f64],
+    classes: &[TrafficClass],
+) {
+    if src_done[i] || staged[i].is_some() {
+        return;
+    }
+    match sources[i].pull(last_issue[i]) {
+        Pull::Tx(stx) => {
+            let at = stx.tx.at.max(last_issue[i]);
+            staged[i] = Some((at, stx));
+        }
+        Pull::Done => src_done[i] = true,
+        Pull::Blocked => panic!(
+            "traffic source {i} (class {}) returned Blocked but declared itself open-loop",
+            classes[i].name()
+        ),
+    }
+}
+
+/// Run the sharded simulation. Callers have already verified the plan and
+/// that every source is open-loop.
+pub(crate) fn run(
+    sim: &mut MemSim,
+    sources: &mut [&mut dyn TrafficSource],
+    plan: &ShardPlan,
+) -> StreamReport {
+    let fabric: &Fabric = sim.fabric;
+    let consts: &[LinkConsts] = &sim.consts;
+    let granularity = sim.granularity;
+    let k = plan.nshards;
+    let nsrc = sources.len();
+    let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
+
+    let mut report = StreamReport::new();
+    let mut merged_servers = sim.servers.clone();
+    let mut makespan = 0.0f64;
+    let mut events = 0u64;
+    let mut peak_inflight = 0usize;
+
+    std::thread::scope(|scope| {
+        let link_shard: &[u32] = &plan.link_shard;
+        let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(k);
+        // one response channel per worker: a dead worker (panic on one of
+        // its diagnostic paths) surfaces as a recv error on ITS channel
+        // instead of deadlocking the coordinator behind the survivors'
+        // still-open clones of a shared sender; shard-ordered collection
+        // also makes mailbox fill order deterministic
+        let mut res_rxs: Vec<mpsc::Receiver<Resp>> = Vec::with_capacity(k);
+        for shard in 0..k {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let (res_tx, res_rx) = mpsc::channel::<Resp>();
+            cmd_txs.push(cmd_tx);
+            res_rxs.push(res_rx);
+            let servers0 = sim.servers.clone();
+            scope.spawn(move || worker(shard, cmd_rx, res_tx, servers0, fabric, consts, link_shard, granularity));
+        }
+
+        // coordinator state: one staged transaction per source plus the
+        // per-shard mailboxes carrying next-epoch deliveries
+        let mut staged: Vec<Option<(f64, SourcedTx)>> = (0..nsrc).map(|_| None).collect();
+        let mut src_done = vec![false; nsrc];
+        let mut last_issue = vec![0.0f64; nsrc];
+        let mut inboxes: Vec<Vec<Handoff>> = (0..k).map(|_| Vec::new()).collect();
+        let mut next_events = vec![f64::INFINITY; k];
+
+        loop {
+            // keep every active source staged one transaction ahead
+            for i in 0..nsrc {
+                stage_next(i, sources, &mut staged, &mut src_done, &last_issue, &classes);
+            }
+            let t_staged =
+                staged.iter().flatten().map(|(at, _)| *at).fold(f64::INFINITY, f64::min);
+            let t_inbox = inboxes
+                .iter()
+                .flat_map(|b| b.iter().map(|h| h.at))
+                .fold(f64::INFINITY, f64::min);
+            let t_engines = next_events.iter().copied().fold(f64::INFINITY, f64::min);
+            let t0 = t_staged.min(t_inbox).min(t_engines);
+            if !t0.is_finite() {
+                break; // sources drained, mailboxes empty, engines idle
+            }
+            let mut t1 = t0 + plan.lookahead; // INFINITY lookahead: one epoch
+
+            // stage every injection below the window into its first-hop
+            // shard's mailbox; the per-source cap bounds memory, shrinking
+            // the window to the first unstaged issue time when it bites
+            for i in 0..nsrc {
+                let mut staged_here = 0usize;
+                loop {
+                    stage_next(i, sources, &mut staged, &mut src_done, &last_issue, &classes);
+                    if src_done[i] {
+                        break;
+                    }
+                    let at = staged[i].as_ref().expect("staged above").0;
+                    if at >= t1 {
+                        break;
+                    }
+                    // soft cap: shrinking the window below `at` is only
+                    // allowed while it stays strictly above t0, or the
+                    // epoch could stall on a same-timestamp burst
+                    if staged_here >= MAX_STAGE_PER_SOURCE && at > t0 {
+                        t1 = t1.min(at); // keep the window conservative
+                        break;
+                    }
+                    let (at, stx) = staged[i].take().expect("staged above");
+                    last_issue[i] = at;
+                    let tx = stx.tx;
+                    let target = if tx.src == tx.dst {
+                        plan.node_shard[tx.src] as usize
+                    } else {
+                        match fabric.router().next_hop(tx.src, tx.dst) {
+                            Some((_, link)) => plan.link_shard[link] as usize,
+                            None => panic!(
+                                "no path {} ({}) -> {} ({}) for traffic source {} (class {})",
+                                tx.src,
+                                fabric.topo.node(tx.src).label,
+                                tx.dst,
+                                fabric.topo.node(tx.dst).label,
+                                i,
+                                classes[i].name()
+                            ),
+                        }
+                    };
+                    inboxes[target].push(Handoff {
+                        at,
+                        hop: 0,
+                        tx: ShardTx {
+                            issued: at,
+                            bytes: tx.bytes,
+                            device_ns: tx.device_ns,
+                            src: tx.src as u32,
+                            dst: tx.dst as u32,
+                            source: i as u32,
+                            token: stx.token,
+                        },
+                    });
+                    staged_here += 1;
+                }
+            }
+
+            // wake only shards with deliveries or events inside the window
+            let mut pinged = vec![false; k];
+            for s in 0..k {
+                if !inboxes[s].is_empty() || next_events[s] < t1 {
+                    let inbox = std::mem::take(&mut inboxes[s]);
+                    next_events[s] = f64::INFINITY; // refreshed by the response
+                    cmd_txs[s].send(Cmd::Epoch { t1, inbox }).expect("shard worker alive");
+                    pinged[s] = true;
+                }
+            }
+            assert!(
+                pinged.iter().any(|&p| p),
+                "conservative window made no progress (t0={t0}, t1={t1})"
+            );
+
+            let mut completions: Vec<Completion> = Vec::new();
+            for s in (0..k).filter(|&s| pinged[s]) {
+                match res_rxs[s].recv().expect("shard worker alive") {
+                    Resp::Epoch { shard, out, completions: c, next_event } => {
+                        debug_assert_eq!(shard, s);
+                        next_events[shard] = next_event;
+                        for (target, h) in out {
+                            inboxes[target as usize].push(h);
+                        }
+                        completions.extend(c);
+                    }
+                    Resp::Final { .. } => unreachable!("Final before Finish"),
+                }
+            }
+            // merge the barrier's completions in global time order so the
+            // report streams identically to the serial loop
+            completions.sort_by(|a, b| {
+                a.at
+                    .total_cmp(&b.at)
+                    .then_with(|| a.source.cmp(&b.source))
+                    .then_with(|| a.token.cmp(&b.token))
+            });
+            for c in completions {
+                report.record(classes[c.source as usize], c.latency, c.bytes);
+                sources[c.source as usize].on_complete(c.token, c.at);
+            }
+        }
+
+        for tx in &cmd_txs {
+            tx.send(Cmd::Finish).expect("shard worker alive");
+        }
+        for (s, rx) in res_rxs.iter().enumerate() {
+            match rx.recv().expect("shard worker alive") {
+                Resp::Final { shard, servers, now, dispatched, peak_slots } => {
+                    debug_assert_eq!(shard, s);
+                    makespan = makespan.max(now);
+                    events += dispatched;
+                    // the sum of per-shard slot high-waters: the slot
+                    // memory actually allocated, an upper bound on the
+                    // serial definition (true peak concurrency) since the
+                    // shards peak at different times and a multi-shard
+                    // path occupies one slot per visited shard
+                    peak_inflight += peak_slots;
+                    for (li, srv) in servers.into_iter().enumerate() {
+                        if plan.link_shard[li] as usize == shard {
+                            merged_servers[li] = srv;
+                        }
+                    }
+                }
+                Resp::Epoch { .. } => unreachable!("Epoch after Finish"),
+            }
+        }
+    });
+
+    sim.servers = merged_servers;
+    report.total.makespan_ns = makespan;
+    // same count as the serial streamed loop: its per-transaction
+    // injection event is the sharded loop's hop-0 arrival event
+    report.total.events = events;
+    report.peak_inflight = peak_inflight;
+    report
+}
+
+/// One shard: a calendar engine over the shard's link servers, draining
+/// events strictly below each epoch's `t1` and emitting cross-shard
+/// handoffs for the barrier.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    shard: usize,
+    cmds: mpsc::Receiver<Cmd>,
+    res: mpsc::Sender<Resp>,
+    mut servers: Vec<[Server; 2]>,
+    fabric: &Fabric,
+    consts: &[LinkConsts],
+    link_shard: &[u32],
+    granularity: f64,
+) {
+    let mut engine = Engine::with_granularity(granularity);
+    let mut slots: Vec<LocalTx> = Vec::new();
+    let mut free: Vec<u32> = Vec::new();
+    // shard-local path interning (same arena layout as the serial path;
+    // a path crossing three shards is interned by each of the three)
+    let mut arena: Vec<u32> = Vec::new();
+    let mut cache: HashMap<u64, (u32, u32)> = HashMap::new();
+
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            Cmd::Epoch { t1, inbox } => {
+                let mut out: Vec<(u32, Handoff)> = Vec::new();
+                let mut completions: Vec<Completion> = Vec::new();
+                for h in inbox {
+                    let (path_start, path_len) = intern_local(fabric, &mut arena, &mut cache, &h.tx);
+                    let entry = LocalTx { tx: h.tx, path_start, path_len };
+                    let id = match free.pop() {
+                        Some(s) => {
+                            slots[s as usize] = entry;
+                            s as usize
+                        }
+                        None => {
+                            slots.push(entry);
+                            slots.len() - 1
+                        }
+                    };
+                    engine.schedule(h.at, EventKind::Arrive { id, hop: h.hop as usize });
+                }
+                while let Some(t) = engine.peek_time() {
+                    if t >= t1 {
+                        break;
+                    }
+                    let (now, ev) = engine.next().expect("peeked event");
+                    match ev {
+                        EventKind::Arrive { id, hop } => {
+                            // mirror of MemSim::step, with the cross-shard
+                            // branch on the next hop's link owner
+                            let lt = &slots[id];
+                            let path_len = lt.path_len as usize;
+                            if hop >= path_len {
+                                engine.after(lt.tx.device_ns, EventKind::Complete { id });
+                                continue;
+                            }
+                            let h = arena[lt.path_start as usize + hop];
+                            let link = (h >> 1) as usize;
+                            let dir = (h & 1) as usize;
+                            debug_assert_eq!(
+                                link_shard[link] as usize, shard,
+                                "event for a foreign link reached shard {shard}"
+                            );
+                            let c = &consts[link];
+                            let service = c.flit.wire_bytes(lt.tx.bytes) * c.inv_rate;
+                            let done = servers[link][dir].admit(now, service);
+                            let sw = c.switch_ns[1 - dir];
+                            let t_next = done + c.fixed_ns + sw;
+                            let nh = hop + 1;
+                            if nh < path_len {
+                                let next_link = (arena[lt.path_start as usize + nh] >> 1) as usize;
+                                let target = link_shard[next_link];
+                                if target as usize != shard {
+                                    out.push((target, Handoff { at: t_next, hop: nh as u32, tx: lt.tx }));
+                                    free.push(id as u32);
+                                    continue;
+                                }
+                            }
+                            engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+                        }
+                        EventKind::Complete { id } => {
+                            let lt = &slots[id];
+                            completions.push(Completion {
+                                at: now,
+                                latency: now - lt.tx.issued,
+                                bytes: lt.tx.bytes,
+                                source: lt.tx.source,
+                                token: lt.tx.token,
+                            });
+                            free.push(id as u32);
+                        }
+                        EventKind::Custom { .. } => {
+                            unreachable!("sharded shards schedule no custom events")
+                        }
+                    }
+                }
+                let next_event = engine.peek_time().unwrap_or(f64::INFINITY);
+                if res.send(Resp::Epoch { shard, out, completions, next_event }).is_err() {
+                    return; // coordinator gone (panic unwinding)
+                }
+            }
+            Cmd::Finish => {
+                let _ = res.send(Resp::Final {
+                    shard,
+                    servers,
+                    now: engine.now(),
+                    dispatched: engine.dispatched(),
+                    peak_slots: slots.len(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Shard-local twin of `MemSim::intern_path` (same arena packing:
+/// `(link << 1) | direction`, direction decided once at build time).
+fn intern_local(
+    fabric: &Fabric,
+    arena: &mut Vec<u32>,
+    cache: &mut HashMap<u64, (u32, u32)>,
+    tx: &ShardTx,
+) -> (u32, u32) {
+    let key = ((tx.src as u64) << 32) | tx.dst as u64;
+    if let Some(&r) = cache.get(&key) {
+        return r;
+    }
+    let router = fabric.router();
+    let start = arena.len() as u32;
+    let mut cur = tx.src as usize;
+    let dst = tx.dst as usize;
+    while cur != dst {
+        let Some((nxt, link)) = router.next_hop(cur, dst) else {
+            // the coordinator verified the first hop, so this means the
+            // PBR table lost the route mid-path — name the flow anyway
+            panic!(
+                "no path {} ({}) -> {} ({}) for traffic source {}",
+                tx.src,
+                fabric.topo.node(tx.src as usize).label,
+                tx.dst,
+                fabric.topo.node(tx.dst as usize).label,
+                tx.source
+            );
+        };
+        let dir = if fabric.topo.link(link).a == cur { 0u32 } else { 1u32 };
+        arena.push(((link as u32) << 1) | dir);
+        cur = nxt;
+    }
+    let entry = (start, arena.len() as u32 - start);
+    cache.insert(key, entry);
+    entry
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{LinkKind, Topology};
+    use crate::sim::memsim::MemSim;
+    use crate::sim::{BatchSource, Transaction};
+
+    /// A pod-shaped Clos: `leaves` leaf switches, endpoints per leaf.
+    fn clos(leaves: usize, spines: usize, eps: usize) -> (Fabric, Vec<usize>) {
+        let (mut t, leaf_ids) = Topology::clos(leaves, spines, LinkKind::CxlCoherent, "f");
+        let mut out = Vec::new();
+        for (i, &l) in leaf_ids.iter().enumerate() {
+            for e in 0..eps {
+                let n = t.add_node(NodeKind::Accelerator, format!("ep{i}-{e}"));
+                t.connect(n, l, LinkKind::CxlCoherent);
+                out.push(n);
+            }
+        }
+        (Fabric::new(t), out)
+    }
+
+    fn workload(eps: &[usize], n: usize, seed: u64) -> Vec<Transaction> {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut at = 0.0;
+        (0..n)
+            .map(|_| {
+                at += rng.exp(1.0 / 25.0) + 1e-6;
+                let s = rng.below(eps.len() as u64) as usize;
+                let mut d = rng.below(eps.len() as u64) as usize;
+                if d == s {
+                    d = (d + 1) % eps.len();
+                }
+                Transaction { src: eps[s], dst: eps[d], at, bytes: 2048.0, device_ns: 90.0 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_reflects_topology() {
+        let (f, _) = clos(8, 2, 4);
+        let sim = MemSim::new(&f);
+        let p = plan(&f, &sim.consts, 4).expect("clos must shard");
+        assert!(p.nshards >= 2 && p.nshards <= 4);
+        assert!(p.lookahead > 0.0 && p.lookahead.is_finite());
+        assert_eq!(p.link_shard.len(), f.topo.links.len());
+        // single-hop rack: one domain, no plan
+        let t = Topology::single_hop(8, LinkKind::NvLink5, "r");
+        let f1 = Fabric::new(t);
+        let s1 = MemSim::new(&f1);
+        assert!(plan(&f1, &s1.consts, 4).is_none());
+        // one requested shard: no plan
+        assert!(plan(&f, &sim.consts, 1).is_none());
+    }
+
+    #[test]
+    fn sharded_matches_serial_on_clos() {
+        let (f, eps) = clos(6, 2, 6);
+        let txs = workload(&eps, 600, 0x5AA5);
+
+        let mut serial_sim = MemSim::new(&f);
+        let serial = serial_sim.run(txs.clone());
+
+        let mut sharded_sim = MemSim::new(&f);
+        let mut src = BatchSource::new(txs, crate::sim::TrafficClass::Generic);
+        let sharded = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sharded_sim.run_streamed_sharded_with(&mut sources, 3)
+        };
+        assert_eq!(serial.completed, sharded.total.completed);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(serial.makespan_ns, sharded.total.makespan_ns));
+        assert!(close(serial.latency.mean(), sharded.total.latency.mean()));
+        assert!(close(serial.latency.max(), sharded.total.latency.max()));
+        assert!(close(serial.latency.min(), sharded.total.latency.min()));
+        // per-link utilization state merged back from the workers
+        assert!(sharded_sim.peak_utilization(sharded.total.makespan_ns) > 0.0);
+    }
+
+    #[test]
+    fn reactive_sources_fall_back_to_serial() {
+        struct Chain {
+            src: usize,
+            dst: usize,
+            left: usize,
+            waiting: bool,
+        }
+        impl TrafficSource for Chain {
+            fn class(&self) -> TrafficClass {
+                TrafficClass::Generic
+            }
+            fn pull(&mut self, now: f64) -> Pull {
+                if self.left == 0 {
+                    return Pull::Done;
+                }
+                if self.waiting {
+                    return Pull::Blocked;
+                }
+                self.left -= 1;
+                self.waiting = true;
+                Pull::Tx(super::super::traffic::SourcedTx {
+                    tx: Transaction { src: self.src, dst: self.dst, at: now, bytes: 512.0, device_ns: 0.0 },
+                    token: 0,
+                })
+            }
+            fn on_complete(&mut self, _token: u64, _now: f64) {
+                self.waiting = false;
+            }
+            // open_loop() stays false: reactive
+        }
+        let (f, eps) = clos(4, 2, 2);
+        let mut sim = MemSim::new(&f);
+        let mut chain = Chain { src: eps[0], dst: eps[eps.len() - 1], left: 4, waiting: false };
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut chain];
+            sim.run_streamed_sharded(&mut sources)
+        };
+        // the serial fallback must run the reactive chain to completion
+        assert_eq!(rep.total.completed, 4);
+    }
+
+    #[test]
+    fn zero_hop_transactions_shard_cleanly() {
+        let (f, eps) = clos(4, 2, 3);
+        let txs: Vec<Transaction> = (0..40)
+            .map(|i| Transaction {
+                src: eps[i % eps.len()],
+                dst: eps[i % eps.len()],
+                at: 1.0 + i as f64,
+                bytes: 64.0,
+                device_ns: 250.0,
+            })
+            .collect();
+        let mut sim = MemSim::new(&f);
+        let mut src = BatchSource::new(txs, crate::sim::TrafficClass::Generic);
+        let rep = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sim.run_streamed_sharded_with(&mut sources, 4)
+        };
+        assert_eq!(rep.total.completed, 40);
+        assert!((rep.total.latency.mean() - 250.0).abs() < 1e-9);
+    }
+}

@@ -100,6 +100,19 @@ pub trait TrafficSource {
     /// A transaction this source emitted (identified by its token)
     /// completed end-to-end at `now`.
     fn on_complete(&mut self, _token: u64, _now: f64) {}
+
+    /// True when this source's emissions never depend on its completions:
+    /// `pull` never returns [`Pull::Blocked`] and `on_complete` does not
+    /// influence future emissions (telemetry only). Open-loop sources are
+    /// eligible for the sharded conservative backend
+    /// ([`MemSim::run_streamed_sharded`](super::MemSim::run_streamed_sharded)),
+    /// where injections are staged ahead of the parallel event window; a
+    /// reactive source (the default) forces the serial loop, because its
+    /// zero-delay completion→emission chain can cross shard boundaries
+    /// faster than any fabric lookahead.
+    fn open_loop(&self) -> bool {
+        false
+    }
 }
 
 /// Per-class slice of a streamed run.
@@ -128,7 +141,9 @@ pub struct StreamReport {
     pub per_class: [ClassReport; 4],
     /// High-water mark of concurrently in-flight transactions — the
     /// memory footprint of the streamed run (slots recycle; the full
-    /// workload is never materialized).
+    /// workload is never materialized). Sharded runs report the sum of
+    /// per-shard slot high-waters: the slot memory actually allocated,
+    /// an upper bound on this serial definition.
     pub peak_inflight: usize,
 }
 
@@ -186,6 +201,10 @@ impl TrafficSource for BatchSource {
             Some(tx) => Pull::Tx(SourcedTx { tx, token: 0 }),
             None => Pull::Done,
         }
+    }
+
+    fn open_loop(&self) -> bool {
+        true // a pre-materialized list never waits on completions
     }
 }
 

@@ -12,6 +12,13 @@ pub fn workers_for(items: usize) -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(items.max(1))
 }
 
+/// Worker count for a sharded simulation over a fabric partitioned into
+/// `domains` topology domains: one shard per hardware thread, never more
+/// than the domain count (a shard with no links would only add sync cost).
+pub fn shards_for(domains: usize) -> usize {
+    workers_for(domains)
+}
+
 /// Map `f` over `items` across scoped threads, preserving order.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where

@@ -12,4 +12,4 @@ pub use embedding::EmbeddingWorkload;
 pub use kvcache::KvCacheWorkload;
 pub use memws::{AccessTrace, WorkingSetSweep};
 pub use rag::RagWorkload;
-pub use traffic::SyntheticTraffic;
+pub use traffic::{SyntheticTraffic, WorkingSetTraffic, WorkingSetTrafficConfig};

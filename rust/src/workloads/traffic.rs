@@ -2,6 +2,11 @@
 //! generator the `simulate` subcommand uses instead of materializing a
 //! `Vec<Transaction>` up front — a million-transaction run holds O(peak
 //! in-flight) state, generating each transaction as the clock reaches it.
+//!
+//! Also home to [`WorkingSetTraffic`], the Figure-7 working-set access
+//! stream as a streamed source: the detailed fig7 mode and the traffic
+//! layer share [`MemSim::run_streamed`](crate::sim::MemSim::run_streamed)
+//! end-to-end.
 
 use crate::fabric::NodeId;
 use crate::sim::{Pull, SourcedTx, TrafficClass, TrafficSource, Transaction};
@@ -79,6 +84,112 @@ impl TrafficSource for SyntheticTraffic {
             token: 0,
         })
     }
+
+    fn open_loop(&self) -> bool {
+        true // open-loop by construction: arrivals are a Poisson process
+    }
+}
+
+/// Cost/shape parameters of a [`WorkingSetTraffic`] stream — one per
+/// Figure-7 configuration (baseline / accelerator-clusters / tiered),
+/// differing only in where beyond-capacity offsets go and what per-access
+/// software/protocol cost rides on top of the fabric path.
+#[derive(Clone, Debug)]
+pub struct WorkingSetTrafficConfig {
+    /// Swept working-set size, bytes.
+    pub working_set: f64,
+    /// Capacity of the requester's own HBM (level-1 boundary), bytes.
+    pub accel_capacity: f64,
+    /// Capacity of the whole cluster's tier-1 (level-2 boundary), bytes.
+    pub cluster_capacity: f64,
+    /// Access granularity, bytes (64 B cache line by default).
+    pub line_bytes: u32,
+    /// Mean issue interval, ns (Poisson arrivals).
+    pub interval_ns: f64,
+    pub accesses: u64,
+    pub seed: u64,
+    /// Device time of a tier-1 HBM access, ns.
+    pub hbm_ns: f64,
+    /// Device time at the beyond-cluster level, ns.
+    pub remote_device_ns: f64,
+    /// Per-access software/protocol adder for the intra-cluster remote
+    /// level (software copy on XLink configs, CXL.cache protocol cost on
+    /// the coherent config), ns.
+    pub mid_extra_ns: f64,
+    /// Same for the beyond-cluster level, ns.
+    pub far_extra_ns: f64,
+}
+
+/// The Figure-7 working-set access stream as a streamed traffic source:
+/// offsets below `accel_capacity` are local HBM hits (zero-hop, device
+/// time only), offsets within `cluster_capacity` hit a same-rack peer,
+/// and the remainder goes to the configuration's beyond-cluster level
+/// (remote-rack accelerators or tier-2 memory nodes) — each access is a
+/// real fabric transaction, so queuing at the shared links emerges
+/// instead of being a closed-form adder. Open-loop (sharding-eligible).
+pub struct WorkingSetTraffic {
+    cfg: WorkingSetTrafficConfig,
+    /// Requesters and intra-cluster peers: the home rack's accelerators.
+    home: Vec<NodeId>,
+    /// Beyond-cluster targets (memory nodes or remote-rack accelerators);
+    /// may be empty when the working set never spills past the cluster.
+    remote: Vec<NodeId>,
+    issued: u64,
+    at: f64,
+    rng: Rng,
+}
+
+impl WorkingSetTraffic {
+    pub fn new(cfg: WorkingSetTrafficConfig, home: Vec<NodeId>, remote: Vec<NodeId>) -> WorkingSetTraffic {
+        assert!(home.len() >= 2, "need at least two home accelerators");
+        assert!(
+            !remote.is_empty() || cfg.working_set <= cfg.cluster_capacity,
+            "working set spills past the cluster but no beyond-cluster targets were given"
+        );
+        let seed = cfg.seed;
+        WorkingSetTraffic { cfg, home, remote, issued: 0, at: 0.0, rng: Rng::new(seed) }
+    }
+}
+
+impl TrafficSource for WorkingSetTraffic {
+    fn class(&self) -> TrafficClass {
+        TrafficClass::Generic
+    }
+
+    fn pull(&mut self, _now: f64) -> Pull {
+        let c = &self.cfg;
+        if self.issued >= c.accesses {
+            return Pull::Done;
+        }
+        self.issued += 1;
+        // same draw order as WorkingSetSweep::trace: offset, then interval
+        let lines = (c.working_set / c.line_bytes as f64).max(1.0) as u64;
+        let line = self.rng.below(lines);
+        self.at += self.rng.exp(1.0 / c.interval_ns);
+        let off = line as f64 * c.line_bytes as f64;
+        let h = self.home.len() as u64;
+        let src = self.home[(line % h) as usize];
+        let (dst, device_ns) = if off < c.accel_capacity {
+            (src, c.hbm_ns) // local hit: device time only
+        } else if off < c.cluster_capacity || self.remote.is_empty() {
+            let mut d = self.home[((line / h) % h) as usize];
+            if d == src {
+                d = self.home[((line / h + 1) % h) as usize];
+            }
+            (d, c.hbm_ns + c.mid_extra_ns)
+        } else {
+            let d = self.remote[(line % self.remote.len() as u64) as usize];
+            (d, c.remote_device_ns + c.far_extra_ns)
+        };
+        Pull::Tx(SourcedTx {
+            tx: Transaction { src, dst, at: self.at, bytes: c.line_bytes as f64, device_ns },
+            token: 0,
+        })
+    }
+
+    fn open_loop(&self) -> bool {
+        true // the access stream never waits on completions
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +197,56 @@ mod tests {
     use super::*;
     use crate::fabric::{Fabric, LinkKind, NodeKind, Topology};
     use crate::sim::MemSim;
+
+    fn ws_cfg(working_set: f64) -> WorkingSetTrafficConfig {
+        WorkingSetTrafficConfig {
+            working_set,
+            accel_capacity: 1e6,
+            cluster_capacity: 8e6,
+            line_bytes: 64,
+            interval_ns: 10.0,
+            accesses: 5_000,
+            seed: 7,
+            hbm_ns: 100.0,
+            remote_device_ns: 130.0,
+            mid_extra_ns: 80.0,
+            far_extra_ns: 0.0,
+        }
+    }
+
+    #[test]
+    fn working_set_traffic_tiers_by_offset() {
+        let t = Topology::single_hop(8, LinkKind::NvLink5, "r");
+        let accs = t.nodes_of(NodeKind::Accelerator);
+        let f = Fabric::new(t);
+        // within one accelerator: all local, latency == device time exactly
+        let mut local = WorkingSetTraffic::new(ws_cfg(0.5e6), accs.clone(), vec![]);
+        let mut sim = MemSim::new(&f);
+        let rep = {
+            let mut s: [&mut dyn TrafficSource; 1] = [&mut local];
+            sim.run_streamed(&mut s)
+        };
+        assert_eq!(rep.total.completed, 5_000);
+        assert!((rep.total.latency.mean() - 100.0).abs() < 1e-9, "local hits pay device only");
+
+        // beyond one accelerator: peer traffic pays the fabric + adder
+        let mut mid = WorkingSetTraffic::new(ws_cfg(4e6), accs.clone(), vec![]);
+        let mut sim2 = MemSim::new(&f);
+        let rep2 = {
+            let mut s: [&mut dyn TrafficSource; 1] = [&mut mid];
+            sim2.run_streamed(&mut s)
+        };
+        assert_eq!(rep2.total.completed, 5_000);
+        assert!(rep2.total.latency.mean() > rep.total.latency.mean() + 50.0, "remote level must cost more");
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond-cluster targets")]
+    fn working_set_traffic_rejects_missing_far_targets() {
+        let t = Topology::single_hop(4, LinkKind::NvLink5, "r");
+        let accs = t.nodes_of(NodeKind::Accelerator);
+        WorkingSetTraffic::new(ws_cfg(64e6), accs, vec![]);
+    }
 
     #[test]
     fn streams_without_materializing_the_workload() {

@@ -596,6 +596,253 @@ fn prop_streamed_matches_batch() {
     );
 }
 
+/// Calendar-queue scheduler parity: on randomized schedule/after/next
+/// interleavings — including same-timestamp bursts, sub-granularity
+/// spacing and far-future overflow — the calendar [`Engine`] must
+/// dispatch byte-identically (times, payloads, FIFO `seq` tie-breaks,
+/// clock, counts) to the retained binary-heap oracle
+/// (`sim::engine::reference::HeapEngine`), mirroring the PR-1
+/// `SerialRouter` pattern.
+#[test]
+fn calendar_queue_matches_heap_reference() {
+    use scalepool::sim::engine::reference::HeapEngine;
+    use scalepool::sim::{Engine, EventKind};
+    forall_res(
+        Config { cases: 48, seed: 0xCA7E },
+        |rng: &mut Rng| {
+            let n = 200 + rng.below(1200) as usize;
+            let ops: Vec<(u8, u64)> = (0..n).map(|_| (rng.below(10) as u8, rng.below(1 << 20))).collect();
+            let granularity = [1e-3, 0.1, 1.0, 50.0][rng.below(4) as usize];
+            (ops, granularity)
+        },
+        |(ops, granularity)| {
+            let mut cal = Engine::with_granularity(*granularity);
+            let mut heap = HeapEngine::new();
+            let mut tag = 0u64;
+            for &(op, v) in ops {
+                if op < 6 {
+                    // engines advance in lockstep, so both nows agree
+                    let base = cal.now();
+                    let at = match op {
+                        0 | 1 => base, // same-timestamp burst
+                        2 => base + (v % 97) as f64 * 0.25, // near
+                        3 => base + (v % 10_000) as f64, // mid-range
+                        4 => base + 1e9 + v as f64, // far-future overflow
+                        _ => base + v as f64 * 1e-4, // sub-granularity spacing
+                    };
+                    cal.schedule(at, EventKind::Custom { tag });
+                    heap.schedule(at, EventKind::Custom { tag });
+                    tag += 1;
+                } else {
+                    if cal.peek_time() != heap.peek_time() {
+                        return Err(format!("peek diverged: {:?} vs {:?}", cal.peek_time(), heap.peek_time()));
+                    }
+                    let (a, b) = (cal.next(), heap.next());
+                    if a != b {
+                        return Err(format!("dispatch diverged: {a:?} vs {b:?}"));
+                    }
+                }
+                if cal.pending() != heap.pending() {
+                    return Err(format!("pending diverged: {} vs {}", cal.pending(), heap.pending()));
+                }
+            }
+            loop {
+                let (a, b) = (cal.next(), heap.next());
+                if a != b {
+                    return Err(format!("drain diverged: {a:?} vs {b:?}"));
+                }
+                if a.is_none() {
+                    break;
+                }
+            }
+            if cal.dispatched() != heap.dispatched() || cal.now() != heap.now() {
+                return Err("dispatch count / clock diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A batch workload instrumented to remember every per-transaction
+/// completion time — the probe for the shard-vs-serial equivalence test.
+struct RecordingSource {
+    txs: std::collections::VecDeque<Transaction>,
+    next_token: u64,
+    completions: Vec<(u64, f64)>,
+}
+
+impl RecordingSource {
+    fn new(txs: Vec<Transaction>) -> RecordingSource {
+        RecordingSource { txs: txs.into(), next_token: 0, completions: Vec::new() }
+    }
+}
+
+impl TrafficSource for RecordingSource {
+    fn class(&self) -> scalepool::sim::TrafficClass {
+        TrafficClass::Generic
+    }
+    fn pull(&mut self, _now: f64) -> scalepool::sim::Pull {
+        match self.txs.pop_front() {
+            Some(tx) => {
+                let token = self.next_token;
+                self.next_token += 1;
+                scalepool::sim::Pull::Tx(scalepool::sim::SourcedTx { tx, token })
+            }
+            None => scalepool::sim::Pull::Done,
+        }
+    }
+    fn on_complete(&mut self, token: u64, now: f64) {
+        self.completions.push((token, now));
+    }
+    fn open_loop(&self) -> bool {
+        true
+    }
+}
+
+/// Shard-vs-serial equivalence: on randomized Clos and torus fabrics with
+/// randomized open-loop workloads, the sharded conservative backend must
+/// reproduce the serial streamed backend exactly — per-class completed
+/// counts, byte totals, the sorted per-transaction latency multiset, and
+/// the makespan.
+#[test]
+fn prop_sharded_matches_serial() {
+    forall_res(
+        Config { cases: 22, seed: 0x5AD3 },
+        |rng: &mut Rng| {
+            let (t, eps) = if rng.below(2) == 0 {
+                // Clos with endpoints per leaf
+                let (mut t, leaves) = Topology::clos(
+                    2 + rng.below(6) as usize,
+                    1 + rng.below(3) as usize,
+                    LinkKind::CxlCoherent,
+                    "c",
+                );
+                let per = 2 + rng.below(4) as usize;
+                let mut eps = Vec::new();
+                for (i, &l) in leaves.iter().enumerate() {
+                    for e in 0..per {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                        t.connect(n, l, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            } else {
+                // torus with endpoints on alternating switches
+                let (mut t, sw) = Topology::torus3d(
+                    (2 + rng.below(3) as usize, 2 + rng.below(3) as usize, 1 + rng.below(2) as usize),
+                    LinkKind::CxlCoherent,
+                    "t",
+                );
+                let mut eps = Vec::new();
+                for (i, &s) in sw.iter().enumerate() {
+                    if i % 2 == 0 {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}"));
+                        t.connect(n, s, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            };
+            let ntx = 100 + rng.below(400) as usize;
+            let shards = 2 + rng.below(3) as usize;
+            (t, eps, ntx, shards, rng.below(1 << 30))
+        },
+        |(t, eps, ntx, shards, seed)| {
+            if eps.len() < 2 {
+                return Ok(());
+            }
+            let f = Fabric::new(t.clone());
+            let mut rng = Rng::new(*seed);
+            let mut at = 0.0;
+            let txs: Vec<Transaction> = (0..*ntx)
+                .map(|_| {
+                    // strictly increasing issue times: cross-shard event
+                    // ordering is only defined up to exact-time ties
+                    at += rng.exp(1.0 / 30.0) + 1e-6;
+                    let s = rng.below(eps.len() as u64) as usize;
+                    let mut d = rng.below(eps.len() as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % eps.len();
+                    }
+                    Transaction {
+                        src: eps[s],
+                        dst: eps[d],
+                        at,
+                        bytes: 64.0 + rng.f64() * 8192.0,
+                        device_ns: rng.f64() * 200.0,
+                    }
+                })
+                .collect();
+
+            let issue_of = |token: u64| txs[token as usize].at;
+
+            let mut serial_src = RecordingSource::new(txs.clone());
+            let mut serial_sim = MemSim::new(&f);
+            let serial = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut serial_src];
+                serial_sim.run_streamed(&mut sources)
+            };
+
+            let mut sharded_src = RecordingSource::new(txs.clone());
+            let mut sharded_sim = MemSim::new(&f);
+            let sharded = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut sharded_src];
+                sharded_sim.run_streamed_sharded_with(&mut sources, *shards)
+            };
+
+            if serial.total.completed != sharded.total.completed
+                || serial.total.completed != *ntx as u64
+            {
+                return Err(format!(
+                    "completed {} vs {}",
+                    serial.total.completed, sharded.total.completed
+                ));
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+            for c in scalepool::sim::TrafficClass::ALL {
+                let (a, b) = (serial.class(c), sharded.class(c));
+                if a.completed != b.completed || !close(a.bytes, b.bytes) {
+                    return Err(format!("class {} diverged", c.name()));
+                }
+            }
+            if !close(serial.total.makespan_ns, sharded.total.makespan_ns) {
+                return Err(format!(
+                    "makespan {} vs {}",
+                    serial.total.makespan_ns, sharded.total.makespan_ns
+                ));
+            }
+            if serial.total.events != sharded.total.events {
+                return Err(format!(
+                    "event counts {} vs {}",
+                    serial.total.events, sharded.total.events
+                ));
+            }
+            // sorted per-transaction latency multisets must match
+            let lat = |recs: &[(u64, f64)]| -> Vec<f64> {
+                let mut v: Vec<f64> = recs.iter().map(|&(tok, now)| now - issue_of(tok)).collect();
+                v.sort_by(|a, b| a.total_cmp(b));
+                v
+            };
+            let (ls, lp) = (lat(&serial_src.completions), lat(&sharded_src.completions));
+            if ls.len() != lp.len() {
+                return Err("latency multiset sizes differ".into());
+            }
+            for (i, (a, b)) in ls.iter().zip(&lp).enumerate() {
+                if !close(*a, *b) {
+                    return Err(format!("latency multiset diverged at {i}: {a} vs {b}"));
+                }
+            }
+            if !close(serial.total.latency.mean(), sharded.total.latency.mean())
+                || !close(serial.total.latency.max(), sharded.total.latency.max())
+            {
+                return Err("aggregate latency stats diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The fig7 model: for ANY fabric-derived parameter set with sane
 /// ordering, the three-config ordering holds in region 3.
 #[test]

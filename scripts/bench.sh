@@ -3,14 +3,25 @@
 # root. The simscale bench writes BENCH_simscale.json itself (path via
 # SCALEPOOL_BENCH_OUT); the figure benches print RESULT lines that are
 # captured into BENCH_figs.json.
+#
+# Bounded runs (the CI smoke): SCALEPOOL_BENCH_SCALES=rack limits simscale
+# to the named scales, SCALEPOOL_BENCH_ACCESSES=N shrinks its workload,
+# and SCALEPOOL_BENCH_ONLY=simscale skips the figure/micro benches.
+# scripts/check_bench.py then enforces the >= 1.0x floor on every
+# recorded *_speedup.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 MANIFEST=rust/Cargo.toml
 
-echo "== simscale (router build + events/sec trajectory) =="
+echo "== simscale (router build + events/sec + sharded trajectory) =="
 SCALEPOOL_BENCH_OUT=BENCH_simscale.json \
     cargo bench --manifest-path "$MANIFEST" --bench simscale
+
+if [ "${SCALEPOOL_BENCH_ONLY:-}" = "simscale" ]; then
+    echo "SCALEPOOL_BENCH_ONLY=simscale: skipping figure/micro benches"
+    exit 0
+fi
 
 echo "== figure benches =="
 fig_results=$(

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Enforce the perf-trajectory floor on BENCH_simscale.json.
+
+Every recorded ``*_speedup`` (and the engine section's ``speedup``) must
+stay >= 1.0: the optimized paths are never allowed to regress below their
+seed/serial baselines. The sharded backend's speedup is only *enforced*
+when the recording machine had >= 4 cores (its acceptance bar is defined
+at >= 4 cores; on narrower machines it is reported but advisory).
+
+Usage: check_bench.py [BENCH_simscale.json]
+"""
+
+import json
+import sys
+
+FLOOR = 1.0
+SHARDED_MIN_THREADS = 4
+
+
+def walk(node, path, out):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if isinstance(v, (int, float)) and (k.endswith("_speedup") or k == "speedup"):
+                out.append((f"{path}.{k}" if path else k, k, float(v)))
+            else:
+                walk(v, f"{path}.{k}" if path else k, out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            walk(v, f"{path}[{i}]", out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_simscale.json"
+    with open(path) as f:
+        data = json.load(f)
+    threads = int(data.get("threads", 1))
+    speedups = []
+    walk(data, "", speedups)
+    if not speedups:
+        print(f"error: no *_speedup entries found in {path}", file=sys.stderr)
+        return 1
+    failures = []
+    for where, key, value in speedups:
+        advisory = key.startswith("sharded") and threads < SHARDED_MIN_THREADS
+        status = "ok" if value >= FLOOR else ("advisory" if advisory else "FAIL")
+        print(f"{status:>8}  {where} = {value:.2f}")
+        if value < FLOOR and not advisory:
+            failures.append((where, value))
+    if failures:
+        print(f"\nerror: {len(failures)} speedup(s) below the {FLOOR}x floor:", file=sys.stderr)
+        for where, value in failures:
+            print(f"  {where} = {value:.2f}", file=sys.stderr)
+        return 1
+    advisories = sum(1 for _, k, v in speedups if v < FLOOR and k.startswith("sharded"))
+    note = f", {advisories} advisory below floor" if advisories else ""
+    print(f"\n{len(speedups)} recorded speedups checked, none below the {FLOOR}x floor{note} (threads={threads})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
