@@ -80,18 +80,7 @@ pub fn fig7(args: &mut Args) -> Result<()> {
 }
 
 pub fn mixed(args: &mut Args) -> Result<()> {
-    let cfg = experiments::MixedConfig {
-        racks: args.usize_or("racks", 4).map_err(Error::msg)?,
-        accels: args.usize_or("accels", 8).map_err(Error::msg)?,
-        mem_nodes: args.usize_or("mem-nodes", 4).map_err(Error::msg)?,
-        coherence_ops: args.usize_or("coh-ops", 2_000).map_err(Error::msg)? as u64,
-        tiering_ops: args.usize_or("tier-ops", 300).map_err(Error::msg)? as u64,
-        collective_bytes: args.f64_or("bytes", 32.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
-        collective_repeats: args.usize_or("repeats", 1).map_err(Error::msg)?,
-        hierarchical: args.get_or("algo", "hier") != "ring",
-        t1_bytes_per_acc: args.f64_or("t1-bytes", 2.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
-        seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
-    };
+    let cfg = mixed_config(args)?;
     let t0 = std::time::Instant::now();
     let rep = experiments::run_mixed(&cfg);
     print!("{}", experiments::mixed::render(&rep));
@@ -108,6 +97,11 @@ pub fn mixed(args: &mut Args) -> Result<()> {
                     ("solo_tx_ns", Json::num(r.solo_tx_ns)),
                     ("mixed_tx_ns", Json::num(r.mixed_tx_ns)),
                     ("tx_inflation", Json::num(r.tx_inflation())),
+                    ("solo_p50_ns", Json::num(r.solo_p50_ns)),
+                    ("mixed_p50_ns", Json::num(r.mixed_p50_ns)),
+                    ("solo_p99_ns", Json::num(r.solo_p99_ns)),
+                    ("mixed_p99_ns", Json::num(r.mixed_p99_ns)),
+                    ("p99_inflation", Json::num(r.p99_inflation())),
                     ("solo_domain_ns", Json::num(r.solo_domain_ns)),
                     ("mixed_domain_ns", Json::num(r.mixed_domain_ns)),
                     ("domain_inflation", Json::num(r.domain_inflation())),
@@ -122,6 +116,128 @@ pub fn mixed(args: &mut Args) -> Result<()> {
             ("classes", Json::Arr(rows)),
         ]);
         std::fs::write(path, out.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Parse the shared mixed-scenario knobs (used by `mixed` and `qos`).
+fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
+    Ok(experiments::MixedConfig {
+        racks: args.usize_or("racks", 4).map_err(Error::msg)?,
+        accels: args.usize_or("accels", 8).map_err(Error::msg)?,
+        mem_nodes: args.usize_or("mem-nodes", 4).map_err(Error::msg)?,
+        coherence_ops: args.usize_or("coh-ops", 2_000).map_err(Error::msg)? as u64,
+        tiering_ops: args.usize_or("tier-ops", 300).map_err(Error::msg)? as u64,
+        collective_bytes: args.f64_or("bytes", 32.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
+        collective_repeats: args.usize_or("repeats", 1).map_err(Error::msg)?,
+        hierarchical: args.get_or("algo", "hier") != "ring",
+        t1_bytes_per_acc: args.f64_or("t1-bytes", 2.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
+        seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
+    })
+}
+
+fn parse_class(name: &str) -> Result<crate::sim::TrafficClass> {
+    use crate::sim::TrafficClass;
+    TrafficClass::ALL
+        .into_iter()
+        .find(|c| c.name() == name)
+        .ok_or_else(|| Error::msg(format!("unknown traffic class '{name}' (coherence|tiering|collective|generic)")))
+}
+
+pub fn qos(args: &mut Args) -> Result<()> {
+    use crate::sim::TrafficClass;
+    let mixed = mixed_config(args)?;
+
+    // strict order: highest-priority first, all four classes
+    let order: [TrafficClass; 4] = {
+        let spec = args.get_or("order", "coherence,tiering,collective,generic");
+        let names: Vec<&str> = spec.split(',').collect();
+        if names.len() != 4 {
+            bail!("--order needs 4 comma-separated classes, got '{spec}'");
+        }
+        let mut order = [TrafficClass::Generic; 4];
+        for (i, n) in names.iter().enumerate() {
+            order[i] = parse_class(n.trim())?;
+        }
+        for i in 0..4 {
+            for j in i + 1..4 {
+                if order[i] == order[j] {
+                    bail!("--order must name each class exactly once, got '{spec}'");
+                }
+            }
+        }
+        order
+    };
+    // weighted-fair byte shares in class-index order
+    let weights: [f64; 4] = {
+        let spec = args.get_or("weights", "4,2,2,1");
+        let parts: Vec<&str> = spec.split(',').collect();
+        if parts.len() != 4 {
+            bail!("--weights needs 4 comma-separated numbers (coherence,tiering,collective,generic), got '{spec}'");
+        }
+        let mut w = [1.0f64; 4];
+        for (i, p) in parts.iter().enumerate() {
+            w[i] = p.trim().parse().map_err(|_| Error::msg(format!("--weights: '{p}' is not a number")))?;
+            if !w[i].is_finite() || w[i] < 0.0 {
+                bail!("--weights must be finite and >= 0, got '{p}'");
+            }
+        }
+        w
+    };
+    let policies: Vec<experiments::PolicySpec> = args
+        .get_or("policies", "fcfs,strict,wfq")
+        .split(',')
+        .map(|p| match p.trim() {
+            "fcfs" => Ok(experiments::PolicySpec::fcfs()),
+            "strict" => Ok(experiments::PolicySpec::strict(order)),
+            "wfq" | "weighted" => Ok(experiments::PolicySpec::weighted(weights)),
+            other => Err(Error::msg(format!("unknown policy '{other}' (fcfs|strict|wfq)"))),
+        })
+        .collect::<Result<_>>()?;
+
+    let cfg = experiments::QosSweepConfig { mixed, policies };
+    let t0 = std::time::Instant::now();
+    let rep = experiments::run_qos(&cfg);
+    print!("{}", experiments::qos::render(&rep, &cfg.policies));
+    println!("wall {:?}", t0.elapsed());
+
+    if let Some(path) = args.get("out") {
+        let policies: Vec<Json> = rep
+            .policies
+            .iter()
+            .map(|p| {
+                let rows: Vec<Json> = p
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("class", Json::str(r.class.name())),
+                            ("completed", Json::num(r.completed as f64)),
+                            ("bytes", Json::num(r.bytes)),
+                            ("solo_tx_ns", Json::num(r.solo_tx_ns)),
+                            ("mixed_tx_ns", Json::num(r.mixed_tx_ns)),
+                            ("tx_inflation", Json::num(r.tx_inflation())),
+                            ("solo_p50_ns", Json::num(r.solo_p50_ns)),
+                            ("mixed_p50_ns", Json::num(r.mixed_p50_ns)),
+                            ("p50_inflation", Json::num(r.p50_inflation())),
+                            ("solo_p99_ns", Json::num(r.solo_p99_ns)),
+                            ("mixed_p99_ns", Json::num(r.mixed_p99_ns)),
+                            ("p99_inflation", Json::num(r.p99_inflation())),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("policy", Json::str(&p.name)),
+                    ("makespan_ns", Json::num(p.makespan_ns)),
+                    ("events", Json::num(p.events as f64)),
+                    ("peak_utilization", Json::num(p.peak_utilization)),
+                    ("max_tx_inflation", Json::num(p.max_tx_inflation())),
+                    ("classes", Json::Arr(rows)),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::arr(policies).to_string())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -28,7 +28,19 @@ COMMANDS:
               [--algo <hier|ring>] [--seed <N>] [--out <file>]
                                Coherence + tiering + collective traffic
                                concurrently on one fabric; per-class
-                               latency under interference
+                               mean and p99 latency under interference
+    qos       [same scenario options as mixed]
+              [--policies <fcfs,strict,wfq>] [--order <c1,c2,c3,c4>]
+              [--weights <w1,w2,w3,w4>] [--out <file>]
+                               Sweep link-arbitration policies over the
+                               mixed scenario: fcfs (class-blind parity
+                               baseline), strict (priority order, default
+                               coherence>tiering>collective>generic) and
+                               wfq (deficit-round-robin byte shares in
+                               class order coherence,tiering,collective,
+                               generic; default 4,2,2,1). Reports
+                               per-class solo-vs-mixed mean and p99
+                               inflation per policy (RESULT qos lines)
     topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
                                Build a fabric and print its shape/latencies
     simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
@@ -69,6 +81,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "fig6" => commands::fig6(&mut args),
         "fig7" => commands::fig7(&mut args),
         "mixed" => commands::mixed(&mut args),
+        "qos" => commands::qos(&mut args),
         "topo" => commands::topo(&mut args),
         "simulate" => commands::simulate(&mut args),
         "train" => commands::train(&mut args),

@@ -6,6 +6,7 @@
 //! (hybrid emulation).
 
 pub mod metrics;
+pub mod qos;
 pub mod router;
 pub mod tiering;
 pub mod traffic;
@@ -14,6 +15,7 @@ pub mod scheduler;
 
 pub use manager::{JobId, JobSpec, ScalePoolManager};
 pub use metrics::Metrics;
+pub use qos::QosManager;
 pub use router::{DataMovementRouter, RouteClass, RouteDecision};
 pub use scheduler::EmulatedCluster;
 #[cfg(feature = "pjrt")]

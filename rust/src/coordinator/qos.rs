@@ -1,0 +1,130 @@
+//! The coordinator's QoS authority: owns the fabric-wide arbitration
+//! configuration ([`QosPolicy`], per [`LinkTier`]) and applies it to
+//! simulators. The ROADMAP's "cross-class scheduling policies in the
+//! coordinator" item: the coordinator decides how coherence, migration
+//! and collective traffic share links, the [`ClassedServer`]s in the
+//! simulation hot path enforce it, and the per-class telemetry in
+//! [`StreamReport::qos`](crate::sim::StreamReport) closes the loop.
+
+use crate::sim::qos::{ArbPolicy, LinkTier, QosPolicy};
+use crate::sim::{MemSim, TrafficClass};
+
+/// Owns and configures the per-tier arbitration policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QosManager {
+    policy: QosPolicy,
+}
+
+impl QosManager {
+    pub fn new(policy: QosPolicy) -> QosManager {
+        QosManager { policy }
+    }
+
+    /// The parity baseline: class-blind FCFS on every tier (exactly the
+    /// pre-QoS fabric).
+    pub fn fcfs() -> QosManager {
+        QosManager::new(QosPolicy::fcfs())
+    }
+
+    /// One policy across every tier.
+    pub fn uniform(p: ArbPolicy) -> QosManager {
+        QosManager::new(QosPolicy::uniform(p))
+    }
+
+    /// Strict priority everywhere, with the given class order (highest
+    /// first; must name every class once).
+    pub fn strict_priority(order: [TrafficClass; 4]) -> QosManager {
+        QosManager::uniform(ArbPolicy::StrictPriority(order))
+    }
+
+    /// Weighted-fair (deficit round-robin) everywhere, with per-class
+    /// byte-share weights indexed by [`TrafficClass::index`].
+    pub fn weighted_fair(weights: [f64; 4]) -> QosManager {
+        QosManager::uniform(ArbPolicy::WeightedFair(weights))
+    }
+
+    /// Override one tier's policy (e.g. strict priority on the contended
+    /// CXL spine, FCFS inside the racks).
+    pub fn set_tier(&mut self, tier: LinkTier, p: ArbPolicy) -> &mut QosManager {
+        self.policy.set(tier, p);
+        self
+    }
+
+    pub fn tier(&self, tier: LinkTier) -> ArbPolicy {
+        self.policy.tier(tier)
+    }
+
+    pub fn policy(&self) -> QosPolicy {
+        self.policy
+    }
+
+    /// Push the configuration into a simulator (fresh [`ClassedServer`]s
+    /// per link direction — call before running traffic).
+    ///
+    /// [`ClassedServer`]: crate::sim::ClassedServer
+    pub fn apply(&self, sim: &mut MemSim) {
+        sim.set_qos(self.policy);
+    }
+
+    /// Human-readable per-tier summary for CLI output and logs.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        for t in LinkTier::ALL {
+            let p = self.policy.tier(t);
+            let detail = match p {
+                ArbPolicy::FcfsShared => String::new(),
+                ArbPolicy::StrictPriority(order) => {
+                    let names: Vec<&str> = order.iter().map(|c| c.name()).collect();
+                    format!("({})", names.join(">"))
+                }
+                ArbPolicy::WeightedFair(w) => {
+                    format!("({}:{}:{}:{})", w[0], w[1], w[2], w[3])
+                }
+            };
+            parts.push(format!("{}={}{detail}", t.name(), p.name()));
+        }
+        parts.join(" ")
+    }
+}
+
+impl Default for QosManager {
+    fn default() -> QosManager {
+        QosManager::fcfs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, LinkKind, Topology};
+
+    #[test]
+    fn per_tier_overrides_compose() {
+        let mut m = QosManager::fcfs();
+        m.set_tier(LinkTier::CxlSpine, ArbPolicy::strict_default())
+            .set_tier(LinkTier::CxlLeaf, ArbPolicy::weighted_default());
+        assert_eq!(m.tier(LinkTier::Xlink).name(), "fcfs");
+        assert_eq!(m.tier(LinkTier::CxlSpine).name(), "strict");
+        assert_eq!(m.tier(LinkTier::CxlLeaf).name(), "wfq");
+        let d = m.describe();
+        assert!(d.contains("xlink=fcfs") && d.contains("cxl-spine=strict"), "{d}");
+    }
+
+    #[test]
+    fn apply_configures_the_simulator() {
+        let t = Topology::single_hop(4, LinkKind::CxlCoherent, "c");
+        let f = Fabric::new(t);
+        let mut sim = MemSim::new(&f);
+        assert_eq!(sim.qos_policy(), QosPolicy::fcfs());
+        let m = QosManager::strict_priority([
+            TrafficClass::Coherence,
+            TrafficClass::Tiering,
+            TrafficClass::Collective,
+            TrafficClass::Generic,
+        ]);
+        m.apply(&mut sim);
+        assert_eq!(sim.qos_policy(), m.policy());
+        // single-hop CXL rack: every link is a leaf link, now strict
+        assert_eq!(sim.link_tier(0), LinkTier::CxlLeaf);
+    }
+}

@@ -70,6 +70,15 @@ pub struct MixedClassRow {
     pub solo_tx_ns: f64,
     /// Same, under cross-traffic.
     pub mixed_tx_ns: f64,
+    /// Median transaction latency alone, ns (log-binned histogram, ~±4%).
+    pub solo_p50_ns: f64,
+    /// Same, under cross-traffic.
+    pub mixed_p50_ns: f64,
+    /// 99th-percentile transaction latency alone, ns (log-binned
+    /// histogram, ~±4%).
+    pub solo_p99_ns: f64,
+    /// Same, under cross-traffic — the tail the QoS policies act on.
+    pub mixed_p99_ns: f64,
     /// Domain metric alone (coherent op / migration transfer / all-reduce
     /// repeat), ns.
     pub solo_domain_ns: f64,
@@ -91,6 +100,15 @@ impl MixedClassRow {
     pub fn domain_inflation(&self) -> f64 {
         if self.solo_domain_ns > 0.0 {
             self.mixed_domain_ns / self.solo_domain_ns
+        } else {
+            1.0
+        }
+    }
+
+    /// Interference inflation of the p99 transaction latency (tail).
+    pub fn p99_inflation(&self) -> f64 {
+        if self.solo_p99_ns > 0.0 {
+            self.mixed_p99_ns / self.solo_p99_ns
         } else {
             1.0
         }
@@ -119,7 +137,7 @@ impl MixedReport {
     }
 }
 
-fn build_system(cfg: &MixedConfig) -> ScalePoolSystem {
+pub(crate) fn build_system(cfg: &MixedConfig) -> ScalePoolSystem {
     assert!(cfg.racks >= 2, "mixed experiment needs >= 2 racks");
     assert!(cfg.accels >= 2);
     ScalePoolBuilder::new()
@@ -138,7 +156,7 @@ fn build_system(cfg: &MixedConfig) -> ScalePoolSystem {
 /// Rough collective duration on an idle fabric — the shared horizon the
 /// coherence and tiering schedules are paced against so all classes
 /// overlap in time.
-fn horizon_estimate(sys: &ScalePoolSystem, cfg: &MixedConfig) -> f64 {
+pub(crate) fn horizon_estimate(sys: &ScalePoolSystem, cfg: &MixedConfig) -> f64 {
     let n = sys.accelerator_count();
     let chunk = (cfg.collective_bytes / n.max(1) as f64).max(64.0);
     let a = sys.racks[0].acc_ids[0];
@@ -149,7 +167,7 @@ fn horizon_estimate(sys: &ScalePoolSystem, cfg: &MixedConfig) -> f64 {
         .max(50_000.0)
 }
 
-fn coherence_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> CoherenceTraffic {
+pub(crate) fn coherence_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> CoherenceTraffic {
     let agents = sys.accelerators();
     let window = agents.len().max(8);
     let ccfg = CoherenceConfig {
@@ -161,7 +179,7 @@ fn coherence_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -
     CoherenceTraffic::new(agents, sys.mem_nodes.clone(), ccfg, cfg.seed)
 }
 
-fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> TieringTraffic {
+pub(crate) fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> TieringTraffic {
     let (t1, t2) = sys.tier_pools(cfg.t1_bytes_per_acc);
     let engine = TieringEngine::new(t1, t2, TieringPolicy::default());
     let tcfg = TieringTrafficConfig {
@@ -172,7 +190,7 @@ fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> 
     TieringTraffic::new(engine, sys.accelerators(), tcfg, cfg.seed.wrapping_add(1))
 }
 
-fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> EventDrivenCollective {
+pub(crate) fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> EventDrivenCollective {
     if cfg.hierarchical {
         EventDrivenCollective::hierarchical(sys.rack_groups(), cfg.collective_bytes, cfg.collective_repeats)
     } else {
@@ -180,14 +198,28 @@ fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> EventDrivenCol
     }
 }
 
-fn run_once(sys: &ScalePoolSystem, sources: &mut [&mut dyn TrafficSource]) -> (StreamReport, f64) {
+pub(crate) fn run_once(sys: &ScalePoolSystem, sources: &mut [&mut dyn TrafficSource]) -> (StreamReport, f64) {
+    run_once_with(sys, sources, None)
+}
+
+/// As [`run_once`], with a QoS configuration applied through the
+/// coordinator before the run (the `qos` experiment's policy points;
+/// `None` keeps the class-blind FCFS default — the parity baseline).
+pub(crate) fn run_once_with(
+    sys: &ScalePoolSystem,
+    sources: &mut [&mut dyn TrafficSource],
+    qos: Option<&crate::coordinator::QosManager>,
+) -> (StreamReport, f64) {
     let mut sim = MemSim::new(&sys.fabric);
+    if let Some(mgr) = qos {
+        mgr.apply(&mut sim);
+    }
     let rep = sim.run_streamed(sources);
     let util = sim.peak_utilization(rep.total.makespan_ns);
     (rep, util)
 }
 
-fn mean_or_zero(w: &Welford) -> f64 {
+pub(crate) fn mean_or_zero(w: &Welford) -> f64 {
     if w.count() == 0 {
         0.0
     } else {
@@ -203,23 +235,26 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
     let horizon = horizon_estimate(&sys, cfg);
 
     // --- solo baselines --------------------------------------------------
-    let (coh_solo_tx, coh_solo_op) = {
+    let (coh_solo, coh_solo_op) = {
         let mut src = coherence_source(&sys, cfg, horizon);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
         let (rep, _) = run_once(&sys, &mut solo);
-        (rep.class(TrafficClass::Coherence).latency.mean(), mean_or_zero(src.op_latency()))
+        let c = rep.class(TrafficClass::Coherence);
+        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.op_latency()))
     };
-    let (tier_solo_tx, tier_solo_mig) = {
+    let (tier_solo, tier_solo_mig) = {
         let mut src = tiering_source(&sys, cfg, horizon);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
         let (rep, _) = run_once(&sys, &mut solo);
-        (mean_or_zero(&rep.class(TrafficClass::Tiering).latency), mean_or_zero(src.migration_latency()))
+        let c = rep.class(TrafficClass::Tiering);
+        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.migration_latency()))
     };
-    let (col_solo_tx, col_solo_rep) = {
+    let (col_solo, col_solo_rep) = {
         let mut src = collective_source(&sys, cfg);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
         let (rep, _) = run_once(&sys, &mut solo);
-        (rep.class(TrafficClass::Collective).latency.mean(), mean_or_zero(src.repeat_latency()))
+        let c = rep.class(TrafficClass::Collective);
+        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.repeat_latency()))
     };
 
     // --- mixed run -------------------------------------------------------
@@ -231,22 +266,29 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         run_once(&sys, &mut sources)
     };
 
-    let row = |class: TrafficClass, solo_tx: f64, solo_domain: f64, mixed_domain: f64| {
+    let row = |class: TrafficClass,
+               (solo_tx, solo_p50, solo_p99): (f64, f64, f64),
+               solo_domain: f64,
+               mixed_domain: f64| {
         let c = mixed.class(class);
         MixedClassRow {
             class,
             completed: c.completed,
             bytes: c.bytes,
             solo_tx_ns: solo_tx,
-            mixed_tx_ns: mean_or_zero(&c.latency),
+            mixed_tx_ns: c.mean_ns(),
+            solo_p50_ns: solo_p50,
+            mixed_p50_ns: c.p50_ns(),
+            solo_p99_ns: solo_p99,
+            mixed_p99_ns: c.p99_ns(),
             solo_domain_ns: solo_domain,
             mixed_domain_ns: mixed_domain,
         }
     };
     let rows = vec![
-        row(TrafficClass::Coherence, coh_solo_tx, coh_solo_op, mean_or_zero(coh.op_latency())),
-        row(TrafficClass::Tiering, tier_solo_tx, tier_solo_mig, mean_or_zero(tier.migration_latency())),
-        row(TrafficClass::Collective, col_solo_tx, col_solo_rep, mean_or_zero(col.repeat_latency())),
+        row(TrafficClass::Coherence, coh_solo, coh_solo_op, mean_or_zero(coh.op_latency())),
+        row(TrafficClass::Tiering, tier_solo, tier_solo_mig, mean_or_zero(tier.migration_latency())),
+        row(TrafficClass::Collective, col_solo, col_solo_rep, mean_or_zero(col.repeat_latency())),
     ];
     MixedReport {
         rows,
@@ -262,20 +304,24 @@ pub fn render(r: &MixedReport) -> String {
     use crate::util::units::{fmt_bytes, fmt_ns};
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>7}\n",
-        "class", "txns", "bytes", "solo tx", "mixed tx", "infl", "solo dom", "mixed dom", "infl"
+        "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>8} | {:>10} {:>10} {:>7}\n",
+        "class", "txns", "bytes", "solo tx", "mixed tx", "infl", "solo p99", "mixed p99", "p99 infl",
+        "solo dom", "mixed dom", "infl"
     ));
-    out.push_str(&"-".repeat(100));
+    out.push_str(&"-".repeat(132));
     out.push('\n');
     for row in &r.rows {
         out.push_str(&format!(
-            "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>6.2}x\n",
+            "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>7.2}x | {:>10} {:>10} {:>6.2}x\n",
             row.class.name(),
             row.completed,
             fmt_bytes(row.bytes),
             fmt_ns(row.solo_tx_ns),
             fmt_ns(row.mixed_tx_ns),
             row.tx_inflation(),
+            fmt_ns(row.solo_p99_ns),
+            fmt_ns(row.mixed_p99_ns),
+            row.p99_inflation(),
             fmt_ns(row.solo_domain_ns),
             fmt_ns(row.mixed_domain_ns),
             row.domain_inflation(),
@@ -288,9 +334,13 @@ pub fn render(r: &MixedReport) -> String {
         100.0 * r.mixed_peak_utilization,
         r.peak_inflight
     ));
+    let p99 = |class: TrafficClass| r.row(class).map(MixedClassRow::p99_inflation).unwrap_or(1.0);
     out.push_str(&format!(
-        "RESULT mixed max_tx_inflation={:.3}\n",
-        r.max_tx_inflation()
+        "RESULT mixed max_tx_inflation={:.3} coherence_p99_inflation={:.3} tiering_p99_inflation={:.3} collective_p99_inflation={:.3}\n",
+        r.max_tx_inflation(),
+        p99(TrafficClass::Coherence),
+        p99(TrafficClass::Tiering),
+        p99(TrafficClass::Collective),
     ));
     out
 }
@@ -314,6 +364,10 @@ mod tests {
         for row in &r.rows {
             assert!(row.completed > 0, "{} moved no transactions", row.class.name());
             assert!(row.solo_tx_ns > 0.0 && row.mixed_tx_ns > 0.0);
+            // tail percentiles populated, and p99 >= mean within histogram
+            // bin resolution (~±4%)
+            assert!(row.solo_p99_ns > 0.0 && row.mixed_p99_ns > 0.0);
+            assert!(row.mixed_p99_ns > 0.9 * row.mixed_tx_ns, "{} p99 below mean", row.class.name());
         }
         assert!(r.mixed_makespan_ns > 0.0);
     }

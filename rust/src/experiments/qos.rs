@@ -1,0 +1,415 @@
+//! The `qos` experiment: sweep fabric arbitration policies over the
+//! pod-scale mixed scenario and report per-class solo-vs-mixed latency
+//! inflation per policy. The `mixed` experiment measures cross-class
+//! interference; this one shows the coordinator *acting* on it — strict
+//! priority shrinks the coherence tail at the bulk classes' expense,
+//! weighted-fair bounds collective starvation, and class-blind FCFS is
+//! the parity baseline (its numbers reproduce `mixed` exactly, which the
+//! CI smoke asserts).
+//!
+//! Workloads are rebuilt identically-seeded for every policy, so the
+//! only difference between sweep points is the arbitration configuration
+//! applied through the coordinator's [`QosManager`].
+
+use super::mixed::{
+    build_system, coherence_source, collective_source, horizon_estimate, run_once, run_once_with,
+    tiering_source, MixedConfig,
+};
+use crate::coordinator::QosManager;
+use crate::sim::{ArbPolicy, LinkTier, StreamReport, TrafficClass, TrafficSource};
+
+/// One policy point of the sweep.
+#[derive(Clone, Debug)]
+pub struct PolicySpec {
+    /// Short name used in RESULT lines ("fcfs" / "strict" / "wfq").
+    pub name: String,
+    /// Applied uniformly across link tiers by the [`QosManager`].
+    pub policy: ArbPolicy,
+}
+
+impl PolicySpec {
+    pub fn fcfs() -> PolicySpec {
+        PolicySpec { name: "fcfs".into(), policy: ArbPolicy::FcfsShared }
+    }
+
+    pub fn strict(order: [TrafficClass; 4]) -> PolicySpec {
+        PolicySpec { name: "strict".into(), policy: ArbPolicy::StrictPriority(order) }
+    }
+
+    pub fn weighted(weights: [f64; 4]) -> PolicySpec {
+        PolicySpec { name: "wfq".into(), policy: ArbPolicy::WeightedFair(weights) }
+    }
+}
+
+/// Sweep configuration: the mixed scenario plus the policy list.
+#[derive(Clone, Debug)]
+pub struct QosSweepConfig {
+    pub mixed: MixedConfig,
+    pub policies: Vec<PolicySpec>,
+}
+
+impl Default for QosSweepConfig {
+    fn default() -> QosSweepConfig {
+        QosSweepConfig {
+            mixed: MixedConfig::default(),
+            policies: vec![
+                PolicySpec::fcfs(),
+                PolicySpec::strict(match ArbPolicy::strict_default() {
+                    ArbPolicy::StrictPriority(order) => order,
+                    _ => unreachable!(),
+                }),
+                PolicySpec::weighted(match ArbPolicy::weighted_default() {
+                    ArbPolicy::WeightedFair(w) => w,
+                    _ => unreachable!(),
+                }),
+            ],
+        }
+    }
+}
+
+/// Per-class outcome under one policy (solo baselines are shared across
+/// policies — a single class alone on the fabric serves FIFO within its
+/// one virtual channel under every policy, so solos are policy-invariant
+/// and measured once under FCFS).
+#[derive(Clone, Debug)]
+pub struct QosClassRow {
+    pub class: TrafficClass,
+    pub completed: u64,
+    pub bytes: f64,
+    pub solo_tx_ns: f64,
+    pub mixed_tx_ns: f64,
+    pub solo_p50_ns: f64,
+    pub mixed_p50_ns: f64,
+    pub solo_p99_ns: f64,
+    pub mixed_p99_ns: f64,
+}
+
+impl QosClassRow {
+    pub fn tx_inflation(&self) -> f64 {
+        if self.solo_tx_ns > 0.0 {
+            self.mixed_tx_ns / self.solo_tx_ns
+        } else {
+            1.0
+        }
+    }
+
+    pub fn p50_inflation(&self) -> f64 {
+        if self.solo_p50_ns > 0.0 {
+            self.mixed_p50_ns / self.solo_p50_ns
+        } else {
+            1.0
+        }
+    }
+
+    pub fn p99_inflation(&self) -> f64 {
+        if self.solo_p99_ns > 0.0 {
+            self.mixed_p99_ns / self.solo_p99_ns
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Per-tier service summary under one policy (from the per-link
+/// [`StreamReport::qos`] telemetry).
+#[derive(Clone, Copy, Debug)]
+pub struct TierSummary {
+    pub tier: LinkTier,
+    /// Utilization of the busiest link direction in the tier.
+    pub peak_utilization: f64,
+    /// Payload bytes served per class, indexed by [`TrafficClass::index`].
+    pub class_bytes: [f64; 4],
+    /// Mean queueing delay across the tier's served transactions, ns.
+    pub mean_queue_delay_ns: f64,
+}
+
+/// One policy's full outcome.
+#[derive(Clone, Debug)]
+pub struct QosPolicyRow {
+    pub name: String,
+    pub rows: Vec<QosClassRow>,
+    pub makespan_ns: f64,
+    pub events: u64,
+    pub peak_utilization: f64,
+    pub tiers: Vec<TierSummary>,
+}
+
+impl QosPolicyRow {
+    /// Largest per-class mean-latency inflation — the same definition as
+    /// `MixedReport::max_tx_inflation`, so the FCFS row is directly
+    /// comparable to the `mixed` baseline (asserted by CI).
+    pub fn max_tx_inflation(&self) -> f64 {
+        self.rows.iter().map(QosClassRow::tx_inflation).fold(1.0, f64::max)
+    }
+
+    pub fn row(&self, class: TrafficClass) -> Option<&QosClassRow> {
+        self.rows.iter().find(|r| r.class == class)
+    }
+}
+
+/// The sweep result.
+#[derive(Clone, Debug)]
+pub struct QosReport {
+    pub policies: Vec<QosPolicyRow>,
+}
+
+impl QosReport {
+    pub fn policy(&self, name: &str) -> Option<&QosPolicyRow> {
+        self.policies.iter().find(|p| p.name == name)
+    }
+}
+
+fn tier_summaries(rep: &StreamReport, makespan_ns: f64) -> Vec<TierSummary> {
+    let mut out: Vec<TierSummary> = Vec::new();
+    for t in LinkTier::ALL {
+        // busiest direction: total busy per (link, dir) within the tier
+        let mut peak = 0.0f64;
+        let mut class_bytes = [0.0f64; 4];
+        let mut queued = 0.0f64;
+        let mut served = 0u64;
+        let mut dir_busy: std::collections::HashMap<(u32, u8), f64> = std::collections::HashMap::new();
+        for s in rep.qos.iter().filter(|s| s.tier == t) {
+            class_bytes[s.class.index()] += s.bytes;
+            queued += s.queue_delay_ns;
+            served += s.served;
+            *dir_busy.entry((s.link, s.dir)).or_insert(0.0) += s.busy_ns;
+        }
+        if served == 0 {
+            continue;
+        }
+        for &busy in dir_busy.values() {
+            if makespan_ns > 0.0 {
+                peak = peak.max((busy / makespan_ns).min(1.0));
+            }
+        }
+        out.push(TierSummary {
+            tier: t,
+            peak_utilization: peak,
+            class_bytes,
+            mean_queue_delay_ns: queued / served as f64,
+        });
+    }
+    out
+}
+
+/// Run the sweep: one set of solo baselines (FCFS — solos are
+/// policy-invariant), then the mixed scenario once per policy with
+/// identically-seeded workloads and the policy applied via the
+/// coordinator's [`QosManager`].
+pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
+    let mcfg = &cfg.mixed;
+    let sys = build_system(mcfg);
+    let horizon = horizon_estimate(&sys, mcfg);
+
+    // --- solo baselines (shared by every policy point) -------------------
+    // (mean, p50, p99) of a class's transaction latency in a report
+    fn solo(class: TrafficClass, rep: &StreamReport) -> (f64, f64, f64) {
+        let c = rep.class(class);
+        (c.mean_ns(), c.p50_ns(), c.p99_ns())
+    }
+    let coh_solo = {
+        let mut src = coherence_source(&sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Coherence, &rep)
+    };
+    let tier_solo = {
+        let mut src = tiering_source(&sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Tiering, &rep)
+    };
+    let col_solo = {
+        let mut src = collective_source(&sys, mcfg);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Collective, &rep)
+    };
+
+    // --- one mixed run per policy ----------------------------------------
+    let mut policies = Vec::new();
+    for spec in &cfg.policies {
+        let mgr = QosManager::uniform(spec.policy);
+        let mut coh = coherence_source(&sys, mcfg, horizon);
+        let mut tier = tiering_source(&sys, mcfg, horizon);
+        let mut col = collective_source(&sys, mcfg);
+        let (rep, util) = {
+            let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
+            run_once_with(&sys, &mut sources, Some(&mgr))
+        };
+        let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
+            let c = rep.class(class);
+            QosClassRow {
+                class,
+                completed: c.completed,
+                bytes: c.bytes,
+                solo_tx_ns: solo_tx,
+                mixed_tx_ns: c.mean_ns(),
+                solo_p50_ns: solo_p50,
+                mixed_p50_ns: c.p50_ns(),
+                solo_p99_ns: solo_p99,
+                mixed_p99_ns: c.p99_ns(),
+            }
+        };
+        policies.push(QosPolicyRow {
+            name: spec.name.clone(),
+            rows: vec![
+                row(TrafficClass::Coherence, coh_solo),
+                row(TrafficClass::Tiering, tier_solo),
+                row(TrafficClass::Collective, col_solo),
+            ],
+            makespan_ns: rep.total.makespan_ns,
+            events: rep.total.events,
+            peak_utilization: util,
+            tiers: tier_summaries(&rep, rep.total.makespan_ns),
+        });
+    }
+    QosReport { policies }
+}
+
+/// Paper-style report plus the machine-readable RESULT lines.
+pub fn render(r: &QosReport, specs: &[PolicySpec]) -> String {
+    use crate::util::units::{fmt_bytes, fmt_ns};
+    let mut out = String::new();
+    for p in &r.policies {
+        let desc = specs
+            .iter()
+            .find(|s| s.name == p.name)
+            .map(|s| QosManager::uniform(s.policy).describe())
+            .unwrap_or_default();
+        out.push_str(&format!("=== policy {} ({desc}) ===\n", p.name));
+        out.push_str(&format!(
+            "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>8}\n",
+            "class", "txns", "bytes", "solo tx", "mixed tx", "infl", "solo p99", "mixed p99", "p99 infl"
+        ));
+        out.push_str(&"-".repeat(104));
+        out.push('\n');
+        for row in &p.rows {
+            out.push_str(&format!(
+                "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>7.2}x\n",
+                row.class.name(),
+                row.completed,
+                fmt_bytes(row.bytes),
+                fmt_ns(row.solo_tx_ns),
+                fmt_ns(row.mixed_tx_ns),
+                row.tx_inflation(),
+                fmt_ns(row.solo_p99_ns),
+                fmt_ns(row.mixed_p99_ns),
+                row.p99_inflation(),
+            ));
+        }
+        out.push_str(&format!(
+            "makespan {} | {} events | peak link utilization {:.1}%\n",
+            fmt_ns(p.makespan_ns),
+            p.events,
+            100.0 * p.peak_utilization
+        ));
+        for t in &p.tiers {
+            out.push_str(&format!(
+                "  tier {:>11}: peak dir util {:>5.1}%, mean queue delay {:>10}, bytes coh/tier/col/gen = {}/{}/{}/{}\n",
+                t.tier.name(),
+                100.0 * t.peak_utilization,
+                fmt_ns(t.mean_queue_delay_ns),
+                fmt_bytes(t.class_bytes[0]),
+                fmt_bytes(t.class_bytes[1]),
+                fmt_bytes(t.class_bytes[2]),
+                fmt_bytes(t.class_bytes[3]),
+            ));
+        }
+    }
+    // machine-readable: one line per (policy, class) for CI greps, one
+    // summary line per policy for the BENCH_figs.json capture
+    for p in &r.policies {
+        for row in &p.rows {
+            out.push_str(&format!(
+                "RESULT qos policy={} class={} p99_inflation={:.3} tx_inflation={:.3}\n",
+                p.name,
+                row.class.name(),
+                row.p99_inflation(),
+                row.tx_inflation(),
+            ));
+        }
+    }
+    for p in &r.policies {
+        let g = |class: TrafficClass, f: fn(&QosClassRow) -> f64| {
+            p.row(class).map(f).unwrap_or(1.0)
+        };
+        out.push_str(&format!(
+            "RESULT qos_{} max_tx_inflation={:.3} coherence_p99_inflation={:.3} tiering_p99_inflation={:.3} collective_p99_inflation={:.3}\n",
+            p.name,
+            p.max_tx_inflation(),
+            g(TrafficClass::Coherence, QosClassRow::p99_inflation),
+            g(TrafficClass::Tiering, QosClassRow::p99_inflation),
+            g(TrafficClass::Collective, QosClassRow::p99_inflation),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> QosSweepConfig {
+        QosSweepConfig {
+            mixed: MixedConfig {
+                coherence_ops: 800,
+                tiering_ops: 200,
+                collective_bytes: 8.0 * 1024.0 * 1024.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_runs_every_policy() {
+        let r = run_qos(&small());
+        assert_eq!(r.policies.len(), 3);
+        for p in &r.policies {
+            for row in &p.rows {
+                assert!(row.completed > 0, "{}/{} moved nothing", p.name, row.class.name());
+                assert!(row.solo_tx_ns > 0.0 && row.mixed_tx_ns > 0.0);
+                assert!(row.mixed_p99_ns > 0.0);
+            }
+            assert!(p.makespan_ns > 0.0);
+            assert!(!p.tiers.is_empty(), "{}: no tier telemetry", p.name);
+        }
+    }
+
+    #[test]
+    fn fcfs_point_reproduces_the_mixed_experiment() {
+        // the parity anchor the CI smoke also checks end to end: the qos
+        // sweep's FCFS mixed run is the mixed experiment's mixed run
+        let cfg = small();
+        let r = run_qos(&cfg);
+        let m = super::super::mixed::run_mixed(&cfg.mixed);
+        let fcfs = r.policy("fcfs").unwrap();
+        assert_eq!(fcfs.events, m.mixed_events);
+        assert!((fcfs.makespan_ns - m.mixed_makespan_ns).abs() < 1e-9);
+        assert!((fcfs.max_tx_inflation() - m.max_tx_inflation()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strict_priority_protects_coherence() {
+        let r = run_qos(&small());
+        let fcfs = r.policy("fcfs").unwrap();
+        let strict = r.policy("strict").unwrap();
+        let f = fcfs.row(TrafficClass::Coherence).unwrap().mixed_tx_ns;
+        let s = strict.row(TrafficClass::Coherence).unwrap().mixed_tx_ns;
+        // coherence never waits behind bulk classes under strict priority:
+        // its mean latency under interference must not exceed FCFS (small
+        // tolerance: arrival interleavings shift self-contention)
+        assert!(s <= f * 1.05, "strict coherence {s} vs fcfs {f}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_qos(&small());
+        let b = run_qos(&small());
+        for (pa, pb) in a.policies.iter().zip(&b.policies) {
+            assert_eq!(pa.events, pb.events);
+            assert!((pa.makespan_ns - pb.makespan_ns).abs() < 1e-12);
+        }
+    }
+}

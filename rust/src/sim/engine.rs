@@ -38,6 +38,12 @@ pub enum EventKind {
     Arrive { id: usize, hop: usize },
     /// Transaction `id` completes end-to-end.
     Complete { id: usize },
+    /// A service on link `link`, direction `dir` finished: the
+    /// [`ClassedServer`](super::qos::ClassedServer) arbitrates its
+    /// virtual channels and starts the next queued transaction. Only
+    /// scheduled by queued-mode QoS policies — class-blind FCFS is
+    /// time-released and never departs.
+    Depart { link: u32, dir: u8 },
     /// Driver-defined.
     Custom { tag: u64 },
 }

@@ -1,7 +1,11 @@
 //! Transaction-level memory-access simulation over a [`Fabric`]: each
-//! transaction walks its routed path hop by hop; every link direction is an
-//! FCFS [`Server`] sized by that link's serialization time, so contention
-//! and head-of-line blocking emerge rather than being assumed.
+//! transaction walks its routed path hop by hop; every link direction is a
+//! class-aware [`ClassedServer`] sized by that link's serialization time,
+//! so contention and head-of-line blocking emerge rather than being
+//! assumed. The default policy is class-blind FCFS — byte-identical to
+//! the pre-QoS plain `Server` — and [`MemSim::set_qos`] swaps in
+//! strict-priority or weighted-fair arbitration per link tier (module
+//! [`qos`](super::qos)).
 //!
 //! # Performance architecture (§Perf)
 //!
@@ -26,7 +30,7 @@
 //! (a [`BatchSource`] wrapping the pre-sorted `Vec<Transaction>`).
 
 use super::engine::{Engine, EventKind};
-use super::server::Server;
+use super::qos::{self, Admission, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 use super::traffic::{BatchSource, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
@@ -70,6 +74,8 @@ struct InFlight {
     path_len: u32,
     /// Index of the emitting source.
     source: u32,
+    /// Traffic class (the VC every hop's server files this under).
+    class: TrafficClass,
     /// Source-defined token echoed back on completion.
     token: u64,
 }
@@ -102,9 +108,13 @@ enum SrcState {
 /// The simulator.
 pub struct MemSim<'f> {
     pub(crate) fabric: &'f Fabric,
-    /// one server per (link, direction)
-    pub(crate) servers: Vec<[Server; 2]>,
+    /// one class-aware server per (link, direction)
+    pub(crate) servers: Vec<[ClassedServer; 2]>,
     pub(crate) consts: Vec<LinkConsts>,
+    /// Structural tier of each link (QoS policy granularity).
+    pub(crate) tiers: Vec<LinkTier>,
+    /// The active per-tier arbitration configuration.
+    qos: QosPolicy,
     /// Serialization-time quantum of the fastest link: the calendar
     /// engine's bucket-width floor (§Perf).
     pub(crate) granularity: f64,
@@ -116,7 +126,9 @@ pub struct MemSim<'f> {
 
 impl<'f> MemSim<'f> {
     pub fn new(fabric: &'f Fabric) -> Self {
-        let servers = (0..fabric.topo.links.len()).map(|_| [Server::new(), Server::new()]).collect();
+        let servers =
+            (0..fabric.topo.links.len()).map(|_| [ClassedServer::fcfs(), ClassedServer::fcfs()]).collect();
+        let tiers = qos::classify_links(&fabric.topo);
         let consts: Vec<LinkConsts> = fabric
             .topo
             .links
@@ -145,10 +157,69 @@ impl<'f> MemSim<'f> {
             fabric,
             servers,
             consts,
+            tiers,
+            qos: QosPolicy::fcfs(),
             granularity,
             hop_arena: Vec::new(),
             path_cache: HashMap::new(),
         }
+    }
+
+    /// Build a simulator with a QoS configuration already applied.
+    pub fn with_qos(fabric: &'f Fabric, policy: QosPolicy) -> Self {
+        let mut sim = MemSim::new(fabric);
+        sim.set_qos(policy);
+        sim
+    }
+
+    /// Apply a per-tier arbitration configuration: every link direction
+    /// gets a fresh [`ClassedServer`] running its tier's policy (so any
+    /// telemetry accumulated before the call is discarded). Call before
+    /// running traffic; the coordinator's
+    /// [`QosManager`](crate::coordinator::QosManager) is the usual owner.
+    pub fn set_qos(&mut self, policy: QosPolicy) {
+        self.qos = policy;
+        for (li, tier) in self.tiers.iter().enumerate() {
+            let p = policy.tier(*tier);
+            self.servers[li] = [ClassedServer::new(p), ClassedServer::new(p)];
+        }
+    }
+
+    /// The active QoS configuration.
+    pub fn qos_policy(&self) -> QosPolicy {
+        self.qos
+    }
+
+    /// Structural tier of link `link` (QoS policy granularity).
+    pub fn link_tier(&self, link: usize) -> LinkTier {
+        self.tiers[link]
+    }
+
+    /// Snapshot the per-link per-class service telemetry (only link
+    /// directions that served traffic are listed). Also exported into
+    /// [`StreamReport::qos`] at the end of every streamed run.
+    pub fn collect_qos_stats(&self) -> Vec<LinkClassStats> {
+        let mut out = Vec::new();
+        for (li, pair) in self.servers.iter().enumerate() {
+            for (dir, srv) in pair.iter().enumerate() {
+                for class in TrafficClass::ALL {
+                    let st = srv.class_stats(class);
+                    if st.served > 0 {
+                        out.push(LinkClassStats {
+                            link: li as u32,
+                            dir: dir as u8,
+                            tier: self.tiers[li],
+                            class,
+                            served: st.served,
+                            bytes: st.bytes,
+                            busy_ns: st.busy_ns,
+                            queue_delay_ns: st.queued_ns,
+                        });
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Intern the routed path src -> dst: returns (start, len) into the
@@ -186,6 +257,11 @@ impl<'f> MemSim<'f> {
     /// Advance transaction `id` (state `fl`) arriving at hop `hop`: admit
     /// it to the link-direction server, or pay device time and complete.
     /// Shared by injection (hop 0, inline) and the Arrive handler.
+    ///
+    /// FCFS servers time-release (the completion time is known at
+    /// admission, no extra events); queued-mode policies defer backlogged
+    /// transactions to the link's `Depart` chain, which re-schedules the
+    /// next-hop Arrive when the arbiter starts them.
     #[inline]
     fn step(&mut self, engine: &mut Engine, fl: &InFlight, now: f64, id: usize, hop: usize) {
         if hop >= fl.path_len as usize {
@@ -198,11 +274,22 @@ impl<'f> MemSim<'f> {
         let dir = (h & 1) as usize;
         let c = &self.consts[link_idx];
         let service = c.flit.wire_bytes(fl.bytes) * c.inv_rate;
-        let done = self.servers[link_idx][dir].admit(now, service);
         // fixed per-hop latency + switch traversal at the receiving node
-        // (precomputed — §Perf)
+        // (precomputed — §Perf). NOTE: the sum is associated exactly as the
+        // pre-QoS hot path (`done + fixed + sw`) so FCFS results stay
+        // byte-identical to the plain-Server oracle.
         let sw = c.switch_ns[1 - dir];
-        engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+        match self.servers[link_idx][dir].admit(now, service, fl.bytes, fl.class, id as u32, hop as u32)
+        {
+            Admission::Release { done } => {
+                engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+            }
+            Admission::Start { done } => {
+                engine.schedule(done, EventKind::Depart { link: link_idx as u32, dir: dir as u8 });
+                engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+            }
+            Admission::Queued => {}
+        }
     }
 
     /// Run all transactions to completion; returns latency statistics.
@@ -298,6 +385,7 @@ impl<'f> MemSim<'f> {
                         path_start,
                         path_len,
                         source: i as u32,
+                        class: classes[i],
                         token: stx.token,
                     };
                     let id = match free_slots.pop() {
@@ -316,6 +404,20 @@ impl<'f> MemSim<'f> {
                 }
                 EventKind::Arrive { id, hop } => {
                     self.step(&mut engine, &slots[id], now, id, hop);
+                }
+                // a queued-mode link freed: arbitrate the next VC and put
+                // the started transaction back on its path
+                EventKind::Depart { link, dir } => {
+                    let (li, di) = (link as usize, dir as usize);
+                    if let Some((id, hop, done)) = self.servers[li][di].depart(now) {
+                        let c = &self.consts[li];
+                        let sw = c.switch_ns[1 - di];
+                        engine.schedule(done, EventKind::Depart { link, dir });
+                        engine.schedule(
+                            done + c.fixed_ns + sw,
+                            EventKind::Arrive { id: id as usize, hop: hop as usize + 1 },
+                        );
+                    }
                 }
                 EventKind::Complete { id } => {
                     let fl = &slots[id];
@@ -337,6 +439,7 @@ impl<'f> MemSim<'f> {
         // the slot table's high-water mark IS the peak concurrency (slots
         // recycle through the free list) — the streaming memory contract
         report.peak_inflight = slots.len();
+        report.qos = self.collect_qos_stats();
         report
     }
 

@@ -1,8 +1,9 @@
 //! Discrete-event simulation engine (transaction-level): event heap,
-//! links/switch ports as FCFS servers with real queuing, and a
-//! memory-transaction simulator used by Figure 7's detailed mode, the
-//! `scalepool simulate` subcommand, and the unified traffic layer behind
-//! the `mixed` experiment.
+//! links/switch ports as class-aware servers with real queuing and
+//! pluggable QoS arbitration (module [`qos`]), and a memory-transaction
+//! simulator used by Figure 7's detailed mode, the `scalepool simulate`
+//! subcommand, and the unified traffic layer behind the `mixed` and
+//! `qos` experiments.
 //!
 //! The analytic model in [`crate::fabric`] answers "what is the latency of
 //! one message on an idle/uniformly-loaded path"; this engine answers the
@@ -40,10 +41,12 @@
 pub mod engine;
 pub mod server;
 pub mod memsim;
+pub mod qos;
 mod shard;
 pub mod traffic;
 
 pub use engine::{Engine, EventKind};
 pub use memsim::{MemSim, MemSimReport, Transaction};
+pub use qos::{ArbPolicy, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 pub use server::Server;
 pub use traffic::{BatchSource, ClassReport, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};

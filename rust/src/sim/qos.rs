@@ -1,0 +1,716 @@
+//! Fabric QoS: class-aware link arbitration. Every link direction is a
+//! [`ClassedServer`] holding one virtual channel (VC) per [`TrafficClass`]
+//! and a pluggable arbitration policy — the subsystem that lets the
+//! coordinator *act* on the cross-class interference the `mixed`
+//! experiment measures (DFabric's central result for shared hybrid
+//! fabrics; CXL-CCL's observation that collectives over a CXL pool are
+//! acutely sensitive to fabric sharing).
+//!
+//! # Policies
+//!
+//! * [`ArbPolicy::FcfsShared`] — the pre-QoS behavior: one class-blind
+//!   FCFS queue. This is the **parity baseline**: its admission math is
+//!   byte-identical to the plain [`Server`](super::server::Server)
+//!   (pinned by `tests/prop_qos.rs::prop_fcfs_matches_pre_qos_server`)
+//!   and it needs no extra events, so the default hot path pays nothing.
+//! * [`ArbPolicy::StrictPriority`] — a configurable class order (e.g.
+//!   coherence > tiering > collective > generic); when the link frees,
+//!   the highest-priority backlogged VC is served, FIFO within a VC.
+//!   Non-preemptive (a transaction in service finishes).
+//! * [`ArbPolicy::WeightedFair`] — deficit round-robin over per-class
+//!   byte credits: each VC visit adds `quantum ∝ weight` bytes of
+//!   credit and the head transaction is served once the VC's deficit
+//!   covers its bytes, so long-run byte shares track the weights while
+//!   no backlogged class starves.
+//!
+//! All policies are **work-conserving**: the link never idles while any
+//! VC is backlogged (`depart` always starts a queued transaction when one
+//! exists — pinned by `prop_qos_work_conservation`).
+//!
+//! # Integration with the event engine
+//!
+//! FCFS admissions are *time-released*: `admit` returns the completion
+//! time immediately (the classic `Server::admit` contract), because FIFO
+//! order is fixed at arrival. Under Strict/WeightedFair the service order
+//! of a backlog genuinely depends on later arrivals, so admission to a
+//! busy link returns [`Admission::Queued`] and the driver schedules a
+//! [`Depart`](super::engine::EventKind::Depart) event at each service
+//! completion; `depart` then picks the next VC per policy. Per-link-tier
+//! policies come from a [`QosPolicy`], applied by
+//! [`MemSim::set_qos`](super::MemSim::set_qos) (usually via the
+//! coordinator's [`QosManager`](crate::coordinator::QosManager)).
+
+use super::traffic::TrafficClass;
+use crate::fabric::{NodeKind, Topology};
+use std::collections::VecDeque;
+
+/// Structural tier of a fabric link, the granularity at which the
+/// coordinator sets arbitration policies (paper Figure 2/4: XLink domain
+/// links, rack-crossbar uplinks into the CXL fabric, CXL leaf attach,
+/// CXL spine/core). Derived from the topology by [`classify_links`]; for
+/// the RDMA baseline the same structural rules apply to the IB fat tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Accelerator-centric intra-rack links (NVLink/UALink).
+    Xlink,
+    /// Rack crossbar uplinks into the inter-cluster fabric.
+    RackUplink,
+    /// Endpoint attach into the fabric edge: per-accelerator CXL ports,
+    /// CPU and tier-2 memory-node links.
+    CxlLeaf,
+    /// Fabric-internal switch-to-switch links (leaf-spine, torus,
+    /// dragonfly core).
+    CxlSpine,
+}
+
+impl LinkTier {
+    pub const COUNT: usize = 4;
+    pub const ALL: [LinkTier; 4] =
+        [LinkTier::Xlink, LinkTier::RackUplink, LinkTier::CxlLeaf, LinkTier::CxlSpine];
+
+    pub fn index(self) -> usize {
+        match self {
+            LinkTier::Xlink => 0,
+            LinkTier::RackUplink => 1,
+            LinkTier::CxlLeaf => 2,
+            LinkTier::CxlSpine => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkTier::Xlink => "xlink",
+            LinkTier::RackUplink => "rack-uplink",
+            LinkTier::CxlLeaf => "cxl-leaf",
+            LinkTier::CxlSpine => "cxl-spine",
+        }
+    }
+}
+
+/// Classify every link of a topology into its [`LinkTier`]. A switch with
+/// at least one incident XLink link is a rack crossbar; switch-to-switch
+/// links touching a crossbar are rack uplinks, other switch-to-switch
+/// links are fabric core, and endpoint-attach links are leaf links.
+pub fn classify_links(topo: &Topology) -> Vec<LinkTier> {
+    let crossbar: Vec<bool> = (0..topo.nodes.len())
+        .map(|n| {
+            topo.node(n).kind == NodeKind::Switch
+                && topo.neighbors(n).iter().any(|&(_, l)| topo.link(l).params.kind.is_xlink())
+        })
+        .collect();
+    topo.links
+        .iter()
+        .map(|l| {
+            if l.params.kind.is_xlink() {
+                LinkTier::Xlink
+            } else if topo.node(l.a).kind == NodeKind::Switch
+                && topo.node(l.b).kind == NodeKind::Switch
+            {
+                if crossbar[l.a] || crossbar[l.b] {
+                    LinkTier::RackUplink
+                } else {
+                    LinkTier::CxlSpine
+                }
+            } else {
+                LinkTier::CxlLeaf
+            }
+        })
+        .collect()
+}
+
+/// Arbitration policy of one [`ClassedServer`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArbPolicy {
+    /// Class-blind FCFS — the pre-QoS parity baseline.
+    FcfsShared,
+    /// Serve the highest-priority backlogged VC first; the array lists
+    /// classes from highest to lowest priority and must name each class
+    /// exactly once.
+    StrictPriority([TrafficClass; 4]),
+    /// Deficit round-robin over per-class byte credits; weights are
+    /// relative byte shares indexed by [`TrafficClass::index`] and are
+    /// clamped to a small positive floor (a zero-weight backlogged class
+    /// must still drain — work conservation).
+    WeightedFair([f64; 4]),
+}
+
+impl ArbPolicy {
+    /// Default strict order: coherence > tiering > collective > generic
+    /// (latency-critical protocol messages first, bulk last).
+    pub fn strict_default() -> ArbPolicy {
+        ArbPolicy::StrictPriority([
+            TrafficClass::Coherence,
+            TrafficClass::Tiering,
+            TrafficClass::Collective,
+            TrafficClass::Generic,
+        ])
+    }
+
+    /// Default weighted-fair shares: coherence-heavy but with a
+    /// guaranteed collective share (the anti-starvation configuration).
+    pub fn weighted_default() -> ArbPolicy {
+        ArbPolicy::WeightedFair([4.0, 2.0, 2.0, 1.0])
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbPolicy::FcfsShared => "fcfs",
+            ArbPolicy::StrictPriority(_) => "strict",
+            ArbPolicy::WeightedFair(_) => "wfq",
+        }
+    }
+}
+
+/// Per-link-tier arbitration configuration, owned by the coordinator
+/// ([`QosManager`](crate::coordinator::QosManager)) and applied to a
+/// simulator with [`MemSim::set_qos`](super::MemSim::set_qos).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosPolicy {
+    per_tier: [ArbPolicy; LinkTier::COUNT],
+}
+
+impl QosPolicy {
+    /// The same policy on every tier.
+    pub fn uniform(p: ArbPolicy) -> QosPolicy {
+        QosPolicy { per_tier: [p; LinkTier::COUNT] }
+    }
+
+    /// The parity baseline: class-blind FCFS everywhere.
+    pub fn fcfs() -> QosPolicy {
+        QosPolicy::uniform(ArbPolicy::FcfsShared)
+    }
+
+    pub fn tier(&self, t: LinkTier) -> ArbPolicy {
+        self.per_tier[t.index()]
+    }
+
+    pub fn set(&mut self, t: LinkTier, p: ArbPolicy) {
+        self.per_tier[t.index()] = p;
+    }
+}
+
+impl Default for QosPolicy {
+    fn default() -> QosPolicy {
+        QosPolicy::fcfs()
+    }
+}
+
+/// What [`ClassedServer::admit`] decided.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// FCFS time-release: the completion time is fixed at admission and
+    /// no depart event is needed (the pre-QoS `Server` contract).
+    Release { done: f64 },
+    /// The link was idle: service starts now and completes at `done`.
+    /// The driver must schedule a `Depart` event at `done` so the
+    /// arbiter can start the next queued transaction.
+    Start { done: f64 },
+    /// Backlogged in the class's VC; a later `depart` will start it.
+    Queued,
+}
+
+/// Per-class service telemetry of one link direction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VcStats {
+    /// Transactions served.
+    pub served: u64,
+    /// Payload bytes served.
+    pub bytes: f64,
+    /// Cumulative service (busy) time, ns.
+    pub busy_ns: f64,
+    /// Cumulative queueing delay (service start - arrival), ns.
+    pub queued_ns: f64,
+}
+
+/// One per-link per-class telemetry record, exported into
+/// [`StreamReport::qos`](super::traffic::StreamReport::qos) after a run
+/// (only link directions that actually served a class are listed).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkClassStats {
+    pub link: u32,
+    pub dir: u8,
+    pub tier: LinkTier,
+    pub class: TrafficClass,
+    pub served: u64,
+    pub bytes: f64,
+    pub busy_ns: f64,
+    /// Cumulative queueing delay, ns (divide by `served` for the mean).
+    pub queue_delay_ns: f64,
+}
+
+impl LinkClassStats {
+    pub fn mean_queue_delay_ns(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.queue_delay_ns / self.served as f64
+        }
+    }
+
+    pub fn utilization(&self, horizon_ns: f64) -> f64 {
+        if horizon_ns <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ns / horizon_ns).min(1.0)
+        }
+    }
+}
+
+/// A transaction parked in a virtual channel.
+#[derive(Clone, Copy, Debug)]
+struct QueuedTx {
+    service: f64,
+    bytes: f64,
+    arrived: f64,
+    id: u32,
+    hop: u32,
+}
+
+/// Floor for weighted-fair quanta: even a zero-weight class accumulates
+/// credit, so a backlogged VC always drains (work conservation).
+const MIN_QUANTUM_BYTES: f64 = 64.0;
+/// Byte credit granted to the heaviest class per DRR visit.
+const QUANTUM_SCALE_BYTES: f64 = 16.0 * 1024.0;
+
+/// One link direction (or switch port) as a class-aware resource: one
+/// virtual channel per [`TrafficClass`], arbitration per [`ArbPolicy`].
+#[derive(Clone, Debug)]
+pub struct ClassedServer {
+    policy: ArbPolicy,
+    /// Strict-priority rank per class index (0 = highest).
+    rank: [u8; 4],
+    /// DRR byte credit granted per visit, per class index.
+    quantum: [f64; 4],
+    /// FCFS time-release state: when the shared queue drains.
+    free_at: f64,
+    /// Queued-mode state: a transaction is currently in service.
+    in_service: bool,
+    vcs: [VecDeque<QueuedTx>; 4],
+    queued_count: usize,
+    /// DRR state.
+    deficit: [f64; 4],
+    rr_cursor: usize,
+    fresh_visit: bool,
+    stats: [VcStats; 4],
+}
+
+impl ClassedServer {
+    pub fn new(policy: ArbPolicy) -> ClassedServer {
+        let mut rank = [0u8; 4];
+        let mut quantum = [QUANTUM_SCALE_BYTES; 4];
+        match policy {
+            ArbPolicy::FcfsShared => {}
+            ArbPolicy::StrictPriority(order) => {
+                let mut seen = [false; 4];
+                for (r, c) in order.iter().enumerate() {
+                    rank[c.index()] = r as u8;
+                    seen[c.index()] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "strict-priority order must name every class once");
+            }
+            ArbPolicy::WeightedFair(weights) => {
+                let max = weights.iter().copied().fold(MIN_QUANTUM_BYTES / QUANTUM_SCALE_BYTES, f64::max);
+                for (q, &w) in quantum.iter_mut().zip(&weights) {
+                    assert!(w.is_finite() && w >= 0.0, "weighted-fair weights must be finite and >= 0");
+                    *q = (w / max * QUANTUM_SCALE_BYTES).max(MIN_QUANTUM_BYTES);
+                }
+            }
+        }
+        ClassedServer {
+            policy,
+            rank,
+            quantum,
+            free_at: 0.0,
+            in_service: false,
+            vcs: [VecDeque::new(), VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            queued_count: 0,
+            deficit: [0.0; 4],
+            rr_cursor: 0,
+            fresh_visit: true,
+            stats: [VcStats::default(); 4],
+        }
+    }
+
+    /// The parity baseline (class-blind FCFS).
+    pub fn fcfs() -> ClassedServer {
+        ClassedServer::new(ArbPolicy::FcfsShared)
+    }
+
+    pub fn policy(&self) -> ArbPolicy {
+        self.policy
+    }
+
+    /// Admit a `class` transaction arriving at `now` needing `service`
+    /// time to move `bytes` of payload. `id`/`hop` are echoed back by
+    /// [`ClassedServer::depart`] when a queued transaction starts.
+    #[inline]
+    pub fn admit(
+        &mut self,
+        now: f64,
+        service: f64,
+        bytes: f64,
+        class: TrafficClass,
+        id: u32,
+        hop: u32,
+    ) -> Admission {
+        let ci = class.index();
+        if let ArbPolicy::FcfsShared = self.policy {
+            // byte-identical to the pre-QoS Server::admit
+            let start = now.max(self.free_at);
+            self.free_at = start + service;
+            let s = &mut self.stats[ci];
+            s.queued_ns += start - now;
+            s.busy_ns += service;
+            s.served += 1;
+            s.bytes += bytes;
+            return Admission::Release { done: self.free_at };
+        }
+        if self.in_service {
+            self.vcs[ci].push_back(QueuedTx { service, bytes, arrived: now, id, hop });
+            self.queued_count += 1;
+            return Admission::Queued;
+        }
+        self.in_service = true;
+        let s = &mut self.stats[ci];
+        s.busy_ns += service;
+        s.served += 1;
+        s.bytes += bytes;
+        Admission::Start { done: now + service }
+    }
+
+    /// The in-service transaction finished at `now`: pick the next VC per
+    /// the arbitration policy and start its head transaction. Returns
+    /// `(id, hop, done)` of the started transaction, or `None` when every
+    /// VC is empty (the link goes idle). Only meaningful for queued-mode
+    /// policies — FCFS admissions never schedule departs.
+    pub fn depart(&mut self, now: f64) -> Option<(u32, u32, f64)> {
+        debug_assert!(self.in_service, "depart on an idle server");
+        let ci = match self.pick() {
+            Some(c) => c,
+            None => {
+                self.in_service = false;
+                return None;
+            }
+        };
+        let q = self.vcs[ci].pop_front().expect("picked VC is non-empty");
+        self.queued_count -= 1;
+        let s = &mut self.stats[ci];
+        s.queued_ns += now - q.arrived;
+        s.busy_ns += q.service;
+        s.served += 1;
+        s.bytes += q.bytes;
+        Some((q.id, q.hop, now + q.service))
+    }
+
+    /// Arbitrate: which VC serves next.
+    fn pick(&mut self) -> Option<usize> {
+        if self.queued_count == 0 {
+            return None;
+        }
+        match self.policy {
+            ArbPolicy::FcfsShared => unreachable!("FCFS admissions are time-released"),
+            ArbPolicy::StrictPriority(_) => {
+                (0..4).filter(|&c| !self.vcs[c].is_empty()).min_by_key(|&c| self.rank[c])
+            }
+            ArbPolicy::WeightedFair(_) => {
+                // deficit round-robin (Shreedhar-Varghese), one grant per
+                // call: each fresh visit to a backlogged VC adds its
+                // quantum; the head serves once the deficit covers its
+                // bytes. Terminates because every quantum is positive.
+                loop {
+                    let c = self.rr_cursor;
+                    if self.vcs[c].is_empty() {
+                        self.deficit[c] = 0.0;
+                        self.rr_cursor = (c + 1) % 4;
+                        self.fresh_visit = true;
+                        continue;
+                    }
+                    if self.fresh_visit {
+                        self.deficit[c] += self.quantum[c];
+                        self.fresh_visit = false;
+                    }
+                    let need = self.vcs[c].front().expect("non-empty").bytes;
+                    if self.deficit[c] + 1e-9 >= need {
+                        self.deficit[c] -= need;
+                        return Some(c);
+                    }
+                    self.rr_cursor = (c + 1) % 4;
+                    self.fresh_visit = true;
+                }
+            }
+        }
+    }
+
+    /// Transactions currently parked in virtual channels.
+    pub fn backlog(&self) -> usize {
+        self.queued_count
+    }
+
+    /// True while a transaction is in service (queued-mode policies).
+    pub fn busy(&self) -> bool {
+        self.in_service
+    }
+
+    pub fn class_stats(&self, class: TrafficClass) -> &VcStats {
+        &self.stats[class.index()]
+    }
+
+    /// Total transactions served across classes.
+    pub fn served(&self) -> u64 {
+        self.stats.iter().map(|s| s.served).sum()
+    }
+
+    /// Total busy time across classes, ns.
+    pub fn busy_ns(&self) -> f64 {
+        self.stats.iter().map(|s| s.busy_ns).sum()
+    }
+
+    pub fn utilization(&self, horizon_ns: f64) -> f64 {
+        if horizon_ns <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ns() / horizon_ns).min(1.0)
+        }
+    }
+
+    /// Mean queueing delay across classes, ns.
+    pub fn mean_queue_delay(&self) -> f64 {
+        let served = self.served();
+        if served == 0 {
+            0.0
+        } else {
+            self.stats.iter().map(|s| s.queued_ns).sum::<f64>() / served as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::LinkKind;
+    use crate::sim::Server;
+
+    const CO: TrafficClass = TrafficClass::Coherence;
+    const TI: TrafficClass = TrafficClass::Tiering;
+    const COL: TrafficClass = TrafficClass::Collective;
+    const GE: TrafficClass = TrafficClass::Generic;
+
+    #[test]
+    fn fcfs_admissions_match_plain_server() {
+        let mut rng = crate::util::Rng::new(0x0F5);
+        let mut cs = ClassedServer::fcfs();
+        let mut s = Server::new();
+        let mut now = 0.0;
+        for i in 0..500u32 {
+            now += rng.f64() * 20.0;
+            let service = 0.5 + rng.f64() * 30.0;
+            let class = TrafficClass::ALL[rng.below(4) as usize];
+            let want = s.admit(now, service);
+            match cs.admit(now, service, 64.0, class, i, 0) {
+                Admission::Release { done } => assert_eq!(done, want),
+                other => panic!("FCFS must time-release, got {other:?}"),
+            }
+        }
+        assert_eq!(cs.served(), s.served());
+        assert!((cs.mean_queue_delay() - s.mean_queue_delay()).abs() < 1e-9);
+        assert!((cs.utilization(now + 100.0) - s.utilization(now + 100.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_queued_server_starts_immediately() {
+        let mut cs = ClassedServer::new(ArbPolicy::strict_default());
+        match cs.admit(10.0, 5.0, 64.0, GE, 0, 0) {
+            Admission::Start { done } => assert_eq!(done, 15.0),
+            other => panic!("expected Start, got {other:?}"),
+        }
+        assert!(cs.busy());
+        // busy: the next admission queues
+        assert_eq!(cs.admit(11.0, 5.0, 64.0, GE, 1, 0), Admission::Queued);
+        assert_eq!(cs.backlog(), 1);
+    }
+
+    #[test]
+    fn strict_priority_serves_high_class_first() {
+        let mut cs = ClassedServer::new(ArbPolicy::strict_default());
+        assert!(matches!(cs.admit(0.0, 10.0, 64.0, GE, 100, 0), Admission::Start { .. }));
+        // backlog arrives while busy: generic, collective, coherence
+        cs.admit(1.0, 10.0, 64.0, GE, 101, 0);
+        cs.admit(2.0, 10.0, 64.0, COL, 102, 0);
+        cs.admit(3.0, 10.0, 64.0, CO, 103, 0);
+        // departs must drain coherence, then collective, then generic
+        let (id1, _, d1) = cs.depart(10.0).unwrap();
+        assert_eq!(id1, 103);
+        assert_eq!(d1, 20.0);
+        let (id2, _, _) = cs.depart(20.0).unwrap();
+        assert_eq!(id2, 102);
+        let (id3, _, _) = cs.depart(30.0).unwrap();
+        assert_eq!(id3, 101);
+        assert!(cs.depart(40.0).is_none());
+        assert!(!cs.busy());
+    }
+
+    #[test]
+    fn strict_priority_is_fifo_within_class() {
+        let mut cs = ClassedServer::new(ArbPolicy::strict_default());
+        cs.admit(0.0, 1.0, 64.0, GE, 0, 0);
+        for i in 1..=5u32 {
+            cs.admit(0.5, 1.0, 64.0, CO, i, 0);
+        }
+        let mut now = 1.0;
+        for want in 1..=5u32 {
+            let (id, _, done) = cs.depart(now).unwrap();
+            assert_eq!(id, want);
+            now = done;
+        }
+    }
+
+    #[test]
+    fn work_conserving_under_every_policy() {
+        for policy in [ArbPolicy::strict_default(), ArbPolicy::weighted_default()] {
+            let mut cs = ClassedServer::new(policy);
+            assert!(matches!(cs.admit(0.0, 2.0, 128.0, CO, 0, 0), Admission::Start { .. }));
+            for i in 1..40u32 {
+                let class = TrafficClass::ALL[(i % 4) as usize];
+                assert_eq!(cs.admit(0.1, 2.0, 128.0, class, i, 0), Admission::Queued);
+            }
+            // every depart while backlogged must start the next job
+            let mut now = 2.0;
+            let mut started = 0;
+            while cs.backlog() > 0 {
+                let (_, _, done) = cs.depart(now).expect("backlogged link must not idle");
+                assert_eq!(done, now + 2.0);
+                now = done;
+                started += 1;
+            }
+            assert_eq!(started, 39);
+            assert!(cs.depart(now).is_none());
+            assert_eq!(cs.served(), 40);
+        }
+    }
+
+    #[test]
+    fn drr_byte_shares_track_weights() {
+        // saturated link, two backlogged classes with 3:1 weights: served
+        // bytes over a long run must track the ratio
+        let weights = [3.0, 1.0, 0.0, 0.0];
+        let mut cs = ClassedServer::new(ArbPolicy::WeightedFair(weights));
+        assert!(matches!(cs.admit(0.0, 1.0, 1024.0, CO, 0, 0), Admission::Start { .. }));
+        for i in 0..2000u32 {
+            cs.admit(0.0, 1.0, 1024.0, CO, i, 0);
+            cs.admit(0.0, 1.0, 1024.0, TI, 10_000 + i, 0);
+        }
+        let mut now = 1.0;
+        for _ in 0..1200 {
+            let (_, _, done) = cs.depart(now).unwrap();
+            now = done;
+        }
+        let co = cs.class_stats(CO).bytes;
+        let ti = cs.class_stats(TI).bytes;
+        let ratio = co / ti;
+        assert!((2.4..=3.6).contains(&ratio), "DRR 3:1 weights gave byte ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn drr_zero_weight_class_still_drains() {
+        let mut cs = ClassedServer::new(ArbPolicy::WeightedFair([1.0, 0.0, 0.0, 0.0]));
+        cs.admit(0.0, 1.0, 64.0, CO, 0, 0);
+        cs.admit(0.0, 1.0, 64.0, TI, 1, 0);
+        cs.admit(0.0, 1.0, 64.0, TI, 2, 0);
+        let mut now = 1.0;
+        let mut drained = 0;
+        while let Some((_, _, done)) = cs.depart(now) {
+            now = done;
+            drained += 1;
+        }
+        assert_eq!(drained, 2, "zero-weight backlog must still be served");
+    }
+
+    #[test]
+    #[should_panic(expected = "every class once")]
+    fn strict_order_must_cover_all_classes() {
+        ClassedServer::new(ArbPolicy::StrictPriority([CO, CO, TI, GE]));
+    }
+
+    #[test]
+    fn per_class_telemetry_partitions() {
+        let mut cs = ClassedServer::new(ArbPolicy::strict_default());
+        cs.admit(0.0, 4.0, 256.0, CO, 0, 0);
+        cs.admit(1.0, 6.0, 512.0, GE, 1, 0);
+        let _ = cs.depart(4.0); // generic starts at 4, waited 3
+        let _ = cs.depart(10.0);
+        assert_eq!(cs.class_stats(CO).served, 1);
+        assert_eq!(cs.class_stats(GE).served, 1);
+        assert!((cs.class_stats(CO).bytes - 256.0).abs() < 1e-12);
+        assert!((cs.class_stats(GE).bytes - 512.0).abs() < 1e-12);
+        assert!((cs.class_stats(GE).queued_ns - 3.0).abs() < 1e-12);
+        assert!((cs.busy_ns() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_class_stats_helpers() {
+        let s = LinkClassStats {
+            link: 3,
+            dir: 1,
+            tier: LinkTier::CxlSpine,
+            class: CO,
+            served: 4,
+            bytes: 4096.0,
+            busy_ns: 50.0,
+            queue_delay_ns: 20.0,
+        };
+        assert!((s.mean_queue_delay_ns() - 5.0).abs() < 1e-12);
+        assert!((s.utilization(100.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.utilization(0.0), 0.0);
+        let idle = LinkClassStats { served: 0, queue_delay_ns: 0.0, ..s };
+        assert_eq!(idle.mean_queue_delay_ns(), 0.0);
+    }
+
+    #[test]
+    fn qos_policy_per_tier() {
+        let mut p = QosPolicy::fcfs();
+        assert_eq!(p.tier(LinkTier::Xlink), ArbPolicy::FcfsShared);
+        p.set(LinkTier::CxlSpine, ArbPolicy::strict_default());
+        assert_eq!(p.tier(LinkTier::CxlSpine).name(), "strict");
+        assert_eq!(p.tier(LinkTier::Xlink).name(), "fcfs");
+        let u = QosPolicy::uniform(ArbPolicy::weighted_default());
+        for t in LinkTier::ALL {
+            assert_eq!(u.tier(t).name(), "wfq");
+        }
+    }
+
+    #[test]
+    fn classify_links_on_a_scalepool_shape() {
+        use crate::cluster::{Accelerator, InterCluster, Rack, ScalePoolBuilder, SystemConfig};
+        use crate::fabric::TopologyKind;
+        let sys = ScalePoolBuilder::new()
+            .racks((0..2).map(|i| {
+                Rack::homogeneous(&format!("r{i}"), Accelerator::b200(), 4).unwrap()
+            }))
+            .config(SystemConfig {
+                inter: InterCluster::Cxl(TopologyKind::MultiLevelClos),
+                mem_nodes: 2,
+                ..Default::default()
+            })
+            .build();
+        let tiers = classify_links(&sys.fabric.topo);
+        assert_eq!(tiers.len(), sys.fabric.topo.links.len());
+        for t in LinkTier::ALL {
+            assert!(
+                tiers.iter().any(|&x| x == t),
+                "tier {} missing from a full ScalePool system",
+                t.name()
+            );
+        }
+        // every XLink-kind link classified as Xlink and vice versa
+        for (li, l) in sys.fabric.topo.links.iter().enumerate() {
+            assert_eq!(l.params.kind.is_xlink(), tiers[li] == LinkTier::Xlink);
+        }
+    }
+
+    #[test]
+    fn classify_links_pure_cxl_single_hop() {
+        let t = Topology::single_hop(4, LinkKind::CxlCoherent, "c");
+        let tiers = classify_links(&t);
+        assert!(tiers.iter().all(|&x| x == LinkTier::CxlLeaf));
+    }
+}

@@ -1,9 +1,14 @@
 //! Sharded conservative execution of the streamed simulation: the fabric
 //! is partitioned into topology-derived domains (rack/leaf subtrees, see
 //! [`Topology::partition_domains`](crate::fabric::Topology::partition_domains)),
-//! each shard owns the FCFS servers of its links and runs its own
-//! calendar [`Engine`] on a scoped worker thread, and transactions whose
-//! next hop leaves the shard are handed off through per-shard mailboxes.
+//! each shard owns the class-aware [`ClassedServer`]s of its links and
+//! runs its own calendar [`Engine`] on a scoped worker thread, and
+//! transactions whose next hop leaves the shard are handed off through
+//! per-shard mailboxes. QoS arbitration is shard-local state: a queued
+//! transaction waits in its link's virtual channel and the `Depart`
+//! chain (see [`super::qos`]) restarts it, so a handoff is still stamped
+//! `service_done + fixed + switch` and the lookahead bound below holds
+//! under every policy.
 //!
 //! # Conservative synchronization
 //!
@@ -37,7 +42,7 @@
 
 use super::engine::{Engine, EventKind};
 use super::memsim::{LinkConsts, MemSim};
-use super::server::Server;
+use super::qos::{Admission, ClassedServer};
 use super::traffic::{Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::{Fabric, NodeKind};
 use std::collections::HashMap;
@@ -68,6 +73,7 @@ struct ShardTx {
     src: u32,
     dst: u32,
     source: u32,
+    class: TrafficClass,
     token: u64,
 }
 
@@ -109,7 +115,7 @@ enum Resp {
     },
     Final {
         shard: usize,
-        servers: Vec<[Server; 2]>,
+        servers: Vec<[ClassedServer; 2]>,
         now: f64,
         dispatched: u64,
         peak_slots: usize,
@@ -328,6 +334,7 @@ pub(crate) fn run(
                             src: tx.src as u32,
                             dst: tx.dst as u32,
                             source: i as u32,
+                            class: classes[i],
                             token: stx.token,
                         },
                     });
@@ -410,6 +417,7 @@ pub(crate) fn run(
     // injection event is the sharded loop's hop-0 arrival event
     report.total.events = events;
     report.peak_inflight = peak_inflight;
+    report.qos = sim.collect_qos_stats();
     report
 }
 
@@ -421,7 +429,7 @@ fn worker(
     shard: usize,
     cmds: mpsc::Receiver<Cmd>,
     res: mpsc::Sender<Resp>,
-    mut servers: Vec<[Server; 2]>,
+    mut servers: Vec<[ClassedServer; 2]>,
     fabric: &Fabric,
     consts: &[LinkConsts],
     link_shard: &[u32],
@@ -479,20 +487,42 @@ fn worker(
                             );
                             let c = &consts[link];
                             let service = c.flit.wire_bytes(lt.tx.bytes) * c.inv_rate;
-                            let done = servers[link][dir].admit(now, service);
-                            let sw = c.switch_ns[1 - dir];
-                            let t_next = done + c.fixed_ns + sw;
-                            let nh = hop + 1;
-                            if nh < path_len {
-                                let next_link = (arena[lt.path_start as usize + nh] >> 1) as usize;
-                                let target = link_shard[next_link];
-                                if target as usize != shard {
-                                    out.push((target, Handoff { at: t_next, hop: nh as u32, tx: lt.tx }));
-                                    free.push(id as u32);
-                                    continue;
+                            match servers[link][dir].admit(
+                                now,
+                                service,
+                                lt.tx.bytes,
+                                lt.tx.class,
+                                id as u32,
+                                hop as u32,
+                            ) {
+                                Admission::Release { done } => forward(
+                                    &mut engine, &mut out, &mut free, &arena, link_shard, consts,
+                                    shard, &slots, id, link, dir, hop, done,
+                                ),
+                                Admission::Start { done } => {
+                                    engine.schedule(
+                                        done,
+                                        EventKind::Depart { link: link as u32, dir: dir as u8 },
+                                    );
+                                    forward(
+                                        &mut engine, &mut out, &mut free, &arena, link_shard,
+                                        consts, shard, &slots, id, link, dir, hop, done,
+                                    );
                                 }
+                                Admission::Queued => {}
                             }
-                            engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+                        }
+                        // a queued-mode link freed: arbitrate, start the
+                        // next VC's head, keep the depart chain alive
+                        EventKind::Depart { link, dir } => {
+                            let (li, di) = (link as usize, dir as usize);
+                            if let Some((id, hop, done)) = servers[li][di].depart(now) {
+                                engine.schedule(done, EventKind::Depart { link, dir });
+                                forward(
+                                    &mut engine, &mut out, &mut free, &arena, link_shard, consts,
+                                    shard, &slots, id as usize, li, di, hop as usize, done,
+                                );
+                            }
                         }
                         EventKind::Complete { id } => {
                             let lt = &slots[id];
@@ -527,6 +557,44 @@ fn worker(
             }
         }
     }
+}
+
+/// After a service on `(served_link, dir)` completes at `done`: put
+/// transaction `id` onto its next hop — a cross-shard handoff when the
+/// next link belongs to another shard (freeing the local slot), a local
+/// Arrive event otherwise. Shared by the admit and depart paths; a
+/// handoff's arrival time is `done + fixed + switch >= now + L`, so the
+/// conservative-lookahead argument is unchanged under queued arbitration.
+#[allow(clippy::too_many_arguments)]
+fn forward(
+    engine: &mut Engine,
+    out: &mut Vec<(u32, Handoff)>,
+    free: &mut Vec<u32>,
+    arena: &[u32],
+    link_shard: &[u32],
+    consts: &[LinkConsts],
+    shard: usize,
+    slots: &[LocalTx],
+    id: usize,
+    served_link: usize,
+    dir: usize,
+    hop: usize,
+    done: f64,
+) {
+    let lt = &slots[id];
+    let c = &consts[served_link];
+    let t_next = done + c.fixed_ns + c.switch_ns[1 - dir];
+    let nh = hop + 1;
+    if nh < lt.path_len as usize {
+        let next_link = (arena[lt.path_start as usize + nh] >> 1) as usize;
+        let target = link_shard[next_link];
+        if target as usize != shard {
+            out.push((target, Handoff { at: t_next, hop: nh as u32, tx: lt.tx }));
+            free.push(id as u32);
+            return;
+        }
+    }
+    engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
 }
 
 /// Shard-local twin of `MemSim::intern_path` (same arena packing:

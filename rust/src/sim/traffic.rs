@@ -29,7 +29,8 @@
 //! * [`Pull::Done`] is terminal: the source is never pulled again.
 
 use super::memsim::{MemSimReport, Transaction};
-use crate::util::stats::Welford;
+use super::qos::LinkClassStats;
+use crate::util::stats::{LogHistogram, Welford};
 use std::collections::VecDeque;
 
 /// Which subsystem a source's transactions belong to (per-class
@@ -122,13 +123,42 @@ pub struct ClassReport {
     pub completed: u64,
     /// End-to-end transaction latency within the class, ns.
     pub latency: Welford,
+    /// Log-binned latency distribution (~±4% bins) — streaming
+    /// percentiles without storing per-transaction samples.
+    pub hist: LogHistogram,
     /// Payload bytes moved by the class.
     pub bytes: f64,
 }
 
 impl ClassReport {
     fn new(class: TrafficClass) -> ClassReport {
-        ClassReport { class, completed: 0, latency: Welford::new(), bytes: 0.0 }
+        ClassReport {
+            class,
+            completed: 0,
+            latency: Welford::new(),
+            hist: LogHistogram::new(),
+            bytes: 0.0,
+        }
+    }
+
+    /// Median transaction latency, ns (0 when the class moved nothing).
+    pub fn p50_ns(&self) -> f64 {
+        self.hist.p50()
+    }
+
+    /// 99th-percentile transaction latency, ns — the tail the QoS
+    /// policies trade against each other.
+    pub fn p99_ns(&self) -> f64 {
+        self.hist.p99()
+    }
+
+    /// Mean transaction latency, ns (0 when the class moved nothing).
+    pub fn mean_ns(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency.mean()
+        }
     }
 }
 
@@ -145,6 +175,11 @@ pub struct StreamReport {
     /// per-shard slot high-waters: the slot memory actually allocated,
     /// an upper bound on this serial definition.
     pub peak_inflight: usize,
+    /// Per-link per-class QoS telemetry (served counts, bytes, busy time,
+    /// cumulative queue delay), one entry per link direction × class that
+    /// actually served traffic. Filled after the run from the link
+    /// servers; identical between the serial and sharded backends.
+    pub qos: Vec<LinkClassStats>,
 }
 
 impl StreamReport {
@@ -159,6 +194,7 @@ impl StreamReport {
             total: MemSimReport { completed: 0, latency: Welford::new(), makespan_ns: 0.0, events: 0 },
             per_class,
             peak_inflight: 0,
+            qos: Vec::new(),
         }
     }
 
@@ -172,6 +208,7 @@ impl StreamReport {
         let c = &mut self.per_class[class.index()];
         c.completed += 1;
         c.latency.push(latency);
+        c.hist.push(latency);
         c.bytes += bytes;
     }
 }

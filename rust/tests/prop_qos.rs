@@ -1,0 +1,510 @@
+//! Property tests for the fabric QoS subsystem (`sim::qos`): FCFS parity
+//! against the pre-QoS plain `Server` (the oracle pattern of
+//! `SerialRouter` / `HeapEngine`), per-class byte conservation under
+//! every arbitration policy, work conservation on a shared bottleneck,
+//! strict-priority protection of the high class, and serial-vs-sharded
+//! equivalence with class-aware arbitration enabled on both backends.
+
+use scalepool::fabric::{Fabric, LinkKind, NodeKind, Topology};
+use scalepool::sim::{
+    ArbPolicy, BatchSource, Engine, EventKind, MemSim, Pull, QosPolicy, Server, SourcedTx,
+    TrafficClass, TrafficSource, Transaction,
+};
+use scalepool::util::prop::{forall_res, Config};
+use scalepool::util::Rng;
+
+/// A batch source that remembers every per-transaction completion —
+/// token = index into its transaction list.
+struct RecordingSource {
+    txs: std::collections::VecDeque<Transaction>,
+    class: TrafficClass,
+    next_token: u64,
+    completions: Vec<(u64, f64)>,
+}
+
+impl RecordingSource {
+    fn new(txs: Vec<Transaction>, class: TrafficClass) -> RecordingSource {
+        RecordingSource { txs: txs.into(), class, next_token: 0, completions: Vec::new() }
+    }
+}
+
+impl TrafficSource for RecordingSource {
+    fn class(&self) -> TrafficClass {
+        self.class
+    }
+    fn pull(&mut self, _now: f64) -> Pull {
+        match self.txs.pop_front() {
+            Some(tx) => {
+                let token = self.next_token;
+                self.next_token += 1;
+                Pull::Tx(SourcedTx { tx, token })
+            }
+            None => Pull::Done,
+        }
+    }
+    fn on_complete(&mut self, token: u64, now: f64) {
+        self.completions.push((token, now));
+    }
+    fn open_loop(&self) -> bool {
+        true
+    }
+}
+
+/// The pre-QoS simulation semantics, reimplemented directly on the plain
+/// FCFS [`Server`]: every transaction walks its routed path hop by hop,
+/// `admit` time-releases each hop, the receiving node's switch traversal
+/// and the link's fixed latency ride on top, and the destination pays
+/// device time before completing. This is the parity oracle for
+/// `ClassedServer` in FCFS mode — same arithmetic, same dispatch order,
+/// so results must be byte-identical.
+fn reference_pre_qos_run(f: &Fabric, txs: &[Transaction]) -> (f64, Vec<f64>) {
+    struct C {
+        inv_rate: f64,
+        fixed: f64,
+        sw: [f64; 2],
+    }
+    let topo = &f.topo;
+    let consts: Vec<C> = topo
+        .links
+        .iter()
+        .map(|l| {
+            let p = &l.params;
+            let sw = |n: usize| topo.node(n).switch.as_ref().map(|s| s.traversal_ns()).unwrap_or(0.0);
+            C {
+                inv_rate: 1.0 / (p.raw_bw * p.phy.efficiency()),
+                fixed: p.prop_ns + p.phy.latency_ns() + p.flit_overhead_ns,
+                sw: [sw(l.a), sw(l.b)],
+            }
+        })
+        .collect();
+    let mut servers: Vec<[Server; 2]> =
+        (0..topo.links.len()).map(|_| [Server::new(), Server::new()]).collect();
+    let router = f.router();
+    let paths: Vec<Vec<(usize, usize)>> = txs
+        .iter()
+        .map(|tx| {
+            let mut hops = Vec::new();
+            let mut cur = tx.src;
+            while cur != tx.dst {
+                let (nxt, link) = router.next_hop(cur, tx.dst).expect("connected fabric");
+                let dir = if topo.link(link).a == cur { 0 } else { 1 };
+                hops.push((link, dir));
+                cur = nxt;
+            }
+            hops
+        })
+        .collect();
+    let mut engine = Engine::new();
+    for (id, tx) in txs.iter().enumerate() {
+        engine.schedule(tx.at, EventKind::Arrive { id, hop: 0 });
+    }
+    let mut latencies = vec![0.0f64; txs.len()];
+    while let Some((now, ev)) = engine.next() {
+        match ev {
+            EventKind::Arrive { id, hop } => {
+                let path = &paths[id];
+                if hop >= path.len() {
+                    engine.after(txs[id].device_ns, EventKind::Complete { id });
+                    continue;
+                }
+                let (link, dir) = path[hop];
+                let c = &consts[link];
+                let service = topo.link(link).params.flit.wire_bytes(txs[id].bytes) * c.inv_rate;
+                let done = servers[link][dir].admit(now, service);
+                engine.schedule(done + c.fixed + c.sw[1 - dir], EventKind::Arrive { id, hop: hop + 1 });
+            }
+            EventKind::Complete { id } => latencies[id] = now - txs[id].at,
+            other => unreachable!("unexpected event {other:?}"),
+        }
+    }
+    (engine.now(), latencies)
+}
+
+/// Clos fabric with `per` endpoints per leaf.
+fn clos_with_eps(leaves: usize, spines: usize, per: usize) -> (Fabric, Vec<usize>) {
+    let (mut t, leaf_ids) = Topology::clos(leaves, spines, LinkKind::CxlCoherent, "c");
+    let mut eps = Vec::new();
+    for (i, &l) in leaf_ids.iter().enumerate() {
+        for e in 0..per {
+            let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+            t.connect(n, l, LinkKind::CxlCoherent);
+            eps.push(n);
+        }
+    }
+    (Fabric::new(t), eps)
+}
+
+/// Random workload over `eps` with strictly increasing issue times.
+fn workload(eps: &[usize], n: usize, bytes: Option<f64>, rng: &mut Rng) -> Vec<Transaction> {
+    let mut at = 0.0;
+    (0..n)
+        .map(|_| {
+            at += rng.exp(1.0 / 30.0) + 1e-6;
+            let s = rng.below(eps.len() as u64) as usize;
+            let mut d = rng.below(eps.len() as u64) as usize;
+            if d == s {
+                d = (d + 1) % eps.len();
+            }
+            Transaction {
+                src: eps[s],
+                dst: eps[d],
+                at,
+                bytes: bytes.unwrap_or(64.0 + rng.f64() * 8192.0),
+                device_ns: 50.0,
+            }
+        })
+        .collect()
+}
+
+/// FCFS parity: the default `MemSim` (every link a `ClassedServer` in
+/// `FcfsShared` mode) must reproduce the pre-QoS plain-`Server`
+/// simulation byte-identically — makespan and the per-transaction
+/// latency multiset, exact float equality.
+#[test]
+fn prop_fcfs_matches_pre_qos_server() {
+    forall_res(
+        Config { cases: 30, seed: 0xFC5 },
+        |rng: &mut Rng| {
+            let (f, eps) = if rng.below(2) == 0 {
+                let t = Topology::single_hop(4 + rng.below(12) as usize, LinkKind::NvLink5, "r");
+                let eps = t.nodes_of(NodeKind::Accelerator);
+                (Fabric::new(t), eps)
+            } else {
+                clos_with_eps(
+                    2 + rng.below(5) as usize,
+                    1 + rng.below(3) as usize,
+                    2 + rng.below(4) as usize,
+                )
+            };
+            let txs = workload(&eps, 80 + rng.below(300) as usize, None, rng);
+            (f, txs)
+        },
+        |(f, txs)| {
+            let (ref_makespan, ref_lat) = reference_pre_qos_run(f, txs);
+
+            let mut src = RecordingSource::new(txs.clone(), TrafficClass::Generic);
+            let mut sim = MemSim::new(f);
+            assert_eq!(sim.qos_policy(), QosPolicy::fcfs(), "default policy must be the parity baseline");
+            let rep = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+                sim.run_streamed(&mut sources)
+            };
+
+            if rep.total.completed as usize != txs.len() {
+                return Err(format!("completed {} != {}", rep.total.completed, txs.len()));
+            }
+            if rep.total.makespan_ns != ref_makespan {
+                return Err(format!(
+                    "makespan {} != pre-QoS {ref_makespan} (must be byte-identical)",
+                    rep.total.makespan_ns
+                ));
+            }
+            for &(token, now) in &src.completions {
+                let got = now - txs[token as usize].at;
+                let want = ref_lat[token as usize];
+                if got != want {
+                    return Err(format!("tx {token}: latency {got} != pre-QoS {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Byte conservation: under every policy, per-class completed counts and
+/// byte totals equal exactly what the sources injected.
+#[test]
+fn prop_qos_byte_conservation_under_every_policy() {
+    forall_res(
+        Config { cases: 24, seed: 0xB17E },
+        |rng: &mut Rng| {
+            let (f, eps) = clos_with_eps(2 + rng.below(4) as usize, 1 + rng.below(2) as usize, 3);
+            let classes = [TrafficClass::Coherence, TrafficClass::Collective, TrafficClass::Generic];
+            let batches: Vec<(TrafficClass, Vec<Transaction>)> = classes
+                .iter()
+                .map(|&c| (c, workload(&eps, 40 + rng.below(150) as usize, None, rng)))
+                .collect();
+            (f, batches, rng.below(1 << 20))
+        },
+        |(f, batches, seed)| {
+            let policies = [
+                ArbPolicy::FcfsShared,
+                ArbPolicy::strict_default(),
+                ArbPolicy::WeightedFair([
+                    1.0 + (*seed % 7) as f64,
+                    1.0,
+                    1.0 + (*seed % 3) as f64,
+                    0.5,
+                ]),
+            ];
+            for policy in policies {
+                let mut srcs: Vec<BatchSource> = batches
+                    .iter()
+                    .map(|(c, txs)| BatchSource::new(txs.clone(), *c))
+                    .collect();
+                let mut refs: Vec<&mut dyn TrafficSource> =
+                    srcs.iter_mut().map(|s| s as &mut dyn TrafficSource).collect();
+                let mut sim = MemSim::with_qos(f, QosPolicy::uniform(policy));
+                let rep = sim.run_streamed(&mut refs);
+                for (c, txs) in batches {
+                    let injected: f64 = txs.iter().map(|t| t.bytes).sum();
+                    let cr = rep.class(*c);
+                    if cr.completed as usize != txs.len() {
+                        return Err(format!(
+                            "{}/{}: completed {} != injected {}",
+                            policy.name(),
+                            c.name(),
+                            cr.completed,
+                            txs.len()
+                        ));
+                    }
+                    if (cr.bytes - injected).abs() > 1e-6 * injected.max(1.0) {
+                        return Err(format!(
+                            "{}/{}: bytes {} != injected {injected}",
+                            policy.name(),
+                            c.name(),
+                            cr.bytes
+                        ));
+                    }
+                }
+                // telemetry side: per-link served bytes of a class must sum
+                // to >= the class's payload bytes (each tx crosses >= 1 link
+                // unless src == dst, which workload() never emits)
+                for (c, txs) in batches {
+                    let injected: f64 = txs.iter().map(|t| t.bytes).sum();
+                    let served: f64 =
+                        rep.qos.iter().filter(|s| s.class == *c).map(|s| s.bytes).sum();
+                    if served < injected - 1e-6 {
+                        return Err(format!(
+                            "{}/{}: telemetry served {served} < injected {injected}",
+                            policy.name(),
+                            c.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Work conservation: on a single shared bottleneck with equal-size
+/// transactions, every policy finishes the same work in the same time —
+/// the link never idles while any VC is backlogged, so reordering the
+/// backlog cannot stretch the busy period (makespan is policy-invariant
+/// up to float-summation order).
+#[test]
+fn prop_qos_work_conservation_on_shared_bottleneck() {
+    forall_res(
+        Config { cases: 30, seed: 0x30C0 },
+        |rng: &mut Rng| {
+            let n = 60 + rng.below(200) as usize;
+            let bytes = 512.0 * (1 + rng.below(16)) as f64;
+            (n, bytes, rng.below(1 << 30))
+        },
+        |&(n, bytes, seed)| {
+            let t = Topology::single_hop(4, LinkKind::NvLink5, "r");
+            let eps = t.nodes_of(NodeKind::Accelerator);
+            let f = Fabric::new(t);
+            let mut rng = Rng::new(seed);
+            // everything acc0 -> acc1: one bottleneck link direction,
+            // saturating arrivals (1 ns apart, service far larger)
+            let mut at = 0.0;
+            let mk = |at: f64| Transaction { src: eps[0], dst: eps[1], at, bytes, device_ns: 20.0 };
+            let mut coh = Vec::new();
+            let mut gen = Vec::new();
+            for _ in 0..n {
+                at += rng.f64() + 1e-3;
+                if rng.below(2) == 0 {
+                    coh.push(mk(at));
+                } else {
+                    gen.push(mk(at));
+                }
+            }
+            let run = |policy: ArbPolicy| {
+                let mut a = BatchSource::new(coh.clone(), TrafficClass::Coherence);
+                let mut b = BatchSource::new(gen.clone(), TrafficClass::Generic);
+                let mut sources: [&mut dyn TrafficSource; 2] = [&mut a, &mut b];
+                let mut sim = MemSim::with_qos(&f, QosPolicy::uniform(policy));
+                sim.run_streamed(&mut sources)
+            };
+            let fcfs = run(ArbPolicy::FcfsShared);
+            for policy in [ArbPolicy::strict_default(), ArbPolicy::weighted_default()] {
+                let rep = run(policy);
+                if rep.total.completed != fcfs.total.completed {
+                    return Err(format!("{}: completion count diverged", policy.name()));
+                }
+                let (a, b) = (rep.total.makespan_ns, fcfs.total.makespan_ns);
+                if (a - b).abs() > 1e-6 * b.max(1.0) {
+                    return Err(format!(
+                        "{}: makespan {a} != fcfs {b} — a work-conserving policy \
+                         cannot stretch a saturated bottleneck",
+                        policy.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Strict priority on a contended link: the high class's mean latency
+/// under interference must not exceed FCFS's, and within the strict run
+/// the high class must beat the low class outright. Checked through the
+/// per-class report and the per-link telemetry.
+#[test]
+fn prop_strict_priority_protects_the_high_class() {
+    forall_res(
+        Config { cases: 20, seed: 0x591C7 },
+        |rng: &mut Rng| (80 + rng.below(200) as usize, rng.below(1 << 30)),
+        |&(n, seed)| {
+            let t = Topology::single_hop(4, LinkKind::NvLink5, "r");
+            let eps = t.nodes_of(NodeKind::Accelerator);
+            let f = Fabric::new(t);
+            let mut rng = Rng::new(seed);
+            // saturating interleaved burst on one link direction
+            let mut at = 0.0;
+            let mut coh = Vec::new();
+            let mut gen = Vec::new();
+            for i in 0..2 * n {
+                at += rng.f64() * 2.0 + 1e-3;
+                let tx = Transaction { src: eps[0], dst: eps[1], at, bytes: 4096.0, device_ns: 0.0 };
+                if i % 2 == 0 {
+                    coh.push(tx);
+                } else {
+                    gen.push(tx);
+                }
+            }
+            let run = |policy: ArbPolicy| {
+                let mut a = BatchSource::new(coh.clone(), TrafficClass::Coherence);
+                let mut b = BatchSource::new(gen.clone(), TrafficClass::Generic);
+                let mut sources: [&mut dyn TrafficSource; 2] = [&mut a, &mut b];
+                let mut sim = MemSim::with_qos(&f, QosPolicy::uniform(policy));
+                sim.run_streamed(&mut sources)
+            };
+            let fcfs = run(ArbPolicy::FcfsShared);
+            let strict = run(ArbPolicy::strict_default());
+            let coh_fcfs = fcfs.class(TrafficClass::Coherence).latency.mean();
+            let coh_strict = strict.class(TrafficClass::Coherence).latency.mean();
+            let gen_strict = strict.class(TrafficClass::Generic).latency.mean();
+            if coh_strict > coh_fcfs * 1.001 + 1.0 {
+                return Err(format!(
+                    "strict coherence mean {coh_strict} worse than fcfs {coh_fcfs}"
+                ));
+            }
+            if coh_strict >= gen_strict {
+                return Err(format!(
+                    "under strict priority coherence ({coh_strict}) must beat generic ({gen_strict})"
+                ));
+            }
+            // telemetry: on the contended link, coherence queue delay must
+            // be below generic queue delay in the strict run
+            let delay = |rep: &scalepool::sim::StreamReport, class: TrafficClass| {
+                let (mut q, mut s) = (0.0, 0u64);
+                for e in rep.qos.iter().filter(|e| e.class == class) {
+                    q += e.queue_delay_ns;
+                    s += e.served;
+                }
+                if s == 0 {
+                    0.0
+                } else {
+                    q / s as f64
+                }
+            };
+            let (dc, dg) = (delay(&strict, TrafficClass::Coherence), delay(&strict, TrafficClass::Generic));
+            if dc >= dg {
+                return Err(format!("strict telemetry: coherence queue delay {dc} >= generic {dg}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Serial-vs-sharded equivalence with class-aware arbitration enabled on
+/// both backends (strict priority and weighted-fair): per-class counts
+/// and bytes, the makespan, and the sorted per-transaction latency
+/// multiset must match.
+#[test]
+fn prop_sharded_matches_serial_under_qos_policies() {
+    forall_res(
+        Config { cases: 14, seed: 0x5A9D },
+        |rng: &mut Rng| {
+            let (f, eps) = clos_with_eps(
+                3 + rng.below(4) as usize,
+                1 + rng.below(3) as usize,
+                2 + rng.below(4) as usize,
+            );
+            let coh = workload(&eps, 60 + rng.below(200) as usize, None, rng);
+            let gen = workload(&eps, 60 + rng.below(200) as usize, None, rng);
+            let shards = 2 + rng.below(3) as usize;
+            let policy = if rng.below(2) == 0 {
+                ArbPolicy::strict_default()
+            } else {
+                ArbPolicy::weighted_default()
+            };
+            (f, coh, gen, shards, policy)
+        },
+        |(f, coh, gen, shards, policy)| {
+            let run = |sharded: bool| {
+                let mut a = RecordingSource::new(coh.clone(), TrafficClass::Coherence);
+                let mut b = RecordingSource::new(gen.clone(), TrafficClass::Generic);
+                let mut sim = MemSim::with_qos(f, QosPolicy::uniform(*policy));
+                let rep = {
+                    let mut sources: [&mut dyn TrafficSource; 2] = [&mut a, &mut b];
+                    if sharded {
+                        sim.run_streamed_sharded_with(&mut sources, *shards)
+                    } else {
+                        sim.run_streamed(&mut sources)
+                    }
+                };
+                let lat = |src: &RecordingSource, txs: &[Transaction]| -> Vec<f64> {
+                    let mut v: Vec<f64> =
+                        src.completions.iter().map(|&(tok, now)| now - txs[tok as usize].at).collect();
+                    v.sort_by(|x, y| x.total_cmp(y));
+                    v
+                };
+                (rep, lat(&a, coh), lat(&b, gen))
+            };
+            let (serial, s_coh, s_gen) = run(false);
+            let (sharded, p_coh, p_gen) = run(true);
+
+            if serial.total.completed != sharded.total.completed {
+                return Err(format!(
+                    "{}: completed {} vs {}",
+                    policy.name(),
+                    serial.total.completed,
+                    sharded.total.completed
+                ));
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if !close(serial.total.makespan_ns, sharded.total.makespan_ns) {
+                return Err(format!(
+                    "{}: makespan {} vs {}",
+                    policy.name(),
+                    serial.total.makespan_ns,
+                    sharded.total.makespan_ns
+                ));
+            }
+            for c in [TrafficClass::Coherence, TrafficClass::Generic] {
+                let (a, b) = (serial.class(c), sharded.class(c));
+                if a.completed != b.completed || !close(a.bytes, b.bytes) {
+                    return Err(format!("{}: class {} diverged", policy.name(), c.name()));
+                }
+            }
+            for (name, s, p) in [("coherence", &s_coh, &p_coh), ("generic", &s_gen, &p_gen)] {
+                if s.len() != p.len() {
+                    return Err(format!("{name}: multiset sizes differ"));
+                }
+                for (i, (a, b)) in s.iter().zip(p.iter()).enumerate() {
+                    if !close(*a, *b) {
+                        return Err(format!(
+                            "{} ({name}): latency multiset diverged at {i}: {a} vs {b}",
+                            policy.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

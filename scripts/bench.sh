@@ -29,7 +29,23 @@ fig_results=$(
     cargo bench --manifest-path "$MANIFEST" --bench fig7_tiered_memory | tee /dev/stderr | grep '^RESULT' || true
 )
 
+echo "== interference trajectory (bounded mixed + qos policy sweep) =="
+# rack-scale bounded runs: the perf trajectory records cross-class
+# interference (RESULT mixed ...) and what each arbitration policy does
+# to it (RESULT qos_<policy> ...), not just events/sec
+MIXED_ARGS="--racks 6 --accels 8 --mem-nodes 4 --coh-ops 1200 --tier-ops 300 --t1-bytes 262144 --bytes 4194304 --repeats 1"
+interference_results=$(
+    # shellcheck disable=SC2086
+    cargo run --release --manifest-path "$MANIFEST" -- mixed $MIXED_ARGS | tee /dev/stderr | grep '^RESULT' || true
+    # shellcheck disable=SC2086
+    cargo run --release --manifest-path "$MANIFEST" -- qos $MIXED_ARGS | tee /dev/stderr | grep '^RESULT qos_' || true
+)
+fig_results="$fig_results
+$interference_results"
+
 # RESULT <name> k=v k=v ... -> {"name": {"k": v, ...}, ...}
+# (non-numeric values are skipped: per-(policy,class) qos lines carry
+# string keys and are for CI greps, not the JSON record)
 python3 - "$fig_results" <<'EOF'
 import json, sys
 out = {}
@@ -38,7 +54,15 @@ for line in sys.argv[1].splitlines():
     if len(parts) < 2 or parts[0] != "RESULT":
         continue
     name, kvs = parts[1], parts[2:]
-    out[name] = {k: float(v) for k, v in (kv.split("=", 1) for kv in kvs)}
+    row = {}
+    for kv in kvs:
+        k, _, v = kv.partition("=")
+        try:
+            row[k] = float(v)
+        except ValueError:
+            continue
+    if row:
+        out[name] = row
 with open("BENCH_figs.json", "w") as f:
     json.dump(out, f, indent=2)
 print("wrote BENCH_figs.json")

@@ -31,8 +31,30 @@ def walk(node, path, out):
 
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_simscale.json"
-    with open(path) as f:
-        data = json.load(f)
+    how_to_record = (
+        "record it first with scripts/bench.sh, or directly:\n"
+        f"  SCALEPOOL_BENCH_OUT={path} cargo bench "
+        "--manifest-path rust/Cargo.toml --bench simscale\n"
+        "(bounded run: prefix with SCALEPOOL_BENCH_SCALES=rack "
+        "SCALEPOOL_BENCH_ACCESSES=60000)"
+    )
+    try:
+        with open(path) as f:
+            raw = f.read()
+    except FileNotFoundError:
+        print(f"error: {path} not found — the bench has never been run here;\n{how_to_record}", file=sys.stderr)
+        return 1
+    if not raw.strip():
+        print(f"error: {path} is empty — the bench run did not record anything;\n{how_to_record}", file=sys.stderr)
+        return 1
+    try:
+        data = json.loads(raw)
+    except json.JSONDecodeError as e:
+        print(f"error: {path} is not valid JSON ({e}) — likely a truncated bench run;\n{how_to_record}", file=sys.stderr)
+        return 1
+    if not data:
+        print(f"error: {path} holds no measurements;\n{how_to_record}", file=sys.stderr)
+        return 1
     threads = int(data.get("threads", 1))
     speedups = []
     walk(data, "", speedups)
