@@ -2,7 +2,10 @@
 //! rack (72), row (~1k) and pod (~4k) endpoint counts:
 //!
 //! * `Router::build` (flat parallel PBR table) vs the seed serial
-//!   nested-table BFS (`fabric::routing::reference::SerialRouter`);
+//!   nested-table BFS (`fabric::routing::reference::SerialRouter`), plus
+//!   the K=4 multipath build (`Router::build_multipath`), asserted to
+//!   stay within 2x of the single-path build so the multi-rail table
+//!   cannot silently regress the PR-1 router-build bar;
 //! * sustained `MemSim` events/sec (calendar engine + interned paths +
 //!   precomputed direction bits) vs a faithful replica of the seed loop
 //!   (payload-carrying heap events, one `Vec` path clone per transaction,
@@ -298,6 +301,22 @@ fn main() {
         let build_seed = best_of(iters, || SerialRouter::build(&topo));
         let build_speedup = build_seed / build_new;
 
+        // --- multipath router build (K=4) -------------------------------
+        // bar: widening every cell to 4 equal-cost rails must stay within
+        // 2x of the single-path build (the 4x table memset is the only
+        // extra linear cost; the BFS itself is shared). The 1 ms absolute
+        // guard absorbs timer noise at rack scale, where both builds are
+        // sub-millisecond and a 2x ratio would be measuring jitter.
+        let build_multi = best_of(iters, || Router::build_multipath(&topo, 4));
+        let build_multi_ratio = build_multi / build_new;
+        assert!(
+            build_multi <= 2.0 * build_new + 1e6,
+            "{}: multipath (K=4) router build {:.2} ms vs single-path {:.2} ms exceeds the 2x bar",
+            s.name,
+            build_multi / 1e6,
+            build_new / 1e6
+        );
+
         // --- memsim throughput ------------------------------------------
         let fabric = Fabric::new(topo.clone());
         let seed_router = SerialRouter::build(&topo);
@@ -370,12 +389,14 @@ fn main() {
             None => String::new(),
         };
         println!(
-            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x){sharded_str}",
+            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x; K=4 {:>9.2} ms, {:>4.2}x of single) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x){sharded_str}",
             s.name,
             n_nodes,
             build_new / 1e6,
             build_seed / 1e6,
             build_speedup,
+            build_multi / 1e6,
+            build_multi_ratio,
             eps_new / 1e6,
             eps_seed / 1e6,
             sim_speedup,
@@ -390,6 +411,8 @@ fn main() {
             ("router_build_ms", Json::num(build_new / 1e6)),
             ("router_build_seed_ms", Json::num(build_seed / 1e6)),
             ("router_build_speedup", Json::num(build_speedup)),
+            ("router_build_multipath_ms", Json::num(build_multi / 1e6)),
+            ("router_build_multipath_ratio", Json::num(build_multi_ratio)),
             ("memsim_events_per_sec", Json::num(eps_new)),
             ("memsim_events_per_sec_seed", Json::num(eps_seed)),
             ("memsim_speedup", Json::num(sim_speedup)),

@@ -243,6 +243,69 @@ pub fn qos(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+pub fn rails(args: &mut Args) -> Result<()> {
+    let mixed = mixed_config(args)?;
+    let rails = args.usize_or("rails", 4).map_err(Error::msg)?;
+    if !(1..=crate::fabric::routing::MAX_RAILS).contains(&rails) {
+        bail!("--rails must be in 1..={}, got {rails}", crate::fabric::routing::MAX_RAILS);
+    }
+    let policies: Vec<experiments::RailSpec> = args
+        .get_or("policies", "det,spray,adaptive")
+        .split(',')
+        .map(|p| match p.trim() {
+            "det" | "deterministic" => Ok(experiments::RailSpec::det()),
+            "spray" | "hash" | "ecmp" => Ok(experiments::RailSpec::spray()),
+            "adaptive" | "adapt" => Ok(experiments::RailSpec::adaptive()),
+            other => Err(Error::msg(format!("unknown rail policy '{other}' (det|spray|adaptive)"))),
+        })
+        .collect::<Result<_>>()?;
+
+    let cfg = experiments::RailsSweepConfig { mixed, rails, policies };
+    let t0 = std::time::Instant::now();
+    let rep = experiments::run_rails(&cfg);
+    print!("{}", experiments::rails::render(&rep, cfg.rails));
+    println!("wall {:?}", t0.elapsed());
+
+    if let Some(path) = args.get("out") {
+        let policies: Vec<Json> = rep
+            .policies
+            .iter()
+            .map(|p| {
+                let rows: Vec<Json> = p
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("class", Json::str(r.class.name())),
+                            ("completed", Json::num(r.completed as f64)),
+                            ("bytes", Json::num(r.bytes)),
+                            ("solo_tx_ns", Json::num(r.solo_tx_ns)),
+                            ("mixed_tx_ns", Json::num(r.mixed_tx_ns)),
+                            ("tx_inflation", Json::num(r.tx_inflation())),
+                            ("solo_p99_ns", Json::num(r.solo_p99_ns)),
+                            ("mixed_p99_ns", Json::num(r.mixed_p99_ns)),
+                            ("p99_inflation", Json::num(r.p99_inflation())),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("policy", Json::str(&p.name)),
+                    ("makespan_ns", Json::num(p.makespan_ns)),
+                    ("events", Json::num(p.events as f64)),
+                    ("peak_utilization", Json::num(p.peak_utilization)),
+                    ("max_tx_inflation", Json::num(p.max_tx_inflation())),
+                    ("path_diversity", Json::num(p.path_diversity())),
+                    ("util_imbalance", Json::num(p.util_imbalance)),
+                    ("classes", Json::Arr(rows)),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::arr(policies).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn build_system(kind: &str, racks: usize, accels: usize) -> Result<crate::cluster::ScalePoolSystem> {
     let inter = match kind {
         "clos" => InterCluster::Cxl(TopologyKind::MultiLevelClos),

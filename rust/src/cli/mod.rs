@@ -41,6 +41,18 @@ COMMANDS:
                                generic; default 4,2,2,1). Reports
                                per-class solo-vs-mixed mean and p99
                                inflation per policy (RESULT qos lines)
+    rails     [same scenario options as mixed]
+              [--policies <det,spray,adaptive>] [--rails <K>] [--out <file>]
+                               Sweep multi-rail routing policies over the
+                               mixed scenario on a K-rail (default 4)
+                               equal-cost multipath PBR table: det (rail
+                               0, the single-path parity baseline), spray
+                               (ECMP hash over src,dst,tx_seq) and
+                               adaptive (least-backlogged candidate path
+                               from live link state). Reports per-class
+                               solo-vs-mixed inflation, path diversity
+                               and link-utilization imbalance per policy
+                               (RESULT rails lines)
     topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
                                Build a fabric and print its shape/latencies
     simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
@@ -82,6 +94,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "fig7" => commands::fig7(&mut args),
         "mixed" => commands::mixed(&mut args),
         "qos" => commands::qos(&mut args),
+        "rails" => commands::rails(&mut args),
         "topo" => commands::topo(&mut args),
         "simulate" => commands::simulate(&mut args),
         "train" => commands::train(&mut args),

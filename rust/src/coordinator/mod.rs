@@ -8,6 +8,7 @@
 pub mod metrics;
 pub mod qos;
 pub mod router;
+pub mod routing;
 pub mod tiering;
 pub mod traffic;
 pub mod manager;
@@ -17,6 +18,7 @@ pub use manager::{JobId, JobSpec, ScalePoolManager};
 pub use metrics::Metrics;
 pub use qos::QosManager;
 pub use router::{DataMovementRouter, RouteClass, RouteDecision};
+pub use routing::RoutingManager;
 pub use scheduler::EmulatedCluster;
 #[cfg(feature = "pjrt")]
 pub use scheduler::TrainJobScheduler;

@@ -1,0 +1,122 @@
+//! The coordinator's multipath-routing authority: owns the fabric-wide
+//! rail-selection configuration ([`RoutingPolicy`], per [`LinkTier`])
+//! and applies it to simulators — the routing twin of
+//! [`QosManager`](super::QosManager). The ROADMAP's "multi-rail /
+//! adaptive routing under interference" item: the PBR table holds the
+//! equal-cost candidates ([`crate::fabric::routing`] §Multipath), the
+//! coordinator decides how transactions spread over them (deterministic
+//! rail 0, ECMP hash-spray, or congestion-adaptive steering on the live
+//! per-link QoS state), and the
+//! [`StreamReport::qos`](crate::sim::StreamReport) telemetry closes the
+//! loop.
+
+use crate::sim::qos::LinkTier;
+use crate::sim::rails::{RailSelector, RoutingPolicy};
+use crate::sim::MemSim;
+
+/// Owns and configures the per-tier rail-selection policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutingManager {
+    policy: RoutingPolicy,
+}
+
+impl RoutingManager {
+    pub fn new(policy: RoutingPolicy) -> RoutingManager {
+        RoutingManager { policy }
+    }
+
+    /// The parity baseline: rail 0 on every tier (exactly the
+    /// pre-multipath fabric, byte-identical paths and latencies).
+    pub fn deterministic() -> RoutingManager {
+        RoutingManager::new(RoutingPolicy::deterministic())
+    }
+
+    /// One selector across every tier.
+    pub fn uniform(s: RailSelector) -> RoutingManager {
+        RoutingManager::new(RoutingPolicy::uniform(s))
+    }
+
+    /// ECMP everywhere: deterministic per-transaction hash-spray over
+    /// the equal-cost rails.
+    pub fn spray() -> RoutingManager {
+        RoutingManager::uniform(RailSelector::HashSpray)
+    }
+
+    /// Congestion-adaptive everywhere: steer each transaction onto its
+    /// least-backlogged candidate path (live [`ClassedServer`] state;
+    /// degrades to hash-spray on the sharded backend).
+    ///
+    /// [`ClassedServer`]: crate::sim::ClassedServer
+    pub fn adaptive() -> RoutingManager {
+        RoutingManager::uniform(RailSelector::Adaptive)
+    }
+
+    /// Override one tier's selector (e.g. spray over the contended CXL
+    /// spine, deterministic inside the racks).
+    pub fn set_tier(&mut self, tier: LinkTier, s: RailSelector) -> &mut RoutingManager {
+        self.policy.set(tier, s);
+        self
+    }
+
+    pub fn tier(&self, tier: LinkTier) -> RailSelector {
+        self.policy.tier(tier)
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Push the configuration into a simulator (drops its path cache —
+    /// call before running traffic). Meaningful on a multipath-enabled
+    /// fabric ([`Fabric::enable_multipath`](crate::fabric::Fabric::enable_multipath));
+    /// on a single-path fabric every selector degenerates to rail 0.
+    pub fn apply(&self, sim: &mut MemSim) {
+        sim.set_routing(self.policy);
+    }
+
+    /// Human-readable per-tier summary for CLI output and logs.
+    pub fn describe(&self) -> String {
+        LinkTier::ALL
+            .iter()
+            .map(|&t| format!("{}={}", t.name(), self.policy.tier(t).name()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+impl Default for RoutingManager {
+    fn default() -> RoutingManager {
+        RoutingManager::deterministic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, LinkKind, Topology};
+
+    #[test]
+    fn per_tier_overrides_compose() {
+        let mut m = RoutingManager::deterministic();
+        m.set_tier(LinkTier::CxlSpine, RailSelector::HashSpray)
+            .set_tier(LinkTier::CxlLeaf, RailSelector::Adaptive);
+        assert_eq!(m.tier(LinkTier::Xlink).name(), "det");
+        assert_eq!(m.tier(LinkTier::CxlSpine).name(), "spray");
+        assert_eq!(m.tier(LinkTier::CxlLeaf).name(), "adaptive");
+        let d = m.describe();
+        assert!(d.contains("xlink=det") && d.contains("cxl-spine=spray"), "{d}");
+    }
+
+    #[test]
+    fn apply_configures_the_simulator() {
+        let t = Topology::single_hop(4, LinkKind::CxlCoherent, "c");
+        let mut f = Fabric::new(t);
+        f.enable_multipath(4);
+        assert_eq!(f.max_rails(), 4);
+        let mut sim = MemSim::new(&f);
+        assert_eq!(sim.routing_policy(), RoutingPolicy::deterministic());
+        let m = RoutingManager::spray();
+        m.apply(&mut sim);
+        assert_eq!(sim.routing_policy(), m.policy());
+    }
+}

@@ -11,15 +11,18 @@
 //! | F7 | Figure 7 (tiered memory, working-set sweep)| [`fig7`]  |
 //! | MX | §6 tier-2 traffic under interference      | [`mixed`]  |
 //! | QS | QoS policy sweep over the mixed scenario  | [`qos`]    |
+//! | RL | Multi-rail routing sweep over the mixed scenario | [`rails`] |
 
 pub mod table1;
 pub mod fig6;
 pub mod fig7;
 pub mod mixed;
 pub mod qos;
+pub mod rails;
 
 pub use fig6::{run_fig6, Fig6Row};
 pub use fig7::{run_fig7, run_fig7_detailed, Fig7DetailedConfig, Fig7Row};
 pub use mixed::{run_mixed, MixedConfig, MixedReport};
 pub use qos::{run_qos, PolicySpec, QosReport, QosSweepConfig};
+pub use rails::{run_rails, RailSpec, RailsReport, RailsSweepConfig};
 pub use table1::{run_table1, Table1Row};

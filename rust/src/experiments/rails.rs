@@ -1,0 +1,396 @@
+//! The `rails` experiment: sweep multi-rail routing policies over the
+//! pod-scale mixed scenario and report per-class solo-vs-mixed latency
+//! inflation per policy, plus the realized path diversity and the
+//! link-utilization imbalance the steering achieves. The `mixed`
+//! experiment measures cross-class interference on deterministic
+//! single-path routes; this one shows the fabric routing *around* it
+//! (the DFabric/Octopus direction): ECMP hash-spray spreads each pair's
+//! transactions over every equal-cost rail, and adaptive steering picks
+//! the least-backlogged candidate path from the live QoS link state.
+//!
+//! Workloads are rebuilt identically-seeded for every policy, and the
+//! solo baselines are measured once under deterministic rail-0 routing
+//! (exactly the `mixed` experiment's solos), so the only difference
+//! between sweep points is how the *mixed* run steers — the `det` point
+//! reproduces `mixed` string-exactly (asserted by the CI smoke).
+
+use super::mixed::{
+    build_system, coherence_source, collective_source, horizon_estimate, run_once, tiering_source,
+    MixedConfig,
+};
+use super::qos::QosClassRow;
+use crate::cluster::ScalePoolSystem;
+use crate::coordinator::RoutingManager;
+use crate::sim::{MemSim, RailSelector, StreamReport, TrafficClass, TrafficSource};
+
+/// One policy point of the sweep.
+#[derive(Clone, Debug)]
+pub struct RailSpec {
+    /// Short name used in RESULT lines ("det" / "spray" / "adaptive").
+    pub name: String,
+    /// Applied uniformly across link tiers by the [`RoutingManager`].
+    pub selector: RailSelector,
+}
+
+impl RailSpec {
+    pub fn det() -> RailSpec {
+        RailSpec { name: "det".into(), selector: RailSelector::Deterministic }
+    }
+
+    pub fn spray() -> RailSpec {
+        RailSpec { name: "spray".into(), selector: RailSelector::HashSpray }
+    }
+
+    pub fn adaptive() -> RailSpec {
+        RailSpec { name: "adaptive".into(), selector: RailSelector::Adaptive }
+    }
+}
+
+/// Sweep configuration: the mixed scenario, the rail fan-out `K` the
+/// PBR table is built with, and the policy list.
+#[derive(Clone, Debug)]
+pub struct RailsSweepConfig {
+    pub mixed: MixedConfig,
+    /// Equal-cost rails per PBR cell ([`Fabric::enable_multipath`]).
+    ///
+    /// [`Fabric::enable_multipath`]: crate::fabric::Fabric::enable_multipath
+    pub rails: usize,
+    pub policies: Vec<RailSpec>,
+}
+
+impl Default for RailsSweepConfig {
+    fn default() -> RailsSweepConfig {
+        RailsSweepConfig {
+            mixed: MixedConfig::default(),
+            rails: 4,
+            policies: vec![RailSpec::det(), RailSpec::spray(), RailSpec::adaptive()],
+        }
+    }
+}
+
+/// One policy's full outcome. Class rows share the
+/// [`QosClassRow`] shape (solo vs mixed mean/p50/p99), so the RESULT
+/// keys line up with the `qos` sweep's.
+#[derive(Clone, Debug)]
+pub struct RailsPolicyRow {
+    pub name: String,
+    pub rows: Vec<QosClassRow>,
+    pub makespan_ns: f64,
+    pub events: u64,
+    pub peak_utilization: f64,
+    /// Distinct physical paths transactions actually rode in the mixed
+    /// run (adaptive probes and aliased rail indices do not count).
+    pub used_paths: usize,
+    /// Distinct (src, dst) pairs that carried traffic.
+    pub used_pairs: usize,
+    /// Busiest link direction's busy time over the fabric-wide mean
+    /// (every link direction, idle ones included — a policy-independent
+    /// denominator). Equal-cost rails have equal hop counts, so total
+    /// busy time is conserved across policies and this is directly
+    /// comparable between them: deterministic routing concentrates load
+    /// (higher peak), spreading flattens it.
+    pub util_imbalance: f64,
+}
+
+impl RailsPolicyRow {
+    /// Largest per-class mean-latency inflation — same definition as
+    /// `MixedReport::max_tx_inflation`, so the `det` row is directly
+    /// comparable to the `mixed` baseline (asserted by CI).
+    pub fn max_tx_inflation(&self) -> f64 {
+        self.rows.iter().map(QosClassRow::tx_inflation).fold(1.0, f64::max)
+    }
+
+    /// Realized path diversity: physical paths ridden per (src, dst)
+    /// pair (1.0 = strictly single-path).
+    pub fn path_diversity(&self) -> f64 {
+        if self.used_pairs == 0 {
+            1.0
+        } else {
+            self.used_paths as f64 / self.used_pairs as f64
+        }
+    }
+
+    pub fn row(&self, class: TrafficClass) -> Option<&QosClassRow> {
+        self.rows.iter().find(|r| r.class == class)
+    }
+}
+
+/// The sweep result.
+#[derive(Clone, Debug)]
+pub struct RailsReport {
+    pub policies: Vec<RailsPolicyRow>,
+}
+
+impl RailsReport {
+    pub fn policy(&self, name: &str) -> Option<&RailsPolicyRow> {
+        self.policies.iter().find(|p| p.name == name)
+    }
+}
+
+/// Busiest link direction's busy time over the fabric-wide mean busy
+/// time (from the per-link [`StreamReport::qos`] telemetry). The
+/// denominator spans every link direction of the fabric — idle ones
+/// included — so it is independent of which directions a routing policy
+/// happens to touch; since equal-cost rails have equal hop counts, the
+/// total busy time is conserved across policies and spreading strictly
+/// lowers this ratio by lowering the peak.
+fn util_imbalance(rep: &StreamReport, total_dirs: usize) -> f64 {
+    let mut dir_busy: std::collections::HashMap<(u32, u8), f64> = std::collections::HashMap::new();
+    for s in &rep.qos {
+        *dir_busy.entry((s.link, s.dir)).or_insert(0.0) += s.busy_ns;
+    }
+    let total: f64 = dir_busy.values().sum();
+    if total_dirs == 0 || total <= 0.0 {
+        return 1.0;
+    }
+    let peak = dir_busy.values().fold(0.0f64, |a, &b| a.max(b));
+    peak / (total / total_dirs as f64)
+}
+
+/// One mixed run under a routing policy, returning the report plus the
+/// simulator-side steering telemetry (paths/pairs actually ridden).
+fn run_point(
+    sys: &ScalePoolSystem,
+    sources: &mut [&mut dyn TrafficSource],
+    mgr: &RoutingManager,
+) -> (StreamReport, f64, usize, usize) {
+    let mut sim = MemSim::new(&sys.fabric);
+    mgr.apply(&mut sim);
+    let rep = sim.run_streamed(sources);
+    let util = sim.peak_utilization(rep.total.makespan_ns);
+    let (paths, pairs) = (sim.used_path_count(), sim.used_pair_count());
+    (rep, util, paths, pairs)
+}
+
+/// Run the sweep: one set of solo baselines (deterministic rail-0
+/// routing — the `mixed` experiment's solos), then the mixed scenario
+/// once per policy with identically-seeded workloads and the selector
+/// applied via the coordinator's [`RoutingManager`].
+pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
+    let mcfg = &cfg.mixed;
+    let mut sys = build_system(mcfg);
+    sys.fabric.enable_multipath(cfg.rails);
+    let horizon = horizon_estimate(&sys, mcfg);
+
+    // --- solo baselines (shared by every policy point) -------------------
+    fn solo(class: TrafficClass, rep: &StreamReport) -> (f64, f64, f64) {
+        let c = rep.class(class);
+        (c.mean_ns(), c.p50_ns(), c.p99_ns())
+    }
+    let coh_solo = {
+        let mut src = coherence_source(&sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Coherence, &rep)
+    };
+    let tier_solo = {
+        let mut src = tiering_source(&sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Tiering, &rep)
+    };
+    let col_solo = {
+        let mut src = collective_source(&sys, mcfg);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_once(&sys, &mut s);
+        solo(TrafficClass::Collective, &rep)
+    };
+
+    // --- one mixed run per policy ----------------------------------------
+    let mut policies = Vec::new();
+    for spec in &cfg.policies {
+        let mgr = RoutingManager::uniform(spec.selector);
+        let mut coh = coherence_source(&sys, mcfg, horizon);
+        let mut tier = tiering_source(&sys, mcfg, horizon);
+        let mut col = collective_source(&sys, mcfg);
+        let (rep, util, paths, pairs) = {
+            let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
+            run_point(&sys, &mut sources, &mgr)
+        };
+        let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
+            let c = rep.class(class);
+            QosClassRow {
+                class,
+                completed: c.completed,
+                bytes: c.bytes,
+                solo_tx_ns: solo_tx,
+                mixed_tx_ns: c.mean_ns(),
+                solo_p50_ns: solo_p50,
+                mixed_p50_ns: c.p50_ns(),
+                solo_p99_ns: solo_p99,
+                mixed_p99_ns: c.p99_ns(),
+            }
+        };
+        policies.push(RailsPolicyRow {
+            name: spec.name.clone(),
+            rows: vec![
+                row(TrafficClass::Coherence, coh_solo),
+                row(TrafficClass::Tiering, tier_solo),
+                row(TrafficClass::Collective, col_solo),
+            ],
+            makespan_ns: rep.total.makespan_ns,
+            events: rep.total.events,
+            peak_utilization: util,
+            used_paths: paths,
+            used_pairs: pairs,
+            util_imbalance: util_imbalance(&rep, sys.fabric.topo.links.len() * 2),
+        });
+    }
+    RailsReport { policies }
+}
+
+/// Paper-style report plus the machine-readable RESULT lines.
+pub fn render(r: &RailsReport, rails: usize) -> String {
+    use crate::util::units::{fmt_bytes, fmt_ns};
+    let mut out = String::new();
+    for p in &r.policies {
+        out.push_str(&format!("=== policy {} (K={rails} rails) ===\n", p.name));
+        out.push_str(&format!(
+            "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>8}\n",
+            "class", "txns", "bytes", "solo tx", "mixed tx", "infl", "solo p99", "mixed p99", "p99 infl"
+        ));
+        out.push_str(&"-".repeat(104));
+        out.push('\n');
+        for row in &p.rows {
+            out.push_str(&format!(
+                "{:>11} | {:>9} {:>10} | {:>10} {:>10} {:>6.2}x | {:>10} {:>10} {:>7.2}x\n",
+                row.class.name(),
+                row.completed,
+                fmt_bytes(row.bytes),
+                fmt_ns(row.solo_tx_ns),
+                fmt_ns(row.mixed_tx_ns),
+                row.tx_inflation(),
+                fmt_ns(row.solo_p99_ns),
+                fmt_ns(row.mixed_p99_ns),
+                row.p99_inflation(),
+            ));
+        }
+        out.push_str(&format!(
+            "makespan {} | {} events | peak link utilization {:.1}%\n",
+            fmt_ns(p.makespan_ns),
+            p.events,
+            100.0 * p.peak_utilization
+        ));
+        out.push_str(&format!(
+            "  steering: {} paths ridden over {} pairs (diversity {:.2}x), link-utilization imbalance {:.2}x\n",
+            p.used_paths,
+            p.used_pairs,
+            p.path_diversity(),
+            p.util_imbalance,
+        ));
+    }
+    // machine-readable: one line per (policy, class) for CI greps, one
+    // summary line per policy for the BENCH_figs.json capture
+    for p in &r.policies {
+        for row in &p.rows {
+            out.push_str(&format!(
+                "RESULT rails policy={} class={} p99_inflation={:.3} tx_inflation={:.3}\n",
+                p.name,
+                row.class.name(),
+                row.p99_inflation(),
+                row.tx_inflation(),
+            ));
+        }
+    }
+    for p in &r.policies {
+        let g = |class: TrafficClass, f: fn(&QosClassRow) -> f64| p.row(class).map(f).unwrap_or(1.0);
+        out.push_str(&format!(
+            "RESULT rails_{} max_tx_inflation={:.3} coherence_p99_inflation={:.3} tiering_p99_inflation={:.3} collective_p99_inflation={:.3} path_diversity={:.3} util_imbalance={:.3}\n",
+            p.name,
+            p.max_tx_inflation(),
+            g(TrafficClass::Coherence, QosClassRow::p99_inflation),
+            g(TrafficClass::Tiering, QosClassRow::p99_inflation),
+            g(TrafficClass::Collective, QosClassRow::p99_inflation),
+            p.path_diversity(),
+            p.util_imbalance,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RailsSweepConfig {
+        RailsSweepConfig {
+            mixed: MixedConfig {
+                coherence_ops: 800,
+                tiering_ops: 200,
+                collective_bytes: 8.0 * 1024.0 * 1024.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_runs_every_policy() {
+        let r = run_rails(&small());
+        assert_eq!(r.policies.len(), 3);
+        for p in &r.policies {
+            for row in &p.rows {
+                assert!(row.completed > 0, "{}/{} moved nothing", p.name, row.class.name());
+                assert!(row.solo_tx_ns > 0.0 && row.mixed_tx_ns > 0.0);
+                assert!(row.mixed_p99_ns > 0.0);
+            }
+            assert!(p.makespan_ns > 0.0);
+            assert!(p.path_diversity() >= 1.0);
+            assert!(p.util_imbalance >= 1.0, "{}: imbalance below 1", p.name);
+        }
+        // deterministic rides one path per pair; spray actually spreads
+        let det = r.policy("det").unwrap();
+        assert_eq!(det.used_paths, det.used_pairs);
+        let spray = r.policy("spray").unwrap();
+        assert!(
+            spray.path_diversity() > 1.0,
+            "spray realized no path diversity: {} paths / {} pairs",
+            spray.used_paths,
+            spray.used_pairs
+        );
+        // spreading flattens the (policy-independent-denominator) peak
+        assert!(
+            spray.util_imbalance <= det.util_imbalance,
+            "spray must not concentrate load harder than det: {} vs {}",
+            spray.util_imbalance,
+            det.util_imbalance
+        );
+    }
+
+    #[test]
+    fn det_point_reproduces_the_mixed_experiment() {
+        // the parity anchor the CI smoke also checks end to end: the
+        // rails sweep's deterministic mixed run (multipath table, rail-0
+        // policy) is byte-identical to the mixed experiment's mixed run
+        // on the single-path table
+        let cfg = small();
+        let r = run_rails(&cfg);
+        let m = super::super::mixed::run_mixed(&cfg.mixed);
+        let det = r.policy("det").unwrap();
+        assert_eq!(det.events, m.mixed_events);
+        assert!((det.makespan_ns - m.mixed_makespan_ns).abs() < 1e-9);
+        assert!((det.max_tx_inflation() - m.max_tx_inflation()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_rails(&small());
+        let b = run_rails(&small());
+        for (pa, pb) in a.policies.iter().zip(&b.policies) {
+            assert_eq!(pa.events, pb.events);
+            assert!((pa.makespan_ns - pb.makespan_ns).abs() < 1e-12);
+            assert_eq!(pa.used_paths, pb.used_paths);
+        }
+    }
+
+    #[test]
+    fn render_emits_result_lines() {
+        let r = run_rails(&small());
+        let out = render(&r, 4);
+        for p in ["det", "spray", "adaptive"] {
+            assert!(out.contains(&format!("RESULT rails policy={p} class=coherence")), "{out}");
+            assert!(out.contains(&format!("RESULT rails_{p} max_tx_inflation=")), "{out}");
+        }
+        assert!(out.contains("path_diversity="));
+    }
+}

@@ -46,10 +46,26 @@ impl Fabric {
         Fabric { topo, router, load }
     }
 
-    /// Rebuild routing after topology edits.
+    /// Rebuild routing after topology edits (preserves the current rail
+    /// count, so a multipath-enabled fabric stays multipath).
     pub fn rebuild(&mut self) {
-        self.router = Router::build(&self.topo);
+        self.router = Router::build_multipath(&self.topo, self.router.max_rails().max(1));
         self.load.resize(self.topo.links.len(), 0.0);
+    }
+
+    /// Rebuild the PBR table with up to `k` equal-cost rails per cell
+    /// (see [`crate::fabric::routing`] §Multipath). Rail 0 stays
+    /// byte-identical to the single-path table, so analytic consumers
+    /// ([`Fabric::path`], [`Fabric::latency_ns`], ...) are unchanged;
+    /// the event simulator's rail selectors spread over the extra
+    /// candidates. `k = 1` restores the classic single-path router.
+    pub fn enable_multipath(&mut self, k: usize) {
+        self.router = Router::build_multipath(&self.topo, k);
+    }
+
+    /// Rails per PBR cell of the current routing table (1 = single-path).
+    pub fn max_rails(&self) -> usize {
+        self.router.max_rails()
     }
 
     pub fn router(&self) -> &Router {

@@ -5,10 +5,10 @@
 //! # Performance architecture (§Perf)
 //!
 //! The PBR table is a single contiguous `Box<[(u32, u32)]>` indexed by
-//! `dst * n + node` (8 bytes/entry, one allocation) rather than a nested
-//! `Vec<Vec<(usize, usize)>>` (16 bytes/entry plus a heap row per
-//! destination). Construction runs one BFS per destination over a CSR
-//! copy of the adjacency, with destinations partitioned across
+//! `(dst * n + node) * k + rail` (8 bytes/entry, one allocation) rather
+//! than a nested `Vec<Vec<(usize, usize)>>` (16 bytes/entry plus a heap
+//! row per destination). Construction runs one BFS per destination over a
+//! CSR copy of the adjacency, with destinations partitioned across
 //! `std::thread::scope` workers operating on disjoint row chunks — no
 //! locks, no external deps. The BFS uses the table row itself as its
 //! visited set (a row entry is written exactly when its node is first
@@ -18,6 +18,23 @@
 //! serial implementation (kept as [`reference::SerialRouter`] for parity
 //! tests and the `benches/simscale.rs` baseline), so the produced paths
 //! are byte-identical — parallelism is across destinations only.
+//!
+//! # Multipath (equal-cost rails)
+//!
+//! [`Router::build`] keeps the classic single-path table (`k = 1`, the
+//! exact layout and contents above). [`Router::build_multipath`] widens
+//! every `(dst, node)` cell to up to `K` equal-cost `(next, link)`
+//! entries — still one contiguous allocation, still one BFS per
+//! destination, which now records *all* shortest predecessors of a node
+//! in BFS scan order instead of only the first. Rail 0 of every cell is
+//! byte-identical to the single-path entry (pinned by
+//! `tests/prop_invariants.rs::prop_deterministic_rail_matches_single_path`),
+//! so [`Router::next_hop`] / [`Router::path`] / [`Router::links_into`]
+//! are the rail-0 views and every existing caller behaves exactly as
+//! before. Every candidate in a cell strictly decreases the hop distance
+//! to `dst`, so *any* per-hop rail choice yields a shortest, loop-free
+//! path — the invariant the rail selectors in [`crate::sim::rails`]
+//! (deterministic / ECMP hash-spray / congestion-adaptive) rely on.
 
 use super::topology::{NodeId, Topology};
 
@@ -44,17 +61,28 @@ impl Path {
 }
 
 /// Flat-table entry marking "no route" (also covers the diagonal
-/// `next[dst * n + dst]`, which no lookup ever consults).
+/// `next[dst * n + dst]`, which no lookup ever consults, and the unused
+/// rail slots of multipath cells).
 const UNREACH: (u32, u32) = (u32::MAX, u32::MAX);
+
+/// Upper bound on rails per cell: the simulator packs the rail index
+/// into 4 bits of its path-cache key (see `sim::memsim`), and equal-cost
+/// fan-out beyond 16 buys nothing a hash over 16 rails does not.
+pub const MAX_RAILS: usize = 16;
 
 /// Precomputed routing state for a topology.
 ///
-/// `next[dst * n + node] = (next node, link idx)` on the shortest path
-/// node -> dst, or [`UNREACH`] when unreachable. This *is* the PBR table:
-/// each switch consults its own row for the destination.
+/// `next[(dst * n + node) * k + rail] = (next node, link idx)`, the
+/// `rail`-th equal-cost shortest next hop node -> dst, or [`UNREACH`]
+/// when unreachable / the cell holds fewer than `k` candidates. This
+/// *is* the PBR table: each switch consults its own cell for the
+/// destination. `k == 1` (from [`Router::build`]) is the classic
+/// single-path table, byte-identical to the pre-multipath layout.
 #[derive(Clone, Debug)]
 pub struct Router {
     n: usize,
+    /// Rails (equal-cost candidate entries) per `(dst, node)` cell.
+    k: usize,
     next: Box<[(u32, u32)]>,
 }
 
@@ -107,49 +135,125 @@ fn bfs_row(csr: &Csr, dst: usize, row: &mut [(u32, u32)], queue: &mut Vec<u32>) 
     row[dst] = UNREACH;
 }
 
+/// Multipath sibling of [`bfs_row`]: rail 0 of every cell is written at
+/// first discovery exactly as the single-path BFS (same predecessor, same
+/// link, same order), and every *additional* shortest predecessor found
+/// later in the scan fills the next free rail slot, up to `k`.
+///
+/// `dist` is per-worker scratch that is deliberately never reset between
+/// destinations: a node's distance is only ever read after the node was
+/// discovered in the *current* BFS (the cell's rail-0 entry is the
+/// visited test), and discovery always writes `dist` first — stale values
+/// from earlier destinations are unreachable.
+fn bfs_row_multi(
+    csr: &Csr,
+    dst: usize,
+    k: usize,
+    row: &mut [(u32, u32)],
+    queue: &mut Vec<u32>,
+    dist: &mut [u32],
+) {
+    row[dst * k] = (dst as u32, u32::MAX); // visited sentinel, never read back
+    dist[dst] = 0;
+    queue.clear();
+    queue.push(dst as u32);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head] as usize;
+        head += 1;
+        let du = dist[u];
+        for &(v, l) in &csr.adj[csr.off[u] as usize..csr.off[u + 1] as usize] {
+            let base = v as usize * k;
+            if row[base] == UNREACH {
+                // first-found hop v -> u is on a shortest path v -> dst
+                row[base] = (u as u32, l);
+                dist[v as usize] = du + 1;
+                queue.push(v);
+            } else if dist[v as usize] == du + 1 {
+                // u is another predecessor of v at the same BFS level:
+                // hop v -> u is an equal-cost shortest alternative
+                for slot in &mut row[base + 1..base + k] {
+                    if *slot == UNREACH {
+                        *slot = (u as u32, l);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    row[dst * k] = UNREACH;
+}
+
 impl Router {
     /// Build routing tables with one BFS per destination — O(V * (V + E))
     /// work, partitioned across all hardware threads (serial below 64
     /// nodes, where spawn overhead dominates).
     pub fn build(topo: &Topology) -> Router {
-        let n = topo.nodes.len();
-        let threads = if n < 64 { 1 } else { crate::util::par::workers_for(n) };
-        Router::build_with_threads(topo, threads)
+        Router::build_multipath(topo, 1)
     }
 
     /// Build with an explicit worker count, honored exactly (1 = serial;
     /// used by tests and the simscale bench to isolate the parallel
     /// speedup and to exercise the partitioning on small graphs).
     pub fn build_with_threads(topo: &Topology, threads: usize) -> Router {
+        Router::build_multipath_with_threads(topo, 1, threads)
+    }
+
+    /// Build a multipath table holding up to `k` equal-cost next hops per
+    /// `(dst, node)` cell (`k = 1` is exactly [`Router::build`]). Same
+    /// parallel per-destination BFS, same thread heuristic.
+    pub fn build_multipath(topo: &Topology, k: usize) -> Router {
+        let n = topo.nodes.len();
+        let threads = if n < 64 { 1 } else { crate::util::par::workers_for(n) };
+        Router::build_multipath_with_threads(topo, k, threads)
+    }
+
+    /// As [`Router::build_multipath`] with an explicit worker count.
+    pub fn build_multipath_with_threads(topo: &Topology, k: usize, threads: usize) -> Router {
+        assert!(
+            (1..=MAX_RAILS).contains(&k),
+            "rail count {k} outside 1..={MAX_RAILS}"
+        );
         let n = topo.nodes.len();
         if n == 0 {
-            return Router { n, next: Vec::new().into_boxed_slice() };
+            return Router { n, k, next: Vec::new().into_boxed_slice() };
         }
         let csr = Csr::build(topo);
         // (u32::MAX, u32::MAX) is an all-ones byte pattern: this fill
         // lowers to one memset-class pass over the table
-        let mut next = vec![UNREACH; n * n].into_boxed_slice();
+        let mut next = vec![UNREACH; n * n * k].into_boxed_slice();
         let threads = threads.clamp(1, n);
         if threads == 1 {
             let mut queue = Vec::with_capacity(n);
-            for (dst, row) in next.chunks_mut(n).enumerate() {
-                bfs_row(&csr, dst, row, &mut queue);
+            let mut dist = vec![0u32; if k > 1 { n } else { 0 }];
+            for (dst, row) in next.chunks_mut(n * k).enumerate() {
+                if k == 1 {
+                    bfs_row(&csr, dst, row, &mut queue);
+                } else {
+                    bfs_row_multi(&csr, dst, k, row, &mut queue, &mut dist);
+                }
             }
         } else {
             let rows_per = n.div_ceil(threads);
             std::thread::scope(|s| {
-                for (w, chunk) in next.chunks_mut(rows_per * n).enumerate() {
+                for (w, chunk) in next.chunks_mut(rows_per * n * k).enumerate() {
                     let csr = &csr;
                     s.spawn(move || {
                         let mut queue = Vec::with_capacity(n);
-                        for (i, row) in chunk.chunks_mut(n).enumerate() {
-                            bfs_row(csr, w * rows_per + i, row, &mut queue);
+                        let mut dist = vec![0u32; if k > 1 { n } else { 0 }];
+                        for (i, row) in chunk.chunks_mut(n * k).enumerate() {
+                            let dst = w * rows_per + i;
+                            if k == 1 {
+                                bfs_row(csr, dst, row, &mut queue);
+                            } else {
+                                bfs_row_multi(csr, dst, k, row, &mut queue, &mut dist);
+                            }
                         }
                     });
                 }
             });
         }
-        Router { n, next }
+        Router { n, k, next }
     }
 
     /// Number of nodes the table covers.
@@ -157,14 +261,50 @@ impl Router {
         self.n
     }
 
+    /// Rails (equal-cost entry slots) per cell this table was built with.
+    #[inline]
+    pub fn max_rails(&self) -> usize {
+        self.k
+    }
+
+    /// All equal-cost `(next node, link)` candidates at `at` toward `dst`
+    /// in raw table form (empty when `at == dst` or unreachable). Entry 0
+    /// is the classic single-path PBR choice.
+    #[inline]
+    pub fn rail_entries(&self, at: NodeId, dst: NodeId) -> &[(u32, u32)] {
+        if at == dst {
+            return &[];
+        }
+        let base = (dst * self.n + at) * self.k;
+        let cell = &self.next[base..base + self.k];
+        // rail slots fill in order, so the first UNREACH ends the cell
+        let len = cell.iter().position(|&e| e == UNREACH).unwrap_or(self.k);
+        &cell[..len]
+    }
+
+    /// Number of equal-cost candidates at `at` toward `dst` (0 when
+    /// `at == dst` or unreachable).
+    #[inline]
+    pub fn rails(&self, at: NodeId, dst: NodeId) -> usize {
+        self.rail_entries(at, dst).len()
+    }
+
+    /// The `rail`-th equal-cost candidate `(next node, link)` at `at`
+    /// toward `dst`, or None when the cell holds fewer rails.
+    #[inline]
+    pub fn rail_entry(&self, at: NodeId, dst: NodeId, rail: usize) -> Option<(NodeId, usize)> {
+        self.rail_entries(at, dst).get(rail).map(|&(nxt, l)| (nxt as NodeId, l as usize))
+    }
+
     /// Raw PBR entry: (next node, link) on the path `at -> dst`, or None
-    /// when unreachable (or `at == dst`).
+    /// when unreachable (or `at == dst`). The rail-0 view: byte-identical
+    /// to the pre-multipath router.
     #[inline]
     pub fn next_hop(&self, at: NodeId, dst: NodeId) -> Option<(NodeId, usize)> {
         if at == dst {
             return None;
         }
-        let (nxt, link) = self.next[dst * self.n + at];
+        let (nxt, link) = self.next[(dst * self.n + at) * self.k];
         if nxt == u32::MAX {
             None
         } else {
@@ -172,7 +312,7 @@ impl Router {
         }
     }
 
-    /// Shortest path src -> dst, or None if unreachable.
+    /// Shortest path src -> dst, or None if unreachable (rail-0 view).
     pub fn path(&self, src: NodeId, dst: NodeId) -> Option<Path> {
         if src == dst {
             return Some(Path { nodes: vec![src], links: vec![] });
@@ -186,7 +326,39 @@ impl Router {
             links.push(link);
             cur = nxt;
             if links.len() > self.n {
-                unreachable!("routing loop");
+                panic!(
+                    "routing loop walking {src} -> {dst}: table cycled at node {cur} after {} hops",
+                    links.len()
+                );
+            }
+        }
+        Some(Path { nodes, links })
+    }
+
+    /// Shortest path src -> dst following rail `rail`: at every node the
+    /// candidate `rail % rails(node, dst)` is taken, so any rail index
+    /// yields a shortest, loop-free path and rail 0 is [`Router::path`].
+    pub fn path_rail(&self, src: NodeId, dst: NodeId, rail: usize) -> Option<Path> {
+        if src == dst {
+            return Some(Path { nodes: vec![src], links: vec![] });
+        }
+        let mut nodes = vec![src];
+        let mut links = Vec::new();
+        let mut cur = src;
+        while cur != dst {
+            let rails = self.rails(cur, dst);
+            if rails == 0 {
+                return None;
+            }
+            let (nxt, link) = self.rail_entry(cur, dst, rail % rails).expect("rails > 0");
+            nodes.push(nxt);
+            links.push(link);
+            cur = nxt;
+            if links.len() > self.n {
+                panic!(
+                    "routing loop walking rail {rail} of {src} -> {dst}: table cycled at node {cur} after {} hops",
+                    links.len()
+                );
             }
         }
         Some(Path { nodes, links })
@@ -202,7 +374,9 @@ impl Router {
             cur = nxt;
             h += 1;
             if h > self.n {
-                unreachable!("routing loop");
+                panic!(
+                    "routing loop walking {src} -> {dst}: table cycled at node {cur} after {h} hops"
+                );
             }
         }
         Some(h)
@@ -219,6 +393,12 @@ impl Router {
                 Some((nxt, link)) => {
                     out.push(link);
                     cur = nxt;
+                    if out.len() > self.n {
+                        panic!(
+                            "routing loop walking {src} -> {dst}: table cycled at node {cur} after {} hops",
+                            out.len()
+                        );
+                    }
                 }
                 None => {
                     out.clear();
@@ -444,5 +624,87 @@ mod tests {
                 assert_eq!(flat.path(a, b), seed.path(a, b), "paths diverge {a}->{b}");
             }
         }
+    }
+
+    /// A Clos leaf reaching a remote endpoint has one equal-cost rail per
+    /// spine, and rail 0 is the classic single-path choice.
+    #[test]
+    fn multipath_rails_cover_clos_spines() {
+        let (mut t, leaves) = Topology::clos(4, 3, LinkKind::CxlCoherent, "f");
+        let mut eps = Vec::new();
+        for (i, &l) in leaves.iter().enumerate() {
+            let e = t.add_node(NodeKind::Accelerator, format!("ep{i}"));
+            t.connect(e, l, LinkKind::CxlCoherent);
+            eps.push(e);
+        }
+        let single = Router::build(&t);
+        let multi = Router::build_multipath(&t, 4);
+        assert_eq!(multi.max_rails(), 4);
+        // leaf0 -> ep3 (behind leaf3): 3 spines, 3 equal-cost next hops
+        assert_eq!(multi.rails(leaves[0], eps[3]), 3);
+        assert_eq!(multi.next_hop(leaves[0], eps[3]), single.next_hop(leaves[0], eps[3]));
+        // the endpoint itself has a single attach link: one rail
+        assert_eq!(multi.rails(eps[0], eps[3]), 1);
+        // every rail is a distinct spine and one hop closer to dst
+        let h = multi.hops(leaves[0], eps[3]).unwrap();
+        let mut nexts = std::collections::HashSet::new();
+        for r in 0..multi.rails(leaves[0], eps[3]) {
+            let (nxt, link) = multi.rail_entry(leaves[0], eps[3], r).unwrap();
+            assert!(nexts.insert(nxt), "rail {r} repeats next hop {nxt}");
+            assert_eq!(multi.hops(nxt, eps[3]).unwrap() + 1, h);
+            let l = t.link(link);
+            assert!(l.a == leaves[0] || l.b == leaves[0]);
+        }
+    }
+
+    #[test]
+    fn multipath_rail0_matches_single_path_build() {
+        let (t, ids) = Topology::torus3d((3, 3, 2), LinkKind::CxlCoherent, "t");
+        let single = Router::build(&t);
+        let multi = Router::build_multipath(&t, 4);
+        for &a in &ids {
+            for &b in &ids {
+                assert_eq!(multi.path(a, b), single.path(a, b), "rail-0 diverges {a}->{b}");
+                assert_eq!(multi.path_rail(a, b, 0), single.path(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn multipath_parallel_build_matches_serial_build() {
+        let (t, _) = Topology::torus3d((4, 3, 2), LinkKind::CxlCoherent, "t");
+        let par = Router::build_multipath_with_threads(&t, 4, 4);
+        let ser = Router::build_multipath_with_threads(&t, 4, 1);
+        assert_eq!(par.next, ser.next, "worker partitioning changed the multipath table");
+    }
+
+    #[test]
+    fn multipath_rail_walks_are_shortest_and_loop_free() {
+        // torus3d((4,4,1)) has two equal-cost directions around each ring
+        let (t, ids) = Topology::torus3d((4, 4, 1), LinkKind::CxlCoherent, "t");
+        let r = Router::build_multipath(&t, 4);
+        let mut saw_diversity = false;
+        for &a in &ids {
+            for &b in &ids {
+                let h = r.hops(a, b).unwrap();
+                let mut distinct = std::collections::HashSet::new();
+                for rail in 0..r.max_rails() {
+                    let p = r.path_rail(a, b, rail).unwrap();
+                    assert_eq!(p.hops(), h, "rail {rail} of {a}->{b} is not shortest");
+                    let mut seen = std::collections::HashSet::new();
+                    assert!(p.nodes.iter().all(|&n| seen.insert(n)), "rail {rail} loops");
+                    distinct.insert(p.links.clone());
+                }
+                saw_diversity |= distinct.len() > 1;
+            }
+        }
+        assert!(saw_diversity, "no pair on a 4x4 torus had rail diversity");
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=")]
+    fn multipath_rejects_zero_rails() {
+        let t = Topology::single_hop(2, LinkKind::NvLink5, "r");
+        Router::build_multipath(&t, 0);
     }
 }

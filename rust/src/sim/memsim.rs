@@ -9,16 +9,31 @@
 //!
 //! # Performance architecture (§Perf)
 //!
-//! Routed paths are *interned* per `(src, dst)` pair: the N-transactions-
-//! per-pair case (every workload sweep) shares one contiguous hop slice in
-//! a common arena instead of cloning a `Vec<usize>` per transaction. The
-//! cache key packs `(src << 32) | dst` into one `u64`, so the hot-path
+//! Routed paths are *interned* per `(src, dst, rail)` triple: the
+//! N-transactions-per-pair case (every workload sweep) shares one
+//! contiguous hop slice in a common arena instead of cloning a
+//! `Vec<usize>` per transaction. The cache key packs
+//! `(src << 34) | (dst << 4) | rail` into one `u64`, so the hot-path
 //! probe hashes a single word instead of a tuple. Each arena entry packs
 //! `(link << 1) | direction` — the hop's direction bit is computed once at
 //! path-build time, so the per-event handler never re-derives it by
 //! comparing link endpoints. Combined with the slab [`Engine`] this keeps
 //! the Arrive hot path to: one inflight load, one arena load, one
 //! `LinkConsts` load, one server admit, one schedule.
+//!
+//! # Multi-rail routing
+//!
+//! On a multipath-enabled fabric ([`Fabric::enable_multipath`]) the
+//! active [`RoutingPolicy`] decides, **once per transaction at injection
+//! time**, which equal-cost rail it rides: rail 0 (deterministic — the
+//! parity baseline), an ECMP hash over `(src, dst, tx_seq)`
+//! ([`RailSelector::HashSpray`]), or the least-backlogged candidate path
+//! by live [`ClassedServer`] state ([`RailSelector::Adaptive`]). The
+//! resolved rail index is applied per hop only at cells whose
+//! [`LinkTier`] has a spreading selector; deterministic tiers stay on
+//! rail 0. Under the all-deterministic default (or a single-path
+//! fabric), every path, latency and makespan is byte-identical to the
+//! pre-multipath simulator.
 //!
 //! # Streamed injection
 //!
@@ -31,11 +46,12 @@
 
 use super::engine::{Engine, EventKind};
 use super::qos::{self, Admission, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
+use super::rails::{spray_rail, RailSelector, RoutingPolicy};
 use super::traffic::{BatchSource, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
 use crate::util::stats::Welford;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// One memory transaction (request; the response is modeled by doubling
 /// the one-way latency contribution of symmetric protocol phases).
@@ -115,17 +131,113 @@ pub struct MemSim<'f> {
     pub(crate) tiers: Vec<LinkTier>,
     /// The active per-tier arbitration configuration.
     qos: QosPolicy,
+    /// The active per-tier rail-selection configuration.
+    routing: RoutingPolicy,
+    /// Which tiers spread beyond rail 0 (derived from `routing`; shared
+    /// with the sharded workers).
+    pub(crate) spread: [bool; LinkTier::COUNT],
     /// Serialization-time quantum of the fastest link: the calendar
     /// engine's bucket-width floor (§Perf).
     pub(crate) granularity: f64,
     /// interned hops, `(link << 1) | dir`, contiguous per path
     hop_arena: Vec<u32>,
-    /// `(src << 32) | dst` -> (start, len) into `hop_arena`
+    /// [`path_key`]`(src, dst, rail)` -> (start, len) into `hop_arena`.
+    /// Rails that walk to an identical hop sequence alias one slice.
     path_cache: HashMap<u64, (u32, u32)>,
+    /// Distinct arena slices transactions actually rode (serial streamed
+    /// backend) — the realized-diversity numerator, as opposed to the
+    /// cache keys, which also count adaptive *probes* and aliased rails.
+    used_paths: HashSet<(u32, u32)>,
+    /// Distinct `(src, dst)` pairs that carried traffic.
+    used_pairs: HashSet<u64>,
+}
+
+/// Path-cache key: `(src << 34) | (dst << 4) | rail`. Node ids stay far
+/// below 2^30 (the n x n table's memory gives out long before the pack
+/// becomes ambiguous — asserted in [`MemSim::new`]) and rails are capped
+/// at [`crate::fabric::routing::MAX_RAILS`] = 16 by the router build.
+#[inline]
+pub(crate) fn path_key(src: NodeId, dst: NodeId, rail: u16) -> u64 {
+    debug_assert!(src < (1 << 30) && dst < (1 << 30) && rail < 16);
+    ((src as u64) << 34) | ((dst as u64) << 4) | rail as u64
+}
+
+/// One rail-aware PBR step: the equal-cost candidate taken at `at`
+/// toward `dst` under the `spread` tier mask — candidate
+/// `rail % rails(cell)` where the cell's tier spreads, rail 0 otherwise.
+/// `None` when unreachable. Shared by the serial interner, the sharded
+/// workers' interner and the sharded coordinator's first-hop targeting.
+#[inline]
+pub(crate) fn rail_step(
+    fabric: &Fabric,
+    tiers: &[LinkTier],
+    spread: [bool; LinkTier::COUNT],
+    at: NodeId,
+    dst: NodeId,
+    rail: u16,
+) -> Option<(NodeId, usize)> {
+    let router = fabric.router();
+    let rails = router.rails(at, dst);
+    if rails == 0 {
+        return None;
+    }
+    let idx = if rails > 1 {
+        // the cell's tier comes from its rail-0 link (equal-cost
+        // candidates at one node share a structural tier in every
+        // Figure-4a shape; rail 0 is the deterministic anchor)
+        let (_, l0) = router.rail_entry(at, dst, 0).expect("rails > 0");
+        if spread[tiers[l0].index()] {
+            rail as usize % rails
+        } else {
+            0
+        }
+    } else {
+        0
+    };
+    router.rail_entry(at, dst, idx)
+}
+
+/// Walk the rail-aware path src -> dst, appending packed
+/// `(link << 1) | direction` hops to `out`. Returns false (leaving `out`
+/// partially extended — callers truncate) when unreachable. The twin of
+/// the pre-multipath `next_hop` walk, shared by [`MemSim::intern_path`]
+/// and the sharded workers' local interner.
+pub(crate) fn rail_hops(
+    fabric: &Fabric,
+    tiers: &[LinkTier],
+    spread: [bool; LinkTier::COUNT],
+    src: NodeId,
+    dst: NodeId,
+    rail: u16,
+    out: &mut Vec<u32>,
+) -> bool {
+    let n = fabric.router().node_count();
+    let mut cur = src;
+    let mut hops = 0usize;
+    while cur != dst {
+        let Some((nxt, link)) = rail_step(fabric, tiers, spread, cur, dst, rail) else {
+            return false;
+        };
+        // direction bit decided once here, not per event: 0 = a -> b
+        let dir = if fabric.topo.link(link).a == cur { 0u32 } else { 1u32 };
+        out.push(((link as u32) << 1) | dir);
+        cur = nxt;
+        hops += 1;
+        if hops > n {
+            panic!("routing loop walking rail {rail} of {src} -> {dst}: cycled at node {cur}");
+        }
+    }
+    true
 }
 
 impl<'f> MemSim<'f> {
     pub fn new(fabric: &'f Fabric) -> Self {
+        // the path-cache key packs node ids into 30 bits (see `path_key`);
+        // the n*n routing table exhausts memory long before this triggers
+        assert!(
+            fabric.topo.nodes.len() < (1 << 30),
+            "fabric too large for the packed path-cache key"
+        );
         let servers =
             (0..fabric.topo.links.len()).map(|_| [ClassedServer::fcfs(), ClassedServer::fcfs()]).collect();
         let tiers = qos::classify_links(&fabric.topo);
@@ -159,9 +271,13 @@ impl<'f> MemSim<'f> {
             consts,
             tiers,
             qos: QosPolicy::fcfs(),
+            routing: RoutingPolicy::deterministic(),
+            spread: [false; LinkTier::COUNT],
             granularity,
             hop_arena: Vec::new(),
             path_cache: HashMap::new(),
+            used_paths: HashSet::new(),
+            used_pairs: HashSet::new(),
         }
     }
 
@@ -170,6 +286,35 @@ impl<'f> MemSim<'f> {
         let mut sim = MemSim::new(fabric);
         sim.set_qos(policy);
         sim
+    }
+
+    /// Build a simulator with a rail-selection configuration already
+    /// applied (meaningful on a multipath-enabled fabric —
+    /// [`Fabric::enable_multipath`]).
+    pub fn with_routing(fabric: &'f Fabric, policy: RoutingPolicy) -> Self {
+        let mut sim = MemSim::new(fabric);
+        sim.set_routing(policy);
+        sim
+    }
+
+    /// Apply a per-tier rail-selection configuration. Discards the path
+    /// cache (interned paths depend on the spread mask). Call before
+    /// running traffic; the coordinator's
+    /// [`RoutingManager`](crate::coordinator::RoutingManager) is the
+    /// usual owner. A no-op in effect on a single-path fabric
+    /// (`max_rails() == 1`), where every cell holds one candidate.
+    pub fn set_routing(&mut self, policy: RoutingPolicy) {
+        self.routing = policy;
+        self.spread = policy.spread_mask();
+        self.hop_arena.clear();
+        self.path_cache.clear();
+        self.used_paths.clear();
+        self.used_pairs.clear();
+    }
+
+    /// The active rail-selection configuration.
+    pub fn routing_policy(&self) -> RoutingPolicy {
+        self.routing
     }
 
     /// Apply a per-tier arbitration configuration: every link direction
@@ -222,36 +367,113 @@ impl<'f> MemSim<'f> {
         out
     }
 
-    /// Intern the routed path src -> dst: returns (start, len) into the
-    /// hop arena, building (with per-hop direction bits) on first use.
-    /// None when unreachable.
-    fn intern_path(&mut self, src: NodeId, dst: NodeId) -> Option<(u32, u32)> {
-        let key = ((src as u64) << 32) | dst as u64;
+    /// Intern the routed path src -> dst along `rail`: returns
+    /// (start, len) into the hop arena, building (with per-hop direction
+    /// bits) on first use. None when unreachable.
+    ///
+    /// Distinct rail indices frequently collapse onto the same hop
+    /// sequence (a cell with fewer than `rail + 1` candidates wraps, and
+    /// deterministic tiers ignore the index entirely); those are aliased
+    /// to one arena slice, so duplicate probes cost no arena memory and
+    /// the slice identity `(start, len)` means "same physical path".
+    fn intern_path(&mut self, src: NodeId, dst: NodeId, rail: u16) -> Option<(u32, u32)> {
+        let key = path_key(src, dst, rail);
         if let Some(&r) = self.path_cache.get(&key) {
             return Some(r);
         }
-        let fabric = self.fabric;
-        let router = fabric.router();
         let start = self.hop_arena.len() as u32;
-        let mut cur = src;
-        while cur != dst {
-            let Some((nxt, link)) = router.next_hop(cur, dst) else {
-                self.hop_arena.truncate(start as usize);
-                return None;
-            };
-            // direction bit decided once here, not per event: 0 = a -> b
-            let dir = if fabric.topo.link(link).a == cur { 0u32 } else { 1u32 };
-            self.hop_arena.push(((link as u32) << 1) | dir);
-            cur = nxt;
+        if !rail_hops(self.fabric, &self.tiers, self.spread, src, dst, rail, &mut self.hop_arena) {
+            self.hop_arena.truncate(start as usize);
+            return None;
         }
-        let entry = (start, self.hop_arena.len() as u32 - start);
+        let mut entry = (start, self.hop_arena.len() as u32 - start);
+        // scan EVERY cached rail of the pair (rails intern in hash order,
+        // not ascending, so an alias may sit at a higher index): identical
+        // content can therefore never be stored twice
+        let k = self.fabric.router().max_rails() as u16;
+        for r in 0..k {
+            if r == rail {
+                continue;
+            }
+            if let Some(&(s0, l0)) = self.path_cache.get(&path_key(src, dst, r)) {
+                if l0 == entry.1
+                    && self.hop_arena[s0 as usize..(s0 + l0) as usize]
+                        == self.hop_arena[entry.0 as usize..(entry.0 + entry.1) as usize]
+                {
+                    self.hop_arena.truncate(start as usize);
+                    entry = (s0, l0);
+                    break;
+                }
+            }
+        }
         self.path_cache.insert(key, entry);
         Some(entry)
     }
 
-    /// Number of distinct (src, dst) paths interned so far.
+    /// Resolve which rail a transaction rides, per the active
+    /// [`RoutingPolicy`] — called once per transaction at injection time.
+    /// `seq` is the per-source emission index (the spray hash input).
+    fn resolve_rail(&mut self, src: NodeId, dst: NodeId, seq: u64, now: f64) -> u16 {
+        let k = self.fabric.router().max_rails();
+        if k <= 1 || self.spread == [false; LinkTier::COUNT] {
+            return 0;
+        }
+        match self.routing.resolution() {
+            RailSelector::Deterministic => 0,
+            RailSelector::HashSpray => spray_rail(src, dst, seq, k),
+            RailSelector::Adaptive => {
+                // score every candidate rail path by the live service
+                // backlog on its links; least-loaded wins, ties to the
+                // lowest rail (so an idle fabric is exactly rail 0)
+                let mut best = 0u16;
+                let mut best_score = f64::INFINITY;
+                for r in 0..k as u16 {
+                    let Some((start, len)) = self.intern_path(src, dst, r) else {
+                        break;
+                    };
+                    let mut score = 0.0;
+                    for h in &self.hop_arena[start as usize..(start + len) as usize] {
+                        let link = (h >> 1) as usize;
+                        let dir = (h & 1) as usize;
+                        score += self.servers[link][dir].pending_ns(now);
+                    }
+                    if score < best_score {
+                        best_score = score;
+                        best = r;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Number of distinct (src, dst, rail) cache entries interned so far
+    /// (cache telemetry: includes adaptive probes and aliased rails).
     pub fn interned_paths(&self) -> usize {
         self.path_cache.len()
+    }
+
+    /// Number of distinct (src, dst) pairs among the interned entries.
+    pub fn interned_pairs(&self) -> usize {
+        let pairs: HashSet<u64> = self.path_cache.keys().map(|&k| k >> 4).collect();
+        pairs.len()
+    }
+
+    /// Distinct physical paths transactions actually rode — adaptive
+    /// probes and rail indices that alias the same hop sequence do not
+    /// count. `used_path_count() / used_pair_count()` is the realized
+    /// path diversity the `rails` experiment reports. Populated by the
+    /// serial streamed backend on multipath-enabled fabrics only
+    /// (single-path runs skip the accounting; their diversity is 1 by
+    /// construction).
+    pub fn used_path_count(&self) -> usize {
+        self.used_paths.len()
+    }
+
+    /// Distinct (src, dst) pairs that actually carried traffic (same
+    /// population rules as [`MemSim::used_path_count`]).
+    pub fn used_pair_count(&self) -> usize {
+        self.used_pairs.len()
     }
 
     /// Advance transaction `id` (state `fl`) arriving at hop `hop`: admit
@@ -319,6 +541,14 @@ impl<'f> MemSim<'f> {
         let mut staged: Vec<Option<SourcedTx>> = (0..n).map(|_| None).collect();
         let mut state = vec![SrcState::Active; n];
         let mut inflight_count = vec![0usize; n];
+        // per-source emission index: the rail selectors' tx_seq (identical
+        // to the sharded coordinator's staging order, so HashSpray picks
+        // the same rails on both backends)
+        let mut emitted = vec![0u64; n];
+        // realized-diversity telemetry is only meaningful (and only paid
+        // for) on a multipath-enabled fabric — single-path runs keep the
+        // injection path free of the two hash-set inserts
+        let track_rails = self.fabric.router().max_rails() > 1;
         let mut slots: Vec<InFlight> = Vec::new();
         let mut free_slots: Vec<u32> = Vec::new();
         let mut report = StreamReport::new();
@@ -366,7 +596,10 @@ impl<'f> MemSim<'f> {
                     let i = tag as usize;
                     let stx = staged[i].take().expect("staged transaction for injection event");
                     let tx = stx.tx;
-                    let (path_start, path_len) = match self.intern_path(tx.src, tx.dst) {
+                    let seq = emitted[i];
+                    emitted[i] += 1;
+                    let rail = self.resolve_rail(tx.src, tx.dst, seq, now);
+                    let (path_start, path_len) = match self.intern_path(tx.src, tx.dst, rail) {
                         Some(r) => r,
                         None => panic!(
                             "no path {} ({}) -> {} ({}) for traffic source {} (class {})",
@@ -378,6 +611,12 @@ impl<'f> MemSim<'f> {
                             classes[i].name()
                         ),
                     };
+                    if track_rails {
+                        // slice identity == physical path identity (aliased
+                        // in intern_path): realized-diversity telemetry
+                        self.used_paths.insert((path_start, path_len));
+                        self.used_pairs.insert(((tx.src as u64) << 32) | tx.dst as u64);
+                    }
                     let entry = InFlight {
                         issued: now,
                         bytes: tx.bytes,
@@ -610,6 +849,139 @@ mod tests {
         // queuing — both finish with identical latency
         assert_eq!(rep.completed, 2);
         assert!((rep.latency.max() - rep.latency.min()).abs() < 1e-9, "duplex paths interfered");
+    }
+
+    // ------------------------------------------------------------------
+    // multi-rail routing
+    // ------------------------------------------------------------------
+
+    /// 2 spines, one endpoint per leaf: the smallest fabric with real
+    /// equal-cost diversity (the leaf picks its spine plane).
+    fn spined(leaves: usize, spines: usize) -> (Fabric, Vec<NodeId>) {
+        let (mut t, leaf_ids) = Topology::clos(leaves, spines, LinkKind::CxlCoherent, "f");
+        let mut eps = Vec::new();
+        for (i, &l) in leaf_ids.iter().enumerate() {
+            let e = t.add_node(NodeKind::Accelerator, format!("ep{i}"));
+            t.connect(e, l, LinkKind::CxlCoherent);
+            eps.push(e);
+        }
+        (Fabric::new(t), eps)
+    }
+
+    fn pair_load(eps: &[NodeId], n: usize) -> Vec<Transaction> {
+        (0..n)
+            .map(|i| Transaction {
+                src: eps[0],
+                dst: eps[1],
+                at: i as f64 * 5.0,
+                bytes: 4096.0,
+                device_ns: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_rails_match_single_path_exactly() {
+        // multipath fabric + all-deterministic policy is byte-identical
+        // to the single-path simulator (the parity acceptance bar)
+        let (f1, eps1) = spined(2, 2);
+        let mut single = MemSim::new(&f1);
+        let a = single.run(pair_load(&eps1, 50));
+        let (mut f2, eps2) = spined(2, 2);
+        f2.enable_multipath(4);
+        let mut multi = MemSim::new(&f2); // default: deterministic routing
+        let b = multi.run(pair_load(&eps2, 50));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.latency.mean(), b.latency.mean());
+        assert_eq!(a.latency.max(), b.latency.max());
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn hash_spray_spreads_one_pair_over_both_spines() {
+        let (mut f, eps) = spined(2, 2);
+        f.enable_multipath(4);
+        let run = |policy: RoutingPolicy| {
+            let mut sim = MemSim::with_routing(&f, policy);
+            let rep = sim.run(pair_load(&eps, 64));
+            assert_eq!(rep.completed, 64);
+            let links: std::collections::HashSet<u32> =
+                sim.collect_qos_stats().iter().map(|s| s.link).collect();
+            (links.len(), sim.used_path_count(), sim.used_pair_count())
+        };
+        let (det_links, det_paths, det_pairs) = run(RoutingPolicy::deterministic());
+        assert_eq!((det_paths, det_pairs), (1, 1));
+        assert_eq!(det_links, 4, "single path: ep-leaf, leaf-spine, spine-leaf, leaf-ep");
+        let (spray_links, spray_paths, spray_pairs) =
+            run(RoutingPolicy::uniform(RailSelector::HashSpray));
+        assert_eq!(spray_pairs, 1);
+        // 2 spines: rails 2/3 wrap onto (and alias) rails 0/1, so the
+        // pair rides exactly 2 distinct physical paths
+        assert_eq!(spray_paths, 2, "spray must ride both spine planes");
+        assert_eq!(spray_links, 6, "both spine planes must serve traffic");
+    }
+
+    #[test]
+    fn adaptive_probes_do_not_inflate_realized_diversity() {
+        // adaptive interns every candidate to score it, but an idle
+        // fabric always rides rail 0 — realized diversity must be 1.0
+        let (mut f, eps) = spined(2, 2);
+        f.enable_multipath(4);
+        let mut sim = MemSim::with_routing(&f, RoutingPolicy::uniform(RailSelector::Adaptive));
+        // serialize the pair so no queue ever builds (ties -> rail 0)
+        let txs: Vec<Transaction> = (0..8)
+            .map(|i| Transaction {
+                src: eps[0],
+                dst: eps[1],
+                at: i as f64 * 1e6,
+                bytes: 64.0,
+                device_ns: 0.0,
+            })
+            .collect();
+        let rep = sim.run(txs);
+        assert_eq!(rep.completed, 8);
+        assert!(sim.interned_paths() >= 2, "adaptive probed the candidate rails");
+        assert_eq!(
+            (sim.used_path_count(), sim.used_pair_count()),
+            (1, 1),
+            "probes must not count as ridden paths"
+        );
+    }
+
+    #[test]
+    fn adaptive_steers_around_a_loaded_spine() {
+        let (mut f, eps) = spined(2, 2);
+        f.enable_multipath(2);
+        let leaf0 = f.topo.neighbors(eps[0])[0].0;
+        let (_, busy_link) = f.router().rail_entry(leaf0, eps[1], 0).unwrap();
+        let dir = if f.topo.link(busy_link).a == leaf0 { 0 } else { 1 };
+        let tx = vec![Transaction { src: eps[0], dst: eps[1], at: 0.0, bytes: 4096.0, device_ns: 0.0 }];
+        let run = |policy: RoutingPolicy| {
+            let mut sim = MemSim::with_routing(&f, policy);
+            // park 1 ms of pre-existing service on the deterministic spine
+            sim.servers[busy_link][dir].admit(0.0, 1e6, 64.0, TrafficClass::Generic, 0, 0);
+            sim.run(tx.clone()).latency.mean()
+        };
+        let det = run(RoutingPolicy::deterministic());
+        let adaptive = run(RoutingPolicy::uniform(RailSelector::Adaptive));
+        assert!(det > 1e6, "deterministic must queue behind the busy spine: {det}");
+        assert!(adaptive < det / 10.0, "adaptive failed to steer around: {adaptive} vs det {det}");
+    }
+
+    #[test]
+    fn adaptive_on_idle_fabric_is_rail_zero() {
+        // score ties resolve to the lowest rail, so an uncontended
+        // adaptive run reproduces the deterministic path exactly
+        let (mut f, eps) = spined(2, 2);
+        f.enable_multipath(4);
+        let one = vec![Transaction { src: eps[0], dst: eps[1], at: 0.0, bytes: 4096.0, device_ns: 0.0 }];
+        let mut det = MemSim::new(&f);
+        let a = det.run(one.clone());
+        let mut ad = MemSim::with_routing(&f, RoutingPolicy::uniform(RailSelector::Adaptive));
+        let b = ad.run(one);
+        assert_eq!(a.latency.mean(), b.latency.mean());
+        assert_eq!(a.makespan_ns, b.makespan_ns);
     }
 
     // ------------------------------------------------------------------

@@ -36,17 +36,23 @@
 //! [`MemSim::run_streamed_sharded`] partitions the fabric into
 //! topology-derived domains and streams one engine per shard under
 //! conservative lookahead (module `shard`), matching the serial backend's
-//! per-class counts, byte totals and latency multiset exactly.
+//! per-class counts, byte totals and latency multiset exactly. On a
+//! multipath-enabled fabric the per-tier [`rails::RoutingPolicy`] decides
+//! how transactions spread over equal-cost rails (deterministic rail 0 /
+//! ECMP hash-spray / congestion-adaptive steering on the live QoS
+//! telemetry — module [`rails`]).
 
 pub mod engine;
 pub mod server;
 pub mod memsim;
 pub mod qos;
+pub mod rails;
 mod shard;
 pub mod traffic;
 
 pub use engine::{Engine, EventKind};
 pub use memsim::{MemSim, MemSimReport, Transaction};
 pub use qos::{ArbPolicy, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
+pub use rails::{RailSelector, RoutingPolicy};
 pub use server::Server;
 pub use traffic::{BatchSource, ClassReport, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};

@@ -285,6 +285,10 @@ pub struct ClassedServer {
     free_at: f64,
     /// Queued-mode state: a transaction is currently in service.
     in_service: bool,
+    /// Queued-mode state: when the in-service transaction completes
+    /// (only meaningful while `in_service`); feeds the adaptive rail
+    /// selector's backlog estimate ([`ClassedServer::pending_ns`]).
+    service_end: f64,
     vcs: [VecDeque<QueuedTx>; 4],
     queued_count: usize,
     /// DRR state.
@@ -322,6 +326,7 @@ impl ClassedServer {
             quantum,
             free_at: 0.0,
             in_service: false,
+            service_end: 0.0,
             vcs: [VecDeque::new(), VecDeque::new(), VecDeque::new(), VecDeque::new()],
             queued_count: 0,
             deficit: [0.0; 4],
@@ -371,6 +376,7 @@ impl ClassedServer {
             return Admission::Queued;
         }
         self.in_service = true;
+        self.service_end = now + service;
         let s = &mut self.stats[ci];
         s.busy_ns += service;
         s.served += 1;
@@ -394,6 +400,7 @@ impl ClassedServer {
         };
         let q = self.vcs[ci].pop_front().expect("picked VC is non-empty");
         self.queued_count -= 1;
+        self.service_end = now + q.service;
         let s = &mut self.stats[ci];
         s.queued_ns += now - q.arrived;
         s.busy_ns += q.service;
@@ -444,6 +451,22 @@ impl ClassedServer {
     /// Transactions currently parked in virtual channels.
     pub fn backlog(&self) -> usize {
         self.queued_count
+    }
+
+    /// Service time (ns) admitted but not yet completed as of `now` —
+    /// the live congestion signal the adaptive rail selector steers on
+    /// ([`crate::sim::rails`]). For FCFS this is the time-released
+    /// horizon `free_at - now`; for queued-mode policies it is the
+    /// residual of the in-service transaction plus every parked VC
+    /// entry's service demand (O(backlog) — called on the injection
+    /// path of adaptive runs only, never on the per-event hot path).
+    pub fn pending_ns(&self, now: f64) -> f64 {
+        if let ArbPolicy::FcfsShared = self.policy {
+            return (self.free_at - now).max(0.0);
+        }
+        let queued: f64 = self.vcs.iter().flat_map(|q| q.iter()).map(|q| q.service).sum();
+        let in_svc = if self.in_service { (self.service_end - now).max(0.0) } else { 0.0 };
+        queued + in_svc
     }
 
     /// True while a transaction is in service (queued-mode policies).
@@ -644,6 +667,26 @@ mod tests {
         assert!((cs.class_stats(GE).bytes - 512.0).abs() < 1e-12);
         assert!((cs.class_stats(GE).queued_ns - 3.0).abs() < 1e-12);
         assert!((cs.busy_ns() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pending_ns_tracks_backlog() {
+        // FCFS: the time-released horizon
+        let mut f = ClassedServer::fcfs();
+        assert_eq!(f.pending_ns(0.0), 0.0);
+        f.admit(0.0, 10.0, 64.0, CO, 0, 0);
+        f.admit(0.0, 5.0, 64.0, GE, 1, 0);
+        assert!((f.pending_ns(3.0) - 12.0).abs() < 1e-12);
+        assert_eq!(f.pending_ns(100.0), 0.0);
+        // queued mode: in-service residual + parked service demand
+        let mut s = ClassedServer::new(ArbPolicy::strict_default());
+        s.admit(0.0, 10.0, 64.0, CO, 0, 0); // starts, done at 10
+        s.admit(1.0, 4.0, 64.0, GE, 1, 0); // queued
+        assert!((s.pending_ns(2.0) - 12.0).abs() < 1e-12);
+        let _ = s.depart(10.0); // generic starts, done at 14
+        assert!((s.pending_ns(12.0) - 2.0).abs() < 1e-12);
+        let _ = s.depart(14.0);
+        assert_eq!(s.pending_ns(20.0), 0.0);
     }
 
     #[test]

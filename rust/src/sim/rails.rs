@@ -1,0 +1,198 @@
+//! Rail selection: how a transaction picks among the equal-cost
+//! multipath candidates the PBR table holds (see
+//! [`crate::fabric::routing`] §Multipath). The fabric's Clos spine and
+//! multi-planar XLink shapes are rich in path diversity, but a
+//! single-path table makes every `(src, dst)` pair hammer one
+//! deterministic route — the interference the `mixed`/`qos` experiments
+//! measure is partly self-inflicted. This module is the policy layer
+//! that spreads and steers that traffic (the DFabric/Octopus direction):
+//!
+//! * [`RailSelector::Deterministic`] — rail 0 everywhere: byte-identical
+//!   to the pre-multipath router, and the parity baseline pinned by
+//!   `tests/prop_invariants.rs::prop_deterministic_routing_parity`.
+//! * [`RailSelector::HashSpray`] — ECMP-style: a deterministic
+//!   [splitmix64 hash](spray_rail) over `(src, dst, tx_seq)` picks the
+//!   rail at injection time, so a pair's transactions spread across all
+//!   equal-cost paths while any single run stays exactly reproducible
+//!   (and identical between the serial and sharded backends).
+//! * [`RailSelector::Adaptive`] — congestion-adaptive: at injection the
+//!   candidate rail paths are scored by the live service backlog
+//!   ([`ClassedServer::pending_ns`](super::qos::ClassedServer::pending_ns))
+//!   on their links — the same per-link state the QoS subsystem already
+//!   maintains — and the least-loaded rail wins (ties to the lowest
+//!   rail). Across shard boundaries the remote queue state is not
+//!   visible to the coordinator, so the sharded backend degrades
+//!   Adaptive to [`HashSpray`](RailSelector::HashSpray).
+//!
+//! Policies are per [`LinkTier`] (mirroring
+//! [`QosPolicy`](super::qos::QosPolicy)): a [`RoutingPolicy`] can spray
+//! over the contended CXL spine while the XLink domain stays
+//! deterministic. A transaction resolves *one* rail index; cells in
+//! tiers whose selector is [`RailSelector::Deterministic`] ignore it and
+//! stay on rail 0, cells in spreading tiers take candidate
+//! `rail % rails(cell)`. Since every candidate is an equal-cost shortest
+//! next hop, any mix of per-cell choices stays shortest and loop-free.
+
+use super::qos::LinkTier;
+use crate::fabric::NodeId;
+
+/// How a transaction picks among equal-cost rails.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RailSelector {
+    /// Rail 0 everywhere — byte-identical to the single-path router.
+    Deterministic,
+    /// ECMP: deterministic per-transaction hash over `(src, dst, tx_seq)`.
+    HashSpray,
+    /// Least-loaded candidate by live link-server backlog; falls back to
+    /// [`RailSelector::HashSpray`] where that state is not visible
+    /// (across shard boundaries).
+    Adaptive,
+}
+
+impl RailSelector {
+    pub const ALL: [RailSelector; 3] =
+        [RailSelector::Deterministic, RailSelector::HashSpray, RailSelector::Adaptive];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RailSelector::Deterministic => "det",
+            RailSelector::HashSpray => "spray",
+            RailSelector::Adaptive => "adaptive",
+        }
+    }
+
+    /// True when this selector uses rails beyond rail 0.
+    pub fn spreads(self) -> bool {
+        !matches!(self, RailSelector::Deterministic)
+    }
+}
+
+/// Per-link-tier rail-selection configuration, owned by the coordinator
+/// ([`RoutingManager`](crate::coordinator::RoutingManager)) and applied
+/// to a simulator with [`MemSim::set_routing`](super::MemSim::set_routing)
+/// — the routing twin of [`QosPolicy`](super::qos::QosPolicy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoutingPolicy {
+    per_tier: [RailSelector; LinkTier::COUNT],
+}
+
+impl RoutingPolicy {
+    /// The same selector on every tier.
+    pub fn uniform(s: RailSelector) -> RoutingPolicy {
+        RoutingPolicy { per_tier: [s; LinkTier::COUNT] }
+    }
+
+    /// The parity baseline: rail 0 on every tier (exactly the
+    /// pre-multipath fabric).
+    pub fn deterministic() -> RoutingPolicy {
+        RoutingPolicy::uniform(RailSelector::Deterministic)
+    }
+
+    pub fn tier(&self, t: LinkTier) -> RailSelector {
+        self.per_tier[t.index()]
+    }
+
+    pub fn set(&mut self, t: LinkTier, s: RailSelector) {
+        self.per_tier[t.index()] = s;
+    }
+
+    /// Which tiers spread beyond rail 0, indexed by [`LinkTier::index`].
+    pub fn spread_mask(&self) -> [bool; LinkTier::COUNT] {
+        let mut m = [false; LinkTier::COUNT];
+        for (i, s) in self.per_tier.iter().enumerate() {
+            m[i] = s.spreads();
+        }
+        m
+    }
+
+    /// How the per-transaction rail index is resolved: the strongest
+    /// selector across tiers (Adaptive > HashSpray > Deterministic). The
+    /// resolved index is then applied only at cells in spreading tiers.
+    pub fn resolution(&self) -> RailSelector {
+        if self.per_tier.contains(&RailSelector::Adaptive) {
+            RailSelector::Adaptive
+        } else if self.per_tier.contains(&RailSelector::HashSpray) {
+            RailSelector::HashSpray
+        } else {
+            RailSelector::Deterministic
+        }
+    }
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> RoutingPolicy {
+        RoutingPolicy::deterministic()
+    }
+}
+
+/// ECMP rail hash: splitmix64 finalizer over the packed flow key.
+/// Deterministic across platforms and identical between the serial and
+/// sharded backends (both feed the per-source emission index as `seq`).
+#[inline]
+pub fn spray_rail(src: NodeId, dst: NodeId, seq: u64, k: usize) -> u16 {
+    debug_assert!(k >= 1);
+    let mut z = (((src as u64) << 32) | dst as u64) ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % k as u64) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selector_names_and_spread() {
+        assert_eq!(RailSelector::Deterministic.name(), "det");
+        assert_eq!(RailSelector::HashSpray.name(), "spray");
+        assert_eq!(RailSelector::Adaptive.name(), "adaptive");
+        assert!(!RailSelector::Deterministic.spreads());
+        assert!(RailSelector::HashSpray.spreads());
+        assert!(RailSelector::Adaptive.spreads());
+    }
+
+    #[test]
+    fn policy_per_tier_and_resolution() {
+        let mut p = RoutingPolicy::deterministic();
+        assert_eq!(p.resolution(), RailSelector::Deterministic);
+        assert_eq!(p.spread_mask(), [false; 4]);
+        p.set(LinkTier::CxlSpine, RailSelector::HashSpray);
+        assert_eq!(p.tier(LinkTier::CxlSpine), RailSelector::HashSpray);
+        assert_eq!(p.tier(LinkTier::Xlink), RailSelector::Deterministic);
+        assert_eq!(p.resolution(), RailSelector::HashSpray);
+        assert!(p.spread_mask()[LinkTier::CxlSpine.index()]);
+        p.set(LinkTier::CxlLeaf, RailSelector::Adaptive);
+        assert_eq!(p.resolution(), RailSelector::Adaptive);
+        let u = RoutingPolicy::uniform(RailSelector::Adaptive);
+        assert_eq!(u.spread_mask(), [true; 4]);
+    }
+
+    #[test]
+    fn spray_is_deterministic_and_in_range() {
+        for k in 1..=8usize {
+            for seq in 0..200u64 {
+                let a = spray_rail(5, 9, seq, k);
+                let b = spray_rail(5, 9, seq, k);
+                assert_eq!(a, b);
+                assert!((a as usize) < k);
+            }
+        }
+    }
+
+    #[test]
+    fn spray_spreads_over_rails() {
+        // over a few hundred sequence numbers every rail of a k=4 fan
+        // must be picked — the ECMP property the steering relies on
+        let mut hit = [false; 4];
+        for seq in 0..256u64 {
+            hit[spray_rail(3, 11, seq, 4) as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "spray left a rail cold: {hit:?}");
+        // and different flows decorrelate
+        let same = (0..256u64)
+            .filter(|&s| spray_rail(3, 11, s, 4) == spray_rail(4, 11, s, 4))
+            .count();
+        assert!(same < 160, "flows correlate: {same}/256 collisions");
+    }
+}

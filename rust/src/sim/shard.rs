@@ -30,6 +30,23 @@
 //! zero-delay completion→emission chain could cross shards faster than
 //! any fabric lookahead — those workloads keep the exact serial loop.
 //!
+//! # Multi-rail routing
+//!
+//! Rails are resolved by the coordinator at staging time — the same
+//! injection-time contract as the serial loop, hashing the identical
+//! `(src, dst, per-source emission index)` key, so
+//! [`RailSelector::HashSpray`](super::rails::RailSelector) picks the
+//! same rail for every transaction on both backends (pinned by
+//! `prop_sharded_matches_serial`'s policy sweep).
+//! [`RailSelector::Adaptive`](super::rails::RailSelector) needs the live
+//! link-server backlog, which lives on the workers — remote queue state
+//! is not visible across shard boundaries — so the sharded backend
+//! degrades it to the deterministic spray. The conservative lookahead is
+//! unchanged by multipath: `plan` minimizes `fixed + switch` over
+//! *every* link direction whose receiver is a gateway node, a superset
+//! of the union of boundary-crossing rails, so every rail a transaction
+//! can ride is already inside the bound.
+//!
 //! # Equivalence
 //!
 //! Within a shard events dispatch in `(time, seq)` order and every
@@ -41,8 +58,9 @@
 //! injection event per transaction on top of the hop events).
 
 use super::engine::{Engine, EventKind};
-use super::memsim::{LinkConsts, MemSim};
-use super::qos::{Admission, ClassedServer};
+use super::memsim::{path_key, rail_hops, rail_step, LinkConsts, MemSim};
+use super::qos::{Admission, ClassedServer, LinkTier};
+use super::rails::spray_rail;
 use super::traffic::{Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::{Fabric, NodeKind};
 use std::collections::HashMap;
@@ -75,6 +93,9 @@ struct ShardTx {
     source: u32,
     class: TrafficClass,
     token: u64,
+    /// Equal-cost rail this transaction rides, resolved once by the
+    /// coordinator at staging time (see the multi-rail note below).
+    rail: u16,
 }
 
 /// A mailbox message: "transaction `tx` arrives at hop `hop` at `at`".
@@ -177,7 +198,10 @@ pub(crate) fn plan(fabric: &Fabric, consts: &[LinkConsts], max_shards: usize) ->
     // fixed + switch over directions whose receiving node is a gateway
     // (usually a switch; a non-switch gateway contributes switch_ns = 0,
     // which keeps the bound conservative on graphs that route through
-    // endpoints)
+    // endpoints). Multipath-safe by construction: this minimizes over
+    // EVERY gateway-receiving link direction — a superset of the union
+    // of boundary-crossing rails — so whichever equal-cost rail a
+    // transaction rides, its handoffs are stamped >= T0 + L
     let mut lookahead = f64::INFINITY;
     for (li, l) in topo.links.iter().enumerate() {
         for (side, node) in [(0usize, l.a), (1usize, l.b)] {
@@ -229,10 +253,19 @@ pub(crate) fn run(
 ) -> StreamReport {
     let fabric: &Fabric = sim.fabric;
     let consts: &[LinkConsts] = &sim.consts;
+    let tiers: &[LinkTier] = &sim.tiers;
+    let spread = sim.spread;
     let granularity = sim.granularity;
     let k = plan.nshards;
     let nsrc = sources.len();
     let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
+    // multi-rail resolution at the coordinator: spray for any spreading
+    // policy (Adaptive degrades to HashSpray here — worker-owned queue
+    // state is not visible across shard boundaries)
+    let rail_fan = fabric.router().max_rails();
+    let spraying = rail_fan > 1
+        && spread != [false; LinkTier::COUNT]
+        && sim.routing_policy().resolution().spreads();
 
     let mut report = StreamReport::new();
     let mut merged_servers = sim.servers.clone();
@@ -255,7 +288,9 @@ pub(crate) fn run(
             cmd_txs.push(cmd_tx);
             res_rxs.push(res_rx);
             let servers0 = sim.servers.clone();
-            scope.spawn(move || worker(shard, cmd_rx, res_tx, servers0, fabric, consts, link_shard, granularity));
+            scope.spawn(move || {
+                worker(shard, cmd_rx, res_tx, servers0, fabric, consts, tiers, spread, link_shard, granularity)
+            });
         }
 
         // coordinator state: one staged transaction per source plus the
@@ -263,6 +298,9 @@ pub(crate) fn run(
         let mut staged: Vec<Option<(f64, SourcedTx)>> = (0..nsrc).map(|_| None).collect();
         let mut src_done = vec![false; nsrc];
         let mut last_issue = vec![0.0f64; nsrc];
+        // per-source emission index: the spray hash's tx_seq, identical
+        // to the serial loop's injection order
+        let mut emitted = vec![0u64; nsrc];
         let mut inboxes: Vec<Vec<Handoff>> = (0..k).map(|_| Vec::new()).collect();
         let mut next_events = vec![f64::INFINITY; k];
 
@@ -308,10 +346,16 @@ pub(crate) fn run(
                     let (at, stx) = staged[i].take().expect("staged above");
                     last_issue[i] = at;
                     let tx = stx.tx;
+                    let seq = emitted[i];
+                    emitted[i] += 1;
+                    let rail =
+                        if spraying { spray_rail(tx.src, tx.dst, seq, rail_fan) } else { 0 };
+                    // the first hop is rail-dependent: different rails may
+                    // enter the fabric through links owned by different shards
                     let target = if tx.src == tx.dst {
                         plan.node_shard[tx.src] as usize
                     } else {
-                        match fabric.router().next_hop(tx.src, tx.dst) {
+                        match rail_step(fabric, tiers, spread, tx.src, tx.dst, rail) {
                             Some((_, link)) => plan.link_shard[link] as usize,
                             None => panic!(
                                 "no path {} ({}) -> {} ({}) for traffic source {} (class {})",
@@ -336,6 +380,7 @@ pub(crate) fn run(
                             source: i as u32,
                             class: classes[i],
                             token: stx.token,
+                            rail,
                         },
                     });
                     staged_here += 1;
@@ -432,6 +477,8 @@ fn worker(
     mut servers: Vec<[ClassedServer; 2]>,
     fabric: &Fabric,
     consts: &[LinkConsts],
+    tiers: &[LinkTier],
+    spread: [bool; LinkTier::COUNT],
     link_shard: &[u32],
     granularity: f64,
 ) {
@@ -449,7 +496,8 @@ fn worker(
                 let mut out: Vec<(u32, Handoff)> = Vec::new();
                 let mut completions: Vec<Completion> = Vec::new();
                 for h in inbox {
-                    let (path_start, path_len) = intern_local(fabric, &mut arena, &mut cache, &h.tx);
+                    let (path_start, path_len) =
+                        intern_local(fabric, tiers, spread, &mut arena, &mut cache, &h.tx);
                     let entry = LocalTx { tx: h.tx, path_start, path_len };
                     let id = match free.pop() {
                         Some(s) => {
@@ -598,37 +646,34 @@ fn forward(
 }
 
 /// Shard-local twin of `MemSim::intern_path` (same arena packing:
-/// `(link << 1) | direction`, direction decided once at build time).
+/// `(link << 1) | direction`, direction decided once at build time; same
+/// `(src, dst, rail)` cache key, same rail-aware walk — a path crossing
+/// three shards is interned by each of the three).
 fn intern_local(
     fabric: &Fabric,
+    tiers: &[LinkTier],
+    spread: [bool; LinkTier::COUNT],
     arena: &mut Vec<u32>,
     cache: &mut HashMap<u64, (u32, u32)>,
     tx: &ShardTx,
 ) -> (u32, u32) {
-    let key = ((tx.src as u64) << 32) | tx.dst as u64;
+    let key = path_key(tx.src as usize, tx.dst as usize, tx.rail);
     if let Some(&r) = cache.get(&key) {
         return r;
     }
-    let router = fabric.router();
     let start = arena.len() as u32;
-    let mut cur = tx.src as usize;
-    let dst = tx.dst as usize;
-    while cur != dst {
-        let Some((nxt, link)) = router.next_hop(cur, dst) else {
-            // the coordinator verified the first hop, so this means the
-            // PBR table lost the route mid-path — name the flow anyway
-            panic!(
-                "no path {} ({}) -> {} ({}) for traffic source {}",
-                tx.src,
-                fabric.topo.node(tx.src as usize).label,
-                tx.dst,
-                fabric.topo.node(tx.dst as usize).label,
-                tx.source
-            );
-        };
-        let dir = if fabric.topo.link(link).a == cur { 0u32 } else { 1u32 };
-        arena.push(((link as u32) << 1) | dir);
-        cur = nxt;
+    if !rail_hops(fabric, tiers, spread, tx.src as usize, tx.dst as usize, tx.rail, arena) {
+        // the coordinator verified the first hop, so this means the
+        // PBR table lost the route mid-path — name the flow anyway
+        panic!(
+            "no path {} ({}) -> {} ({}) on rail {} for traffic source {}",
+            tx.src,
+            fabric.topo.node(tx.src as usize).label,
+            tx.dst,
+            fabric.topo.node(tx.dst as usize).label,
+            tx.rail,
+            tx.source
+        );
     }
     let entry = (start, arena.len() as u32 - start);
     cache.insert(key, entry);
@@ -711,6 +756,38 @@ mod tests {
         assert!(close(serial.latency.min(), sharded.total.latency.min()));
         // per-link utilization state merged back from the workers
         assert!(sharded_sim.peak_utilization(sharded.total.makespan_ns) > 0.0);
+    }
+
+    #[test]
+    fn sharded_spray_matches_serial_spray() {
+        // the multi-rail twin of sharded_matches_serial_on_clos: rails
+        // resolved at the coordinator hash identically to the serial
+        // loop's injection-time resolution
+        use crate::sim::{RailSelector, RoutingPolicy};
+        let (mut f, eps) = clos(6, 2, 6);
+        f.enable_multipath(4);
+        let txs = workload(&eps, 600, 0xB1A5);
+        let policy = RoutingPolicy::uniform(RailSelector::HashSpray);
+
+        let mut serial_sim = MemSim::with_routing(&f, policy);
+        let serial = serial_sim.run(txs.clone());
+
+        let mut sharded_sim = MemSim::with_routing(&f, policy);
+        let mut src = BatchSource::new(txs, crate::sim::TrafficClass::Generic);
+        let sharded = {
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sharded_sim.run_streamed_sharded_with(&mut sources, 3)
+        };
+        assert_eq!(serial.completed, sharded.total.completed);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(serial.makespan_ns, sharded.total.makespan_ns));
+        assert!(close(serial.latency.mean(), sharded.total.latency.mean()));
+        assert!(close(serial.latency.max(), sharded.total.latency.max()));
+        // the spray actually spread: more ridden paths than pairs
+        assert!(
+            serial_sim.used_path_count() > serial_sim.used_pair_count(),
+            "spray rode no extra rails"
+        );
     }
 
     #[test]

@@ -10,9 +10,48 @@ use scalepool::fabric::{Fabric, LinkKind, NodeKind, Topology};
 use scalepool::memory::pool::{MemoryPool, Placement};
 use scalepool::memory::tier::{waterfall_placement, TierSpec};
 use scalepool::memory::Tier;
-use scalepool::sim::{BatchSource, MemSim, TrafficClass, TrafficSource, Transaction};
+use scalepool::sim::{
+    BatchSource, MemSim, RailSelector, RoutingPolicy, TrafficClass, TrafficSource, Transaction,
+};
 use scalepool::util::prop::{forall_res, Config};
 use scalepool::util::Rng;
+
+/// One of the four Figure-4a fabric shapes, randomized — the generator
+/// family shared by the routing-parity and multipath properties.
+fn random_fabric_shape(rng: &mut Rng) -> Topology {
+    match rng.below(4) {
+        0 => Topology::single_hop(2 + rng.below(30) as usize, LinkKind::NvLink5, "r"),
+        1 => {
+            let (mut t, leaves) = Topology::clos(
+                2 + rng.below(6) as usize,
+                1 + rng.below(4) as usize,
+                LinkKind::CxlCoherent,
+                "c",
+            );
+            let eps = 1 + rng.below(3) as usize;
+            for (i, &l) in leaves.iter().enumerate() {
+                for e in 0..eps {
+                    let n = t.add_node(NodeKind::Accelerator, format!("ep{i}-{e}"));
+                    t.connect(n, l, LinkKind::CxlCoherent);
+                }
+            }
+            t
+        }
+        2 => Topology::torus3d(
+            (1 + rng.below(4) as usize, 1 + rng.below(4) as usize, 1 + rng.below(4) as usize),
+            LinkKind::CxlCoherent,
+            "t",
+        )
+        .0,
+        _ => Topology::dragonfly(
+            2 + rng.below(4) as usize,
+            2 + rng.below(4) as usize,
+            LinkKind::CxlCoherent,
+            "d",
+        )
+        .0,
+    }
+}
 
 /// Routing: on random connected topologies, every pair has a path, the
 /// path is loop-free, and PBR walks reproduce it.
@@ -177,6 +216,207 @@ fn prop_flat_parallel_routing_matches_serial_reference() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multipath routing: on randomized Clos/torus/dragonfly/single-hop
+/// topologies, every rail in every multipath cell is a genuine
+/// equal-cost shortest alternative — each raw cell candidate sits one
+/// hop closer to `dst` over a link that really connects the two nodes,
+/// and every fixed-rail table walk reaches `dst` in exactly
+/// `hops(src, dst)` hops with no repeated node.
+#[test]
+fn prop_multipath_rails_are_shortest_and_loop_free() {
+    use scalepool::fabric::Router;
+    forall_res(
+        Config { cases: 36, seed: 0x4A115 },
+        |rng: &mut Rng| {
+            let t = random_fabric_shape(rng);
+            let k = 2 + rng.below(3) as usize; // 2..=4 rails
+            let n = t.nodes.len();
+            let probes: Vec<(usize, usize)> = (0..16)
+                .map(|_| (rng.below(n as u64) as usize, rng.below(n as u64) as usize))
+                .collect();
+            (t, k, probes)
+        },
+        |(t, k, probes)| {
+            let r = Router::build_multipath(t, *k);
+            let n = t.nodes.len();
+            let pairs: Vec<(usize, usize)> = if n <= 20 {
+                (0..n).flat_map(|a| (0..n).map(move |b| (a, b))).collect()
+            } else {
+                probes.clone()
+            };
+            for (a, b) in pairs {
+                let h = r.hops(a, b).ok_or(format!("no route {a}->{b} on a connected shape"))?;
+                // every fixed-rail walk is shortest and loop-free
+                for rail in 0..*k {
+                    let p = r.path_rail(a, b, rail).ok_or("rail walk lost the route")?;
+                    if p.hops() != h {
+                        return Err(format!("rail {rail} of {a}->{b}: {} hops != {h}", p.hops()));
+                    }
+                    let mut seen = std::collections::HashSet::new();
+                    for &node in &p.nodes {
+                        if !seen.insert(node) {
+                            return Err(format!("rail {rail} of {a}->{b} repeats node {node}"));
+                        }
+                    }
+                }
+                // every raw cell candidate is one hop closer over a real link
+                if a != b {
+                    for rail in 0..r.rails(a, b) {
+                        let (nxt, link) = r.rail_entry(a, b, rail).unwrap();
+                        let hn = r.hops(nxt, b).ok_or("candidate lost the route")?;
+                        if hn + 1 != h {
+                            return Err(format!(
+                                "rail {rail} of cell ({a}, dst {b}) is not equal-cost: {hn}+1 != {h}"
+                            ));
+                        }
+                        let l = t.link(link);
+                        if !((l.a == a && l.b == nxt) || (l.b == a && l.a == nxt)) {
+                            return Err(format!("rail {rail} link {link} does not connect {a}<->{nxt}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multipath parity: rail 0 of a multipath table — entries, paths and
+/// the hot-path link walk — is byte-identical to the single-path router
+/// and the seed `SerialRouter` oracle on the same randomized shapes.
+#[test]
+fn prop_deterministic_rail_matches_single_path() {
+    use scalepool::fabric::routing::reference::SerialRouter;
+    use scalepool::fabric::Router;
+    forall_res(
+        Config { cases: 36, seed: 0xD137 },
+        |rng: &mut Rng| {
+            let t = random_fabric_shape(rng);
+            let k = 2 + rng.below(3) as usize;
+            let n = t.nodes.len();
+            let probes: Vec<(usize, usize)> = (0..20)
+                .map(|_| (rng.below(n as u64) as usize, rng.below(n as u64) as usize))
+                .collect();
+            (t, k, probes)
+        },
+        |(t, k, probes)| {
+            let multi = Router::build_multipath(t, *k);
+            let single = Router::build(t);
+            let oracle = SerialRouter::build(t);
+            let n = t.nodes.len();
+            let pairs: Vec<(usize, usize)> = if n <= 20 {
+                (0..n).flat_map(|a| (0..n).map(move |b| (a, b))).collect()
+            } else {
+                probes.clone()
+            };
+            for (a, b) in pairs {
+                let want = oracle.path(a, b);
+                if single.path(a, b) != want {
+                    return Err(format!("single path {a}->{b} != serial reference"));
+                }
+                if multi.path(a, b) != want {
+                    return Err(format!("multipath rail-0 path {a}->{b} != serial reference"));
+                }
+                if multi.path_rail(a, b, 0) != want {
+                    return Err(format!("path_rail(0) {a}->{b} != serial reference"));
+                }
+                if multi.next_hop(a, b) != single.next_hop(a, b) {
+                    return Err(format!("rail-0 next_hop {a}->{b} diverged"));
+                }
+                let mut links = Vec::new();
+                let reachable = multi.links_into(a, b, &mut links);
+                match &want {
+                    Some(p) => {
+                        if !reachable || links != p.links {
+                            return Err(format!("multipath links_into {a}->{b} != reference"));
+                        }
+                    }
+                    None => {
+                        if reachable {
+                            return Err(format!("links_into {a}->{b} found a phantom path"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// End-to-end deterministic-routing parity (the PR's acceptance bar):
+/// the same randomized workload on a multipath-enabled fabric under the
+/// all-deterministic policy produces *bit-identical* per-run results —
+/// completions, makespan, latency moments — to the single-path fabric.
+#[test]
+fn prop_deterministic_routing_parity() {
+    forall_res(
+        Config { cases: 14, seed: 0xDE7A11 },
+        |rng: &mut Rng| {
+            let (mut t, leaves) = Topology::clos(
+                2 + rng.below(5) as usize,
+                1 + rng.below(4) as usize,
+                LinkKind::CxlCoherent,
+                "c",
+            );
+            let per = 1 + rng.below(4) as usize;
+            let mut eps = Vec::new();
+            for (i, &l) in leaves.iter().enumerate() {
+                for e in 0..per {
+                    let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                    t.connect(n, l, LinkKind::CxlCoherent);
+                    eps.push(n);
+                }
+            }
+            let ntx = 80 + rng.below(300) as usize;
+            (t, eps, ntx, rng.below(1 << 30))
+        },
+        |(t, eps, ntx, seed)| {
+            if eps.len() < 2 {
+                return Ok(());
+            }
+            let mut rng = Rng::new(*seed);
+            let mut at = 0.0;
+            let txs: Vec<Transaction> = (0..*ntx)
+                .map(|_| {
+                    at += rng.exp(1.0 / 30.0);
+                    let s = rng.below(eps.len() as u64) as usize;
+                    let mut d = rng.below(eps.len() as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % eps.len();
+                    }
+                    Transaction {
+                        src: eps[s],
+                        dst: eps[d],
+                        at,
+                        bytes: 64.0 + rng.f64() * 4096.0,
+                        device_ns: rng.f64() * 150.0,
+                    }
+                })
+                .collect();
+            let single_fabric = Fabric::new(t.clone());
+            let mut single_sim = MemSim::new(&single_fabric);
+            let a = single_sim.run(txs.clone());
+            let mut multi_fabric = Fabric::new(t.clone());
+            multi_fabric.enable_multipath(4);
+            let mut multi_sim = MemSim::new(&multi_fabric); // default: deterministic
+            let b = multi_sim.run(txs.clone());
+            if a.completed != b.completed {
+                return Err(format!("completed {} vs {}", a.completed, b.completed));
+            }
+            if a.makespan_ns != b.makespan_ns {
+                return Err(format!("makespan {} vs {} (must be exact)", a.makespan_ns, b.makespan_ns));
+            }
+            if a.latency.mean() != b.latency.mean() || a.latency.max() != b.latency.max() {
+                return Err("latency stats not bit-identical".into());
+            }
+            if a.events != b.events {
+                return Err(format!("event counts {} vs {}", a.events, b.events));
             }
             Ok(())
         },
@@ -703,7 +943,10 @@ impl TrafficSource for RecordingSource {
 /// randomized open-loop workloads, the sharded conservative backend must
 /// reproduce the serial streamed backend exactly — per-class completed
 /// counts, byte totals, the sorted per-transaction latency multiset, and
-/// the makespan.
+/// the makespan — swept over the rail-selector policies it supports:
+/// the original single-path run, then a 4-rail multipath table under
+/// Deterministic and HashSpray (the coordinator-side rail resolution
+/// must hash identically to the serial loop's injection-time one).
 #[test]
 fn prop_sharded_matches_serial() {
     forall_res(
@@ -752,7 +995,7 @@ fn prop_sharded_matches_serial() {
             if eps.len() < 2 {
                 return Ok(());
             }
-            let f = Fabric::new(t.clone());
+            let mut f = Fabric::new(t.clone());
             let mut rng = Rng::new(*seed);
             let mut at = 0.0;
             let txs: Vec<Transaction> = (0..*ntx)
@@ -777,66 +1020,85 @@ fn prop_sharded_matches_serial() {
 
             let issue_of = |token: u64| txs[token as usize].at;
 
-            let mut serial_src = RecordingSource::new(txs.clone());
-            let mut serial_sim = MemSim::new(&f);
-            let serial = {
-                let mut sources: [&mut dyn TrafficSource; 1] = [&mut serial_src];
-                serial_sim.run_streamed(&mut sources)
-            };
-
-            let mut sharded_src = RecordingSource::new(txs.clone());
-            let mut sharded_sim = MemSim::new(&f);
-            let sharded = {
-                let mut sources: [&mut dyn TrafficSource; 1] = [&mut sharded_src];
-                sharded_sim.run_streamed_sharded_with(&mut sources, *shards)
-            };
-
-            if serial.total.completed != sharded.total.completed
-                || serial.total.completed != *ntx as u64
-            {
-                return Err(format!(
-                    "completed {} vs {}",
-                    serial.total.completed, sharded.total.completed
-                ));
-            }
-            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
-            for c in scalepool::sim::TrafficClass::ALL {
-                let (a, b) = (serial.class(c), sharded.class(c));
-                if a.completed != b.completed || !close(a.bytes, b.bytes) {
-                    return Err(format!("class {} diverged", c.name()));
+            // policy sweep: single-path deterministic (the original pin),
+            // then the 4-rail table under Deterministic and HashSpray
+            for (multipath, selector) in [
+                (false, RailSelector::Deterministic),
+                (true, RailSelector::Deterministic),
+                (true, RailSelector::HashSpray),
+            ] {
+                if multipath && f.max_rails() == 1 {
+                    f.enable_multipath(4);
                 }
-            }
-            if !close(serial.total.makespan_ns, sharded.total.makespan_ns) {
-                return Err(format!(
-                    "makespan {} vs {}",
-                    serial.total.makespan_ns, sharded.total.makespan_ns
-                ));
-            }
-            if serial.total.events != sharded.total.events {
-                return Err(format!(
-                    "event counts {} vs {}",
-                    serial.total.events, sharded.total.events
-                ));
-            }
-            // sorted per-transaction latency multisets must match
-            let lat = |recs: &[(u64, f64)]| -> Vec<f64> {
-                let mut v: Vec<f64> = recs.iter().map(|&(tok, now)| now - issue_of(tok)).collect();
-                v.sort_by(|a, b| a.total_cmp(b));
-                v
-            };
-            let (ls, lp) = (lat(&serial_src.completions), lat(&sharded_src.completions));
-            if ls.len() != lp.len() {
-                return Err("latency multiset sizes differ".into());
-            }
-            for (i, (a, b)) in ls.iter().zip(&lp).enumerate() {
-                if !close(*a, *b) {
-                    return Err(format!("latency multiset diverged at {i}: {a} vs {b}"));
+                let policy = RoutingPolicy::uniform(selector);
+                let ctx = format!(
+                    "[{} {}]",
+                    if multipath { "multipath" } else { "single-path" },
+                    selector.name()
+                );
+
+                let mut serial_src = RecordingSource::new(txs.clone());
+                let mut serial_sim = MemSim::with_routing(&f, policy);
+                let serial = {
+                    let mut sources: [&mut dyn TrafficSource; 1] = [&mut serial_src];
+                    serial_sim.run_streamed(&mut sources)
+                };
+
+                let mut sharded_src = RecordingSource::new(txs.clone());
+                let mut sharded_sim = MemSim::with_routing(&f, policy);
+                let sharded = {
+                    let mut sources: [&mut dyn TrafficSource; 1] = [&mut sharded_src];
+                    sharded_sim.run_streamed_sharded_with(&mut sources, *shards)
+                };
+
+                if serial.total.completed != sharded.total.completed
+                    || serial.total.completed != *ntx as u64
+                {
+                    return Err(format!(
+                        "{ctx} completed {} vs {}",
+                        serial.total.completed, sharded.total.completed
+                    ));
                 }
-            }
-            if !close(serial.total.latency.mean(), sharded.total.latency.mean())
-                || !close(serial.total.latency.max(), sharded.total.latency.max())
-            {
-                return Err("aggregate latency stats diverged".into());
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+                for c in scalepool::sim::TrafficClass::ALL {
+                    let (a, b) = (serial.class(c), sharded.class(c));
+                    if a.completed != b.completed || !close(a.bytes, b.bytes) {
+                        return Err(format!("{ctx} class {} diverged", c.name()));
+                    }
+                }
+                if !close(serial.total.makespan_ns, sharded.total.makespan_ns) {
+                    return Err(format!(
+                        "{ctx} makespan {} vs {}",
+                        serial.total.makespan_ns, sharded.total.makespan_ns
+                    ));
+                }
+                if serial.total.events != sharded.total.events {
+                    return Err(format!(
+                        "{ctx} event counts {} vs {}",
+                        serial.total.events, sharded.total.events
+                    ));
+                }
+                // sorted per-transaction latency multisets must match
+                let lat = |recs: &[(u64, f64)]| -> Vec<f64> {
+                    let mut v: Vec<f64> =
+                        recs.iter().map(|&(tok, now)| now - issue_of(tok)).collect();
+                    v.sort_by(|a, b| a.total_cmp(b));
+                    v
+                };
+                let (ls, lp) = (lat(&serial_src.completions), lat(&sharded_src.completions));
+                if ls.len() != lp.len() {
+                    return Err(format!("{ctx} latency multiset sizes differ"));
+                }
+                for (i, (a, b)) in ls.iter().zip(&lp).enumerate() {
+                    if !close(*a, *b) {
+                        return Err(format!("{ctx} latency multiset diverged at {i}: {a} vs {b}"));
+                    }
+                }
+                if !close(serial.total.latency.mean(), sharded.total.latency.mean())
+                    || !close(serial.total.latency.max(), sharded.total.latency.max())
+                {
+                    return Err(format!("{ctx} aggregate latency stats diverged"));
+                }
             }
             Ok(())
         },

@@ -29,16 +29,20 @@ fig_results=$(
     cargo bench --manifest-path "$MANIFEST" --bench fig7_tiered_memory | tee /dev/stderr | grep '^RESULT' || true
 )
 
-echo "== interference trajectory (bounded mixed + qos policy sweep) =="
+echo "== interference trajectory (bounded mixed + qos + rails policy sweeps) =="
 # rack-scale bounded runs: the perf trajectory records cross-class
-# interference (RESULT mixed ...) and what each arbitration policy does
-# to it (RESULT qos_<policy> ...), not just events/sec
+# interference (RESULT mixed ...), what each arbitration policy does to
+# it (RESULT qos_<policy> ...), and what multi-rail routing does to it
+# (RESULT rails_<policy> ..., incl. path diversity and link-utilization
+# imbalance), not just events/sec
 MIXED_ARGS="--racks 6 --accels 8 --mem-nodes 4 --coh-ops 1200 --tier-ops 300 --t1-bytes 262144 --bytes 4194304 --repeats 1"
 interference_results=$(
     # shellcheck disable=SC2086
     cargo run --release --manifest-path "$MANIFEST" -- mixed $MIXED_ARGS | tee /dev/stderr | grep '^RESULT' || true
     # shellcheck disable=SC2086
     cargo run --release --manifest-path "$MANIFEST" -- qos $MIXED_ARGS | tee /dev/stderr | grep '^RESULT qos_' || true
+    # shellcheck disable=SC2086
+    cargo run --release --manifest-path "$MANIFEST" -- rails $MIXED_ARGS | tee /dev/stderr | grep '^RESULT rails_' || true
 )
 fig_results="$fig_results
 $interference_results"
