@@ -13,6 +13,9 @@
 //! * sharded multi-core streamed simulation (`run_streamed_sharded`) vs
 //!   the serial streamed backend, on scales whose topology yields more
 //!   than one domain (the single-crossbar rack does not shard);
+//! * sweep-point throughput: copy-on-write forking (`MemSim::fork` off a
+//!   warmed, frozen master) vs rebuilding the fabric + simulator for
+//!   every point — the sweep-harness pattern the experiments use;
 //! * raw engine schedule/dispatch throughput, calendar vs seed-style heap.
 //!
 //! Writes machine-readable results to `BENCH_simscale.json` (override the
@@ -20,7 +23,8 @@
 //! `SCALEPOOL_BENCH_SCALES=rack,row` and `SCALEPOOL_BENCH_ACCESSES=N` —
 //! the CI smoke uses both). Acceptance bars: >= 5x router build and
 //! >= 3x events/sec at pod scale (ISSUE 1); sharded >= 2x the serial
-//! streamed backend at pod scale on >= 4 cores (ISSUE 3).
+//! streamed backend at pod scale on >= 4 cores (ISSUE 3); forked sweep
+//! points >= 3x rebuild-per-point at row scale and beyond (ISSUE 6).
 //!
 //! Run with: `cargo bench --bench simscale` (see `scripts/bench.sh`).
 
@@ -382,6 +386,59 @@ fn main() {
             None
         };
 
+        // --- sweep harness: copy-on-write fork vs rebuild (ISSUE 6) -----
+        // marginal per-point throughput: the rebuild path pays a fresh
+        // topology clone + Fabric (router build) + MemSim per point; the
+        // forked path builds + warms + freezes a master outside the timed
+        // window (the one-time setup every sweep amortizes) and pays only
+        // fork + run per point
+        let sweep_points = 8usize;
+        let point_txs: Vec<Transaction> =
+            txs.iter().take(1_000.min(txs.len())).cloned().collect();
+        let mut rebuild_pool: Vec<Vec<Transaction>> =
+            (0..sweep_points).map(|_| point_txs.clone()).collect();
+        let rebuild_wall = {
+            let t0 = Instant::now();
+            for _ in 0..sweep_points {
+                let f = Fabric::new(topo.clone());
+                let mut sim = MemSim::new(&f);
+                let rep = sim.run(rebuild_pool.pop().expect("one stream per point"));
+                assert_eq!(rep.completed, point_txs.len() as u64);
+                black_box(rep.events);
+            }
+            t0.elapsed().as_nanos() as f64
+        };
+        let mut master = MemSim::new(&fabric);
+        {
+            let rep = master.run(point_txs.clone()); // warm the path arena
+            assert_eq!(rep.completed, point_txs.len() as u64);
+            master.freeze_paths();
+        }
+        let mut forked_pool: Vec<Vec<Transaction>> =
+            (0..sweep_points).map(|_| point_txs.clone()).collect();
+        let forked_wall = {
+            let t0 = Instant::now();
+            for _ in 0..sweep_points {
+                let mut sim = master.fork();
+                let rep = sim.run(forked_pool.pop().expect("one stream per point"));
+                assert_eq!(rep.completed, point_txs.len() as u64);
+                black_box(rep.events);
+            }
+            t0.elapsed().as_nanos() as f64
+        };
+        let pps_rebuild = sweep_points as f64 / (rebuild_wall / 1e9);
+        let pps_forked = sweep_points as f64 / (forked_wall / 1e9);
+        let fork_speedup = pps_forked / pps_rebuild;
+        // the bar only makes sense where the router build dominates a
+        // point; the 73-node rack's build is timer-noise-sized
+        if s.leaves >= 16 {
+            assert!(
+                fork_speedup >= 3.0,
+                "{}: forked sweep points {fork_speedup:.2}x rebuild-per-point, below the 3x bar",
+                s.name
+            );
+        }
+
         let sharded_str = match sharded {
             Some((shards, eps_sh, sp)) => {
                 format!(" | sharded x{shards} {:>6.2} M ev/s ({sp:>5.2}x serial)", eps_sh / 1e6)
@@ -389,7 +446,7 @@ fn main() {
             None => String::new(),
         };
         println!(
-            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x; K=4 {:>9.2} ms, {:>4.2}x of single) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x){sharded_str}",
+            "{:<5} {:>5} nodes ({cross_hops} cross-fabric hops) | router build {:>9.2} ms (seed {:>9.2} ms, {:>5.2}x; K=4 {:>9.2} ms, {:>4.2}x of single) | memsim {:>6.2} M ev/s (seed {:>6.2}, {:>5.2}x) | sweep {:>7.1} pts/s forked vs {:>7.1} rebuilt ({:>5.2}x){sharded_str}",
             s.name,
             n_nodes,
             build_new / 1e6,
@@ -400,6 +457,9 @@ fn main() {
             eps_new / 1e6,
             eps_seed / 1e6,
             sim_speedup,
+            pps_forked,
+            pps_rebuild,
+            fork_speedup,
         );
 
         let mut row = vec![
@@ -416,6 +476,11 @@ fn main() {
             ("memsim_events_per_sec", Json::num(eps_new)),
             ("memsim_events_per_sec_seed", Json::num(eps_seed)),
             ("memsim_speedup", Json::num(sim_speedup)),
+            ("sweep_points", Json::num(sweep_points as f64)),
+            ("sweep_point_transactions", Json::num(point_txs.len() as f64)),
+            ("sweep_points_per_sec", Json::num(pps_forked)),
+            ("sweep_points_per_sec_rebuild", Json::num(pps_rebuild)),
+            ("sweep_fork_speedup", Json::num(fork_speedup)),
         ];
         if let Some((shards, eps_sh, sp)) = sharded {
             row.push(("sharded_shards", Json::num(shards as f64)));
@@ -498,6 +563,9 @@ fn rows_summary(out: &Json) -> String {
             );
             if let Some(sp) = p.get("sharded_speedup").and_then(Json::as_f64) {
                 s.push_str(&format!(" pod_sharded_speedup={sp:.2}"));
+            }
+            if let Some(sp) = p.get("sweep_fork_speedup").and_then(Json::as_f64) {
+                s.push_str(&format!(" pod_sweep_fork_speedup={sp:.2}"));
             }
             s
         }

@@ -260,10 +260,10 @@ impl TrafficSource for CoherenceTraffic {
                     _ => (self.cfg.ctrl_bytes, 0.0),
                 };
                 self.fabric_inflight += 1;
-                return Pull::Tx(SourcedTx {
-                    tx: Transaction { src, dst, at: r.at.max(now), bytes, device_ns },
-                    token: r.slot as u64,
-                });
+                return Pull::Tx(SourcedTx::new(
+                    Transaction { src, dst, at: r.at.max(now), bytes, device_ns },
+                    r.slot as u64,
+                ));
             }
             if self.issued >= self.cfg.ops {
                 return if self.fabric_inflight > 0 { Pull::Blocked } else { Pull::Done };

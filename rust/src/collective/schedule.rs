@@ -237,16 +237,16 @@ impl TrafficSource for EventDrivenCollective {
             mem.outstanding = true;
             mem.emitted += 1;
             self.inflight += 1;
-            return Pull::Tx(SourcedTx {
-                tx: Transaction {
+            return Pull::Tx(SourcedTx::new(
+                Transaction {
                     src: mem.src,
                     dst: mem.dst,
                     at: now,
                     bytes: chunk,
                     device_ns: self.device_ns,
                 },
-                token: m as u64,
-            });
+                m as u64,
+            ));
         }
         debug_assert!(self.inflight > 0, "collective stalled with no ready member");
         Pull::Blocked

@@ -178,7 +178,7 @@ impl TrafficSource for TieringTraffic {
                 self.migrated_bytes += tx.bytes;
                 // the issue time rides in the token so on_complete can
                 // measure transfer latency without a side table
-                return Pull::Tx(SourcedTx { token: tx.at.to_bits(), tx });
+                return Pull::Tx(SourcedTx::new(tx, at.max(now).to_bits()));
             }
             if self.issued >= self.cfg.ops {
                 return if self.fabric_inflight > 0 { Pull::Blocked } else { Pull::Done };

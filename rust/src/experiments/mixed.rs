@@ -198,25 +198,69 @@ pub(crate) fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> Eve
     }
 }
 
-pub(crate) fn run_once(sys: &ScalePoolSystem, sources: &mut [&mut dyn TrafficSource]) -> (StreamReport, f64) {
-    run_once_with(sys, sources, None)
-}
-
-/// As [`run_once`], with a QoS configuration applied through the
-/// coordinator before the run (the `qos` experiment's policy points;
-/// `None` keeps the class-blind FCFS default — the parity baseline).
-pub(crate) fn run_once_with(
-    sys: &ScalePoolSystem,
+/// Run one point of a sweep on a fork of the prebuilt master simulator,
+/// optionally applying a QoS configuration to the fork first (`None`
+/// keeps the class-blind FCFS default — the parity baseline). The fork
+/// shares the master's routing table and interned path arena and gets
+/// fresh mutable state, so a sweep builds the fabric once and pays only
+/// the per-point run — see [`MemSim::fork`].
+pub(crate) fn run_fork(
+    master: &MemSim,
     sources: &mut [&mut dyn TrafficSource],
     qos: Option<&crate::coordinator::QosManager>,
 ) -> (StreamReport, f64) {
-    let mut sim = MemSim::new(&sys.fabric);
+    let mut sim = master.fork();
     if let Some(mgr) = qos {
         mgr.apply(&mut sim);
     }
     let rep = sim.run_streamed(sources);
     let util = sim.peak_utilization(rep.total.makespan_ns);
     (rep, util)
+}
+
+/// `(mean, p50, p99)` of `class` transactions in `rep`.
+pub(crate) fn class_triple(class: TrafficClass, rep: &StreamReport) -> (f64, f64, f64) {
+    let c = rep.class(class);
+    (c.mean_ns(), c.p50_ns(), c.p99_ns())
+}
+
+/// The three per-class solo baselines of the mixed scenario, in class
+/// order `[Coherence, Tiering, Collective]` — shared by the `qos` and
+/// `rails` sweeps (solos are policy-invariant: a class alone on the
+/// fabric serves FIFO within its one virtual channel under every
+/// arbitration policy, and rides rail 0 under the master's default
+/// deterministic routing).
+///
+/// The first solo runs on `master` itself to warm its path arena; the
+/// arena is then frozen ([`MemSim::freeze_paths`]) so the remaining
+/// solos — and every policy point the caller forks afterwards — start
+/// with the full interned-path cache.
+pub(crate) fn solo_baselines(
+    sys: &ScalePoolSystem,
+    mcfg: &MixedConfig,
+    horizon: f64,
+    master: &mut MemSim,
+) -> [(f64, f64, f64); 3] {
+    let coh = {
+        let mut src = coherence_source(sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let rep = master.run_streamed(&mut s);
+        class_triple(TrafficClass::Coherence, &rep)
+    };
+    master.freeze_paths();
+    let tier = {
+        let mut src = tiering_source(sys, mcfg, horizon);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_fork(master, &mut s, None);
+        class_triple(TrafficClass::Tiering, &rep)
+    };
+    let col = {
+        let mut src = collective_source(sys, mcfg);
+        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let (rep, _) = run_fork(master, &mut s, None);
+        class_triple(TrafficClass::Collective, &rep)
+    };
+    [coh, tier, col]
 }
 
 pub(crate) fn mean_or_zero(w: &Welford) -> f64 {
@@ -228,31 +272,38 @@ pub(crate) fn mean_or_zero(w: &Welford) -> f64 {
 }
 
 /// Run the experiment: three solo runs (per-class baselines) plus the
-/// mixed run, all on identically-built fabrics and identically-seeded
-/// workloads.
+/// mixed run, all forks of one build-once simulator over
+/// identically-seeded workloads.
 pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
     let sys = build_system(cfg);
     let horizon = horizon_estimate(&sys, cfg);
+    // build-once master: the first solo runs on it directly to warm the
+    // path arena, freeze_paths publishes the arena behind the shared
+    // Arc, and every later run is a cheap fork (fresh servers, shared
+    // routing + paths — parity pinned by
+    // prop_forked_sim_matches_fresh_build)
+    let mut master = MemSim::new(&sys.fabric);
 
     // --- solo baselines --------------------------------------------------
     let (coh_solo, coh_solo_op) = {
         let mut src = coherence_source(&sys, cfg, horizon);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut solo);
+        let rep = master.run_streamed(&mut solo);
         let c = rep.class(TrafficClass::Coherence);
         ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.op_latency()))
     };
+    master.freeze_paths();
     let (tier_solo, tier_solo_mig) = {
         let mut src = tiering_source(&sys, cfg, horizon);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut solo);
+        let (rep, _) = run_fork(&master, &mut solo, None);
         let c = rep.class(TrafficClass::Tiering);
         ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.migration_latency()))
     };
     let (col_solo, col_solo_rep) = {
         let mut src = collective_source(&sys, cfg);
         let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut solo);
+        let (rep, _) = run_fork(&master, &mut solo, None);
         let c = rep.class(TrafficClass::Collective);
         ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.repeat_latency()))
     };
@@ -263,7 +314,7 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
     let mut col = collective_source(&sys, cfg);
     let (mixed, util) = {
         let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
-        run_once(&sys, &mut sources)
+        run_fork(&master, &mut sources, None)
     };
 
     let row = |class: TrafficClass,

@@ -12,11 +12,11 @@
 //! applied through the coordinator's [`QosManager`].
 
 use super::mixed::{
-    build_system, coherence_source, collective_source, horizon_estimate, run_once, run_once_with,
+    build_system, coherence_source, collective_source, horizon_estimate, run_fork, solo_baselines,
     tiering_source, MixedConfig,
 };
 use crate::coordinator::QosManager;
-use crate::sim::{ArbPolicy, LinkTier, StreamReport, TrafficClass, TrafficSource};
+use crate::sim::{ArbPolicy, LinkTier, MemSim, StreamReport, TrafficClass, TrafficSource};
 
 /// One policy point of the sweep.
 #[derive(Clone, Debug)]
@@ -202,29 +202,10 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
     let horizon = horizon_estimate(&sys, mcfg);
 
     // --- solo baselines (shared by every policy point) -------------------
-    // (mean, p50, p99) of a class's transaction latency in a report
-    fn solo(class: TrafficClass, rep: &StreamReport) -> (f64, f64, f64) {
-        let c = rep.class(class);
-        (c.mean_ns(), c.p50_ns(), c.p99_ns())
-    }
-    let coh_solo = {
-        let mut src = coherence_source(&sys, mcfg, horizon);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Coherence, &rep)
-    };
-    let tier_solo = {
-        let mut src = tiering_source(&sys, mcfg, horizon);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Tiering, &rep)
-    };
-    let col_solo = {
-        let mut src = collective_source(&sys, mcfg);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Collective, &rep)
-    };
+    // build once, fork per point: the master carries the routing table
+    // and warmed path arena every policy run below shares
+    let mut master = MemSim::new(&sys.fabric);
+    let [coh_solo, tier_solo, col_solo] = solo_baselines(&sys, mcfg, horizon, &mut master);
 
     // --- one mixed run per policy ----------------------------------------
     let mut policies = Vec::new();
@@ -235,7 +216,7 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
         let mut col = collective_source(&sys, mcfg);
         let (rep, util) = {
             let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
-            run_once_with(&sys, &mut sources, Some(&mgr))
+            run_fork(&master, &mut sources, Some(&mgr))
         };
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
             let c = rep.class(class);

@@ -15,11 +15,10 @@
 //! reproduces `mixed` string-exactly (asserted by the CI smoke).
 
 use super::mixed::{
-    build_system, coherence_source, collective_source, horizon_estimate, run_once, tiering_source,
-    MixedConfig,
+    build_system, coherence_source, collective_source, horizon_estimate, solo_baselines,
+    tiering_source, MixedConfig,
 };
 use super::qos::QosClassRow;
-use crate::cluster::ScalePoolSystem;
 use crate::coordinator::RoutingManager;
 use crate::sim::{MemSim, RailSelector, StreamReport, TrafficClass, TrafficSource};
 
@@ -147,14 +146,18 @@ fn util_imbalance(rep: &StreamReport, total_dirs: usize) -> f64 {
     peak / (total / total_dirs as f64)
 }
 
-/// One mixed run under a routing policy, returning the report plus the
-/// simulator-side steering telemetry (paths/pairs actually ridden).
+/// One mixed run under a routing policy on a fork of the master,
+/// returning the report plus the simulator-side steering telemetry
+/// (paths/pairs actually ridden). A spreading selector changes the
+/// fork's spread mask, so its path state resets and it interns its own
+/// rail-aware paths; the deterministic point keeps the master's warmed
+/// arena (see [`MemSim::set_routing`]).
 fn run_point(
-    sys: &ScalePoolSystem,
+    master: &MemSim,
     sources: &mut [&mut dyn TrafficSource],
     mgr: &RoutingManager,
 ) -> (StreamReport, f64, usize, usize) {
-    let mut sim = MemSim::new(&sys.fabric);
+    let mut sim = master.fork();
     mgr.apply(&mut sim);
     let rep = sim.run_streamed(sources);
     let util = sim.peak_utilization(rep.total.makespan_ns);
@@ -173,28 +176,10 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
     let horizon = horizon_estimate(&sys, mcfg);
 
     // --- solo baselines (shared by every policy point) -------------------
-    fn solo(class: TrafficClass, rep: &StreamReport) -> (f64, f64, f64) {
-        let c = rep.class(class);
-        (c.mean_ns(), c.p50_ns(), c.p99_ns())
-    }
-    let coh_solo = {
-        let mut src = coherence_source(&sys, mcfg, horizon);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Coherence, &rep)
-    };
-    let tier_solo = {
-        let mut src = tiering_source(&sys, mcfg, horizon);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Tiering, &rep)
-    };
-    let col_solo = {
-        let mut src = collective_source(&sys, mcfg);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
-        let (rep, _) = run_once(&sys, &mut s);
-        solo(TrafficClass::Collective, &rep)
-    };
+    // build once (after enable_multipath, so forks share the K-rail
+    // table), fork per point
+    let mut master = MemSim::new(&sys.fabric);
+    let [coh_solo, tier_solo, col_solo] = solo_baselines(&sys, mcfg, horizon, &mut master);
 
     // --- one mixed run per policy ----------------------------------------
     let mut policies = Vec::new();
@@ -205,7 +190,7 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
         let mut col = collective_source(&sys, mcfg);
         let (rep, util, paths, pairs) = {
             let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
-            run_point(&sys, &mut sources, &mgr)
+            run_point(&master, &mut sources, &mgr)
         };
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
             let c = rep.class(class);

@@ -5,12 +5,20 @@
 use super::link::LinkParams;
 use super::routing::{Path, Router};
 use super::topology::{NodeId, Topology};
+use std::sync::Arc;
 
 /// A topology with prebuilt routing and background-load knobs.
+///
+/// The routing table sits behind an [`Arc`]: cloning a `Fabric` (the
+/// sweep-harness build-once pattern, see
+/// [`MemSim::fork`](crate::sim::MemSim::fork)) shares the O(nodes²) PBR
+/// table instead of copying it. The table is immutable between rebuilds —
+/// [`Fabric::rebuild`] / [`Fabric::enable_multipath`] swap in a freshly
+/// built `Arc`, never mutate through one.
 #[derive(Clone, Debug)]
 pub struct Fabric {
     pub topo: Topology,
-    router: Router,
+    router: Arc<Router>,
     /// Background utilization per link (0..1) used by the analytic queuing
     /// adder; the event simulator models real contention instead.
     load: Vec<f64>,
@@ -41,7 +49,7 @@ impl Fabric {
     /// all hardware threads into a flat PBR table (see
     /// [`crate::fabric::routing`] §Perf).
     pub fn new(topo: Topology) -> Fabric {
-        let router = Router::build(&topo);
+        let router = Arc::new(Router::build(&topo));
         let load = vec![0.0; topo.links.len()];
         Fabric { topo, router, load }
     }
@@ -49,7 +57,8 @@ impl Fabric {
     /// Rebuild routing after topology edits (preserves the current rail
     /// count, so a multipath-enabled fabric stays multipath).
     pub fn rebuild(&mut self) {
-        self.router = Router::build_multipath(&self.topo, self.router.max_rails().max(1));
+        self.router =
+            Arc::new(Router::build_multipath(&self.topo, self.router.max_rails().max(1)));
         self.load.resize(self.topo.links.len(), 0.0);
     }
 
@@ -60,7 +69,7 @@ impl Fabric {
     /// the event simulator's rail selectors spread over the extra
     /// candidates. `k = 1` restores the classic single-path router.
     pub fn enable_multipath(&mut self, k: usize) {
-        self.router = Router::build_multipath(&self.topo, k);
+        self.router = Arc::new(Router::build_multipath(&self.topo, k));
     }
 
     /// Rails per PBR cell of the current routing table (1 = single-path).

@@ -21,6 +21,22 @@
 //! the Arrive hot path to: one inflight load, one arena load, one
 //! `LinkConsts` load, one server admit, one schedule.
 //!
+//! # Copy-on-write sweep forking (§Perf)
+//!
+//! Sweeps (fig7 working-set points, the `qos`/`rails` policy grids) run
+//! many points over one immutable system. [`MemSim::fork`] produces a
+//! cheap per-point clone: the link constants, structural tiers and the
+//! interned path arena are shared behind `Arc`s, while the mutable state
+//! — link servers, realized-diversity telemetry, and any paths interned
+//! after the fork (a private *overlay*) — is fresh per point. The
+//! canonical sweep shape is build once, run the first point on the
+//! master (lazily interning every path the workload rides), then
+//! [`MemSim::freeze_paths`] and fork each remaining point: forks replay
+//! the warmed arena without a single route walk or hash insert, and
+//! never rebuild the O(links) constant tables. A fork is observably
+//! identical to a freshly built simulator with the same configuration
+//! (pinned by `prop_forked_sim_matches_fresh_build`).
+//!
 //! # Multi-rail routing
 //!
 //! On a multipath-enabled fabric ([`Fabric::enable_multipath`]) the
@@ -45,13 +61,14 @@
 //! (a [`BatchSource`] wrapping the pre-sorted `Vec<Transaction>`).
 
 use super::engine::{Engine, EventKind};
-use super::qos::{self, Admission, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
+use super::qos::{self, Admission, BatchAdmit, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 use super::rails::{spray_rail, RailSelector, RoutingPolicy};
 use super::traffic::{BatchSource, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
 use crate::util::stats::Welford;
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 /// One memory transaction (request; the response is modeled by doubling
 /// the one-way latency contribution of symmetric protocol phases).
@@ -121,14 +138,28 @@ enum SrcState {
     Done,
 }
 
+/// The frozen, fork-shared half of the path-interning state: interned
+/// hop slices plus the `(src, dst, rail)` -> slice index. Forks hold it
+/// behind an `Arc` and intern any path *not* already frozen into a
+/// private overlay, so sweep points share one warmed arena without
+/// copying it and without synchronization on the hot path.
+#[derive(Debug, Default)]
+struct PathArena {
+    /// interned hops, `(link << 1) | dir`, contiguous per path
+    hops: Vec<u32>,
+    /// [`path_key`]`(src, dst, rail)` -> (start, len) into `hops`.
+    /// Rails that walk to an identical hop sequence alias one slice.
+    cache: HashMap<u64, (u32, u32)>,
+}
+
 /// The simulator.
 pub struct MemSim<'f> {
     pub(crate) fabric: &'f Fabric,
     /// one class-aware server per (link, direction)
     pub(crate) servers: Vec<[ClassedServer; 2]>,
-    pub(crate) consts: Vec<LinkConsts>,
+    pub(crate) consts: Arc<Vec<LinkConsts>>,
     /// Structural tier of each link (QoS policy granularity).
-    pub(crate) tiers: Vec<LinkTier>,
+    pub(crate) tiers: Arc<Vec<LinkTier>>,
     /// The active per-tier arbitration configuration.
     qos: QosPolicy,
     /// The active per-tier rail-selection configuration.
@@ -139,11 +170,15 @@ pub struct MemSim<'f> {
     /// Serialization-time quantum of the fastest link: the calendar
     /// engine's bucket-width floor (§Perf).
     pub(crate) granularity: f64,
-    /// interned hops, `(link << 1) | dir`, contiguous per path
-    hop_arena: Vec<u32>,
-    /// [`path_key`]`(src, dst, rail)` -> (start, len) into `hop_arena`.
-    /// Rails that walk to an identical hop sequence alias one slice.
-    path_cache: HashMap<u64, (u32, u32)>,
+    /// The frozen fork-shared arena ([`MemSim::freeze_paths`]). Slice
+    /// starts below `paths.hops.len()` index into it; starts at or above
+    /// index into this instance's overlay. A path never spans both.
+    paths: Arc<PathArena>,
+    /// Hops interned after the last freeze, private to this instance.
+    overlay_hops: Vec<u32>,
+    /// Cache entries interned after the last freeze. Keys are disjoint
+    /// from the frozen cache (the frozen cache is probed first).
+    overlay_cache: HashMap<u64, (u32, u32)>,
     /// Distinct arena slices transactions actually rode (serial streamed
     /// backend) — the realized-diversity numerator, as opposed to the
     /// cache keys, which also count adaptive *probes* and aliased rails.
@@ -268,17 +303,76 @@ impl<'f> MemSim<'f> {
         MemSim {
             fabric,
             servers,
-            consts,
-            tiers,
+            consts: Arc::new(consts),
+            tiers: Arc::new(tiers),
             qos: QosPolicy::fcfs(),
             routing: RoutingPolicy::deterministic(),
             spread: [false; LinkTier::COUNT],
             granularity,
-            hop_arena: Vec::new(),
-            path_cache: HashMap::new(),
+            paths: Arc::new(PathArena::default()),
+            overlay_hops: Vec::new(),
+            overlay_cache: HashMap::new(),
             used_paths: HashSet::new(),
             used_pairs: HashSet::new(),
         }
+    }
+
+    /// Fork a cheap per-sweep-point clone: the link constants, tiers and
+    /// the frozen path arena are shared behind `Arc`s; the servers (built
+    /// fresh under the active QoS policy), telemetry, and path overlay
+    /// start empty. The fork is observably identical to
+    /// `MemSim::new(fabric)` followed by the same `set_qos`/`set_routing`
+    /// calls — pinned by `prop_forked_sim_matches_fresh_build` — but
+    /// skips the O(links) constant-table rebuild and (after
+    /// [`MemSim::freeze_paths`]) every route walk the master already paid.
+    ///
+    /// The parent's *unfrozen* overlay is not carried over (forks re-walk
+    /// those paths lazily); call [`MemSim::freeze_paths`] on the master
+    /// first to share a warmed arena.
+    pub fn fork(&self) -> MemSim<'f> {
+        let servers = self
+            .tiers
+            .iter()
+            .map(|t| {
+                let p = self.qos.tier(*t);
+                [ClassedServer::new(p), ClassedServer::new(p)]
+            })
+            .collect();
+        MemSim {
+            fabric: self.fabric,
+            servers,
+            consts: Arc::clone(&self.consts),
+            tiers: Arc::clone(&self.tiers),
+            qos: self.qos,
+            routing: self.routing,
+            spread: self.spread,
+            granularity: self.granularity,
+            paths: Arc::clone(&self.paths),
+            overlay_hops: Vec::new(),
+            overlay_cache: HashMap::new(),
+            used_paths: HashSet::new(),
+            used_pairs: HashSet::new(),
+        }
+    }
+
+    /// Merge this instance's path overlay into the fork-shared arena, so
+    /// subsequent [`MemSim::fork`]s replay every path interned so far
+    /// without re-walking the router. Global slice indices are unchanged
+    /// (overlay entries were already numbered past the frozen base), so
+    /// freezing mid-run is safe. A no-op when nothing new was interned.
+    pub fn freeze_paths(&mut self) {
+        if self.overlay_cache.is_empty() && self.overlay_hops.is_empty() {
+            return;
+        }
+        let mut merged = PathArena {
+            hops: Vec::with_capacity(self.paths.hops.len() + self.overlay_hops.len()),
+            cache: HashMap::with_capacity(self.paths.cache.len() + self.overlay_cache.len()),
+        };
+        merged.hops.extend_from_slice(&self.paths.hops);
+        merged.hops.append(&mut self.overlay_hops);
+        merged.cache.extend(self.paths.cache.iter().map(|(&k, &v)| (k, v)));
+        merged.cache.extend(self.overlay_cache.drain());
+        self.paths = Arc::new(merged);
     }
 
     /// Build a simulator with a QoS configuration already applied.
@@ -297,17 +391,24 @@ impl<'f> MemSim<'f> {
         sim
     }
 
-    /// Apply a per-tier rail-selection configuration. Discards the path
-    /// cache (interned paths depend on the spread mask). Call before
-    /// running traffic; the coordinator's
+    /// Apply a per-tier rail-selection configuration. Interned paths
+    /// depend only on the *spread mask*, not the selector (a rail-aware
+    /// walk consults which tiers spread, never how the rail index was
+    /// chosen), so the path cache survives a policy change with an equal
+    /// mask (e.g. HashSpray -> Adaptive everywhere) and is discarded
+    /// otherwise. Call before running traffic; the coordinator's
     /// [`RoutingManager`](crate::coordinator::RoutingManager) is the
     /// usual owner. A no-op in effect on a single-path fabric
     /// (`max_rails() == 1`), where every cell holds one candidate.
     pub fn set_routing(&mut self, policy: RoutingPolicy) {
+        let keep_paths = policy.spread_mask() == self.spread;
         self.routing = policy;
         self.spread = policy.spread_mask();
-        self.hop_arena.clear();
-        self.path_cache.clear();
+        if !keep_paths {
+            self.paths = Arc::new(PathArena::default());
+            self.overlay_hops.clear();
+            self.overlay_cache.clear();
+        }
         self.used_paths.clear();
         self.used_pairs.clear();
     }
@@ -367,9 +468,38 @@ impl<'f> MemSim<'f> {
         out
     }
 
+    /// The hop slice behind a `(start, len)` cache entry: starts below
+    /// the frozen base index into the shared arena, the rest into this
+    /// instance's private overlay (a path never spans both).
+    #[inline]
+    fn path_hops(&self, start: u32, len: u32) -> &[u32] {
+        let base = self.paths.hops.len() as u32;
+        if start >= base {
+            let s = (start - base) as usize;
+            &self.overlay_hops[s..s + len as usize]
+        } else {
+            &self.paths.hops[start as usize..(start + len) as usize]
+        }
+    }
+
+    /// Hop `i` of the path starting at global index `start` (§Perf: the
+    /// per-event load — one branch, one indexed read).
+    #[inline]
+    fn hop_at(&self, start: u32, i: usize) -> u32 {
+        let base = self.paths.hops.len() as u32;
+        if start >= base {
+            self.overlay_hops[(start - base) as usize + i]
+        } else {
+            self.paths.hops[start as usize + i]
+        }
+    }
+
     /// Intern the routed path src -> dst along `rail`: returns
     /// (start, len) into the hop arena, building (with per-hop direction
-    /// bits) on first use. None when unreachable.
+    /// bits) on first use. None when unreachable. Frozen (fork-shared)
+    /// entries are probed first; misses build into the private overlay,
+    /// numbered past the frozen base so [`MemSim::freeze_paths`] can
+    /// merge without renumbering.
     ///
     /// Distinct rail indices frequently collapse onto the same hop
     /// sequence (a cell with fewer than `rail + 1` candidates wraps, and
@@ -378,15 +508,21 @@ impl<'f> MemSim<'f> {
     /// the slice identity `(start, len)` means "same physical path".
     fn intern_path(&mut self, src: NodeId, dst: NodeId, rail: u16) -> Option<(u32, u32)> {
         let key = path_key(src, dst, rail);
-        if let Some(&r) = self.path_cache.get(&key) {
+        if let Some(&r) = self.paths.cache.get(&key) {
             return Some(r);
         }
-        let start = self.hop_arena.len() as u32;
-        if !rail_hops(self.fabric, &self.tiers, self.spread, src, dst, rail, &mut self.hop_arena) {
-            self.hop_arena.truncate(start as usize);
+        if let Some(&r) = self.overlay_cache.get(&key) {
+            return Some(r);
+        }
+        let base = self.paths.hops.len() as u32;
+        let local_start = self.overlay_hops.len();
+        if !rail_hops(self.fabric, &self.tiers, self.spread, src, dst, rail, &mut self.overlay_hops)
+        {
+            self.overlay_hops.truncate(local_start);
             return None;
         }
-        let mut entry = (start, self.hop_arena.len() as u32 - start);
+        let mut entry =
+            (base + local_start as u32, (self.overlay_hops.len() - local_start) as u32);
         // scan EVERY cached rail of the pair (rails intern in hash order,
         // not ascending, so an alias may sit at a higher index): identical
         // content can therefore never be stored twice
@@ -395,24 +531,30 @@ impl<'f> MemSim<'f> {
             if r == rail {
                 continue;
             }
-            if let Some(&(s0, l0)) = self.path_cache.get(&path_key(src, dst, r)) {
-                if l0 == entry.1
-                    && self.hop_arena[s0 as usize..(s0 + l0) as usize]
-                        == self.hop_arena[entry.0 as usize..(entry.0 + entry.1) as usize]
-                {
-                    self.hop_arena.truncate(start as usize);
+            let alias_key = path_key(src, dst, r);
+            let alias = self
+                .paths
+                .cache
+                .get(&alias_key)
+                .or_else(|| self.overlay_cache.get(&alias_key))
+                .copied();
+            if let Some((s0, l0)) = alias {
+                if l0 == entry.1 && *self.path_hops(s0, l0) == self.overlay_hops[local_start..] {
+                    self.overlay_hops.truncate(local_start);
                     entry = (s0, l0);
                     break;
                 }
             }
         }
-        self.path_cache.insert(key, entry);
+        self.overlay_cache.insert(key, entry);
         Some(entry)
     }
 
     /// Resolve which rail a transaction rides, per the active
     /// [`RoutingPolicy`] — called once per transaction at injection time.
-    /// `seq` is the per-source emission index (the spray hash input).
+    /// `seq` is the spray hash input: the per-source emission index, or
+    /// the source-supplied flow id when one was attached
+    /// ([`SourcedTx::flow`] — per-flow rail affinity).
     fn resolve_rail(&mut self, src: NodeId, dst: NodeId, seq: u64, now: f64) -> u16 {
         let k = self.fabric.router().max_rails();
         if k <= 1 || self.spread == [false; LinkTier::COUNT] {
@@ -432,7 +574,7 @@ impl<'f> MemSim<'f> {
                         break;
                     };
                     let mut score = 0.0;
-                    for h in &self.hop_arena[start as usize..(start + len) as usize] {
+                    for h in self.path_hops(start, len) {
                         let link = (h >> 1) as usize;
                         let dir = (h & 1) as usize;
                         score += self.servers[link][dir].pending_ns(now);
@@ -448,14 +590,18 @@ impl<'f> MemSim<'f> {
     }
 
     /// Number of distinct (src, dst, rail) cache entries interned so far
-    /// (cache telemetry: includes adaptive probes and aliased rails).
+    /// — frozen arena plus this instance's overlay (cache telemetry:
+    /// includes adaptive probes and aliased rails). The two key sets are
+    /// disjoint (the frozen cache is probed first), so the sum counts
+    /// each triple once.
     pub fn interned_paths(&self) -> usize {
-        self.path_cache.len()
+        self.paths.cache.len() + self.overlay_cache.len()
     }
 
     /// Number of distinct (src, dst) pairs among the interned entries.
     pub fn interned_pairs(&self) -> usize {
-        let pairs: HashSet<u64> = self.path_cache.keys().map(|&k| k >> 4).collect();
+        let pairs: HashSet<u64> =
+            self.paths.cache.keys().chain(self.overlay_cache.keys()).map(|&k| k >> 4).collect();
         pairs.len()
     }
 
@@ -491,7 +637,7 @@ impl<'f> MemSim<'f> {
             engine.after(fl.device_ns, EventKind::Complete { id });
             return;
         }
-        let h = self.hop_arena[fl.path_start as usize + hop];
+        let h = self.hop_at(fl.path_start, hop);
         let link_idx = (h >> 1) as usize;
         let dir = (h & 1) as usize;
         let c = &self.consts[link_idx];
@@ -588,7 +734,21 @@ impl<'f> MemSim<'f> {
             pump(i, 0.0, sources, &mut staged, &mut state, &inflight_count, &mut engine);
         }
 
-        while let Some((now, ev)) = engine.next() {
+        // epoch-batching scratch (§Perf): consecutive same-timestamp
+        // arrivals on one link direction admit as one batch, amortizing
+        // the per-admission ClassedServer bookkeeping. An event popped
+        // while probing for batch members that does not extend the batch
+        // is carried into the next loop iteration unprocessed, so the
+        // dispatch order (and therefore every result) is unchanged.
+        let mut carried: Option<(f64, EventKind)> = None;
+        let mut batch_ids: Vec<(usize, usize)> = Vec::new();
+        let mut batch_items: Vec<BatchAdmit> = Vec::new();
+        let mut admissions: Vec<Admission> = Vec::new();
+
+        loop {
+            let Some((now, ev)) = carried.take().or_else(|| engine.next()) else {
+                break;
+            };
             match ev {
                 // injection: the staged transaction of source `tag`
                 // reaches its issue time
@@ -598,7 +758,10 @@ impl<'f> MemSim<'f> {
                     let tx = stx.tx;
                     let seq = emitted[i];
                     emitted[i] += 1;
-                    let rail = self.resolve_rail(tx.src, tx.dst, seq, now);
+                    // per-flow rail affinity: a source-supplied flow id
+                    // replaces the emission index as the spray key, so an
+                    // ordered stream rides one rail (ROADMAP item 4)
+                    let rail = self.resolve_rail(tx.src, tx.dst, stx.flow.unwrap_or(seq), now);
                     let (path_start, path_len) = match self.intern_path(tx.src, tx.dst, rail) {
                         Some(r) => r,
                         None => panic!(
@@ -642,7 +805,72 @@ impl<'f> MemSim<'f> {
                     pump(i, now, sources, &mut staged, &mut state, &inflight_count, &mut engine);
                 }
                 EventKind::Arrive { id, hop } => {
-                    self.step(&mut engine, &slots[id], now, id, hop);
+                    let fl = &slots[id];
+                    if hop >= fl.path_len as usize {
+                        // destination arrival: no link admission to batch
+                        self.step(&mut engine, fl, now, id, hop);
+                        continue;
+                    }
+                    // epoch batching: coalesce the consecutive arrivals at
+                    // exactly `now` that land on the same link direction
+                    let h = self.hop_at(fl.path_start, hop);
+                    batch_ids.clear();
+                    batch_ids.push((id, hop));
+                    while engine.peek_time() == Some(now) {
+                        let (t2, ev2) = engine.next().expect("peeked event");
+                        if let EventKind::Arrive { id: id2, hop: hop2 } = ev2 {
+                            let fl2 = &slots[id2];
+                            if hop2 < fl2.path_len as usize
+                                && self.hop_at(fl2.path_start, hop2) == h
+                            {
+                                batch_ids.push((id2, hop2));
+                                continue;
+                            }
+                        }
+                        // not a batch member: defer to the next iteration
+                        // (it was popped after the batch, so flushing the
+                        // batch first preserves the serial handler order)
+                        carried = Some((t2, ev2));
+                        break;
+                    }
+                    let link_idx = (h >> 1) as usize;
+                    let dir = (h & 1) as usize;
+                    let c = self.consts[link_idx];
+                    let sw = c.switch_ns[1 - dir];
+                    batch_items.clear();
+                    for &(bid, bhop) in &batch_ids {
+                        let fl = &slots[bid];
+                        batch_items.push(BatchAdmit {
+                            service: c.flit.wire_bytes(fl.bytes) * c.inv_rate,
+                            bytes: fl.bytes,
+                            class: fl.class,
+                            id: bid as u32,
+                            hop: bhop as u32,
+                        });
+                    }
+                    admissions.clear();
+                    self.servers[link_idx][dir].admit_batch(now, &batch_items, &mut admissions);
+                    for (adm, &(bid, bhop)) in admissions.iter().zip(&batch_ids) {
+                        match *adm {
+                            Admission::Release { done } => {
+                                engine.schedule(
+                                    done + c.fixed_ns + sw,
+                                    EventKind::Arrive { id: bid, hop: bhop + 1 },
+                                );
+                            }
+                            Admission::Start { done } => {
+                                engine.schedule(
+                                    done,
+                                    EventKind::Depart { link: link_idx as u32, dir: dir as u8 },
+                                );
+                                engine.schedule(
+                                    done + c.fixed_ns + sw,
+                                    EventKind::Arrive { id: bid, hop: bhop + 1 },
+                                );
+                            }
+                            Admission::Queued => {}
+                        }
+                    }
                 }
                 // a queued-mode link freed: arbitrate the next VC and put
                 // the started transaction back on its path
@@ -923,6 +1151,65 @@ mod tests {
     }
 
     #[test]
+    fn flow_keyed_spray_pins_a_flow_to_one_rail() {
+        // HashSpray hashes the flow id when the source stamps one
+        // (SourcedTx::with_flow): every transaction of that flow rides
+        // the same rail. The identical stream without a flow id sprays
+        // per transaction and must ride both spine planes.
+        struct FlowSource {
+            src: NodeId,
+            dst: NodeId,
+            emitted: u64,
+            total: u64,
+            flow: Option<u64>,
+        }
+        impl TrafficSource for FlowSource {
+            fn class(&self) -> TrafficClass {
+                TrafficClass::Generic
+            }
+            fn pull(&mut self, _now: f64) -> Pull {
+                if self.emitted == self.total {
+                    return Pull::Done;
+                }
+                let i = self.emitted;
+                self.emitted += 1;
+                let tx = Transaction {
+                    src: self.src,
+                    dst: self.dst,
+                    at: i as f64 * 5.0,
+                    bytes: 4096.0,
+                    device_ns: 0.0,
+                };
+                let stx = SourcedTx::new(tx, i);
+                Pull::Tx(match self.flow {
+                    Some(fl) => stx.with_flow(fl),
+                    None => stx,
+                })
+            }
+            fn on_complete(&mut self, _token: u64, _now: f64) {}
+            fn open_loop(&self) -> bool {
+                true
+            }
+        }
+        let (mut f, eps) = spined(2, 2);
+        f.enable_multipath(4);
+        let run = |flow: Option<u64>| {
+            let mut sim =
+                MemSim::with_routing(&f, RoutingPolicy::uniform(RailSelector::HashSpray));
+            let mut s = FlowSource { src: eps[0], dst: eps[1], emitted: 0, total: 64, flow };
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut s];
+            let rep = sim.run_streamed(&mut sources);
+            assert_eq!(rep.total.completed, 64);
+            sim.used_path_count()
+        };
+        assert_eq!(run(None), 2, "per-transaction spray rides both spine planes");
+        // a flow id pins the whole stream to whichever rail it hashes to
+        for fl in [0u64, 1, 7, 1234] {
+            assert_eq!(run(Some(fl)), 1, "flow {fl} must ride exactly one rail");
+        }
+    }
+
+    #[test]
     fn adaptive_probes_do_not_inflate_realized_diversity() {
         // adaptive interns every candidate to score it, but an idle
         // fabric always rides rail 0 — realized diversity must be 1.0
@@ -1011,10 +1298,10 @@ mod tests {
             }
             self.remaining -= 1;
             self.waiting = true;
-            Pull::Tx(SourcedTx {
-                tx: Transaction { src: self.src, dst: self.dst, at: now, bytes: 4096.0, device_ns: 0.0 },
-                token: self.remaining as u64,
-            })
+            Pull::Tx(SourcedTx::new(
+                Transaction { src: self.src, dst: self.dst, at: now, bytes: 4096.0, device_ns: 0.0 },
+                self.remaining as u64,
+            ))
         }
         fn on_complete(&mut self, _token: u64, now: f64) {
             self.waiting = false;

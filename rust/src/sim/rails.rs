@@ -11,8 +11,13 @@
 //!   to the pre-multipath router, and the parity baseline pinned by
 //!   `tests/prop_invariants.rs::prop_deterministic_routing_parity`.
 //! * [`RailSelector::HashSpray`] — ECMP-style: a deterministic
-//!   [splitmix64 hash](spray_rail) over `(src, dst, tx_seq)` picks the
-//!   rail at injection time, so a pair's transactions spread across all
+//!   [splitmix64 hash](spray_rail) over `(src, dst, key)` picks the
+//!   rail at injection time, where `key` is the source's per-emission
+//!   sequence number — or, when the source stamped a flow id on the
+//!   transaction ([`SourcedTx::with_flow`](super::traffic::SourcedTx::with_flow)),
+//!   that flow id, pinning every transaction of the flow to one rail
+//!   (order-sensitive streams keep a single path; distinct flows still
+//!   spread). Either way a pair's transactions spread across the
 //!   equal-cost paths while any single run stays exactly reproducible
 //!   (and identical between the serial and sharded backends).
 //! * [`RailSelector::Adaptive`] — congestion-adaptive: at injection the
@@ -41,7 +46,10 @@ use crate::fabric::NodeId;
 pub enum RailSelector {
     /// Rail 0 everywhere — byte-identical to the single-path router.
     Deterministic,
-    /// ECMP: deterministic per-transaction hash over `(src, dst, tx_seq)`.
+    /// ECMP: deterministic hash over `(src, dst, key)` where `key` is
+    /// the transaction's flow id when the source stamped one
+    /// ([`SourcedTx::with_flow`](super::traffic::SourcedTx::with_flow))
+    /// and its per-source emission index otherwise.
     HashSpray,
     /// Least-loaded candidate by live link-server backlog; falls back to
     /// [`RailSelector::HashSpray`] where that state is not visible

@@ -34,7 +34,10 @@
 //!
 //! Rails are resolved by the coordinator at staging time — the same
 //! injection-time contract as the serial loop, hashing the identical
-//! `(src, dst, per-source emission index)` key, so
+//! `(src, dst, flow-or-emission-index)` key (a source that stamps
+//! [`SourcedTx::with_flow`](super::traffic::SourcedTx::with_flow)
+//! pins the whole flow to one rail; otherwise the per-source emission
+//! index sprays per transaction), so
 //! [`RailSelector::HashSpray`](super::rails::RailSelector) picks the
 //! same rail for every transaction on both backends (pinned by
 //! `prop_sharded_matches_serial`'s policy sweep).
@@ -348,8 +351,11 @@ pub(crate) fn run(
                     let tx = stx.tx;
                     let seq = emitted[i];
                     emitted[i] += 1;
+                    // flow-keyed when the source stamped one: same hash
+                    // input as the serial injection path
+                    let spray_key = stx.flow.unwrap_or(seq);
                     let rail =
-                        if spraying { spray_rail(tx.src, tx.dst, seq, rail_fan) } else { 0 };
+                        if spraying { spray_rail(tx.src, tx.dst, spray_key, rail_fan) } else { 0 };
                     // the first hop is rail-dependent: different rails may
                     // enter the fabric through links owned by different shards
                     let target = if tx.src == tx.dst {
@@ -811,10 +817,10 @@ mod tests {
                 }
                 self.left -= 1;
                 self.waiting = true;
-                Pull::Tx(super::super::traffic::SourcedTx {
-                    tx: Transaction { src: self.src, dst: self.dst, at: now, bytes: 512.0, device_ns: 0.0 },
-                    token: 0,
-                })
+                Pull::Tx(super::super::traffic::SourcedTx::new(
+                    Transaction { src: self.src, dst: self.dst, at: now, bytes: 512.0, device_ns: 0.0 },
+                    0,
+                ))
             }
             fn on_complete(&mut self, _token: u64, _now: f64) {
                 self.waiting = false;

@@ -76,6 +76,26 @@ impl TrafficClass {
 pub struct SourcedTx {
     pub tx: Transaction,
     pub token: u64,
+    /// Optional flow id for per-flow rail affinity: when set, HashSpray
+    /// rail selection hashes this instead of the per-source emission
+    /// index, so every transaction of one flow rides the same rail (an
+    /// ordered stream spreads across rails per *flow*, never per
+    /// transaction — no intra-flow reordering). `None` (the default)
+    /// keeps per-transaction spray.
+    pub flow: Option<u64>,
+}
+
+impl SourcedTx {
+    /// A transaction with no flow affinity (per-transaction spray).
+    pub fn new(tx: Transaction, token: u64) -> SourcedTx {
+        SourcedTx { tx, token, flow: None }
+    }
+
+    /// Attach a flow id (see [`SourcedTx::flow`]).
+    pub fn with_flow(mut self, flow: u64) -> SourcedTx {
+        self.flow = Some(flow);
+        self
+    }
 }
 
 /// What a source hands back when pulled.
@@ -235,7 +255,7 @@ impl TrafficSource for BatchSource {
 
     fn pull(&mut self, _now: f64) -> Pull {
         match self.txs.pop_front() {
-            Some(tx) => Pull::Tx(SourcedTx { tx, token: 0 }),
+            Some(tx) => Pull::Tx(SourcedTx::new(tx, 0)),
             None => Pull::Done,
         }
     }

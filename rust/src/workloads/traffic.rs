@@ -79,10 +79,10 @@ impl TrafficSource for SyntheticTraffic {
             }
             d
         };
-        Pull::Tx(SourcedTx {
-            tx: Transaction { src, dst, at: self.at, bytes: self.bytes, device_ns: self.device_ns },
-            token: 0,
-        })
+        Pull::Tx(SourcedTx::new(
+            Transaction { src, dst, at: self.at, bytes: self.bytes, device_ns: self.device_ns },
+            0,
+        ))
     }
 
     fn open_loop(&self) -> bool {
@@ -181,10 +181,10 @@ impl TrafficSource for WorkingSetTraffic {
             let d = self.remote[(line % self.remote.len() as u64) as usize];
             (d, c.remote_device_ns + c.far_extra_ns)
         };
-        Pull::Tx(SourcedTx {
-            tx: Transaction { src, dst, at: self.at, bytes: c.line_bytes as f64, device_ns },
-            token: 0,
-        })
+        Pull::Tx(SourcedTx::new(
+            Transaction { src, dst, at: self.at, bytes: c.line_bytes as f64, device_ns },
+            0,
+        ))
     }
 
     fn open_loop(&self) -> bool {

@@ -11,7 +11,8 @@ use scalepool::memory::pool::{MemoryPool, Placement};
 use scalepool::memory::tier::{waterfall_placement, TierSpec};
 use scalepool::memory::Tier;
 use scalepool::sim::{
-    BatchSource, MemSim, RailSelector, RoutingPolicy, TrafficClass, TrafficSource, Transaction,
+    ArbPolicy, BatchSource, MemSim, QosPolicy, RailSelector, RoutingPolicy, TrafficClass,
+    TrafficSource, Transaction,
 };
 use scalepool::util::prop::{forall_res, Config};
 use scalepool::util::Rng;
@@ -926,7 +927,7 @@ impl TrafficSource for RecordingSource {
             Some(tx) => {
                 let token = self.next_token;
                 self.next_token += 1;
-                scalepool::sim::Pull::Tx(scalepool::sim::SourcedTx { tx, token })
+                scalepool::sim::Pull::Tx(scalepool::sim::SourcedTx::new(tx, token))
             }
             None => scalepool::sim::Pull::Done,
         }
@@ -1098,6 +1099,200 @@ fn prop_sharded_matches_serial() {
                     || !close(serial.total.latency.max(), sharded.total.latency.max())
                 {
                     return Err(format!("{ctx} aggregate latency stats diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Copy-on-write fork parity (ISSUE 6): a [`MemSim::fork`] of a master
+/// that was warmed on the workload and path-frozen must reproduce a
+/// freshly built simulator byte-for-byte — per-class completed counts
+/// and bytes, the sorted per-transaction latency multiset, event count,
+/// makespan, and the full [`StreamReport::qos`] telemetry — on
+/// randomized Clos and torus fabrics swept over single-/multi-path
+/// tables, all three rail selectors, and all three arbitration
+/// policies. This is the invariant that lets the sweep experiments
+/// build one system per configuration family and fork per point.
+#[test]
+fn prop_forked_sim_matches_fresh_build() {
+    forall_res(
+        Config { cases: 18, seed: 0xF02C },
+        |rng: &mut Rng| {
+            let (t, eps) = if rng.below(2) == 0 {
+                // Clos with endpoints per leaf
+                let (mut t, leaves) = Topology::clos(
+                    2 + rng.below(6) as usize,
+                    1 + rng.below(3) as usize,
+                    LinkKind::CxlCoherent,
+                    "c",
+                );
+                let per = 2 + rng.below(4) as usize;
+                let mut eps = Vec::new();
+                for (i, &l) in leaves.iter().enumerate() {
+                    for e in 0..per {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                        t.connect(n, l, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            } else {
+                // torus with endpoints on alternating switches
+                let (mut t, sw) = Topology::torus3d(
+                    (2 + rng.below(3) as usize, 2 + rng.below(3) as usize, 1 + rng.below(2) as usize),
+                    LinkKind::CxlCoherent,
+                    "t",
+                );
+                let mut eps = Vec::new();
+                for (i, &s) in sw.iter().enumerate() {
+                    if i % 2 == 0 {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}"));
+                        t.connect(n, s, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            };
+            let ntx = 80 + rng.below(300) as usize;
+            (t, eps, ntx, rng.below(2) == 1, rng.below(3), rng.below(3), rng.below(1 << 30))
+        },
+        |(t, eps, ntx, multipath, sel, arb, seed)| {
+            if eps.len() < 2 {
+                return Ok(());
+            }
+            let mut f = Fabric::new(t.clone());
+            if *multipath {
+                f.enable_multipath(4);
+            }
+            let selector = match *sel {
+                0 => RailSelector::Deterministic,
+                1 => RailSelector::HashSpray,
+                _ => RailSelector::Adaptive,
+            };
+            let routing = RoutingPolicy::uniform(selector);
+            let qos = match *arb {
+                0 => QosPolicy::fcfs(),
+                1 => QosPolicy::uniform(ArbPolicy::strict_default()),
+                _ => QosPolicy::uniform(ArbPolicy::weighted_default()),
+            };
+            let ctx = format!(
+                "[{} {} {}]",
+                if *multipath { "multipath" } else { "single-path" },
+                selector.name(),
+                qos.tier(scalepool::sim::LinkTier::CxlSpine).name(),
+            );
+            let mut rng = Rng::new(*seed);
+            let mut at = 0.0;
+            let txs: Vec<Transaction> = (0..*ntx)
+                .map(|_| {
+                    at += rng.exp(1.0 / 30.0) + 1e-6;
+                    let s = rng.below(eps.len() as u64) as usize;
+                    let mut d = rng.below(eps.len() as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % eps.len();
+                    }
+                    Transaction {
+                        src: eps[s],
+                        dst: eps[d],
+                        at,
+                        bytes: 64.0 + rng.f64() * 8192.0,
+                        device_ns: rng.f64() * 200.0,
+                    }
+                })
+                .collect();
+            let issue_of = |token: u64| txs[token as usize].at;
+
+            // A: fresh build, configured, run once — the reference
+            let mut fresh_src = RecordingSource::new(txs.clone());
+            let mut fresh_sim = MemSim::with_routing(&f, routing);
+            fresh_sim.set_qos(qos);
+            let fresh = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut fresh_src];
+                fresh_sim.run_streamed(&mut sources)
+            };
+
+            // B: master warmed on the same workload (fills the path
+            // arena), frozen, then forked — the sweep-loop shape
+            let mut master = MemSim::with_routing(&f, routing);
+            master.set_qos(qos);
+            {
+                let mut warm_src = RecordingSource::new(txs.clone());
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut warm_src];
+                let _ = master.run_streamed(&mut sources);
+            }
+            master.freeze_paths();
+            let mut forked_sim = master.fork();
+            let mut forked_src = RecordingSource::new(txs.clone());
+            let forked = {
+                let mut sources: [&mut dyn TrafficSource; 1] = [&mut forked_src];
+                forked_sim.run_streamed(&mut sources)
+            };
+
+            if fresh.total.completed != forked.total.completed
+                || fresh.total.completed != *ntx as u64
+            {
+                return Err(format!(
+                    "{ctx} completed {} vs {}",
+                    fresh.total.completed, forked.total.completed
+                ));
+            }
+            if fresh.total.events != forked.total.events {
+                return Err(format!(
+                    "{ctx} event counts {} vs {}",
+                    fresh.total.events, forked.total.events
+                ));
+            }
+            // the fork replays the identical event sequence over the
+            // identical interned paths: bit-exact, no tolerance
+            if fresh.total.makespan_ns != forked.total.makespan_ns {
+                return Err(format!(
+                    "{ctx} makespan {} vs {}",
+                    fresh.total.makespan_ns, forked.total.makespan_ns
+                ));
+            }
+            for c in TrafficClass::ALL {
+                let (a, b) = (fresh.class(c), forked.class(c));
+                if a.completed != b.completed || a.bytes != b.bytes {
+                    return Err(format!("{ctx} class {} diverged", c.name()));
+                }
+            }
+            let lat = |recs: &[(u64, f64)]| -> Vec<f64> {
+                let mut v: Vec<f64> = recs.iter().map(|&(tok, now)| now - issue_of(tok)).collect();
+                v.sort_by(|a, b| a.total_cmp(b));
+                v
+            };
+            let (la, lb) = (lat(&fresh_src.completions), lat(&forked_src.completions));
+            if la != lb {
+                return Err(format!("{ctx} latency multisets diverged"));
+            }
+            // per-link per-class telemetry, field-wise (no PartialEq on
+            // LinkClassStats): collect_qos_stats emits in link order, so
+            // the two runs must agree element by element
+            if fresh.qos.len() != forked.qos.len() {
+                return Err(format!(
+                    "{ctx} qos telemetry sizes {} vs {}",
+                    fresh.qos.len(),
+                    forked.qos.len()
+                ));
+            }
+            for (a, b) in fresh.qos.iter().zip(&forked.qos) {
+                if a.link != b.link
+                    || a.dir != b.dir
+                    || a.tier != b.tier
+                    || a.class != b.class
+                    || a.served != b.served
+                    || a.bytes != b.bytes
+                    || a.busy_ns != b.busy_ns
+                    || a.queue_delay_ns != b.queue_delay_ns
+                {
+                    return Err(format!(
+                        "{ctx} qos telemetry diverged on link {} dir {} class {}",
+                        a.link,
+                        a.dir,
+                        a.class.name()
+                    ));
                 }
             }
             Ok(())

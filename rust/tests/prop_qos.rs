@@ -37,7 +37,7 @@ impl TrafficSource for RecordingSource {
             Some(tx) => {
                 let token = self.next_token;
                 self.next_token += 1;
-                Pull::Tx(SourcedTx { tx, token })
+                Pull::Tx(SourcedTx::new(tx, token))
             }
             None => Pull::Done,
         }

@@ -8,7 +8,8 @@
 # to the named scales, SCALEPOOL_BENCH_ACCESSES=N shrinks its workload,
 # and SCALEPOOL_BENCH_ONLY=simscale skips the figure/micro benches.
 # scripts/check_bench.py then enforces the >= 1.0x floor on every
-# recorded *_speedup.
+# recorded *_speedup, and with --baseline OLD.json also fails any
+# speedup that regressed >10% vs a previously committed record.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

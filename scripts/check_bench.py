@@ -15,30 +15,63 @@ error. Pointing this checker at a figure-level record (e.g.
 BENCH_figs.json) lists its entries and exits 0 instead of tracebacking
 on the unfamiliar shape.
 
-Usage: check_bench.py [BENCH_simscale.json]
+With ``--baseline OLD.json`` the fresh record is additionally compared
+against a previously committed one: any speedup present in both that
+falls below ``0.9x`` its baseline value (a >10% regression) fails,
+unless that entry is advisory. Entries present in only one record are
+reported but never an error — scales and keys grow over time.
+
+Usage: check_bench.py [BENCH_simscale.json] [--baseline OLD.json]
 """
 
 import json
 import sys
 
 FLOOR = 1.0
+REGRESSION_RATIO = 0.9
 SHARDED_MIN_THREADS = 4
 
 
-def walk(node, path, out):
+def walk(node, path, out, scale=None):
     if isinstance(node, dict):
+        if isinstance(node.get("scale"), str):
+            scale = node["scale"]
         for k, v in node.items():
             if isinstance(v, (int, float)) and (k.endswith("_speedup") or k == "speedup"):
-                out.append((f"{path}.{k}" if path else k, k, float(v)))
+                out.append((f"{path}.{k}" if path else k, k, float(v), scale))
             else:
-                walk(v, f"{path}.{k}" if path else k, out)
+                walk(v, f"{path}.{k}" if path else k, out, scale)
     elif isinstance(node, list):
         for i, v in enumerate(node):
-            walk(v, f"{path}[{i}]", out)
+            walk(v, f"{path}[{i}]", out, scale)
+
+
+def is_advisory(where, key, scale, threads):
+    if key.startswith("sharded") and threads < SHARDED_MIN_THREADS:
+        # sharded acceptance bar is defined at >= 4 cores
+        return True
+    if "rails" in where:
+        # rails policy points ride along in merged records: advisory
+        return True
+    if key == "sweep_fork_speedup" and scale == "rack":
+        # a rack (single-crossbar) build is sub-millisecond, so the
+        # fork-vs-rebuild ratio there is timer noise; the >= 3x bar is
+        # asserted by the bench itself at row scale and beyond
+        return True
+    return False
 
 
 def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_simscale.json"
+    argv = sys.argv[1:]
+    baseline_path = None
+    if "--baseline" in argv:
+        i = argv.index("--baseline")
+        if i + 1 >= len(argv):
+            print("error: --baseline needs a path argument", file=sys.stderr)
+            return 2
+        baseline_path = argv[i + 1]
+        del argv[i : i + 2]
+    path = argv[0] if argv else "BENCH_simscale.json"
     how_to_record = (
         "record it first with scripts/bench.sh, or directly:\n"
         f"  SCALEPOOL_BENCH_OUT={path} cargo bench "
@@ -85,23 +118,56 @@ def main():
         print(f"error: no *_speedup entries found in {path}", file=sys.stderr)
         return 1
     failures = []
-    for where, key, value in speedups:
-        advisory = (key.startswith("sharded") and threads < SHARDED_MIN_THREADS) or (
-            # rails policy points ride along in merged records: advisory
-            "rails" in where
-        )
+    advisories = 0
+    for where, key, value, scale in speedups:
+        advisory = is_advisory(where, key, scale, threads)
         status = "ok" if value >= FLOOR else ("advisory" if advisory else "FAIL")
         print(f"{status:>8}  {where} = {value:.2f}")
-        if value < FLOOR and not advisory:
-            failures.append((where, value))
+        if value < FLOOR:
+            if advisory:
+                advisories += 1
+            else:
+                failures.append((where, value, f"below the {FLOOR}x floor"))
+    if baseline_path is not None:
+        try:
+            with open(baseline_path) as f:
+                base = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            print(f"error: baseline {baseline_path} unusable ({e})", file=sys.stderr)
+            return 1
+        base_speedups = []
+        walk(base, "", base_speedups)
+        base_by_path = {w: v for w, _, v, _ in base_speedups}
+        print(f"\nregression gate vs {baseline_path} (fail below {REGRESSION_RATIO}x baseline):")
+        compared = 0
+        for where, key, value, scale in speedups:
+            if where not in base_by_path:
+                print(f"     new  {where} = {value:.2f} (not in baseline)")
+                continue
+            compared += 1
+            bar = base_by_path[where] * REGRESSION_RATIO
+            advisory = is_advisory(where, key, scale, threads)
+            ok = value >= bar
+            status = "ok" if ok else ("advisory" if advisory else "FAIL")
+            print(f"{status:>8}  {where} = {value:.2f} (baseline {base_by_path[where]:.2f}, bar {bar:.2f})")
+            if not ok:
+                if advisory:
+                    advisories += 1
+                else:
+                    failures.append((where, value, f"regressed >10% vs baseline {base_by_path[where]:.2f}"))
+        dropped = sorted(set(base_by_path) - {w for w, _, _, _ in speedups})
+        for where in dropped:
+            # a scale absent from a bounded run (SCALEPOOL_BENCH_SCALES)
+            # is expected; only full runs cover every baseline entry
+            print(f" skipped  {where} (baseline-only, not in this run)")
+        print(f"  {compared} matched speedup(s) compared against baseline")
     if failures:
-        print(f"\nerror: {len(failures)} speedup(s) below the {FLOOR}x floor:", file=sys.stderr)
-        for where, value in failures:
-            print(f"  {where} = {value:.2f}", file=sys.stderr)
+        print(f"\nerror: {len(failures)} speedup check(s) failed:", file=sys.stderr)
+        for where, value, why in failures:
+            print(f"  {where} = {value:.2f} ({why})", file=sys.stderr)
         return 1
-    advisories = sum(1 for _, k, v in speedups if v < FLOOR and k.startswith("sharded"))
-    note = f", {advisories} advisory below floor" if advisories else ""
-    print(f"\n{len(speedups)} recorded speedups checked, none below the {FLOOR}x floor{note} (threads={threads})")
+    note = f", {advisories} advisory miss(es)" if advisories else ""
+    print(f"\n{len(speedups)} recorded speedups checked, no failures{note} (threads={threads})")
     return 0
 
 
