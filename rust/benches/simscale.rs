@@ -13,6 +13,11 @@
 //! * sharded multi-core streamed simulation (`run_streamed_sharded`) vs
 //!   the serial streamed backend, on scales whose topology yields more
 //!   than one domain (the single-crossbar rack does not shard);
+//! * reactive sharding (ISSUE 7): closed-loop per-leaf coherence domains
+//!   plus per-leaf collective rings, serial vs sharded with every source
+//!   pinned to the shard owning its footprint — asserted to actually
+//!   shard (no serial fallback) and, at pod scale on >= 4 cores, to beat
+//!   the serial backend by >= 1.5x;
 //! * sweep-point throughput: copy-on-write forking (`MemSim::fork` off a
 //!   warmed, frozen master) vs rebuilding the fabric + simulator for
 //!   every point — the sweep-harness pattern the experiments use;
@@ -29,6 +34,8 @@
 //! Run with: `cargo bench --bench simscale` (see `scripts/bench.sh`).
 
 use scalepool::bench::black_box;
+use scalepool::coherence::{CoherenceConfig, CoherenceTraffic};
+use scalepool::collective::EventDrivenCollective;
 use scalepool::fabric::routing::reference::SerialRouter;
 use scalepool::fabric::{Fabric, LinkKind, NodeKind, Router, Topology};
 use scalepool::sim::{BatchSource, Engine, EventKind, MemSim, Server, TrafficClass, TrafficSource, Transaction};
@@ -386,6 +393,107 @@ fn main() {
             None
         };
 
+        // --- reactive sharding: coupled-domain pinned sources (ISSUE 7) -
+        // closed-loop traffic — per-leaf coherence sharing domains and
+        // per-leaf collective rings — that the pre-PR-7 backend could not
+        // shard at all (reactive sources forced the serial fallback).
+        // Every source declares a leaf-local footprint, so the coupled
+        // plan pins each to the shard owning its leaf and the whole run
+        // executes as one decoupled epoch
+        let reactive = if s.leaves >= 2 && threads >= 2 {
+            let groups: Vec<Vec<usize>> =
+                eps.chunks(s.eps_per_leaf).map(|c| c.to_vec()).collect();
+            let coh_ops = ((accesses / groups.len()) as u64 / 8).max(100);
+            let ring_bytes = 1024.0 * 1024.0;
+            let build_sources = || -> (Vec<CoherenceTraffic>, Vec<EventDrivenCollective>) {
+                let coh = groups
+                    .iter()
+                    .enumerate()
+                    .map(|(g, leaf)| {
+                        let ccfg = CoherenceConfig {
+                            ops: coh_ops,
+                            mean_interarrival_ns: 25.0,
+                            window: 16,
+                            ..Default::default()
+                        };
+                        CoherenceTraffic::new(
+                            leaf[1..].to_vec(),
+                            vec![leaf[0]],
+                            ccfg,
+                            0x5EED + g as u64,
+                        )
+                    })
+                    .collect();
+                let col = groups
+                    .iter()
+                    .map(|leaf| EventDrivenCollective::ring(leaf.clone(), ring_bytes, 1))
+                    .collect();
+                (coh, col)
+            };
+            let run = |sharded: bool, coh: &mut Vec<CoherenceTraffic>, col: &mut Vec<EventDrivenCollective>| {
+                let mut sources: Vec<&mut dyn TrafficSource> = Vec::new();
+                for c in coh.iter_mut() {
+                    sources.push(c);
+                }
+                for c in col.iter_mut() {
+                    sources.push(c);
+                }
+                let mut sim = MemSim::new(&fabric);
+                if sharded {
+                    sim.run_streamed_sharded_with(&mut sources, threads)
+                } else {
+                    sim.run_streamed(&mut sources)
+                }
+            };
+            let mut pool: Vec<_> = (0..6).map(|_| build_sources()).collect();
+            let mut serial_events = 0u64;
+            let serial_wall = best_of(3, || {
+                let (mut coh, mut col) = pool.pop().expect("prebuilt source set");
+                let rep = run(false, &mut coh, &mut col);
+                serial_events = rep.total.events;
+                rep.total.completed
+            });
+            let mut sharded_events = 0u64;
+            let mut mode = scalepool::sim::ShardMode::Serial;
+            let sharded_wall = best_of(3, || {
+                let (mut coh, mut col) = pool.pop().expect("prebuilt source set");
+                let rep = run(true, &mut coh, &mut col);
+                sharded_events = rep.total.events;
+                mode = rep.mode.clone();
+                rep.total.completed
+            });
+            assert_eq!(
+                serial_events, sharded_events,
+                "{}: reactive backends dispatched different event counts",
+                s.name
+            );
+            assert!(
+                mode.is_sharded(),
+                "{}: per-leaf reactive footprints must shard, got {mode:?}",
+                s.name
+            );
+            let shards = match mode {
+                scalepool::sim::ShardMode::Sharded { shards, .. } => shards,
+                _ => unreachable!(),
+            };
+            let eps_serial = serial_events as f64 / (serial_wall / 1e9);
+            let eps_sharded = sharded_events as f64 / (sharded_wall / 1e9);
+            let speedup = eps_sharded / eps_serial;
+            // the PR-7 acceptance bar: pod-scale reactive traffic 1.5x+
+            // on 4+ cores (below that the barrier overhead has too few
+            // workers to amortize across — check_bench treats it as
+            // advisory there)
+            if s.name == "pod" && threads >= 4 {
+                assert!(
+                    speedup >= 1.5,
+                    "pod: reactive sharded speedup {speedup:.2}x below the 1.5x bar on {threads} threads"
+                );
+            }
+            Some((shards, eps_serial, eps_sharded, speedup))
+        } else {
+            None
+        };
+
         // --- sweep harness: copy-on-write fork vs rebuild (ISSUE 6) -----
         // marginal per-point throughput: the rebuild path pays a fresh
         // topology clone + Fabric (router build) + MemSim per point; the
@@ -461,6 +569,14 @@ fn main() {
             pps_rebuild,
             fork_speedup,
         );
+        if let Some((shards, eps_ser, eps_sh, sp)) = reactive {
+            println!(
+                "{:<5} reactive (per-leaf coherence + rings) | sharded x{shards} {:>6.2} M ev/s vs serial {:>6.2} M ev/s ({sp:>5.2}x)",
+                s.name,
+                eps_sh / 1e6,
+                eps_ser / 1e6,
+            );
+        }
 
         let mut row = vec![
             ("scale", Json::str(s.name)),
@@ -486,6 +602,12 @@ fn main() {
             row.push(("sharded_shards", Json::num(shards as f64)));
             row.push(("sharded_events_per_sec", Json::num(eps_sh)));
             row.push(("sharded_speedup", Json::num(sp)));
+        }
+        if let Some((shards, eps_ser, eps_sh, sp)) = reactive {
+            row.push(("reactive_sharded_shards", Json::num(shards as f64)));
+            row.push(("reactive_serial_events_per_sec", Json::num(eps_ser)));
+            row.push(("reactive_sharded_events_per_sec", Json::num(eps_sh)));
+            row.push(("reactive_sharded_speedup", Json::num(sp)));
         }
         rows.push(Json::obj(row));
     }
@@ -563,6 +685,9 @@ fn rows_summary(out: &Json) -> String {
             );
             if let Some(sp) = p.get("sharded_speedup").and_then(Json::as_f64) {
                 s.push_str(&format!(" pod_sharded_speedup={sp:.2}"));
+            }
+            if let Some(sp) = p.get("reactive_sharded_speedup").and_then(Json::as_f64) {
+                s.push_str(&format!(" pod_reactive_sharded_speedup={sp:.2}"));
             }
             if let Some(sp) = p.get("sweep_fork_speedup").and_then(Json::as_f64) {
                 s.push_str(&format!(" pod_sweep_fork_speedup={sp:.2}"));

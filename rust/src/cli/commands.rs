@@ -123,6 +123,12 @@ pub fn mixed(args: &mut Args) -> Result<()> {
 
 /// Parse the shared mixed-scenario knobs (used by `mixed` and `qos`).
 fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
+    let shape = match args.get_or("algo", "hier").as_str() {
+        "hier" => experiments::CollectiveShape::Hierarchical,
+        "ring" => experiments::CollectiveShape::FlatRing,
+        "rackrings" => experiments::CollectiveShape::RackRings,
+        other => bail!("unknown collective algo '{other}' (hier|ring|rackrings)"),
+    };
     Ok(experiments::MixedConfig {
         racks: args.usize_or("racks", 4).map_err(Error::msg)?,
         accels: args.usize_or("accels", 8).map_err(Error::msg)?,
@@ -131,8 +137,10 @@ fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
         tiering_ops: args.usize_or("tier-ops", 300).map_err(Error::msg)? as u64,
         collective_bytes: args.f64_or("bytes", 32.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
         collective_repeats: args.usize_or("repeats", 1).map_err(Error::msg)?,
-        hierarchical: args.get_or("algo", "hier") != "ring",
+        shape,
         t1_bytes_per_acc: args.f64_or("t1-bytes", 2.0 * 1024.0 * 1024.0).map_err(Error::msg)?,
+        sharded: args.flag("sharded"),
+        shards: args.usize_or("shards", 0).map_err(Error::msg)?,
         seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
     })
 }

@@ -25,10 +25,17 @@ COMMANDS:
                                multi-core conservative backend)
     mixed     [--racks <N>] [--accels <N>] [--mem-nodes <N>] [--coh-ops <N>]
               [--tier-ops <N>] [--bytes <N>] [--repeats <N>]
-              [--algo <hier|ring>] [--seed <N>] [--out <file>]
+              [--algo <hier|ring|rackrings>] [--sharded [--shards <N>]]
+              [--seed <N>] [--out <file>]
                                Coherence + tiering + collective traffic
                                concurrently on one fabric; per-class
-                               mean and p99 latency under interference
+                               mean and p99 latency under interference.
+                               Coherence runs as per-rack sharing domains;
+                               --algo rackrings runs one collective ring
+                               per rack; --sharded runs the mixed point on
+                               the multi-core conservative backend with
+                               reactive sources pinned to the shard owning
+                               their footprint (identical RESULT line)
     qos       [same scenario options as mixed]
               [--policies <fcfs,strict,wfq>] [--order <c1,c2,c3,c4>]
               [--weights <w1,w2,w3,w4>] [--out <file>]

@@ -294,6 +294,20 @@ impl TrafficSource for CoherenceTraffic {
             self.enqueue_next_phase(slot, now);
         }
     }
+
+    /// Every protocol message flies between a caching agent and either
+    /// another agent or the block's home — all drawn from the fixed
+    /// `agents` ∪ `homes` set, so the footprint is static and the source
+    /// is eligible for coupled-domain shard pinning.
+    fn footprint(&self) -> Option<Vec<NodeId>> {
+        let mut nodes = self.agents.clone();
+        for &h in &self.homes {
+            if !nodes.contains(&h) {
+                nodes.push(h);
+            }
+        }
+        Some(nodes)
+    }
 }
 
 #[cfg(test)]

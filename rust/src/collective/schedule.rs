@@ -237,16 +237,26 @@ impl TrafficSource for EventDrivenCollective {
             mem.outstanding = true;
             mem.emitted += 1;
             self.inflight += 1;
-            return Pull::Tx(SourcedTx::new(
-                Transaction {
-                    src: mem.src,
-                    dst: mem.dst,
-                    at: now,
-                    bytes: chunk,
-                    device_ns: self.device_ns,
-                },
-                m as u64,
-            ));
+            // one flow per (pair, ring direction): a member only ever
+            // sends to its ring successor, so the ordered (src, dst)
+            // pair identifies the directed chunk stream. Stamping it
+            // keeps every step of the stream on one HashSpray rail —
+            // ordered collective steps never reorder across rails
+            // (ROADMAP item 4)
+            let flow = ((mem.src as u64) << 32) | mem.dst as u64;
+            return Pull::Tx(
+                SourcedTx::new(
+                    Transaction {
+                        src: mem.src,
+                        dst: mem.dst,
+                        at: now,
+                        bytes: chunk,
+                        device_ns: self.device_ns,
+                    },
+                    m as u64,
+                )
+                .with_flow(flow),
+            );
         }
         debug_assert!(self.inflight > 0, "collective stalled with no ready member");
         Pull::Blocked
@@ -268,6 +278,25 @@ impl TrafficSource for EventDrivenCollective {
         }
         self.check_ready(m);
         self.check_ready(succ);
+    }
+
+    /// Every chunk flies between ring neighbors, and every ring of every
+    /// phase is fixed at construction — the footprint is the union of
+    /// all phase rings, making the schedule eligible for coupled-domain
+    /// shard pinning (a rack-local ring pins to its rack's shard; a
+    /// fabric-wide ring merges everything and falls back to serial).
+    fn footprint(&self) -> Option<Vec<NodeId>> {
+        let mut nodes: Vec<NodeId> = Vec::new();
+        for phase in &self.phases {
+            for ring in &phase.rings {
+                for &n in ring {
+                    if !nodes.contains(&n) {
+                        nodes.push(n);
+                    }
+                }
+            }
+        }
+        Some(nodes)
     }
 }
 

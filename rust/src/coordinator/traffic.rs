@@ -181,7 +181,11 @@ impl TrafficSource for TieringTraffic {
                 return Pull::Tx(SourcedTx::new(tx, at.max(now).to_bits()));
             }
             if self.issued >= self.cfg.ops {
-                return if self.fabric_inflight > 0 { Pull::Blocked } else { Pull::Done };
+                // emissions never wait on completions (on_complete is
+                // latency telemetry only), so the source is Done as soon
+                // as the op budget drains — never Blocked, upholding the
+                // open-loop contract below
+                return Pull::Done;
             }
             // open loop: ops fire on the schedule regardless of fabric
             // state (migrations are asynchronous writebacks/fills)
@@ -195,6 +199,13 @@ impl TrafficSource for TieringTraffic {
     fn on_complete(&mut self, token: u64, now: f64) {
         self.fabric_inflight -= 1;
         self.migration_latency.push(now - f64::from_bits(token));
+    }
+
+    /// Migrations are asynchronous writebacks/fills on a fixed schedule:
+    /// emission never depends on a completion, so the source can be
+    /// staged ahead by the sharded coordinator.
+    fn open_loop(&self) -> bool {
+        true
     }
 }
 

@@ -16,8 +16,22 @@ use crate::coherence::{CoherenceConfig, CoherenceTraffic};
 use crate::collective::{Algorithm, CollectiveModel, EventDrivenCollective, Transport};
 use crate::coordinator::{TieringEngine, TieringPolicy, TieringTraffic, TieringTrafficConfig};
 use crate::fabric::TopologyKind;
-use crate::sim::{MemSim, StreamReport, TrafficClass, TrafficSource};
+use crate::sim::{MemSim, ShardMode, StreamReport, TrafficClass, TrafficSource};
 use crate::util::stats::Welford;
+
+/// Shape of the collective schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveShape {
+    /// Rack-grouped reduce, inter-rack exchange, rack-local broadcast.
+    Hierarchical,
+    /// One flat ring over every accelerator in the pod.
+    FlatRing,
+    /// One independent flat ring per rack. Each ring's footprint stays
+    /// inside its rack, so the sharded backend can pin every collective
+    /// source to a distinct shard (the shape the reactive-sharding bench
+    /// and CI parity smoke exercise).
+    RackRings,
+}
 
 /// Scenario knobs.
 #[derive(Clone, Debug)]
@@ -25,7 +39,8 @@ pub struct MixedConfig {
     pub racks: usize,
     pub accels: usize,
     pub mem_nodes: usize,
-    /// Coherent operations issued by the sharing workload.
+    /// Coherent operations issued by the sharing workloads (split evenly
+    /// across the per-rack sharing domains).
     pub coherence_ops: u64,
     /// Allocate/touch/free ops driving the tiering engine.
     pub tiering_ops: u64,
@@ -33,10 +48,18 @@ pub struct MixedConfig {
     pub collective_bytes: f64,
     /// Back-to-back all-reduces.
     pub collective_repeats: usize,
-    /// Hierarchical (rack-grouped) schedule instead of one flat ring.
-    pub hierarchical: bool,
+    /// Collective schedule shape.
+    pub shape: CollectiveShape,
     /// Tier-1 HBM carve-out per accelerator for the tiering pools, bytes.
     pub t1_bytes_per_acc: f64,
+    /// Run the mixed point on the sharded backend
+    /// ([`MemSim::run_streamed_sharded_with`]) instead of the serial
+    /// streamed loop. Source schedules are identical either way; the two
+    /// backends produce the same report (pinned by
+    /// `rack_rings_sharded_matches_serial` and the CI parity smoke).
+    pub sharded: bool,
+    /// Shard-count cap when `sharded` (0 = one per hardware thread).
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -50,8 +73,10 @@ impl Default for MixedConfig {
             tiering_ops: 300,
             collective_bytes: 32.0 * 1024.0 * 1024.0,
             collective_repeats: 1,
-            hierarchical: true,
+            shape: CollectiveShape::Hierarchical,
             t1_bytes_per_acc: 2.0 * 1024.0 * 1024.0,
+            sharded: false,
+            shards: 0,
             seed: 7,
         }
     }
@@ -123,6 +148,9 @@ pub struct MixedReport {
     pub mixed_events: u64,
     pub mixed_peak_utilization: f64,
     pub peak_inflight: usize,
+    /// Backend the mixed run executed on (serial, sharded, or a sharded
+    /// request that fell back — and why).
+    pub mode: ShardMode,
 }
 
 impl MixedReport {
@@ -167,16 +195,35 @@ pub(crate) fn horizon_estimate(sys: &ScalePoolSystem, cfg: &MixedConfig) -> f64 
         .max(50_000.0)
 }
 
-pub(crate) fn coherence_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> CoherenceTraffic {
-    let agents = sys.accelerators();
-    let window = agents.len().max(8);
-    let ccfg = CoherenceConfig {
-        ops: cfg.coherence_ops,
-        mean_interarrival_ns: (horizon_ns / cfg.coherence_ops.max(1) as f64).max(1.0),
-        window,
-        ..Default::default()
-    };
-    CoherenceTraffic::new(agents, sys.mem_nodes.clone(), ccfg, cfg.seed)
+/// One coherence sharing domain per rack: the rack's accelerators cache
+/// lines homed on one pool memory node (`mem_nodes[rack % M]`), and the
+/// op budget is split evenly across racks (remainder to the low racks).
+/// Keeping each domain's requester/home/sharer footprint inside one rack
+/// lets the sharded backend pin every coherence source to the shard that
+/// owns its rack — a pod-wide sharing domain would pull all shards into
+/// one and force the serial fallback.
+pub(crate) fn coherence_sources(
+    sys: &ScalePoolSystem,
+    cfg: &MixedConfig,
+    horizon_ns: f64,
+) -> Vec<CoherenceTraffic> {
+    let racks = sys.racks.len() as u64;
+    let base = cfg.coherence_ops / racks;
+    let rem = cfg.coherence_ops % racks;
+    (0..sys.racks.len())
+        .map(|r| {
+            let agents = sys.racks[r].acc_ids.clone();
+            let ops = base + u64::from((r as u64) < rem);
+            let ccfg = CoherenceConfig {
+                ops,
+                mean_interarrival_ns: (horizon_ns / ops.max(1) as f64).max(1.0),
+                window: agents.len().max(8),
+                ..Default::default()
+            };
+            let home = sys.mem_nodes[r % sys.mem_nodes.len()];
+            CoherenceTraffic::new(agents, vec![home], ccfg, cfg.seed.wrapping_add(r as u64 * 7919))
+        })
+        .collect()
 }
 
 pub(crate) fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_ns: f64) -> TieringTraffic {
@@ -190,12 +237,48 @@ pub(crate) fn tiering_source(sys: &ScalePoolSystem, cfg: &MixedConfig, horizon_n
     TieringTraffic::new(engine, sys.accelerators(), tcfg, cfg.seed.wrapping_add(1))
 }
 
-pub(crate) fn collective_source(sys: &ScalePoolSystem, cfg: &MixedConfig) -> EventDrivenCollective {
-    if cfg.hierarchical {
-        EventDrivenCollective::hierarchical(sys.rack_groups(), cfg.collective_bytes, cfg.collective_repeats)
-    } else {
-        EventDrivenCollective::ring(sys.accelerators(), cfg.collective_bytes, cfg.collective_repeats)
+/// The collective schedule(s) for `cfg.shape` — one source except under
+/// [`CollectiveShape::RackRings`], which emits an independent ring per
+/// rack.
+pub(crate) fn collective_sources(sys: &ScalePoolSystem, cfg: &MixedConfig) -> Vec<EventDrivenCollective> {
+    match cfg.shape {
+        CollectiveShape::Hierarchical => vec![EventDrivenCollective::hierarchical(
+            sys.rack_groups(),
+            cfg.collective_bytes,
+            cfg.collective_repeats,
+        )],
+        CollectiveShape::FlatRing => vec![EventDrivenCollective::ring(
+            sys.accelerators(),
+            cfg.collective_bytes,
+            cfg.collective_repeats,
+        )],
+        CollectiveShape::RackRings => sys
+            .racks
+            .iter()
+            .map(|r| EventDrivenCollective::ring(r.acc_ids.clone(), cfg.collective_bytes, cfg.collective_repeats))
+            .collect(),
     }
+}
+
+/// Assemble the canonical mixed source ordering — every per-rack
+/// coherence domain, the tiering stream, then the collective
+/// schedule(s) — as the trait-object vector the simulator consumes. Both
+/// backends and every sweep use this order, so reports stay comparable
+/// point to point.
+pub(crate) fn as_dyn_sources<'a>(
+    coh: &'a mut [CoherenceTraffic],
+    tier: &'a mut TieringTraffic,
+    col: &'a mut [EventDrivenCollective],
+) -> Vec<&'a mut dyn TrafficSource> {
+    let mut out: Vec<&mut dyn TrafficSource> = Vec::with_capacity(coh.len() + 1 + col.len());
+    for c in coh.iter_mut() {
+        out.push(c);
+    }
+    out.push(tier);
+    for c in col.iter_mut() {
+        out.push(c);
+    }
+    out
 }
 
 /// Run one point of a sweep on a fork of the prebuilt master simulator,
@@ -209,11 +292,32 @@ pub(crate) fn run_fork(
     sources: &mut [&mut dyn TrafficSource],
     qos: Option<&crate::coordinator::QosManager>,
 ) -> (StreamReport, f64) {
+    run_fork_with(master, sources, qos, false, 0)
+}
+
+/// As [`run_fork`], with backend selection: `sharded` routes the point
+/// through the conservative parallel loop (capped at `max_shards`
+/// shards; 0 means one per hardware thread), which falls back to serial
+/// by itself when the plan is not profitable — the report's
+/// [`ShardMode`](crate::sim::ShardMode) says what actually ran.
+pub(crate) fn run_fork_with(
+    master: &MemSim,
+    sources: &mut [&mut dyn TrafficSource],
+    qos: Option<&crate::coordinator::QosManager>,
+    sharded: bool,
+    max_shards: usize,
+) -> (StreamReport, f64) {
     let mut sim = master.fork();
     if let Some(mgr) = qos {
         mgr.apply(&mut sim);
     }
-    let rep = sim.run_streamed(sources);
+    let rep = if sharded && max_shards > 0 {
+        sim.run_streamed_sharded_with(sources, max_shards)
+    } else if sharded {
+        sim.run_streamed_sharded(sources)
+    } else {
+        sim.run_streamed(sources)
+    };
     let util = sim.peak_utilization(rep.total.makespan_ns);
     (rep, util)
 }
@@ -242,8 +346,9 @@ pub(crate) fn solo_baselines(
     master: &mut MemSim,
 ) -> [(f64, f64, f64); 3] {
     let coh = {
-        let mut src = coherence_source(sys, mcfg, horizon);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let mut srcs = coherence_sources(sys, mcfg, horizon);
+        let mut s: Vec<&mut dyn TrafficSource> =
+            srcs.iter_mut().map(|x| x as &mut dyn TrafficSource).collect();
         let rep = master.run_streamed(&mut s);
         class_triple(TrafficClass::Coherence, &rep)
     };
@@ -255,8 +360,9 @@ pub(crate) fn solo_baselines(
         class_triple(TrafficClass::Tiering, &rep)
     };
     let col = {
-        let mut src = collective_source(sys, mcfg);
-        let mut s: [&mut dyn TrafficSource; 1] = [&mut src];
+        let mut srcs = collective_sources(sys, mcfg);
+        let mut s: Vec<&mut dyn TrafficSource> =
+            srcs.iter_mut().map(|x| x as &mut dyn TrafficSource).collect();
         let (rep, _) = run_fork(master, &mut s, None);
         class_triple(TrafficClass::Collective, &rep)
     };
@@ -268,6 +374,24 @@ pub(crate) fn mean_or_zero(w: &Welford) -> f64 {
         0.0
     } else {
         w.mean()
+    }
+}
+
+/// Count-weighted mean across the per-source domain-latency accumulators
+/// of one class (per-rack coherence domains, per-rack collective rings):
+/// `sum(count * mean) / sum(count)`, 0 when nothing completed.
+pub(crate) fn merged_mean<'a>(ws: impl Iterator<Item = &'a Welford>) -> f64 {
+    let (mut n, mut sum) = (0u64, 0.0f64);
+    for w in ws {
+        if w.count() > 0 {
+            n += w.count();
+            sum += w.count() as f64 * w.mean();
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
     }
 }
 
@@ -286,11 +410,12 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
 
     // --- solo baselines --------------------------------------------------
     let (coh_solo, coh_solo_op) = {
-        let mut src = coherence_source(&sys, cfg, horizon);
-        let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
+        let mut srcs = coherence_sources(&sys, cfg, horizon);
+        let mut solo: Vec<&mut dyn TrafficSource> =
+            srcs.iter_mut().map(|x| x as &mut dyn TrafficSource).collect();
         let rep = master.run_streamed(&mut solo);
         let c = rep.class(TrafficClass::Coherence);
-        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.op_latency()))
+        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), merged_mean(srcs.iter().map(|s| s.op_latency())))
     };
     master.freeze_paths();
     let (tier_solo, tier_solo_mig) = {
@@ -301,20 +426,21 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.migration_latency()))
     };
     let (col_solo, col_solo_rep) = {
-        let mut src = collective_source(&sys, cfg);
-        let mut solo: [&mut dyn TrafficSource; 1] = [&mut src];
+        let mut srcs = collective_sources(&sys, cfg);
+        let mut solo: Vec<&mut dyn TrafficSource> =
+            srcs.iter_mut().map(|x| x as &mut dyn TrafficSource).collect();
         let (rep, _) = run_fork(&master, &mut solo, None);
         let c = rep.class(TrafficClass::Collective);
-        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), mean_or_zero(src.repeat_latency()))
+        ((c.mean_ns(), c.p50_ns(), c.p99_ns()), merged_mean(srcs.iter().map(|s| s.repeat_latency())))
     };
 
     // --- mixed run -------------------------------------------------------
-    let mut coh = coherence_source(&sys, cfg, horizon);
+    let mut coh = coherence_sources(&sys, cfg, horizon);
     let mut tier = tiering_source(&sys, cfg, horizon);
-    let mut col = collective_source(&sys, cfg);
+    let mut col = collective_sources(&sys, cfg);
     let (mixed, util) = {
-        let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
-        run_fork(&master, &mut sources, None)
+        let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
+        run_fork_with(&master, &mut sources, None, cfg.sharded, cfg.shards)
     };
 
     let row = |class: TrafficClass,
@@ -337,9 +463,9 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         }
     };
     let rows = vec![
-        row(TrafficClass::Coherence, coh_solo, coh_solo_op, mean_or_zero(coh.op_latency())),
+        row(TrafficClass::Coherence, coh_solo, coh_solo_op, merged_mean(coh.iter().map(|s| s.op_latency()))),
         row(TrafficClass::Tiering, tier_solo, tier_solo_mig, mean_or_zero(tier.migration_latency())),
-        row(TrafficClass::Collective, col_solo, col_solo_rep, mean_or_zero(col.repeat_latency())),
+        row(TrafficClass::Collective, col_solo, col_solo_rep, merged_mean(col.iter().map(|s| s.repeat_latency()))),
     ];
     MixedReport {
         rows,
@@ -347,6 +473,7 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         mixed_events: mixed.total.events,
         mixed_peak_utilization: util,
         peak_inflight: mixed.peak_inflight,
+        mode: mixed.mode.clone(),
     }
 }
 
@@ -385,6 +512,18 @@ pub fn render(r: &MixedReport) -> String {
         100.0 * r.mixed_peak_utilization,
         r.peak_inflight
     ));
+    match &r.mode {
+        // serial output stays byte-identical to what it always was
+        ShardMode::Serial => {}
+        ShardMode::Sharded { shards, pinned_sources } => {
+            out.push_str(&format!(
+                "backend: sharded ({shards} shards, {pinned_sources} pinned reactive sources)\n"
+            ));
+        }
+        ShardMode::SerialFallback { reason } => {
+            out.push_str(&format!("backend: serial fallback ({reason})\n"));
+        }
+    }
     let p99 = |class: TrafficClass| r.row(class).map(MixedClassRow::p99_inflation).unwrap_or(1.0);
     out.push_str(&format!(
         "RESULT mixed max_tx_inflation={:.3} coherence_p99_inflation={:.3} tiering_p99_inflation={:.3} collective_p99_inflation={:.3}\n",
@@ -449,8 +588,58 @@ mod tests {
 
     #[test]
     fn flat_ring_variant_runs() {
-        let cfg = MixedConfig { hierarchical: false, ..small() };
+        let cfg = MixedConfig { shape: CollectiveShape::FlatRing, ..small() };
         let r = run_mixed(&cfg);
         assert!(r.row(TrafficClass::Collective).unwrap().completed > 0);
+    }
+
+    #[test]
+    fn rack_rings_variant_runs() {
+        let cfg = MixedConfig { shape: CollectiveShape::RackRings, ..small() };
+        let r = run_mixed(&cfg);
+        assert!(r.row(TrafficClass::Collective).unwrap().completed > 0);
+        assert_eq!(r.mode, ShardMode::Serial);
+    }
+
+    /// The CI parity smoke in unit-test form: the rack-rings mixed point
+    /// on the sharded backend reproduces the serial report — and with
+    /// per-rack sharing domains and per-rack rings it must actually
+    /// shard, pinning every reactive source, not fall back.
+    #[test]
+    fn rack_rings_sharded_matches_serial() {
+        let base = MixedConfig { shape: CollectiveShape::RackRings, ..small() };
+        let ser = run_mixed(&base);
+        // explicit shard cap: independent of host core count
+        let shr = run_mixed(&MixedConfig { sharded: true, shards: 4, ..base });
+        match &shr.mode {
+            ShardMode::Sharded { shards, pinned_sources } => {
+                assert!(*shards >= 2, "rack-rings point collapsed to {shards} shard(s)");
+                // 4 coherence domains + 4 rack rings, all closed-loop
+                assert_eq!(*pinned_sources, 8);
+            }
+            m => panic!("rack-rings mixed point must shard, got {m:?}"),
+        }
+        assert_eq!(ser.mixed_events, shr.mixed_events);
+        assert!((ser.mixed_makespan_ns - shr.mixed_makespan_ns).abs() < 1e-9);
+        for (a, b) in ser.rows.iter().zip(&shr.rows) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.completed, b.completed);
+            assert!((a.bytes - b.bytes).abs() < 1e-6);
+            assert!(
+                (a.mixed_tx_ns - b.mixed_tx_ns).abs() <= 1e-6 * a.mixed_tx_ns.max(1.0),
+                "{}: mixed tx {} vs {}",
+                a.class.name(),
+                a.mixed_tx_ns,
+                b.mixed_tx_ns
+            );
+            assert!((a.mixed_p99_ns - b.mixed_p99_ns).abs() <= 1e-6 * a.mixed_p99_ns.max(1.0));
+            assert!((a.mixed_domain_ns - b.mixed_domain_ns).abs() <= 1e-6 * a.mixed_domain_ns.max(1.0));
+        }
+        // the line the CI smoke greps must be byte-identical
+        let result_line = |s: &str| {
+            s.lines().find(|l| l.starts_with("RESULT mixed")).map(String::from).unwrap()
+        };
+        assert_eq!(result_line(&render(&ser)), result_line(&render(&shr)));
+        assert!(render(&shr).contains("backend: sharded ("));
     }
 }

@@ -22,7 +22,7 @@ pub mod rails;
 
 pub use fig6::{run_fig6, Fig6Row};
 pub use fig7::{run_fig7, run_fig7_detailed, Fig7DetailedConfig, Fig7Row};
-pub use mixed::{run_mixed, MixedConfig, MixedReport};
+pub use mixed::{run_mixed, CollectiveShape, MixedConfig, MixedReport};
 pub use qos::{run_qos, PolicySpec, QosReport, QosSweepConfig};
 pub use rails::{run_rails, RailSpec, RailsReport, RailsSweepConfig};
 pub use table1::{run_table1, Table1Row};

@@ -12,11 +12,11 @@
 //! applied through the coordinator's [`QosManager`].
 
 use super::mixed::{
-    build_system, coherence_source, collective_source, horizon_estimate, run_fork, solo_baselines,
-    tiering_source, MixedConfig,
+    as_dyn_sources, build_system, coherence_sources, collective_sources, horizon_estimate,
+    run_fork, solo_baselines, tiering_source, MixedConfig,
 };
 use crate::coordinator::QosManager;
-use crate::sim::{ArbPolicy, LinkTier, MemSim, StreamReport, TrafficClass, TrafficSource};
+use crate::sim::{ArbPolicy, LinkTier, MemSim, StreamReport, TrafficClass};
 
 /// One policy point of the sweep.
 #[derive(Clone, Debug)]
@@ -211,11 +211,11 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
     let mut policies = Vec::new();
     for spec in &cfg.policies {
         let mgr = QosManager::uniform(spec.policy);
-        let mut coh = coherence_source(&sys, mcfg, horizon);
+        let mut coh = coherence_sources(&sys, mcfg, horizon);
         let mut tier = tiering_source(&sys, mcfg, horizon);
-        let mut col = collective_source(&sys, mcfg);
+        let mut col = collective_sources(&sys, mcfg);
         let (rep, util) = {
-            let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
+            let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
             run_fork(&master, &mut sources, Some(&mgr))
         };
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {

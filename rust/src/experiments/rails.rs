@@ -15,8 +15,8 @@
 //! reproduces `mixed` string-exactly (asserted by the CI smoke).
 
 use super::mixed::{
-    build_system, coherence_source, collective_source, horizon_estimate, solo_baselines,
-    tiering_source, MixedConfig,
+    as_dyn_sources, build_system, coherence_sources, collective_sources, horizon_estimate,
+    solo_baselines, tiering_source, MixedConfig,
 };
 use super::qos::QosClassRow;
 use crate::coordinator::RoutingManager;
@@ -185,11 +185,11 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
     let mut policies = Vec::new();
     for spec in &cfg.policies {
         let mgr = RoutingManager::uniform(spec.selector);
-        let mut coh = coherence_source(&sys, mcfg, horizon);
+        let mut coh = coherence_sources(&sys, mcfg, horizon);
         let mut tier = tiering_source(&sys, mcfg, horizon);
-        let mut col = collective_source(&sys, mcfg);
+        let mut col = collective_sources(&sys, mcfg);
         let (rep, util, paths, pairs) = {
-            let mut sources: [&mut dyn TrafficSource; 3] = [&mut coh, &mut tier, &mut col];
+            let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
             run_point(&master, &mut sources, &mgr)
         };
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {

@@ -164,20 +164,7 @@ impl Topology {
         if n == 0 {
             return Vec::new();
         }
-        // anchor: the switch subtree each node belongs to
-        let anchor: Vec<usize> = (0..n)
-            .map(|i| {
-                if self.nodes[i].kind == NodeKind::Switch {
-                    i
-                } else {
-                    self.neighbors(i)
-                        .iter()
-                        .find(|&&(m, _)| self.nodes[m].kind == NodeKind::Switch)
-                        .map(|&(m, _)| m)
-                        .unwrap_or(i)
-                }
-            })
-            .collect();
+        let anchor = self.domain_anchors();
         let mut size = vec![0usize; n];
         for &a in &anchor {
             size[a] += 1;
@@ -199,6 +186,89 @@ impl Topology {
             }
         }
         (0..n).map(|i| bin_of[anchor[i]]).collect()
+    }
+
+    /// Like [`partition_domains`](Topology::partition_domains), but with
+    /// the *coupled-domain* constraint pass used by reactive sharding:
+    /// every node group in `groups` (a reactive source's footprint closed
+    /// over its path link owners) is guaranteed to land inside a single
+    /// domain. Touched switch subtrees are merged with a union-find
+    /// before packing, and the merged components — which can be very
+    /// uneven — are packed with an LPT (longest-processing-time) pass
+    /// into at most `max_domains` balanced bins. Returns one dense domain
+    /// id per node; deterministic for a given topology and group list.
+    pub fn partition_domains_coupled(&self, max_domains: usize, groups: &[Vec<NodeId>]) -> Vec<u32> {
+        let n = self.nodes.len();
+        let max_domains = max_domains.max(1);
+        if n == 0 {
+            return Vec::new();
+        }
+        let anchor = self.domain_anchors();
+        let mut size = vec![0usize; n];
+        for &a in &anchor {
+            size[a] += 1;
+        }
+        // union-find over anchors; every footprint's subtrees collapse
+        // into one component
+        fn find(parent: &mut [usize], mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]]; // path halving
+                x = parent[x];
+            }
+            x
+        }
+        let mut parent: Vec<usize> = (0..n).collect();
+        for g in groups {
+            if let Some((&first, rest)) = g.split_first() {
+                let root = find(&mut parent, anchor[first]);
+                for &m in rest {
+                    let r = find(&mut parent, anchor[m]);
+                    parent[r] = root;
+                }
+            }
+        }
+        // component weight (node count) and min-anchor id, keyed by root
+        let anchors: Vec<usize> = (0..n).filter(|&i| size[i] > 0).collect();
+        let mut cweight = vec![0usize; n];
+        let mut cmin = vec![usize::MAX; n];
+        for &a in &anchors {
+            let r = find(&mut parent, a);
+            cweight[r] += size[a];
+            cmin[r] = cmin[r].min(a);
+        }
+        let mut comps: Vec<usize> = (0..n).filter(|&i| cweight[i] > 0).collect();
+        let k = max_domains.min(comps.len()).max(1);
+        // LPT: heaviest component first (min-anchor tiebreak for
+        // determinism), each into the currently least-loaded bin. The
+        // first k components seed k distinct bins, so ids stay dense.
+        comps.sort_by(|&a, &b| cweight[b].cmp(&cweight[a]).then(cmin[a].cmp(&cmin[b])));
+        let mut load = vec![0usize; k];
+        let mut bin_of_root = vec![0u32; n];
+        for &c in &comps {
+            let bin = (0..k).min_by_key(|&b| (load[b], b)).unwrap();
+            bin_of_root[c] = bin as u32;
+            load[bin] += cweight[c];
+        }
+        (0..n).map(|i| bin_of_root[find(&mut parent, anchor[i])]).collect()
+    }
+
+    /// The switch subtree each node belongs to: switches anchor
+    /// themselves; an endpoint joins its first switch neighbor (its rack
+    /// crossbar / CXL leaf), or itself when it has none.
+    fn domain_anchors(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .map(|i| {
+                if self.nodes[i].kind == NodeKind::Switch {
+                    i
+                } else {
+                    self.neighbors(i)
+                        .iter()
+                        .find(|&&(m, _)| self.nodes[m].kind == NodeKind::Switch)
+                        .map(|&(m, _)| m)
+                        .unwrap_or(i)
+                }
+            })
+            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -408,6 +478,80 @@ mod tests {
             assert!(k <= max.min(t.nodes.len()), "max {max}: got {k} domains");
         }
         assert!(t.partition_domains(1).iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn coupled_partition_colocates_groups() {
+        let (mut t, leaves) = Topology::clos(8, 2, LinkKind::CxlCoherent, "c");
+        let mut eps = Vec::new();
+        for (i, &l) in leaves.iter().enumerate() {
+            for e in 0..4 {
+                let n = t.add_node(NodeKind::Accelerator, format!("ep{i}-{e}"));
+                t.connect(n, l, LinkKind::CxlCoherent);
+                eps.push(n);
+            }
+        }
+        // couple one endpoint from leaf 0 with one from leaf 5: both
+        // subtrees must land in the same domain
+        let groups = vec![vec![eps[0], eps[5 * 4]]];
+        let doms = t.partition_domains_coupled(4, &groups);
+        assert_eq!(doms.len(), t.nodes.len());
+        assert_eq!(doms[eps[0]], doms[eps[5 * 4]], "coupled group split across domains");
+        assert_eq!(doms[eps[0]], doms[leaves[0]]);
+        assert_eq!(doms[eps[5 * 4]], doms[leaves[5]]);
+        let k = doms.iter().copied().max().unwrap() as usize + 1;
+        assert!(k > 1 && k <= 4, "expected 2..=4 domains, got {k}");
+        for d in 0..k as u32 {
+            assert!(doms.iter().any(|&x| x == d), "domain {d} empty");
+        }
+        // subtree integrity still holds
+        for (i, &l) in leaves.iter().enumerate() {
+            for e in 0..4 {
+                assert_eq!(doms[eps[i * 4 + e]], doms[l]);
+            }
+        }
+        // deterministic
+        assert_eq!(doms, t.partition_domains_coupled(4, &groups));
+    }
+
+    #[test]
+    fn coupled_partition_balances_disjoint_groups() {
+        // 8 disjoint leaf groups, LPT over 4 bins: 2 subtrees per bin
+        let (mut t, leaves) = Topology::clos(8, 2, LinkKind::CxlCoherent, "c");
+        let mut groups = Vec::new();
+        for &l in &leaves {
+            let mut g = Vec::new();
+            for _ in 0..4 {
+                let n = t.add_node(NodeKind::Accelerator, "ep");
+                t.connect(n, l, LinkKind::CxlCoherent);
+                g.push(n);
+            }
+            groups.push(g);
+        }
+        let doms = t.partition_domains_coupled(4, &groups);
+        let k = doms.iter().copied().max().unwrap() as usize + 1;
+        assert_eq!(k, 4);
+        let mut per_bin = vec![0usize; k];
+        for &l in &leaves {
+            per_bin[doms[l] as usize] += 1;
+        }
+        assert!(per_bin.iter().all(|&c| c == 2), "LPT must spread 8 equal subtrees 2-per-bin: {per_bin:?}");
+    }
+
+    #[test]
+    fn coupled_partition_fabric_wide_group_collapses() {
+        let (mut t, leaves) = Topology::clos(4, 2, LinkKind::CxlCoherent, "c");
+        let mut all = Vec::new();
+        for &l in &leaves {
+            let n = t.add_node(NodeKind::Accelerator, "ep");
+            t.connect(n, l, LinkKind::CxlCoherent);
+            all.push(n);
+        }
+        // one group spanning every leaf: endpoints all merge into a
+        // single domain (spine singletons may still occupy others)
+        let doms = t.partition_domains_coupled(4, &[all.clone()]);
+        let d0 = doms[all[0]];
+        assert!(all.iter().all(|&n| doms[n] == d0), "fabric-wide group must collapse to one domain");
     }
 
     #[test]

@@ -172,6 +172,21 @@ impl Engine {
         }
     }
 
+    /// [`Engine::with_granularity`] plus a slab capacity hint: reserve
+    /// the SoA payload columns for ~`slots` concurrently pending events
+    /// up front. Sharded workers size this from their shard's link count
+    /// so the slab never reallocates (and stays cache-resident) during
+    /// epoch dispatch; the hint is only a reservation — the slab still
+    /// grows on demand past it.
+    pub fn with_granularity_and_capacity(granularity: f64, slots: usize) -> Engine {
+        let mut e = Engine::with_granularity(granularity);
+        e.tags.reserve(slots);
+        e.w0.reserve(slots);
+        e.w1.reserve(slots);
+        e.free.reserve(slots);
+        e
+    }
+
     pub fn now(&self) -> SimTime {
         self.now
     }

@@ -915,13 +915,19 @@ impl<'f> MemSim<'f> {
     /// calendar engine per shard on scoped worker threads, and hand
     /// cross-shard transactions off through per-shard mailboxes under
     /// conservative lookahead (bounded below by the minimum
-    /// cross-partition hop latency). Per-class completed counts, byte
-    /// totals and the per-transaction latency multiset match the serial
-    /// backend exactly (pinned by `prop_sharded_matches_serial`).
+    /// cross-partition hop latency). A reactive source that declares a
+    /// static [`TrafficSource::footprint`] is co-located inside one shard
+    /// by coupled-domain partitioning and runs *on* that shard's worker;
+    /// open-loop sources are staged by the coordinator as before.
+    /// Per-class completed counts, byte totals and the per-transaction
+    /// latency multiset match the serial backend exactly (pinned by
+    /// `prop_sharded_matches_serial`).
     ///
     /// Falls back to the serial loop when sharding cannot help or cannot
-    /// be conservative: a single shard, non-positive lookahead, or any
-    /// reactive (non-[`TrafficSource::open_loop`]) source.
+    /// be conservative — a single shard, non-positive lookahead, a
+    /// reactive source without a footprint, or a footprint that collapses
+    /// the partition (e.g. a fabric-wide ring) — and says why in the
+    /// report's [`ShardMode::SerialFallback`](super::traffic::ShardMode).
     pub fn run_streamed_sharded(&mut self, sources: &mut [&mut dyn TrafficSource]) -> StreamReport {
         let shards = crate::util::par::shards_for(usize::MAX);
         self.run_streamed_sharded_with(sources, shards)
@@ -934,10 +940,36 @@ impl<'f> MemSim<'f> {
         sources: &mut [&mut dyn TrafficSource],
         max_shards: usize,
     ) -> StreamReport {
-        let open = sources.iter().all(|s| s.open_loop());
-        match super::shard::plan(self.fabric, &self.consts, max_shards) {
-            Some(plan) if open => super::shard::run(self, sources, &plan),
-            _ => self.run_streamed(sources),
+        use super::shard::{PlanOutcome, SourceMeta};
+        let meta: Vec<SourceMeta> = sources
+            .iter()
+            .map(|s| {
+                let open = s.open_loop();
+                SourceMeta { open, footprint: if open { None } else { s.footprint() } }
+            })
+            .collect();
+        // the effective rail fan at injection: footprint closures must
+        // cover every rail a pinned source's traffic can spray over
+        let rail_fan = self.fabric.router().max_rails();
+        let spraying = rail_fan > 1
+            && self.spread != [false; LinkTier::COUNT]
+            && self.routing.resolution().spreads();
+        let rails = if spraying { rail_fan as u16 } else { 1 };
+        match super::shard::plan(
+            self.fabric,
+            &self.consts,
+            &self.tiers,
+            self.spread,
+            rails,
+            &meta,
+            max_shards,
+        ) {
+            PlanOutcome::Sharded(plan) => super::shard::run(self, sources, &plan),
+            PlanOutcome::Fallback(reason) => {
+                let mut rep = self.run_streamed(sources);
+                rep.mode = super::traffic::ShardMode::SerialFallback { reason };
+                rep
+            }
         }
     }
 

@@ -55,4 +55,7 @@ pub use memsim::{MemSim, MemSimReport, Transaction};
 pub use qos::{ArbPolicy, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 pub use rails::{RailSelector, RoutingPolicy};
 pub use server::Server;
-pub use traffic::{BatchSource, ClassReport, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
+pub use traffic::{
+    BatchSource, ClassReport, Pull, ShardMode, ShardStats, SourcedTx, StreamReport, TrafficClass,
+    TrafficSource,
+};

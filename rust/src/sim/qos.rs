@@ -408,7 +408,10 @@ impl ClassedServer {
     /// bookkeeping (§Perf, epoch batching): the FCFS branch chains the
     /// release horizon through a register instead of re-loading and
     /// re-storing `free_at` per transaction, and the policy dispatch is
-    /// paid once per batch instead of once per admission.
+    /// paid once per batch instead of once per admission. Used by both
+    /// the serial streamed loop and the sharded workers (each shard owns
+    /// its links' servers outright, so the same same-timestamp
+    /// same-direction coalescing applies unchanged inside an epoch).
     pub fn admit_batch(&mut self, now: f64, batch: &[BatchAdmit], out: &mut Vec<Admission>) {
         if let ArbPolicy::FcfsShared = self.policy {
             let mut free = self.free_at;

@@ -23,18 +23,36 @@
 //! and can safely be delivered at the epoch barrier). With `L <= 0` or a
 //! single domain the caller falls back to the serial loop.
 //!
-//! Sources stay on the coordinator thread: only **open-loop** sources
-//! ([`TrafficSource::open_loop`]) are eligible, so injections can be
-//! staged ahead of the window and `on_complete` is telemetry-only
-//! (invoked at the barrier in completion-time order). A reactive source's
-//! zero-delay completion→emission chain could cross shards faster than
-//! any fabric lookahead — those workloads keep the exact serial loop.
+//! # Coupled-domain scheduling of reactive sources
+//!
+//! **Open-loop** sources ([`TrafficSource::open_loop`]) stay on the
+//! coordinator thread: injections are staged ahead of the window and
+//! `on_complete` is telemetry-only (invoked at the barrier in
+//! completion-time order). A **reactive** source's zero-delay
+//! completion→emission chain could cross shards faster than any fabric
+//! lookahead — so a reactive source is only admitted when it declares a
+//! static [`TrafficSource::footprint`]. [`plan`] closes each footprint
+//! over the *owners* of every link its traffic can ride (all ordered
+//! endpoint pairs × all rails it can spray over) and hands the closures
+//! to [`Topology::partition_domains_coupled`](crate::fabric::Topology::partition_domains_coupled),
+//! which merges the touched domains before balanced packing. The source
+//! is then **pinned to its owning shard's worker**: pull, injection,
+//! `on_complete` and the unblock chain all run inside that worker's
+//! event loop (an exact port of the serial pump), and by construction
+//! none of its transactions ever generates a cross-shard handoff. When
+//! *every* source is pinned no traffic crosses a boundary at all, the
+//! lookahead is `INFINITY` and the whole run is one fully parallel
+//! epoch. A reactive source without a footprint — or one whose closure
+//! collapses the partition to a single shard (e.g. a fabric-wide ring) —
+//! falls the whole run back to the serial loop, reported through
+//! [`ShardMode::SerialFallback`].
 //!
 //! # Multi-rail routing
 //!
-//! Rails are resolved by the coordinator at staging time — the same
-//! injection-time contract as the serial loop, hashing the identical
-//! `(src, dst, flow-or-emission-index)` key (a source that stamps
+//! Rails are resolved at injection — by the coordinator at staging time
+//! for open-loop sources, by the owning worker for pinned sources —
+//! hashing the identical `(src, dst, flow-or-emission-index)` key (a
+//! source that stamps
 //! [`SourcedTx::with_flow`](super::traffic::SourcedTx::with_flow)
 //! pins the whole flow to one rail; otherwise the per-source emission
 //! index sprays per transaction), so
@@ -48,13 +66,17 @@
 //! unchanged by multipath: `plan` minimizes `fixed + switch` over
 //! *every* link direction whose receiver is a gateway node, a superset
 //! of the union of boundary-crossing rails, so every rail a transaction
-//! can ride is already inside the bound.
+//! can ride is already inside the bound; footprint closures walk the
+//! same rail set, so a pinned source's sprayed traffic is co-located on
+//! every rail it can pick.
 //!
 //! # Equivalence
 //!
 //! Within a shard events dispatch in `(time, seq)` order and every
 //! per-server admission sequence is time-ordered exactly as in the serial
-//! loop, so per-class completed counts, byte totals and the sorted
+//! loop (including the same-timestamp same-link-direction
+//! [`ClassedServer::admit_batch`] coalescing the serial loop uses), so
+//! per-class completed counts, byte totals and the sorted
 //! per-transaction latency multiset match the serial backend
 //! (`tests/prop_invariants.rs::prop_sharded_matches_serial`). Event
 //! *counts* use the same convention as the serial streamed loop (one
@@ -62,25 +84,58 @@
 
 use super::engine::{Engine, EventKind};
 use super::memsim::{path_key, rail_hops, rail_step, LinkConsts, MemSim};
-use super::qos::{Admission, ClassedServer, LinkTier};
+use super::qos::{Admission, BatchAdmit, ClassedServer, LinkTier};
 use super::rails::spray_rail;
-use super::traffic::{Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
-use crate::fabric::{Fabric, NodeKind};
+use super::traffic::{
+    Pull, ShardMode, ShardStats, SourcedTx, StreamReport, TrafficClass, TrafficSource,
+};
+use crate::fabric::{Fabric, NodeId, NodeKind};
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// Per-source injections staged beyond the current window are bounded, so
 /// streamed memory stays O(peak in-flight) even under infinite lookahead
 /// (fully disjoint shards).
 const MAX_STAGE_PER_SOURCE: usize = 4096;
 
+/// What [`plan`] needs to know about each source: whether it is
+/// open-loop (stays on the coordinator) and, for reactive sources, the
+/// static footprint to co-locate (`None` = undeclared → serial fallback).
+pub(crate) struct SourceMeta {
+    pub(crate) open: bool,
+    pub(crate) footprint: Option<Vec<NodeId>>,
+}
+
+/// [`plan`]'s verdict: a runnable partition, or the reason the run must
+/// stay serial (surfaced as [`ShardMode::SerialFallback`]).
+pub(crate) enum PlanOutcome {
+    Sharded(ShardPlan),
+    Fallback(String),
+}
+
+impl PlanOutcome {
+    #[cfg(test)]
+    pub(crate) fn sharded(self) -> Option<ShardPlan> {
+        match self {
+            PlanOutcome::Sharded(p) => Some(p),
+            PlanOutcome::Fallback(_) => None,
+        }
+    }
+}
+
 /// The partition and its conservative bound.
 pub(crate) struct ShardPlan {
     pub(crate) node_shard: Vec<u32>,
     pub(crate) link_shard: Vec<u32>,
     pub(crate) nshards: usize,
+    /// Owning shard per source: `Some(shard)` pins a reactive source to
+    /// that shard's worker, `None` keeps an open-loop source on the
+    /// coordinator.
+    pub(crate) pinned: Vec<Option<u32>>,
     /// Minimum cross-partition hop latency, ns (`f64::INFINITY` when no
-    /// path crosses a boundary — shards then run fully decoupled).
+    /// traffic can cross a boundary — every source pinned — so shards
+    /// run fully decoupled in a single epoch).
     pub(crate) lookahead: f64,
 }
 
@@ -96,8 +151,8 @@ struct ShardTx {
     source: u32,
     class: TrafficClass,
     token: u64,
-    /// Equal-cost rail this transaction rides, resolved once by the
-    /// coordinator at staging time (see the multi-rail note below).
+    /// Equal-cost rail this transaction rides, resolved once at
+    /// injection (see the multi-rail note above).
     rail: u16,
 }
 
@@ -116,7 +171,11 @@ struct LocalTx {
 }
 
 enum Cmd {
-    Epoch { t1: f64, inbox: Vec<Handoff> },
+    /// Run one epoch `[.., t1)`. `inbox` carries this epoch's deliveries;
+    /// `out` and `completions` are empty recycled buffers the worker
+    /// fills and returns (mailbox memory is reused across epochs instead
+    /// of reallocated).
+    Epoch { t1: f64, inbox: Vec<Handoff>, out: Vec<(u32, Handoff)>, completions: Vec<Completion> },
     Finish,
 }
 
@@ -134,6 +193,8 @@ enum Resp {
         /// Cross-shard handoffs generated this epoch: `(target, message)`.
         out: Vec<(u32, Handoff)>,
         completions: Vec<Completion>,
+        /// The drained inbox buffer, returned for recycling.
+        spent: Vec<Handoff>,
         /// Earliest still-pending local event (INFINITY when idle).
         next_event: f64,
     },
@@ -143,60 +204,152 @@ enum Resp {
         now: f64,
         dispatched: u64,
         peak_slots: usize,
+        /// Wall-clock seconds this worker spent waiting on the barrier.
+        idle_s: f64,
     },
 }
 
-/// Derive the shard plan: topology domains, link ownership and the
-/// conservative lookahead. `None` when sharding cannot help (one domain,
-/// one requested shard, or a non-positive lookahead) — callers fall back
-/// to the serial loop.
-pub(crate) fn plan(fabric: &Fabric, consts: &[LinkConsts], max_shards: usize) -> Option<ShardPlan> {
+/// The shard that owns link `l`: the endpoint side's subtree when one
+/// side is an endpoint, else node `a`'s domain. Every link is owned by
+/// exactly one shard, which owns both direction servers. The footprint
+/// closure in [`plan`] MUST use the same rule, so it closes over the
+/// node whose `node_shard` entry decides each traversed link.
+#[inline]
+fn link_owner(topo: &crate::fabric::Topology, a: NodeId, b: NodeId) -> NodeId {
+    if topo.node(a).kind != NodeKind::Switch {
+        a
+    } else if topo.node(b).kind != NodeKind::Switch {
+        b
+    } else {
+        a
+    }
+}
+
+/// Derive the shard plan: topology domains (coupled over reactive
+/// footprints), link ownership, source pinning and the conservative
+/// lookahead. `rails` is the effective rail fan at injection (1 when the
+/// run does not spray) — footprint closures walk every rail a pinned
+/// source's traffic can ride. Returns [`PlanOutcome::Fallback`] with the
+/// reason when sharding cannot help or cannot be conservative.
+pub(crate) fn plan(
+    fabric: &Fabric,
+    consts: &[LinkConsts],
+    tiers: &[LinkTier],
+    spread: [bool; LinkTier::COUNT],
+    rails: u16,
+    meta: &[SourceMeta],
+    max_shards: usize,
+) -> PlanOutcome {
     if max_shards <= 1 {
-        return None;
+        return PlanOutcome::Fallback("sharding disabled (max_shards <= 1)".into());
     }
     let topo = &fabric.topo;
-    let node_shard = topo.partition_domains(max_shards);
-    let nshards = node_shard.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
-    if nshards <= 1 {
-        return None;
-    }
-    // a link lives with its endpoint's subtree (the endpoint side when one
-    // side is an endpoint, else node `a`'s domain) — every link is owned
-    // by exactly one shard, which owns both direction servers
-    let link_shard: Vec<u32> = topo
-        .links
-        .iter()
-        .map(|l| {
-            if topo.node(l.a).kind != NodeKind::Switch {
-                node_shard[l.a]
-            } else if topo.node(l.b).kind != NodeKind::Switch {
-                node_shard[l.b]
-            } else {
-                node_shard[l.a]
+    // footprint closure per reactive source: the declared nodes plus the
+    // owner node of every link any of its transactions can traverse, on
+    // every rail it can spray over — co-locating the owners co-locates
+    // the link servers, so the source's events never leave its shard
+    let mut groups: Vec<Vec<NodeId>> = Vec::new();
+    for (i, m) in meta.iter().enumerate() {
+        if m.open {
+            continue;
+        }
+        let fp = match &m.footprint {
+            Some(fp) => fp,
+            None => {
+                return PlanOutcome::Fallback(format!(
+                    "reactive source {i} has no static footprint"
+                ))
             }
-        })
-        .collect();
-    let first = link_shard.first().copied();
-    if link_shard.iter().all(|&s| Some(s) == first) {
-        return None; // every link in one shard: nothing to parallelize
-    }
-    // gateway nodes: incident links span more than one shard — the only
-    // places a path can change shards
-    let mut gateway = vec![false; topo.nodes.len()];
-    for (n, g) in gateway.iter_mut().enumerate() {
-        let mut s0 = None;
-        for &(_, l) in topo.neighbors(n) {
-            match s0 {
-                None => s0 = Some(link_shard[l]),
-                Some(x) if x != link_shard[l] => {
-                    *g = true;
-                    break;
+        };
+        if fp.is_empty() {
+            continue; // emits nothing: pinned to shard 0 below
+        }
+        let mut closure: Vec<NodeId> = fp.clone();
+        let mut seen = vec![false; topo.nodes.len()];
+        for &n in &closure {
+            seen[n] = true;
+        }
+        for &a in fp {
+            for &b in fp {
+                if a == b {
+                    continue;
                 }
-                _ => {}
+                for rail in 0..rails.max(1) {
+                    let mut at = a;
+                    let mut steps = 0usize;
+                    while at != b {
+                        let Some((next, link)) = rail_step(fabric, tiers, spread, at, b, rail)
+                        else {
+                            break; // unreachable pair: injection will panic, not here
+                        };
+                        let l = &topo.links[link];
+                        let owner = link_owner(topo, l.a, l.b);
+                        if !seen[owner] {
+                            seen[owner] = true;
+                            closure.push(owner);
+                        }
+                        at = next;
+                        steps += 1;
+                        if steps > topo.nodes.len() {
+                            break; // routing loop guard
+                        }
+                    }
+                }
             }
         }
+        groups.push(closure);
     }
-    // lookahead: a handoff out of link (l, dir) arrives at
+    let node_shard = if groups.is_empty() {
+        topo.partition_domains(max_shards)
+    } else {
+        topo.partition_domains_coupled(max_shards, &groups)
+    };
+    let nshards = node_shard.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    if nshards <= 1 {
+        return PlanOutcome::Fallback(if groups.is_empty() {
+            "topology yields a single domain".into()
+        } else {
+            "reactive footprints span the whole fabric (single merged domain)".into()
+        });
+    }
+    let link_shard: Vec<u32> =
+        topo.links.iter().map(|l| node_shard[link_owner(topo, l.a, l.b)]).collect();
+    let first = link_shard.first().copied();
+    if link_shard.iter().all(|&s| Some(s) == first) {
+        return PlanOutcome::Fallback("every link owned by one shard".into());
+    }
+    // pin each reactive source to the shard holding its (merged) closure
+    let mut pinned: Vec<Option<u32>> = Vec::with_capacity(meta.len());
+    let mut g = 0usize;
+    for m in meta {
+        if m.open {
+            pinned.push(None);
+        } else if m.footprint.as_ref().map(|fp| fp.is_empty()).unwrap_or(false) {
+            pinned.push(Some(0));
+        } else {
+            let group = &groups[g];
+            g += 1;
+            let shard = node_shard[group[0]];
+            debug_assert!(
+                group.iter().all(|&n| node_shard[n] == shard),
+                "coupled partition split a reactive footprint closure"
+            );
+            pinned.push(Some(shard));
+        }
+    }
+    let any_open = meta.iter().any(|m| m.open);
+    if !any_open && !meta.is_empty() {
+        let first_pin = pinned.first().copied().flatten();
+        if pinned.iter().all(|&p| p == first_pin) {
+            return PlanOutcome::Fallback(
+                "every reactive source pinned to one shard (nothing to parallelize)".into(),
+            );
+        }
+    }
+    // lookahead: only open-loop traffic can cross shard boundaries (a
+    // pinned source's closure keeps its whole path inside one shard), so
+    // with no open sources the bound is INFINITY — one decoupled epoch.
+    // Otherwise a handoff out of link (l, dir) arrives at
     // done + fixed + switch_at_receiver with done >= now, so minimize
     // fixed + switch over directions whose receiving node is a gateway
     // (usually a switch; a non-switch gateway contributes switch_ns = 0,
@@ -205,27 +358,50 @@ pub(crate) fn plan(fabric: &Fabric, consts: &[LinkConsts], max_shards: usize) ->
     // EVERY gateway-receiving link direction — a superset of the union
     // of boundary-crossing rails — so whichever equal-cost rail a
     // transaction rides, its handoffs are stamped >= T0 + L
-    let mut lookahead = f64::INFINITY;
-    for (li, l) in topo.links.iter().enumerate() {
-        for (side, node) in [(0usize, l.a), (1usize, l.b)] {
-            if gateway[node] {
-                lookahead = lookahead.min(consts[li].fixed_ns + consts[li].switch_ns[side]);
+    let lookahead = if !any_open {
+        f64::INFINITY
+    } else {
+        let mut gateway = vec![false; topo.nodes.len()];
+        for (n, gw) in gateway.iter_mut().enumerate() {
+            let mut s0 = None;
+            for &(_, l) in topo.neighbors(n) {
+                match s0 {
+                    None => s0 = Some(link_shard[l]),
+                    Some(x) if x != link_shard[l] => {
+                        *gw = true;
+                        break;
+                    }
+                    _ => {}
+                }
             }
         }
-    }
-    if lookahead <= 0.0 {
-        return None; // a zero-latency boundary hop: cannot be conservative
-    }
-    Some(ShardPlan { node_shard, link_shard, nshards, lookahead })
+        let mut lookahead = f64::INFINITY;
+        for (li, l) in topo.links.iter().enumerate() {
+            for (side, node) in [(0usize, l.a), (1usize, l.b)] {
+                if gateway[node] {
+                    lookahead = lookahead.min(consts[li].fixed_ns + consts[li].switch_ns[side]);
+                }
+            }
+        }
+        if lookahead <= 0.0 {
+            return PlanOutcome::Fallback(
+                "non-positive conservative lookahead (zero-latency boundary hop)".into(),
+            );
+        }
+        lookahead
+    };
+    PlanOutcome::Sharded(ShardPlan { node_shard, link_shard, nshards, pinned, lookahead })
 }
 
-/// Pull source `i` once so it is staged one transaction ahead (the
-/// `(clamped issue time, tx)` pair), marking it done when exhausted.
-/// The clamp `at = tx.at.max(last_issue)` replicates the serial pump,
-/// whose `now` at pull time is the source's previous injection time.
+/// Pull coordinator-owned source `i` once so it is staged one
+/// transaction ahead (the `(clamped issue time, tx)` pair), marking it
+/// done when exhausted. The clamp `at = tx.at.max(last_issue)` replicates
+/// the serial pump, whose `now` at pull time is the source's previous
+/// injection time. Pinned sources (slot `None`) are staged by their
+/// worker, never here.
 fn stage_next(
     i: usize,
-    sources: &mut [&mut dyn TrafficSource],
+    sources: &mut [Option<&mut dyn TrafficSource>],
     staged: &mut [Option<(f64, SourcedTx)>],
     src_done: &mut [bool],
     last_issue: &[f64],
@@ -234,7 +410,11 @@ fn stage_next(
     if src_done[i] || staged[i].is_some() {
         return;
     }
-    match sources[i].pull(last_issue[i]) {
+    let Some(src) = sources[i].as_mut() else {
+        src_done[i] = true;
+        return;
+    };
+    match src.pull(last_issue[i]) {
         Pull::Tx(stx) => {
             let at = stx.tx.at.max(last_issue[i]);
             staged[i] = Some((at, stx));
@@ -247,8 +427,44 @@ fn stage_next(
     }
 }
 
-/// Run the sharded simulation. Callers have already verified the plan and
-/// that every source is open-loop.
+/// A reactive source pinned to one shard's worker: the worker runs the
+/// exact serial pump for it (stage one ahead as a `Custom` injection
+/// event, inject at issue time, `on_complete` + unblock on local
+/// completions).
+struct PinnedSrc<'s> {
+    global: u32,
+    src: &'s mut dyn TrafficSource,
+    staged: Option<SourcedTx>,
+    state: PinState,
+    inflight: usize,
+    emitted: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PinState {
+    Active,
+    Blocked,
+    Done,
+}
+
+/// Read-only run parameters shared by every worker.
+struct WorkerCtx<'e> {
+    shard: usize,
+    fabric: &'e Fabric,
+    consts: &'e [LinkConsts],
+    tiers: &'e [LinkTier],
+    spread: [bool; LinkTier::COUNT],
+    link_shard: &'e [u32],
+    granularity: f64,
+    rail_fan: usize,
+    spraying: bool,
+    /// Links this shard owns — sizes the slab arena up front.
+    owned_links: usize,
+    classes: &'e [TrafficClass],
+}
+
+/// Run the sharded simulation. Callers have already verified the plan
+/// (every reactive source carries a `pinned` shard).
 pub(crate) fn run(
     sim: &mut MemSim,
     sources: &mut [&mut dyn TrafficSource],
@@ -262,22 +478,54 @@ pub(crate) fn run(
     let k = plan.nshards;
     let nsrc = sources.len();
     let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
-    // multi-rail resolution at the coordinator: spray for any spreading
-    // policy (Adaptive degrades to HashSpray here — worker-owned queue
-    // state is not visible across shard boundaries)
+    // multi-rail resolution at injection: spray for any spreading policy
+    // (Adaptive degrades to HashSpray here — worker-owned queue state is
+    // not visible across shard boundaries)
     let rail_fan = fabric.router().max_rails();
     let spraying = rail_fan > 1
         && spread != [false; LinkTier::COUNT]
         && sim.routing_policy().resolution().spreads();
+    let pinned_total = plan.pinned.iter().flatten().count();
+
+    // split the source slice: pinned sources move onto their owning
+    // shard's worker, open-loop sources stay with the coordinator
+    let mut pinned_lists: Vec<Vec<PinnedSrc<'_>>> = (0..k).map(|_| Vec::new()).collect();
+    let mut coord_srcs: Vec<Option<&mut dyn TrafficSource>> = Vec::with_capacity(nsrc);
+    for (i, s) in sources.iter_mut().enumerate() {
+        match plan.pinned[i] {
+            Some(shard) => {
+                pinned_lists[shard as usize].push(PinnedSrc {
+                    global: i as u32,
+                    src: &mut **s,
+                    staged: None,
+                    state: PinState::Active,
+                    inflight: 0,
+                    emitted: 0,
+                });
+                coord_srcs.push(None);
+            }
+            None => coord_srcs.push(Some(&mut **s)),
+        }
+    }
+
+    let mut owned_links = vec![0usize; k];
+    for &s in &plan.link_shard {
+        owned_links[s as usize] += 1;
+    }
 
     let mut report = StreamReport::new();
+    report.mode = ShardMode::Sharded { shards: k, pinned_sources: pinned_total };
     let mut merged_servers = sim.servers.clone();
     let mut makespan = 0.0f64;
     let mut events = 0u64;
     let mut peak_inflight = 0usize;
+    let mut epochs = 0u64;
+    let mut barriers = 0u64;
+    let mut shard_stats: Vec<ShardStats> = Vec::with_capacity(k);
 
     std::thread::scope(|scope| {
         let link_shard: &[u32] = &plan.link_shard;
+        let classes_ref: &[TrafficClass] = &classes;
         let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(k);
         // one response channel per worker: a dead worker (panic on one of
         // its diagnostic paths) surfaces as a recv error on ITS channel
@@ -285,32 +533,63 @@ pub(crate) fn run(
         // still-open clones of a shared sender; shard-ordered collection
         // also makes mailbox fill order deterministic
         let mut res_rxs: Vec<mpsc::Receiver<Resp>> = Vec::with_capacity(k);
-        for shard in 0..k {
+        for (shard, pinned) in pinned_lists.into_iter().enumerate() {
             let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
             let (res_tx, res_rx) = mpsc::channel::<Resp>();
             cmd_txs.push(cmd_tx);
             res_rxs.push(res_rx);
             let servers0 = sim.servers.clone();
-            scope.spawn(move || {
-                worker(shard, cmd_rx, res_tx, servers0, fabric, consts, tiers, spread, link_shard, granularity)
-            });
+            let ctx = WorkerCtx {
+                shard,
+                fabric,
+                consts,
+                tiers,
+                spread,
+                link_shard,
+                granularity,
+                rail_fan,
+                spraying,
+                owned_links: owned_links[shard],
+                classes: classes_ref,
+            };
+            scope.spawn(move || worker(ctx, cmd_rx, res_tx, servers0, pinned));
         }
 
-        // coordinator state: one staged transaction per source plus the
-        // per-shard mailboxes carrying next-epoch deliveries
+        // coordinator state: one staged transaction per open-loop source
+        // plus the per-shard mailboxes carrying next-epoch deliveries
         let mut staged: Vec<Option<(f64, SourcedTx)>> = (0..nsrc).map(|_| None).collect();
-        let mut src_done = vec![false; nsrc];
+        let mut src_done: Vec<bool> = plan.pinned.iter().map(|p| p.is_some()).collect();
         let mut last_issue = vec![0.0f64; nsrc];
         // per-source emission index: the spray hash's tx_seq, identical
         // to the serial loop's injection order
         let mut emitted = vec![0u64; nsrc];
         let mut inboxes: Vec<Vec<Handoff>> = (0..k).map(|_| Vec::new()).collect();
         let mut next_events = vec![f64::INFINITY; k];
+        // recycled mailbox buffers: epochs reuse drained Vecs instead of
+        // reallocating them
+        let mut spare_inbox: Vec<Vec<Handoff>> = Vec::new();
+        let mut spare_out: Vec<Vec<(u32, Handoff)>> = Vec::new();
+        let mut spare_comp: Vec<Vec<Completion>> = Vec::new();
+        let mut completions: Vec<Completion> = Vec::new();
+
+        // initial barrier: every worker pumps its pinned sources at t=0
+        // and reports its earliest injection event, so a fully-pinned
+        // workload (no staged coordinator traffic at all) still opens
+        // the first window
+        for rx in &res_rxs {
+            match rx.recv().expect("shard worker alive") {
+                Resp::Epoch { shard, out, completions: c, spent, next_event } => {
+                    debug_assert!(out.is_empty() && c.is_empty() && spent.is_empty());
+                    next_events[shard] = next_event;
+                }
+                Resp::Final { .. } => unreachable!("Final before Finish"),
+            }
+        }
 
         loop {
-            // keep every active source staged one transaction ahead
+            // keep every active coordinator source staged one ahead
             for i in 0..nsrc {
-                stage_next(i, sources, &mut staged, &mut src_done, &last_issue, &classes);
+                stage_next(i, &mut coord_srcs, &mut staged, &mut src_done, &last_issue, &classes);
             }
             let t_staged =
                 staged.iter().flatten().map(|(at, _)| *at).fold(f64::INFINITY, f64::min);
@@ -331,7 +610,9 @@ pub(crate) fn run(
             for i in 0..nsrc {
                 let mut staged_here = 0usize;
                 loop {
-                    stage_next(i, sources, &mut staged, &mut src_done, &last_issue, &classes);
+                    stage_next(
+                        i, &mut coord_srcs, &mut staged, &mut src_done, &last_issue, &classes,
+                    );
                     if src_done[i] {
                         break;
                     }
@@ -397,42 +678,72 @@ pub(crate) fn run(
             let mut pinged = vec![false; k];
             for s in 0..k {
                 if !inboxes[s].is_empty() || next_events[s] < t1 {
-                    let inbox = std::mem::take(&mut inboxes[s]);
+                    let inbox = std::mem::replace(
+                        &mut inboxes[s],
+                        spare_inbox.pop().unwrap_or_default(),
+                    );
                     next_events[s] = f64::INFINITY; // refreshed by the response
-                    cmd_txs[s].send(Cmd::Epoch { t1, inbox }).expect("shard worker alive");
+                    cmd_txs[s]
+                        .send(Cmd::Epoch {
+                            t1,
+                            inbox,
+                            out: spare_out.pop().unwrap_or_default(),
+                            completions: spare_comp.pop().unwrap_or_default(),
+                        })
+                        .expect("shard worker alive");
                     pinged[s] = true;
+                    barriers += 1;
                 }
             }
             assert!(
                 pinged.iter().any(|&p| p),
                 "conservative window made no progress (t0={t0}, t1={t1})"
             );
+            epochs += 1;
 
-            let mut completions: Vec<Completion> = Vec::new();
+            completions.clear();
             for s in (0..k).filter(|&s| pinged[s]) {
                 match res_rxs[s].recv().expect("shard worker alive") {
-                    Resp::Epoch { shard, out, completions: c, next_event } => {
+                    Resp::Epoch { shard, mut out, completions: mut c, spent, next_event } => {
                         debug_assert_eq!(shard, s);
                         next_events[shard] = next_event;
-                        for (target, h) in out {
+                        // a pinned-only run has no conservative bound at
+                        // all — the plan proved no handoff can exist
+                        assert!(
+                            plan.lookahead.is_finite() || out.is_empty(),
+                            "cross-shard handoff under infinite lookahead"
+                        );
+                        for (target, h) in out.drain(..) {
                             inboxes[target as usize].push(h);
                         }
-                        completions.extend(c);
+                        completions.append(&mut c);
+                        spare_out.push(out);
+                        spare_comp.push(c);
+                        spare_inbox.push(spent);
                     }
                     Resp::Final { .. } => unreachable!("Final before Finish"),
                 }
             }
             // merge the barrier's completions in global time order so the
-            // report streams identically to the serial loop
+            // report streams identically to the serial loop (ties broken
+            // by (source, token), which can only collide inside one
+            // shard's already-ordered stream)
             completions.sort_by(|a, b| {
                 a.at
                     .total_cmp(&b.at)
                     .then_with(|| a.source.cmp(&b.source))
                     .then_with(|| a.token.cmp(&b.token))
             });
-            for c in completions {
+            for c in completions.drain(..) {
                 report.record(classes[c.source as usize], c.latency, c.bytes);
-                sources[c.source as usize].on_complete(c.token, c.at);
+                // pinned sources already saw on_complete inside their
+                // worker, at the exact dispatch instant
+                if plan.pinned[c.source as usize].is_none() {
+                    coord_srcs[c.source as usize]
+                        .as_mut()
+                        .expect("open-loop source owned by coordinator")
+                        .on_complete(c.token, c.at);
+                }
             }
         }
 
@@ -441,7 +752,7 @@ pub(crate) fn run(
         }
         for (s, rx) in res_rxs.iter().enumerate() {
             match rx.recv().expect("shard worker alive") {
-                Resp::Final { shard, servers, now, dispatched, peak_slots } => {
+                Resp::Final { shard, servers, now, dispatched, peak_slots, idle_s } => {
                     debug_assert_eq!(shard, s);
                     makespan = makespan.max(now);
                     events += dispatched;
@@ -451,6 +762,17 @@ pub(crate) fn run(
                     // shards peak at different times and a multi-shard
                     // path occupies one slot per visited shard
                     peak_inflight += peak_slots;
+                    shard_stats.push(ShardStats {
+                        shard,
+                        events: dispatched,
+                        pinned_sources: plan
+                            .pinned
+                            .iter()
+                            .flatten()
+                            .filter(|&&p| p as usize == shard)
+                            .count(),
+                        idle_s,
+                    });
                     for (li, srv) in servers.into_iter().enumerate() {
                         if plan.link_shard[li] as usize == shard {
                             merged_servers[li] = srv;
@@ -465,45 +787,108 @@ pub(crate) fn run(
     sim.servers = merged_servers;
     report.total.makespan_ns = makespan;
     // same count as the serial streamed loop: its per-transaction
-    // injection event is the sharded loop's hop-0 arrival event
+    // injection event is the sharded loop's hop-0 arrival event (and a
+    // pinned source's injection is a Custom event on its worker)
     report.total.events = events;
     report.peak_inflight = peak_inflight;
+    report.epochs = epochs;
+    report.barriers = barriers;
+    shard_stats.sort_by_key(|s| s.shard);
+    report.shards = shard_stats;
     report.qos = sim.collect_qos_stats();
     report
 }
 
-/// One shard: a calendar engine over the shard's link servers, draining
-/// events strictly below each epoch's `t1` and emitting cross-shard
-/// handoffs for the barrier.
-#[allow(clippy::too_many_arguments)]
+/// Pull pinned source `li` once (if active and unstaged) and schedule
+/// its injection as a `Custom { tag: li }` event — the exact serial pump,
+/// run inside the owning worker.
+fn pump_pinned(li: usize, now: f64, pinned: &mut [PinnedSrc<'_>], engine: &mut Engine) {
+    let p = &mut pinned[li];
+    if p.state != PinState::Active || p.staged.is_some() {
+        return;
+    }
+    match p.src.pull(now) {
+        Pull::Tx(stx) => {
+            let at = stx.tx.at.max(now);
+            engine.schedule(at, EventKind::Custom { tag: li as u64 });
+            p.staged = Some(stx);
+        }
+        Pull::Blocked => {
+            assert!(
+                p.inflight > 0,
+                "pinned traffic source {} blocked with nothing in flight (deadlock)",
+                p.global
+            );
+            p.state = PinState::Blocked;
+        }
+        Pull::Done => p.state = PinState::Done,
+    }
+}
+
+/// One shard: a calendar engine over the shard's link servers and its
+/// pinned reactive sources, draining events strictly below each epoch's
+/// `t1` and emitting cross-shard handoffs for the barrier.
 fn worker(
-    shard: usize,
+    ctx: WorkerCtx<'_>,
     cmds: mpsc::Receiver<Cmd>,
     res: mpsc::Sender<Resp>,
     mut servers: Vec<[ClassedServer; 2]>,
-    fabric: &Fabric,
-    consts: &[LinkConsts],
-    tiers: &[LinkTier],
-    spread: [bool; LinkTier::COUNT],
-    link_shard: &[u32],
-    granularity: f64,
+    mut pinned: Vec<PinnedSrc<'_>>,
 ) {
-    let mut engine = Engine::with_granularity(granularity);
-    let mut slots: Vec<LocalTx> = Vec::new();
-    let mut free: Vec<u32> = Vec::new();
+    // slab arena sized from the shard's link count: the calendar queue
+    // and slot table for a shard serving L links rarely need more than a
+    // few transactions per link direction in flight at once
+    let cap = (ctx.owned_links * 8 + 64).min(1 << 16);
+    let mut engine = Engine::with_granularity_and_capacity(ctx.granularity, cap);
+    let mut slots: Vec<LocalTx> = Vec::with_capacity(cap);
+    let mut free: Vec<u32> = Vec::with_capacity(cap / 4);
     // shard-local path interning (same arena layout as the serial path;
     // a path crossing three shards is interned by each of the three)
     let mut arena: Vec<u32> = Vec::new();
     let mut cache: HashMap<u64, (u32, u32)> = HashMap::new();
+    // global source index -> local pinned index (completions carry the
+    // global id; only locally pinned sources get the reactive unblock)
+    let mut pin_of: Vec<Option<u32>> = vec![None; ctx.classes.len()];
+    for (li, p) in pinned.iter().enumerate() {
+        pin_of[p.global as usize] = Some(li as u32);
+    }
+    // epoch-batching scratch (ported from the serial loop §Perf):
+    // consecutive same-timestamp arrivals on one link direction admit as
+    // one batch, amortizing the per-admission ClassedServer bookkeeping
+    let mut carried: Option<(f64, EventKind)> = None;
+    let mut batch_ids: Vec<(usize, usize)> = Vec::new();
+    let mut batch_items: Vec<BatchAdmit> = Vec::new();
+    let mut admissions: Vec<Admission> = Vec::new();
+    let mut idle = 0.0f64;
 
-    while let Ok(cmd) = cmds.recv() {
+    // initial barrier: pump every pinned source at t=0 and report the
+    // earliest injection, so the coordinator's first window sees pinned
+    // traffic even when nothing is staged on the coordinator itself
+    for li in 0..pinned.len() {
+        pump_pinned(li, 0.0, &mut pinned, &mut engine);
+    }
+    if res
+        .send(Resp::Epoch {
+            shard: ctx.shard,
+            out: Vec::new(),
+            completions: Vec::new(),
+            spent: Vec::new(),
+            next_event: engine.peek_time().unwrap_or(f64::INFINITY),
+        })
+        .is_err()
+    {
+        return; // coordinator gone (panic unwinding)
+    }
+
+    loop {
+        let wait = Instant::now();
+        let Ok(cmd) = cmds.recv() else { return };
+        idle += wait.elapsed().as_secs_f64();
         match cmd {
-            Cmd::Epoch { t1, inbox } => {
-                let mut out: Vec<(u32, Handoff)> = Vec::new();
-                let mut completions: Vec<Completion> = Vec::new();
-                for h in inbox {
+            Cmd::Epoch { t1, mut inbox, mut out, mut completions } => {
+                for h in inbox.drain(..) {
                     let (path_start, path_len) =
-                        intern_local(fabric, tiers, spread, &mut arena, &mut cache, &h.tx);
+                        intern_local(ctx.fabric, ctx.tiers, ctx.spread, &mut arena, &mut cache, &h.tx);
                     let entry = LocalTx { tx: h.tx, path_start, path_len };
                     let id = match free.pop() {
                         Some(s) => {
@@ -517,53 +902,139 @@ fn worker(
                     };
                     engine.schedule(h.at, EventKind::Arrive { id, hop: h.hop as usize });
                 }
-                while let Some(t) = engine.peek_time() {
-                    if t >= t1 {
+                loop {
+                    let Some((now, ev)) = carried.take().or_else(|| match engine.peek_time() {
+                        Some(t) if t < t1 => engine.next(),
+                        _ => None,
+                    }) else {
                         break;
-                    }
-                    let (now, ev) = engine.next().expect("peeked event");
+                    };
                     match ev {
+                        // injection: a pinned source's staged transaction
+                        // reaches its issue time — the serial Custom arm,
+                        // run shard-locally (rail resolution, interning,
+                        // inline hop-0 admission, re-pump)
+                        EventKind::Custom { tag } => {
+                            let li = tag as usize;
+                            let stx =
+                                pinned[li].staged.take().expect("staged pinned injection");
+                            let tx = stx.tx;
+                            let seq = pinned[li].emitted;
+                            pinned[li].emitted += 1;
+                            let rail = if ctx.spraying {
+                                spray_rail(tx.src, tx.dst, stx.flow.unwrap_or(seq), ctx.rail_fan)
+                            } else {
+                                0
+                            };
+                            let global = pinned[li].global;
+                            let stx_tx = ShardTx {
+                                issued: now,
+                                bytes: tx.bytes,
+                                device_ns: tx.device_ns,
+                                src: tx.src as u32,
+                                dst: tx.dst as u32,
+                                source: global,
+                                class: ctx.classes[global as usize],
+                                token: stx.token,
+                                rail,
+                            };
+                            let (path_start, path_len) = intern_local(
+                                ctx.fabric, ctx.tiers, ctx.spread, &mut arena, &mut cache,
+                                &stx_tx,
+                            );
+                            let entry = LocalTx { tx: stx_tx, path_start, path_len };
+                            let id = match free.pop() {
+                                Some(s) => {
+                                    slots[s as usize] = entry;
+                                    s as usize
+                                }
+                                None => {
+                                    slots.push(entry);
+                                    slots.len() - 1
+                                }
+                            };
+                            pinned[li].inflight += 1;
+                            admit_one(
+                                &mut engine, &mut out, &mut free, &arena, &ctx, &mut servers,
+                                &slots, id, 0, now,
+                            );
+                            pump_pinned(li, now, &mut pinned, &mut engine);
+                        }
                         EventKind::Arrive { id, hop } => {
-                            // mirror of MemSim::step, with the cross-shard
-                            // branch on the next hop's link owner
-                            let lt = &slots[id];
-                            let path_len = lt.path_len as usize;
-                            if hop >= path_len {
-                                engine.after(lt.tx.device_ns, EventKind::Complete { id });
+                            let fl = &slots[id];
+                            if hop >= fl.path_len as usize {
+                                // reached destination: pay device service
+                                engine.after(fl.tx.device_ns, EventKind::Complete { id });
                                 continue;
                             }
-                            let h = arena[lt.path_start as usize + hop];
+                            // epoch batching: coalesce the consecutive
+                            // arrivals at exactly `now` that land on the
+                            // same link direction (the serial loop's
+                            // admit_batch optimization, now worker-side)
+                            let h = arena[fl.path_start as usize + hop];
+                            batch_ids.clear();
+                            batch_ids.push((id, hop));
+                            while engine.peek_time() == Some(now) {
+                                let (t2, ev2) = engine.next().expect("peeked event");
+                                if let EventKind::Arrive { id: id2, hop: hop2 } = ev2 {
+                                    let fl2 = &slots[id2];
+                                    if hop2 < fl2.path_len as usize
+                                        && arena[fl2.path_start as usize + hop2] == h
+                                    {
+                                        batch_ids.push((id2, hop2));
+                                        continue;
+                                    }
+                                }
+                                // not a batch member: defer to the next
+                                // iteration (popped after the batch, so
+                                // flushing the batch first preserves the
+                                // serial handler order; its timestamp is
+                                // `now < t1`, so it stays in this epoch)
+                                carried = Some((t2, ev2));
+                                break;
+                            }
                             let link = (h >> 1) as usize;
                             let dir = (h & 1) as usize;
                             debug_assert_eq!(
-                                link_shard[link] as usize, shard,
-                                "event for a foreign link reached shard {shard}"
+                                ctx.link_shard[link] as usize, ctx.shard,
+                                "event for a foreign link reached shard {}",
+                                ctx.shard
                             );
-                            let c = &consts[link];
-                            let service = c.flit.wire_bytes(lt.tx.bytes) * c.inv_rate;
-                            match servers[link][dir].admit(
-                                now,
-                                service,
-                                lt.tx.bytes,
-                                lt.tx.class,
-                                id as u32,
-                                hop as u32,
-                            ) {
-                                Admission::Release { done } => forward(
-                                    &mut engine, &mut out, &mut free, &arena, link_shard, consts,
-                                    shard, &slots, id, link, dir, hop, done,
-                                ),
-                                Admission::Start { done } => {
-                                    engine.schedule(
-                                        done,
-                                        EventKind::Depart { link: link as u32, dir: dir as u8 },
-                                    );
-                                    forward(
-                                        &mut engine, &mut out, &mut free, &arena, link_shard,
-                                        consts, shard, &slots, id, link, dir, hop, done,
-                                    );
+                            let c = ctx.consts[link];
+                            batch_items.clear();
+                            for &(bid, bhop) in &batch_ids {
+                                let fl = &slots[bid];
+                                batch_items.push(BatchAdmit {
+                                    service: c.flit.wire_bytes(fl.tx.bytes) * c.inv_rate,
+                                    bytes: fl.tx.bytes,
+                                    class: fl.tx.class,
+                                    id: bid as u32,
+                                    hop: bhop as u32,
+                                });
+                            }
+                            admissions.clear();
+                            servers[link][dir].admit_batch(now, &batch_items, &mut admissions);
+                            for (adm, &(bid, bhop)) in admissions.iter().zip(&batch_ids) {
+                                match *adm {
+                                    Admission::Release { done } => forward(
+                                        &mut engine, &mut out, &mut free, &arena, &ctx, &slots,
+                                        bid, link, dir, bhop, done,
+                                    ),
+                                    Admission::Start { done } => {
+                                        engine.schedule(
+                                            done,
+                                            EventKind::Depart {
+                                                link: link as u32,
+                                                dir: dir as u8,
+                                            },
+                                        );
+                                        forward(
+                                            &mut engine, &mut out, &mut free, &arena, &ctx,
+                                            &slots, bid, link, dir, bhop, done,
+                                        );
+                                    }
+                                    Admission::Queued => {}
                                 }
-                                Admission::Queued => {}
                             }
                         }
                         // a queued-mode link freed: arbitrate, start the
@@ -573,8 +1044,8 @@ fn worker(
                             if let Some((id, hop, done)) = servers[li][di].depart(now) {
                                 engine.schedule(done, EventKind::Depart { link, dir });
                                 forward(
-                                    &mut engine, &mut out, &mut free, &arena, link_shard, consts,
-                                    shard, &slots, id as usize, li, di, hop as usize, done,
+                                    &mut engine, &mut out, &mut free, &arena, &ctx, &slots,
+                                    id as usize, li, di, hop as usize, done,
                                 );
                             }
                         }
@@ -587,29 +1058,101 @@ fn worker(
                                 source: lt.tx.source,
                                 token: lt.tx.token,
                             });
+                            let source = lt.tx.source as usize;
+                            let token = lt.tx.token;
                             free.push(id as u32);
-                        }
-                        EventKind::Custom { .. } => {
-                            unreachable!("sharded shards schedule no custom events")
+                            // a pinned source completes shard-locally: the
+                            // serial Complete arm (on_complete, unblock,
+                            // re-pump) runs here at the dispatch instant,
+                            // preserving zero-delay reactive chains
+                            if let Some(li) = pin_of[source] {
+                                let li = li as usize;
+                                pinned[li].inflight -= 1;
+                                pinned[li].src.on_complete(token, now);
+                                if pinned[li].state == PinState::Blocked {
+                                    pinned[li].state = PinState::Active;
+                                }
+                                pump_pinned(li, now, &mut pinned, &mut engine);
+                            }
                         }
                     }
                 }
+                debug_assert!(carried.is_none(), "batch probe leaked across the epoch barrier");
                 let next_event = engine.peek_time().unwrap_or(f64::INFINITY);
-                if res.send(Resp::Epoch { shard, out, completions, next_event }).is_err() {
+                if res
+                    .send(Resp::Epoch {
+                        shard: ctx.shard,
+                        out,
+                        completions,
+                        spent: inbox,
+                        next_event,
+                    })
+                    .is_err()
+                {
                     return; // coordinator gone (panic unwinding)
                 }
             }
             Cmd::Finish => {
+                debug_assert!(
+                    pinned.iter().all(|p| p.inflight == 0 && p.staged.is_none()),
+                    "pinned source still live at Finish"
+                );
                 let _ = res.send(Resp::Final {
-                    shard,
+                    shard: ctx.shard,
                     servers,
                     now: engine.now(),
                     dispatched: engine.dispatched(),
                     peak_slots: slots.len(),
+                    idle_s: idle,
                 });
                 return;
             }
         }
+    }
+}
+
+/// Admit transaction `id` at `hop` on its path — the single-admission
+/// mirror of `MemSim::step`, used for a pinned source's inline hop-0
+/// admission (the batched Arrive arm covers everything else). Shares
+/// [`forward`]'s cross-shard branch, though a pinned transaction's path
+/// is shard-local by plan construction.
+#[allow(clippy::too_many_arguments)]
+fn admit_one(
+    engine: &mut Engine,
+    out: &mut Vec<(u32, Handoff)>,
+    free: &mut Vec<u32>,
+    arena: &[u32],
+    ctx: &WorkerCtx<'_>,
+    servers: &mut [[ClassedServer; 2]],
+    slots: &[LocalTx],
+    id: usize,
+    hop: usize,
+    now: f64,
+) {
+    let lt = &slots[id];
+    if hop >= lt.path_len as usize {
+        engine.after(lt.tx.device_ns, EventKind::Complete { id });
+        return;
+    }
+    let h = arena[lt.path_start as usize + hop];
+    let link = (h >> 1) as usize;
+    let dir = (h & 1) as usize;
+    debug_assert_eq!(
+        ctx.link_shard[link] as usize, ctx.shard,
+        "pinned injection on a foreign link in shard {}",
+        ctx.shard
+    );
+    let c = &ctx.consts[link];
+    let service = c.flit.wire_bytes(lt.tx.bytes) * c.inv_rate;
+    match servers[link][dir].admit(now, service, lt.tx.bytes, lt.tx.class, id as u32, hop as u32) {
+        Admission::Release { done } => {
+            forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done)
+        }
+        Admission::Start { done } => {
+            engine.schedule(done, EventKind::Depart { link: link as u32, dir: dir as u8 });
+            forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done);
+        }
+        Admission::Queued => {}
     }
 }
 
@@ -625,9 +1168,7 @@ fn forward(
     out: &mut Vec<(u32, Handoff)>,
     free: &mut Vec<u32>,
     arena: &[u32],
-    link_shard: &[u32],
-    consts: &[LinkConsts],
-    shard: usize,
+    ctx: &WorkerCtx<'_>,
     slots: &[LocalTx],
     id: usize,
     served_link: usize,
@@ -636,13 +1177,13 @@ fn forward(
     done: f64,
 ) {
     let lt = &slots[id];
-    let c = &consts[served_link];
+    let c = &ctx.consts[served_link];
     let t_next = done + c.fixed_ns + c.switch_ns[1 - dir];
     let nh = hop + 1;
     if nh < lt.path_len as usize {
         let next_link = (arena[lt.path_start as usize + nh] >> 1) as usize;
-        let target = link_shard[next_link];
-        if target as usize != shard {
+        let target = ctx.link_shard[next_link];
+        if target as usize != ctx.shard {
             out.push((target, Handoff { at: t_next, hop: nh as u32, tx: lt.tx }));
             free.push(id as u32);
             return;
@@ -723,11 +1264,59 @@ mod tests {
             .collect()
     }
 
+    /// A ping-pong reactive chain: one transaction in flight at a time,
+    /// next emission unblocked by the completion. With `footprint` it is
+    /// eligible for coupled-domain pinning.
+    struct Chain {
+        src: usize,
+        dst: usize,
+        left: usize,
+        waiting: bool,
+        declared: bool,
+    }
+
+    impl TrafficSource for Chain {
+        fn class(&self) -> TrafficClass {
+            TrafficClass::Generic
+        }
+        fn pull(&mut self, now: f64) -> Pull {
+            if self.left == 0 {
+                return Pull::Done;
+            }
+            if self.waiting {
+                return Pull::Blocked;
+            }
+            self.left -= 1;
+            self.waiting = true;
+            Pull::Tx(SourcedTx::new(
+                Transaction { src: self.src, dst: self.dst, at: now, bytes: 512.0, device_ns: 0.0 },
+                self.left as u64,
+            ))
+        }
+        fn on_complete(&mut self, _token: u64, _now: f64) {
+            self.waiting = false;
+        }
+        // open_loop() stays false: reactive
+        fn footprint(&self) -> Option<Vec<NodeId>> {
+            if self.declared {
+                Some(vec![self.src, self.dst])
+            } else {
+                None
+            }
+        }
+    }
+
+    fn no_meta() -> Vec<SourceMeta> {
+        Vec::new()
+    }
+
     #[test]
     fn plan_reflects_topology() {
         let (f, _) = clos(8, 2, 4);
         let sim = MemSim::new(&f);
-        let p = plan(&f, &sim.consts, 4).expect("clos must shard");
+        let p = plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &no_meta(), 4)
+            .sharded()
+            .expect("clos must shard");
         assert!(p.nshards >= 2 && p.nshards <= 4);
         assert!(p.lookahead > 0.0 && p.lookahead.is_finite());
         assert_eq!(p.link_shard.len(), f.topo.links.len());
@@ -735,9 +1324,65 @@ mod tests {
         let t = Topology::single_hop(8, LinkKind::NvLink5, "r");
         let f1 = Fabric::new(t);
         let s1 = MemSim::new(&f1);
-        assert!(plan(&f1, &s1.consts, 4).is_none());
+        assert!(plan(&f1, &s1.consts, &s1.tiers, s1.spread, 1, &no_meta(), 4)
+            .sharded()
+            .is_none());
         // one requested shard: no plan
-        assert!(plan(&f, &sim.consts, 1).is_none());
+        assert!(plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &no_meta(), 1)
+            .sharded()
+            .is_none());
+    }
+
+    #[test]
+    fn plan_pins_reactive_footprints() {
+        let (f, eps) = clos(8, 2, 4);
+        let sim = MemSim::new(&f);
+        // two rack-local footprints on far-apart leaves + one open source
+        let meta = vec![
+            SourceMeta { open: false, footprint: Some(vec![eps[0], eps[1]]) },
+            SourceMeta { open: false, footprint: Some(vec![eps[4 * 6], eps[4 * 6 + 1]]) },
+            SourceMeta { open: true, footprint: None },
+        ];
+        let p = plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta, 4)
+            .sharded()
+            .expect("rack-local footprints must shard");
+        assert!(p.pinned[0].is_some() && p.pinned[1].is_some());
+        assert_eq!(p.pinned[2], None);
+        // rack-local pairs on different leaves land on different shards
+        assert_ne!(p.pinned[0], p.pinned[1]);
+        // the open source keeps the conservative bound finite
+        assert!(p.lookahead.is_finite() && p.lookahead > 0.0);
+        // every node of each closure lives on the pinned shard
+        assert_eq!(p.node_shard[eps[0]], p.pinned[0].unwrap());
+        assert_eq!(p.node_shard[eps[1]], p.pinned[0].unwrap());
+
+        // without open sources the shards are fully decoupled
+        let meta2 = vec![
+            SourceMeta { open: false, footprint: Some(vec![eps[0], eps[1]]) },
+            SourceMeta { open: false, footprint: Some(vec![eps[4 * 6], eps[4 * 6 + 1]]) },
+        ];
+        let p2 = plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta2, 4)
+            .sharded()
+            .expect("disjoint pinned-only footprints must shard");
+        assert!(p2.lookahead.is_infinite());
+
+        // an undeclared reactive source forces the serial fallback
+        let meta3 = vec![SourceMeta { open: false, footprint: None }];
+        match plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta3, 4) {
+            PlanOutcome::Fallback(reason) => assert!(reason.contains("footprint")),
+            PlanOutcome::Sharded(_) => panic!("undeclared footprint must not shard"),
+        }
+
+        // a fabric-wide footprint collapses the partition: fallback
+        let meta4 = vec![SourceMeta { open: false, footprint: Some(eps.clone()) }];
+        match plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta4, 4) {
+            PlanOutcome::Fallback(_) => {}
+            PlanOutcome::Sharded(p) => {
+                // acceptable only if the closure still left >= 2 shards;
+                // on this Clos every leaf is touched, so it must not
+                panic!("fabric-wide footprint produced {} shards", p.nshards)
+            }
+        }
     }
 
     #[test]
@@ -754,6 +1399,14 @@ mod tests {
             let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
             sharded_sim.run_streamed_sharded_with(&mut sources, 3)
         };
+        assert!(sharded.mode.is_sharded(), "open-loop clos run must shard");
+        assert!(sharded.epochs > 0 && sharded.barriers >= sharded.epochs);
+        assert!(sharded.shards.len() >= 2, "per-shard telemetry missing");
+        assert_eq!(
+            sharded.shards.iter().map(|s| s.events).sum::<u64>(),
+            sharded.total.events,
+            "per-shard event telemetry must sum to the total"
+        );
         assert_eq!(serial.completed, sharded.total.completed);
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
         assert!(close(serial.makespan_ns, sharded.total.makespan_ns));
@@ -767,8 +1420,7 @@ mod tests {
     #[test]
     fn sharded_spray_matches_serial_spray() {
         // the multi-rail twin of sharded_matches_serial_on_clos: rails
-        // resolved at the coordinator hash identically to the serial
-        // loop's injection-time resolution
+        // resolved at injection hash identically to the serial loop
         use crate::sim::{RailSelector, RoutingPolicy};
         let (mut f, eps) = clos(6, 2, 6);
         f.enable_multipath(4);
@@ -797,45 +1449,103 @@ mod tests {
     }
 
     #[test]
+    fn pinned_reactive_sources_match_serial() {
+        // rack-local ping-pong chains on three different leaves, plus
+        // open-loop background: the chains pin to their leaf shards and
+        // the whole mix must reproduce the serial run exactly
+        let (f, eps) = clos(6, 2, 4);
+        let chain_at = |leaf: usize| (eps[4 * leaf], eps[4 * leaf + 1]);
+        let txs = workload(&eps, 300, 0xC0DE);
+
+        let run_with = |sharded: bool| {
+            let mut sim = MemSim::new(&f);
+            let mut chains: Vec<Chain> = [0usize, 2, 5]
+                .iter()
+                .map(|&l| {
+                    let (src, dst) = chain_at(l);
+                    Chain { src, dst, left: 50, waiting: false, declared: true }
+                })
+                .collect();
+            let mut bg = BatchSource::new(txs.clone(), crate::sim::TrafficClass::Generic);
+            let mut sources: Vec<&mut dyn TrafficSource> = Vec::new();
+            for c in &mut chains {
+                sources.push(c);
+            }
+            sources.push(&mut bg);
+            if sharded {
+                sim.run_streamed_sharded_with(&mut sources, 3)
+            } else {
+                sim.run_streamed(&mut sources)
+            }
+        };
+        let serial = run_with(false);
+        let sharded = run_with(true);
+        assert!(
+            matches!(sharded.mode, ShardMode::Sharded { pinned_sources: 3, .. }),
+            "chains must pin, got {:?}",
+            sharded.mode
+        );
+        assert_eq!(serial.total.completed, sharded.total.completed);
+        assert_eq!(serial.total.events, sharded.total.events);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(serial.total.makespan_ns, sharded.total.makespan_ns));
+        assert!(close(serial.total.latency.mean(), sharded.total.latency.mean()));
+        assert!(close(serial.total.latency.max(), sharded.total.latency.max()));
+    }
+
+    #[test]
+    fn fully_pinned_run_is_one_decoupled_epoch() {
+        // chains only — no open-loop traffic: the plan proves no handoff
+        // can exist, the lookahead is infinite and the run is one epoch
+        let (f, eps) = clos(4, 2, 4);
+        let run_with = |sharded: bool| {
+            let mut sim = MemSim::new(&f);
+            let mut chains: Vec<Chain> = (0..4)
+                .map(|l| Chain {
+                    src: eps[4 * l],
+                    dst: eps[4 * l + 1],
+                    left: 40,
+                    waiting: false,
+                    declared: true,
+                })
+                .collect();
+            let mut sources: Vec<&mut dyn TrafficSource> =
+                chains.iter_mut().map(|c| c as &mut dyn TrafficSource).collect();
+            if sharded {
+                sim.run_streamed_sharded_with(&mut sources, 4)
+            } else {
+                sim.run_streamed(&mut sources)
+            }
+        };
+        let serial = run_with(false);
+        let sharded = run_with(true);
+        assert!(sharded.mode.is_sharded(), "disjoint chains must shard: {:?}", sharded.mode);
+        assert_eq!(sharded.epochs, 1, "fully-pinned run must be a single epoch");
+        assert_eq!(serial.total.completed, sharded.total.completed);
+        assert_eq!(serial.total.events, sharded.total.events);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(serial.total.makespan_ns, sharded.total.makespan_ns));
+        assert!(close(serial.total.latency.mean(), sharded.total.latency.mean()));
+    }
+
+    #[test]
     fn reactive_sources_fall_back_to_serial() {
-        struct Chain {
-            src: usize,
-            dst: usize,
-            left: usize,
-            waiting: bool,
-        }
-        impl TrafficSource for Chain {
-            fn class(&self) -> TrafficClass {
-                TrafficClass::Generic
-            }
-            fn pull(&mut self, now: f64) -> Pull {
-                if self.left == 0 {
-                    return Pull::Done;
-                }
-                if self.waiting {
-                    return Pull::Blocked;
-                }
-                self.left -= 1;
-                self.waiting = true;
-                Pull::Tx(super::super::traffic::SourcedTx::new(
-                    Transaction { src: self.src, dst: self.dst, at: now, bytes: 512.0, device_ns: 0.0 },
-                    0,
-                ))
-            }
-            fn on_complete(&mut self, _token: u64, _now: f64) {
-                self.waiting = false;
-            }
-            // open_loop() stays false: reactive
-        }
+        // a reactive source WITHOUT a declared footprint keeps the exact
+        // serial loop, and the report says why
         let (f, eps) = clos(4, 2, 2);
         let mut sim = MemSim::new(&f);
-        let mut chain = Chain { src: eps[0], dst: eps[eps.len() - 1], left: 4, waiting: false };
+        let mut chain =
+            Chain { src: eps[0], dst: eps[eps.len() - 1], left: 4, waiting: false, declared: false };
         let rep = {
             let mut sources: [&mut dyn TrafficSource; 1] = [&mut chain];
             sim.run_streamed_sharded(&mut sources)
         };
         // the serial fallback must run the reactive chain to completion
         assert_eq!(rep.total.completed, 4);
+        match &rep.mode {
+            ShardMode::SerialFallback { reason } => assert!(reason.contains("footprint")),
+            other => panic!("expected SerialFallback, got {other:?}"),
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 
 use super::memsim::{MemSimReport, Transaction};
 use super::qos::LinkClassStats;
+use crate::fabric::NodeId;
 use crate::util::stats::{LogHistogram, Welford};
 use std::collections::VecDeque;
 
@@ -111,7 +112,11 @@ pub enum Pull {
 }
 
 /// A workload that emits fabric transactions as simulated time advances.
-pub trait TrafficSource {
+///
+/// Sources are `Send` so a reactive source with a shard-local
+/// [`footprint`](TrafficSource::footprint) can be moved onto its owning
+/// shard's worker thread by the sharded backend.
+pub trait TrafficSource: Send {
     /// Traffic class for per-class accounting.
     fn class(&self) -> TrafficClass;
 
@@ -130,10 +135,69 @@ pub trait TrafficSource {
     /// where injections are staged ahead of the parallel event window; a
     /// reactive source (the default) forces the serial loop, because its
     /// zero-delay completion→emission chain can cross shard boundaries
-    /// faster than any fabric lookahead.
+    /// faster than any fabric lookahead — unless it declares a static
+    /// [`footprint`](TrafficSource::footprint) the planner can co-locate
+    /// inside one shard.
     fn open_loop(&self) -> bool {
         false
     }
+
+    /// Static fabric footprint of a *reactive* source: every node this
+    /// source will ever name as a transaction endpoint, over its whole
+    /// lifetime (requester + home + sharers for a coherence engine, the
+    /// union of ring members for a collective schedule).
+    ///
+    /// The sharded planner closes the footprint over the link owners of
+    /// every endpoint-pair path and merges the touched topology domains
+    /// into one shard (*coupled-domain scheduling*); the source is then
+    /// pinned to that shard's worker, where its zero-delay
+    /// completion-to-emission chain is shard-local and needs no lookahead.
+    /// `None` (the default) means the footprint is unknown or unbounded,
+    /// which forces the serial fallback for a reactive source. Ignored
+    /// for open-loop sources (they are staged by the coordinator and may
+    /// roam the whole fabric).
+    fn footprint(&self) -> Option<Vec<NodeId>> {
+        None
+    }
+}
+
+/// Which backend a streamed run actually executed on — the sharded entry
+/// points fall back to the serial loop when the plan is not profitable or
+/// not provably safe, and callers need to see that (a bad footprint merge
+/// silently serializing a run is otherwise invisible).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardMode {
+    /// The serial streamed loop, as requested (no sharding attempted).
+    Serial,
+    /// The conservative parallel backend: `shards` workers, of which
+    /// `pinned_sources` reactive sources ran pinned on their owning
+    /// shard's worker.
+    Sharded { shards: usize, pinned_sources: usize },
+    /// A sharded entry point fell back to the serial loop; `reason` says
+    /// why (single domain, unpartitionable footprint, zero lookahead...).
+    SerialFallback { reason: String },
+}
+
+impl ShardMode {
+    /// True when the run actually executed on the parallel backend.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, ShardMode::Sharded { .. })
+    }
+}
+
+/// Per-shard balance telemetry from a sharded run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Shard index (dense, `0..shards`).
+    pub shard: usize,
+    /// Events dispatched by this shard's engine — the load-balance axis.
+    pub events: u64,
+    /// Reactive sources pinned to this shard's worker.
+    pub pinned_sources: usize,
+    /// Wall-clock seconds this worker spent parked waiting for its next
+    /// epoch command (coordinator turnaround + barrier skew). A shard
+    /// idling far above its peers marks a footprint merge that starved it.
+    pub idle_s: f64,
 }
 
 /// Per-class slice of a streamed run.
@@ -200,6 +264,18 @@ pub struct StreamReport {
     /// actually served traffic. Filled after the run from the link
     /// servers; identical between the serial and sharded backends.
     pub qos: Vec<LinkClassStats>,
+    /// Which backend actually ran (serial / sharded / fallback + reason).
+    pub mode: ShardMode,
+    /// Conservative epochs executed by the sharded coordinator (0 on the
+    /// serial loop). Few huge epochs = good lookahead; a fully-pinned run
+    /// completes in a single unbounded epoch.
+    pub epochs: u64,
+    /// Epoch commands issued to workers (each is one barrier round-trip);
+    /// 0 on the serial loop. `barriers / epochs` below the shard count
+    /// means idle shards were skipped.
+    pub barriers: u64,
+    /// Per-shard balance telemetry (empty on the serial loop).
+    pub shards: Vec<ShardStats>,
 }
 
 impl StreamReport {
@@ -215,6 +291,10 @@ impl StreamReport {
             per_class,
             peak_inflight: 0,
             qos: Vec::new(),
+            mode: ShardMode::Serial,
+            epochs: 0,
+            barriers: 0,
+            shards: Vec::new(),
         }
     }
 

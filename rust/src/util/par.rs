@@ -15,6 +15,10 @@ pub fn workers_for(items: usize) -> usize {
 /// Worker count for a sharded simulation over a fabric partitioned into
 /// `domains` topology domains: one shard per hardware thread, never more
 /// than the domain count (a shard with no links would only add sync cost).
+/// This is an upper bound handed to the partitioner — when reactive
+/// sources declare footprints, the coupled-domain constraint pass
+/// ([`Topology::partition_domains_coupled`](crate::fabric::Topology::partition_domains_coupled))
+/// may merge domains below it to keep each footprint inside one shard.
 pub fn shards_for(domains: usize) -> usize {
     workers_for(domains)
 }

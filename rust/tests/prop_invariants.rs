@@ -3,16 +3,16 @@
 //! coherence, collectives and the latency models — randomized inputs,
 //! seed-reported failures.
 
-use scalepool::coherence::{Directory, MsgKind, ProtocolMsg};
-use scalepool::collective::{Algorithm, CollectiveModel, Transport};
+use scalepool::coherence::{CoherenceConfig, CoherenceTraffic, Directory, MsgKind, ProtocolMsg};
+use scalepool::collective::{Algorithm, CollectiveModel, EventDrivenCollective, Transport};
 use scalepool::coordinator::{TieringEngine, TieringPolicy};
 use scalepool::fabric::{Fabric, LinkKind, NodeKind, Topology};
 use scalepool::memory::pool::{MemoryPool, Placement};
 use scalepool::memory::tier::{waterfall_placement, TierSpec};
 use scalepool::memory::Tier;
 use scalepool::sim::{
-    ArbPolicy, BatchSource, MemSim, QosPolicy, RailSelector, RoutingPolicy, TrafficClass,
-    TrafficSource, Transaction,
+    ArbPolicy, BatchSource, MemSim, QosPolicy, RailSelector, RoutingPolicy, ShardMode,
+    TrafficClass, TrafficSource, Transaction,
 };
 use scalepool::util::prop::{forall_res, Config};
 use scalepool::util::Rng;
@@ -1099,6 +1099,241 @@ fn prop_sharded_matches_serial() {
                     || !close(serial.total.latency.max(), sharded.total.latency.max())
                 {
                     return Err(format!("{ctx} aggregate latency stats diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Reactive-source sharded-vs-serial equivalence (ISSUE 7): randomized
+/// mixes of *closed-loop* reactive sources — per-group coherence sharing
+/// domains and per-group collective rings, optionally alongside an
+/// open-loop background stream — must produce the identical report on
+/// the sharded backend, which pins each reactive source to the shard
+/// owning its declared footprint. On Clos shapes (group footprints land
+/// in disjoint shards) the run must actually shard; on torus shapes the
+/// planner may legitimately fall back to serial, and parity must hold
+/// either way. Compared against the serial oracle: per-class completed
+/// counts and bytes, event counts, makespan, aggregate latency moments,
+/// each source's own domain-latency accumulator, and the full per-link
+/// QoS telemetry.
+#[test]
+fn prop_reactive_sharded_matches_serial() {
+    forall_res(
+        Config { cases: 18, seed: 0x5AD7 },
+        |rng: &mut Rng| {
+            // (topology, per-group endpoint sets, is_clos)
+            let (t, groups, clos) = if rng.below(2) == 0 {
+                let (mut t, leaves) = Topology::clos(
+                    2 + rng.below(5) as usize,
+                    1 + rng.below(3) as usize,
+                    LinkKind::CxlCoherent,
+                    "c",
+                );
+                let per = 3 + rng.below(3) as usize;
+                let mut groups = Vec::new();
+                for (i, &l) in leaves.iter().enumerate() {
+                    let mut eps = Vec::new();
+                    for e in 0..per {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                        t.connect(n, l, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                    groups.push(eps);
+                }
+                (t, groups, true)
+            } else {
+                let (mut t, sw) = Topology::torus3d(
+                    (2 + rng.below(3) as usize, 2 + rng.below(3) as usize, 1 + rng.below(2) as usize),
+                    LinkKind::CxlCoherent,
+                    "t",
+                );
+                let mut eps = Vec::new();
+                for (i, &s) in sw.iter().enumerate() {
+                    let n = t.add_node(NodeKind::Accelerator, format!("e{i}"));
+                    t.connect(n, s, LinkKind::CxlCoherent);
+                    eps.push(n);
+                }
+                let groups: Vec<Vec<usize>> =
+                    eps.chunks(3).filter(|c| c.len() >= 3).map(|c| c.to_vec()).collect();
+                (t, groups, false)
+            };
+            let coh_ops = 40 + rng.below(120);
+            let col_bytes = 4096.0 + rng.f64() * 65_536.0;
+            let with_bg = rng.below(2) == 1;
+            let bg_txs = 60 + rng.below(200) as usize;
+            let shards = 2 + rng.below(3) as usize;
+            (t, groups, clos, coh_ops, col_bytes, with_bg, bg_txs, shards, rng.below(1 << 30))
+        },
+        |(t, groups, clos, coh_ops, col_bytes, with_bg, bg_txs, shards, seed)| {
+            if groups.len() < 2 {
+                return Ok(());
+            }
+            let f = Fabric::new(t.clone());
+            let all_eps: Vec<usize> = groups.iter().flatten().copied().collect();
+            // one coherence sharing domain + one collective ring per
+            // group: the first endpoint is the home node, the rest the
+            // caching agents; the ring spans the whole group
+            let make_reactive = || -> (Vec<CoherenceTraffic>, Vec<EventDrivenCollective>) {
+                let coh = groups
+                    .iter()
+                    .enumerate()
+                    .map(|(g, eps)| {
+                        let ccfg = CoherenceConfig {
+                            ops: *coh_ops,
+                            mean_interarrival_ns: 40.0,
+                            window: eps.len().max(4),
+                            ..Default::default()
+                        };
+                        CoherenceTraffic::new(
+                            eps[1..].to_vec(),
+                            vec![eps[0]],
+                            ccfg,
+                            seed.wrapping_add(g as u64 * 7919),
+                        )
+                    })
+                    .collect();
+                let col = groups
+                    .iter()
+                    .map(|eps| EventDrivenCollective::ring(eps.clone(), *col_bytes, 1))
+                    .collect();
+                (coh, col)
+            };
+            let make_bg = || -> Option<BatchSource> {
+                if !*with_bg {
+                    return None;
+                }
+                let mut rng = Rng::new(seed.wrapping_mul(31).wrapping_add(7));
+                let mut at = 0.0;
+                let txs: Vec<Transaction> = (0..*bg_txs)
+                    .map(|_| {
+                        at += rng.exp(1.0 / 60.0) + 1e-6;
+                        let s = rng.below(all_eps.len() as u64) as usize;
+                        let mut d = rng.below(all_eps.len() as u64) as usize;
+                        if d == s {
+                            d = (d + 1) % all_eps.len();
+                        }
+                        Transaction {
+                            src: all_eps[s],
+                            dst: all_eps[d],
+                            at,
+                            bytes: 64.0 + rng.f64() * 4096.0,
+                            device_ns: rng.f64() * 120.0,
+                        }
+                    })
+                    .collect();
+                Some(BatchSource::new(txs, TrafficClass::Generic))
+            };
+            let run = |sharded: bool| {
+                let (mut coh, mut col) = make_reactive();
+                let mut bg = make_bg();
+                let mut sources: Vec<&mut dyn TrafficSource> = Vec::new();
+                for c in &mut coh {
+                    sources.push(c);
+                }
+                for c in &mut col {
+                    sources.push(c);
+                }
+                if let Some(b) = &mut bg {
+                    sources.push(b);
+                }
+                let mut sim = MemSim::new(&f);
+                let rep = if sharded {
+                    sim.run_streamed_sharded_with(&mut sources, *shards)
+                } else {
+                    sim.run_streamed(&mut sources)
+                };
+                let coh_lat: Vec<(u64, f64)> =
+                    coh.iter().map(|c| (c.op_latency().count(), c.op_latency().mean())).collect();
+                let col_lat: Vec<(u64, f64)> = col
+                    .iter()
+                    .map(|c| (c.repeat_latency().count(), c.repeat_latency().mean()))
+                    .collect();
+                (rep, coh_lat, col_lat)
+            };
+
+            let (serial, ser_coh, ser_col) = run(false);
+            let (sharded, shr_coh, shr_col) = run(true);
+
+            if *clos && !sharded.mode.is_sharded() {
+                return Err(format!(
+                    "disjoint per-leaf footprints on Clos must shard, got {:?}",
+                    sharded.mode
+                ));
+            }
+            if serial.mode != ShardMode::Serial {
+                return Err("serial run reported a non-serial mode".into());
+            }
+            if serial.total.completed == 0 {
+                return Err("workload moved nothing".into());
+            }
+            if serial.total.completed != sharded.total.completed {
+                return Err(format!(
+                    "completed {} vs {}",
+                    serial.total.completed, sharded.total.completed
+                ));
+            }
+            if serial.total.events != sharded.total.events {
+                return Err(format!(
+                    "event counts {} vs {}",
+                    serial.total.events, sharded.total.events
+                ));
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if !close(serial.total.makespan_ns, sharded.total.makespan_ns) {
+                return Err(format!(
+                    "makespan {} vs {}",
+                    serial.total.makespan_ns, sharded.total.makespan_ns
+                ));
+            }
+            for c in TrafficClass::ALL {
+                let (a, b) = (serial.class(c), sharded.class(c));
+                if a.completed != b.completed || !close(a.bytes, b.bytes) {
+                    return Err(format!("class {} diverged", c.name()));
+                }
+                if !close(a.latency.mean(), b.latency.mean())
+                    || !close(a.latency.max(), b.latency.max())
+                {
+                    return Err(format!("class {} latency stats diverged", c.name()));
+                }
+            }
+            // each reactive source's own domain-latency accumulator: the
+            // pinned worker must deliver the same completions at the same
+            // times as the serial pump
+            for (i, (a, b)) in ser_coh.iter().zip(&shr_coh).enumerate() {
+                if a.0 != b.0 || (a.0 > 0 && !close(a.1, b.1)) {
+                    return Err(format!("coherence domain {i} op latency diverged: {a:?} vs {b:?}"));
+                }
+            }
+            for (i, (a, b)) in ser_col.iter().zip(&shr_col).enumerate() {
+                if a.0 != b.0 || (a.0 > 0 && !close(a.1, b.1)) {
+                    return Err(format!("ring {i} repeat latency diverged: {a:?} vs {b:?}"));
+                }
+            }
+            // per-link per-class QoS telemetry, field-wise
+            if serial.qos.len() != sharded.qos.len() {
+                return Err(format!(
+                    "qos telemetry sizes {} vs {}",
+                    serial.qos.len(),
+                    sharded.qos.len()
+                ));
+            }
+            for (a, b) in serial.qos.iter().zip(&sharded.qos) {
+                if a.link != b.link
+                    || a.dir != b.dir
+                    || a.class != b.class
+                    || a.served != b.served
+                    || !close(a.bytes, b.bytes)
+                    || !close(a.busy_ns, b.busy_ns)
+                    || !close(a.queue_delay_ns, b.queue_delay_ns)
+                {
+                    return Err(format!(
+                        "qos telemetry diverged on link {} dir {} class {}",
+                        a.link,
+                        a.dir,
+                        a.class.name()
+                    ));
                 }
             }
             Ok(())

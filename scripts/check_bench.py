@@ -47,8 +47,9 @@ def walk(node, path, out, scale=None):
 
 
 def is_advisory(where, key, scale, threads):
-    if key.startswith("sharded") and threads < SHARDED_MIN_THREADS:
-        # sharded acceptance bar is defined at >= 4 cores
+    if key.startswith(("sharded", "reactive_sharded")) and threads < SHARDED_MIN_THREADS:
+        # sharded acceptance bars (batch and reactive) are defined at
+        # >= 4 cores; below that the speedup is reported but advisory
         return True
     if "rails" in where:
         # rails policy points ride along in merged records: advisory
