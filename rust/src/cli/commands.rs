@@ -125,9 +125,9 @@ pub fn mixed(args: &mut Args) -> Result<()> {
 fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
     let shape = match args.get_or("algo", "hier").as_str() {
         "hier" => experiments::CollectiveShape::Hierarchical,
-        "ring" => experiments::CollectiveShape::FlatRing,
+        "ring" | "flatring" => experiments::CollectiveShape::FlatRing,
         "rackrings" => experiments::CollectiveShape::RackRings,
-        other => bail!("unknown collective algo '{other}' (hier|ring|rackrings)"),
+        other => bail!("unknown collective algo '{other}' (hier|ring|flatring|rackrings)"),
     };
     Ok(experiments::MixedConfig {
         racks: args.usize_or("racks", 4).map_err(Error::msg)?,

@@ -63,6 +63,7 @@ impl Default for CoherenceConfig {
 }
 
 /// One in-flight coherent operation: its message list and phase cursor.
+#[derive(Clone)]
 struct OpState {
     issued_at: f64,
     msgs: Vec<ProtocolMsg>,
@@ -75,6 +76,7 @@ struct OpState {
 }
 
 /// A message staged for emission.
+#[derive(Clone)]
 struct ReadyMsg {
     slot: u32,
     at: f64,
@@ -86,6 +88,12 @@ struct ReadyMsg {
 const PHASES: [MsgKind; 4] = [MsgKind::DirReq, MsgKind::Intervention, MsgKind::Data, MsgKind::Ack];
 
 /// The coherence traffic source (see module docs).
+///
+/// `Clone` snapshots the complete mutable state (directory, RNG cursor,
+/// in-flight ops, staged messages, accumulators) — the basis of the
+/// [`TrafficSource::checkpoint`] support that lets the optimistic
+/// sharded backend roll this source back to an epoch barrier.
+#[derive(Clone)]
 pub struct CoherenceTraffic {
     dir: Directory,
     /// agent index -> fabric node.
@@ -307,6 +315,19 @@ impl TrafficSource for CoherenceTraffic {
             }
         }
         Some(nodes)
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn checkpoint(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        Some(Box::new(self.clone()))
+    }
+
+    fn restore(&mut self, snap: &(dyn std::any::Any + Send)) {
+        let snap = snap.downcast_ref::<CoherenceTraffic>().expect("snapshot type mismatch");
+        self.clone_from(snap);
     }
 }
 

@@ -33,6 +33,7 @@ pub struct RingPhase {
 }
 
 /// Per-member state inside the active phase.
+#[derive(Clone)]
 struct Member {
     src: NodeId,
     /// Ring successor (receives this member's sends).
@@ -50,6 +51,12 @@ struct Member {
 /// Event-driven collective over a list of [`RingPhase`]s, optionally
 /// repeated (`repeats` back-to-back collectives, e.g. one per training
 /// step).
+///
+/// `Clone` snapshots the complete schedule cursor (phase, per-member
+/// step state, ready queue, accumulators) — the basis of the
+/// [`TrafficSource::checkpoint`] support that lets the optimistic
+/// sharded backend roll a fabric-spanning ring back to an epoch barrier.
+#[derive(Clone)]
 pub struct EventDrivenCollective {
     phases: Vec<RingPhase>,
     repeats: usize,
@@ -284,7 +291,8 @@ impl TrafficSource for EventDrivenCollective {
     /// phase is fixed at construction — the footprint is the union of
     /// all phase rings, making the schedule eligible for coupled-domain
     /// shard pinning (a rack-local ring pins to its rack's shard; a
-    /// fabric-wide ring merges everything and falls back to serial).
+    /// fabric-wide ring spans the partition and runs on the coordinator
+    /// under the optimistic checkpoint/rollback protocol).
     fn footprint(&self) -> Option<Vec<NodeId>> {
         let mut nodes: Vec<NodeId> = Vec::new();
         for phase in &self.phases {
@@ -297,6 +305,19 @@ impl TrafficSource for EventDrivenCollective {
             }
         }
         Some(nodes)
+    }
+
+    fn checkpointable(&self) -> bool {
+        true
+    }
+
+    fn checkpoint(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        Some(Box::new(self.clone()))
+    }
+
+    fn restore(&mut self, snap: &(dyn std::any::Any + Send)) {
+        let snap = snap.downcast_ref::<EventDrivenCollective>().expect("snapshot type mismatch");
+        self.clone_from(snap);
     }
 }
 

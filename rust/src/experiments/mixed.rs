@@ -151,6 +151,14 @@ pub struct MixedReport {
     /// Backend the mixed run executed on (serial, sharded, or a sharded
     /// request that fell back — and why).
     pub mode: ShardMode,
+    /// Reactive sources whose footprint spans the partition, run on the
+    /// coordinator under the optimistic checkpoint/rollback protocol
+    /// (0 on serial runs and on sharded runs where every source pins).
+    pub optimistic_sources: usize,
+    /// Epoch windows the optimistic protocol checkpointed.
+    pub checkpoints: u64,
+    /// Optimistic windows that mispredicted and re-executed.
+    pub rollbacks: u64,
 }
 
 impl MixedReport {
@@ -474,6 +482,9 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         mixed_peak_utilization: util,
         peak_inflight: mixed.peak_inflight,
         mode: mixed.mode.clone(),
+        optimistic_sources: mixed.optimistic_sources,
+        checkpoints: mixed.checkpoints,
+        rollbacks: mixed.rollbacks,
     }
 }
 
@@ -516,9 +527,17 @@ pub fn render(r: &MixedReport) -> String {
         // serial output stays byte-identical to what it always was
         ShardMode::Serial => {}
         ShardMode::Sharded { shards, pinned_sources } => {
-            out.push_str(&format!(
-                "backend: sharded ({shards} shards, {pinned_sources} pinned reactive sources)\n"
-            ));
+            if r.optimistic_sources > 0 {
+                out.push_str(&format!(
+                    "backend: sharded ({shards} shards, {pinned_sources} pinned reactive \
+                     sources, {} optimistic spanning sources, {} rollbacks)\n",
+                    r.optimistic_sources, r.rollbacks
+                ));
+            } else {
+                out.push_str(&format!(
+                    "backend: sharded ({shards} shards, {pinned_sources} pinned reactive sources)\n"
+                ));
+            }
         }
         ShardMode::SerialFallback { reason } => {
             out.push_str(&format!("backend: serial fallback ({reason})\n"));
@@ -641,5 +660,47 @@ mod tests {
         };
         assert_eq!(result_line(&render(&ser)), result_line(&render(&shr)));
         assert!(render(&shr).contains("backend: sharded ("));
+    }
+
+    /// The optimistic twin of `rack_rings_sharded_matches_serial`: a flat
+    /// ring over every accelerator declares a pod-wide footprint, so the
+    /// sharded backend must run it optimistically on the coordinator —
+    /// not fall back to serial — and still reproduce the serial report.
+    #[test]
+    fn flat_ring_sharded_matches_serial_optimistically() {
+        let base = MixedConfig { shape: CollectiveShape::FlatRing, ..small() };
+        let ser = run_mixed(&base);
+        let shr = run_mixed(&MixedConfig { sharded: true, shards: 4, ..base });
+        match &shr.mode {
+            ShardMode::Sharded { shards, .. } => {
+                assert!(*shards >= 2, "flat-ring point collapsed to {shards} shard(s)");
+            }
+            m => panic!("flat-ring mixed point must shard optimistically, got {m:?}"),
+        }
+        assert_eq!(shr.optimistic_sources, 1, "the pod-wide ring must span");
+        assert!(shr.checkpoints > 0, "spanning ring never gated a window");
+        assert_eq!(ser.optimistic_sources, 0);
+        assert_eq!(ser.mixed_events, shr.mixed_events);
+        assert!((ser.mixed_makespan_ns - shr.mixed_makespan_ns).abs() < 1e-9);
+        for (a, b) in ser.rows.iter().zip(&shr.rows) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.completed, b.completed);
+            assert!((a.bytes - b.bytes).abs() < 1e-6);
+            assert!(
+                (a.mixed_tx_ns - b.mixed_tx_ns).abs() <= 1e-6 * a.mixed_tx_ns.max(1.0),
+                "{}: mixed tx {} vs {}",
+                a.class.name(),
+                a.mixed_tx_ns,
+                b.mixed_tx_ns
+            );
+            assert!((a.mixed_p99_ns - b.mixed_p99_ns).abs() <= 1e-6 * a.mixed_p99_ns.max(1.0));
+        }
+        let result_line = |s: &str| {
+            s.lines().find(|l| l.starts_with("RESULT mixed")).map(String::from).unwrap()
+        };
+        assert_eq!(result_line(&render(&ser)), result_line(&render(&shr)));
+        let rendered = render(&shr);
+        assert!(rendered.contains("backend: sharded ("));
+        assert!(rendered.contains("optimistic"), "render must flag the optimistic backend");
     }
 }

@@ -252,6 +252,48 @@ impl Topology {
         (0..n).map(|i| bin_of_root[find(&mut parent, anchor[i])]).collect()
     }
 
+    /// Like [`partition_domains_coupled`](Topology::partition_domains_coupled),
+    /// but instead of letting a fabric-spanning group silently collapse
+    /// the partition into one domain, identifies *which* groups span it.
+    /// While the coupled partition yields a single domain, the largest
+    /// remaining group (most members; lowest index on ties) is marked
+    /// spanning and excluded, and the partition recomputed — the greedy
+    /// inverse of the union-find merge: the biggest footprint is the one
+    /// gluing the domains together. Returns the domain assignment
+    /// computed over the non-spanning groups only, plus one spanning
+    /// flag per input group (all `false` when the topology itself is a
+    /// single domain — nothing to blame on a footprint). Deterministic
+    /// for a given topology and group list.
+    pub fn partition_domains_coupled_spanning(
+        &self,
+        max_domains: usize,
+        groups: &[Vec<NodeId>],
+    ) -> (Vec<u32>, Vec<bool>) {
+        let single = |doms: &[u32]| doms.iter().all(|&d| d == doms.first().copied().unwrap_or(0));
+        let base = self.partition_domains_coupled(max_domains, &[]);
+        if single(&base) {
+            return (base, vec![false; groups.len()]);
+        }
+        let mut spanning = vec![false; groups.len()];
+        loop {
+            let active: Vec<Vec<NodeId>> = groups
+                .iter()
+                .zip(&spanning)
+                .filter(|&(g, &s)| !s && !g.is_empty())
+                .map(|(g, _)| g.clone())
+                .collect();
+            let doms = self.partition_domains_coupled(max_domains, &active);
+            if !single(&doms) {
+                return (doms, spanning);
+            }
+            let victim = (0..groups.len())
+                .filter(|&i| !spanning[i] && !groups[i].is_empty())
+                .max_by_key(|&i| (groups[i].len(), std::cmp::Reverse(i)))
+                .expect("partition is multi-domain once every group is excluded");
+            spanning[victim] = true;
+        }
+    }
+
     /// The switch subtree each node belongs to: switches anchor
     /// themselves; an endpoint joins its first switch neighbor (its rack
     /// crossbar / CXL leaf), or itself when it has none.
@@ -552,6 +594,40 @@ mod tests {
         let doms = t.partition_domains_coupled(4, &[all.clone()]);
         let d0 = doms[all[0]];
         assert!(all.iter().all(|&n| doms[n] == d0), "fabric-wide group must collapse to one domain");
+    }
+
+    #[test]
+    fn spanning_groups_are_detected_and_excluded() {
+        let (mut t, leaves) = Topology::clos(4, 2, LinkKind::CxlCoherent, "c");
+        let mut eps = Vec::new();
+        for &l in &leaves {
+            for _ in 0..2 {
+                let n = t.add_node(NodeKind::Accelerator, "ep");
+                t.connect(n, l, LinkKind::CxlCoherent);
+                eps.push(n);
+            }
+        }
+        // per-leaf pair groups plus one fabric-wide group: only the wide
+        // group spans; the rest still partition into multiple domains
+        let mut groups: Vec<Vec<NodeId>> = eps.chunks(2).map(|c| c.to_vec()).collect();
+        groups.push(eps.clone());
+        let (doms, spanning) = t.partition_domains_coupled_spanning(4, &groups);
+        assert_eq!(spanning, vec![false, false, false, false, true]);
+        let k = doms.iter().copied().max().unwrap() as usize + 1;
+        assert!(k >= 2, "non-spanning groups must keep a multi-domain partition");
+        for g in &groups[..4] {
+            assert_eq!(doms[g[0]], doms[g[1]], "pinned group split across domains");
+        }
+        // deterministic
+        assert_eq!((doms, spanning), t.partition_domains_coupled_spanning(4, &groups));
+
+        // a single-switch fabric is one domain by construction: nothing
+        // is blamed on a footprint
+        let s = Topology::single_hop(6, LinkKind::NvLink5, "r");
+        let accs = s.nodes_of(NodeKind::Accelerator);
+        let (sdoms, sspan) = s.partition_domains_coupled_spanning(4, &[accs]);
+        assert!(sdoms.iter().all(|&d| d == 0));
+        assert_eq!(sspan, vec![false]);
     }
 
     #[test]

@@ -923,10 +923,18 @@ impl<'f> MemSim<'f> {
     /// latency multiset match the serial backend exactly (pinned by
     /// `prop_sharded_matches_serial`).
     ///
+    /// A declared footprint that would collapse the partition (e.g. a
+    /// fabric-wide ring) no longer forces a serial run: the source stays
+    /// on the coordinator and executes optimistically — per-shard
+    /// checkpoint at the epoch barrier, rollback + replay when a
+    /// cross-shard completion invalidates the window's speculated
+    /// injections (see [`super::shard`]'s module docs) — provided every
+    /// reactive source supports [`TrafficSource::checkpoint`].
+    ///
     /// Falls back to the serial loop when sharding cannot help or cannot
-    /// be conservative — a single shard, non-positive lookahead, a
-    /// reactive source without a footprint, or a footprint that collapses
-    /// the partition (e.g. a fabric-wide ring) — and says why in the
+    /// be correct — a single shard, non-positive lookahead, a reactive
+    /// source without a footprint, or a spanning footprint alongside a
+    /// reactive source that cannot checkpoint — and says why in the
     /// report's [`ShardMode::SerialFallback`](super::traffic::ShardMode).
     pub fn run_streamed_sharded(&mut self, sources: &mut [&mut dyn TrafficSource]) -> StreamReport {
         let shards = crate::util::par::shards_for(usize::MAX);
@@ -945,7 +953,12 @@ impl<'f> MemSim<'f> {
             .iter()
             .map(|s| {
                 let open = s.open_loop();
-                SourceMeta { open, footprint: if open { None } else { s.footprint() } }
+                SourceMeta {
+                    open,
+                    footprint: if open { None } else { s.footprint() },
+                    class: s.class(),
+                    checkpointable: s.checkpointable(),
+                }
             })
             .collect();
         // the effective rail fan at injection: footprint closures must

@@ -50,7 +50,7 @@ pub mod rails;
 mod shard;
 pub mod traffic;
 
-pub use engine::{Engine, EventKind};
+pub use engine::{Engine, EngineSnapshot, EventKind};
 pub use memsim::{MemSim, MemSimReport, Transaction};
 pub use qos::{ArbPolicy, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 pub use rails::{RailSelector, RoutingPolicy};

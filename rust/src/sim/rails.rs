@@ -21,13 +21,17 @@
 //!   equal-cost paths while any single run stays exactly reproducible
 //!   (and identical between the serial and sharded backends).
 //! * [`RailSelector::Adaptive`] — congestion-adaptive: at injection the
-//!   candidate rail paths are scored by the live service backlog
+//!   candidate rail paths are scored by the service backlog
 //!   ([`ClassedServer::pending_ns`](super::qos::ClassedServer::pending_ns))
 //!   on their links — the same per-link state the QoS subsystem already
 //!   maintains — and the least-loaded rail wins (ties to the lowest
-//!   rail). Across shard boundaries the remote queue state is not
-//!   visible to the coordinator, so the sharded backend degrades
-//!   Adaptive to [`HashSpray`](RailSelector::HashSpray).
+//!   rail). The serial backend scores live state; the sharded backend
+//!   scores per-link backlog *digests* each worker piggybacks on its
+//!   epoch-barrier response (folded at commit, so the table is one
+//!   barrier stale but identical across replay attempts — see
+//!   [`super::shard`]'s module docs). Both backends are deterministic;
+//!   their rail choices may differ, so cross-backend byte parity is
+//!   pinned for Deterministic and HashSpray only.
 //!
 //! Policies are per [`LinkTier`] (mirroring
 //! [`QosPolicy`](super::qos::QosPolicy)): a [`RoutingPolicy`] can spray
@@ -51,9 +55,10 @@ pub enum RailSelector {
     /// ([`SourcedTx::with_flow`](super::traffic::SourcedTx::with_flow))
     /// and its per-source emission index otherwise.
     HashSpray,
-    /// Least-loaded candidate by live link-server backlog; falls back to
-    /// [`RailSelector::HashSpray`] where that state is not visible
-    /// (across shard boundaries).
+    /// Least-loaded candidate by link-server backlog: the live
+    /// [`pending_ns`](super::qos::ClassedServer::pending_ns) on the
+    /// serial backend, barrier-piggybacked per-link digests on the
+    /// sharded backend (one barrier stale, deterministic either way).
     Adaptive,
 }
 

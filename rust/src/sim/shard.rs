@@ -42,10 +42,56 @@
 //! none of its transactions ever generates a cross-shard handoff. When
 //! *every* source is pinned no traffic crosses a boundary at all, the
 //! lookahead is `INFINITY` and the whole run is one fully parallel
-//! epoch. A reactive source without a footprint — or one whose closure
-//! collapses the partition to a single shard (e.g. a fabric-wide ring) —
-//! falls the whole run back to the serial loop, reported through
-//! [`ShardMode::SerialFallback`].
+//! epoch. A reactive source without a footprint falls the whole run
+//! back to the serial loop, reported through
+//! [`ShardMode::SerialFallback`]. A *declared* footprint whose closure
+//! would collapse the partition to a single shard (e.g. a fabric-wide
+//! ring) no longer does: the group is excluded from coupling by
+//! [`Topology::partition_domains_coupled_spanning`](crate::fabric::Topology::partition_domains_coupled_spanning)
+//! and the source runs on the coordinator under the optimistic protocol
+//! below — provided every reactive source supports
+//! [`TrafficSource::checkpoint`]; otherwise the run stays serial and the
+//! fallback reason names the offending source.
+//!
+//! # Optimistic execution of spanning footprints
+//!
+//! A spanning source's completion→emission chain can cross shards
+//! faster than any lookahead, so conservative windows cannot contain
+//! it. Instead the run turns *optimistic* (time-warp-lite, rollback at
+//! epoch granularity) for exactly the windows where a spanning source
+//! can act — an injection staged below `t1`, or one of its
+//! transactions in flight:
+//!
+//! * **Checkpoint.** At the window's barrier the coordinator snapshots
+//!   each spanning source ([`TrafficSource::checkpoint`]) plus its
+//!   staging bookkeeping, and every participating worker snapshots its
+//!   mutable shard state (calendar [`Engine`], [`ClassedServer`] link
+//!   state, in-flight slot table, pinned-source cursors) before
+//!   executing the window.
+//! * **Speculate.** Spanning injections staged below `t1` are recorded
+//!   as a speculative set and delivered like ordinary hop-0 handoffs;
+//!   the window then executes normally. Worker outputs (handoffs,
+//!   completions) are held per attempt and only routed at commit, and
+//!   the conservative bound stamps every cross-shard handoff `>= t1`,
+//!   so a rollback never has to chase messages into other shards.
+//! * **Validate.** After the barrier the coordinator rewinds the
+//!   spanning sources to the checkpoint and replays their decision
+//!   procedure against the completions the attempt actually produced
+//!   (merged in time order, completions before same-instant injections
+//!   — the serial pump's dispatch order). If the replayed injection
+//!   set equals the speculative set the epoch commits; otherwise every
+//!   participating worker rolls back, the speculative set is
+//!   *replaced* by the replayed one, inboxes are rebuilt canonically
+//!   (committed deliveries first, then speculative injections
+//!   source-major) and the window re-executes. The earliest divergence
+//!   strictly advances each round, so the fixpoint terminates;
+//!   [`StreamReport`] counts `checkpoints` and `rollbacks`.
+//!
+//! Windows where no spanning source can act skip all of this and run
+//! as plain conservative epochs — an optimistic run degenerates to the
+//! conservative protocol at zero cost while spanning traffic is idle.
+//! The serial loop stays the byte-exact oracle
+//! (`tests/prop_invariants.rs::prop_optimistic_matches_serial`).
 //!
 //! # Multi-rail routing
 //!
@@ -59,10 +105,19 @@
 //! [`RailSelector::HashSpray`](super::rails::RailSelector) picks the
 //! same rail for every transaction on both backends (pinned by
 //! `prop_sharded_matches_serial`'s policy sweep).
-//! [`RailSelector::Adaptive`](super::rails::RailSelector) needs the live
-//! link-server backlog, which lives on the workers — remote queue state
-//! is not visible across shard boundaries — so the sharded backend
-//! degrades it to the deterministic spray. The conservative lookahead is
+//! [`RailSelector::Adaptive`](super::rails::RailSelector) needs the
+//! link-server backlog, which lives on the workers — so each worker
+//! piggybacks a per-owned-link
+//! [`pending_ns`](super::qos::ClassedServer::pending_ns) digest on its
+//! epoch-barrier response, the coordinator folds the digests into one
+//! global table (applied only at commit, so replay attempts see
+//! identical state), and both the coordinator's staging and the
+//! workers' pinned-source injections score candidate rails against
+//! that table (strict `<`, ties to the lowest rail — the serial
+//! tie-break). The digest is one barrier stale by design: runs are
+//! deterministic and work-conserving, but rail choices can differ from
+//! the serial backend's live-state scoring, so byte parity is pinned
+//! for Deterministic and HashSpray only. The conservative lookahead is
 //! unchanged by multipath: `plan` minimizes `fixed + switch` over
 //! *every* link direction whose receiver is a gateway node, a superset
 //! of the union of boundary-crossing rails, so every rail a transaction
@@ -82,17 +137,24 @@
 //! *counts* use the same convention as the serial streamed loop (one
 //! injection event per transaction on top of the hop events).
 
-use super::engine::{Engine, EventKind};
+use super::engine::{Engine, EngineSnapshot, EventKind};
 use super::memsim::{path_key, rail_hops, rail_step, LinkConsts, MemSim};
 use super::qos::{Admission, BatchAdmit, ClassedServer, LinkTier};
-use super::rails::spray_rail;
+use super::rails::{spray_rail, RailSelector};
 use super::traffic::{
     Pull, ShardMode, ShardStats, SourcedTx, StreamReport, TrafficClass, TrafficSource,
 };
 use crate::fabric::{Fabric, NodeId, NodeKind};
 use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
+
+/// Replay attempts per optimistic window before declaring the fixpoint
+/// broken. The earliest divergence strictly advances every round (each
+/// replay only appends or corrects decisions at or after the previous
+/// round's first divergence), so hitting this cap means a bug — panic
+/// loudly instead of spinning.
+const MAX_REPLAY_ATTEMPTS: usize = 1000;
 
 /// Per-source injections staged beyond the current window are bounded, so
 /// streamed memory stays O(peak in-flight) even under infinite lookahead
@@ -100,11 +162,15 @@ use std::time::Instant;
 const MAX_STAGE_PER_SOURCE: usize = 4096;
 
 /// What [`plan`] needs to know about each source: whether it is
-/// open-loop (stays on the coordinator) and, for reactive sources, the
-/// static footprint to co-locate (`None` = undeclared → serial fallback).
+/// open-loop (stays on the coordinator), for reactive sources the static
+/// footprint to co-locate (`None` = undeclared → serial fallback), the
+/// traffic class (named in fallback reasons) and whether the source
+/// supports the checkpoint/restore protocol a spanning footprint needs.
 pub(crate) struct SourceMeta {
     pub(crate) open: bool,
     pub(crate) footprint: Option<Vec<NodeId>>,
+    pub(crate) class: TrafficClass,
+    pub(crate) checkpointable: bool,
 }
 
 /// [`plan`]'s verdict: a runnable partition, or the reason the run must
@@ -130,9 +196,14 @@ pub(crate) struct ShardPlan {
     pub(crate) link_shard: Vec<u32>,
     pub(crate) nshards: usize,
     /// Owning shard per source: `Some(shard)` pins a reactive source to
-    /// that shard's worker, `None` keeps an open-loop source on the
-    /// coordinator.
+    /// that shard's worker, `None` keeps an open-loop or spanning source
+    /// on the coordinator.
     pub(crate) pinned: Vec<Option<u32>>,
+    /// Reactive sources whose footprint closure spans the partition:
+    /// they run on the coordinator under the optimistic
+    /// checkpoint/rollback protocol (see the module docs) instead of
+    /// collapsing the whole run to the serial loop.
+    pub(crate) spanning: Vec<bool>,
     /// Minimum cross-partition hop latency, ns (`f64::INFINITY` when no
     /// traffic can cross a boundary — every source pinned — so shards
     /// run fully decoupled in a single epoch).
@@ -141,7 +212,7 @@ pub(crate) struct ShardPlan {
 
 /// Transaction state carried across shard boundaries by value (each shard
 /// interns paths locally, so messages stay plain scalars).
-#[derive(Clone, Copy)]
+#[derive(Clone, Copy, PartialEq)]
 struct ShardTx {
     issued: f64,
     bytes: f64,
@@ -157,25 +228,64 @@ struct ShardTx {
 }
 
 /// A mailbox message: "transaction `tx` arrives at hop `hop` at `at`".
-/// Injections are the `hop == 0` case.
+/// Injections are the `hop == 0` case. `Copy` so an optimistic window's
+/// committed deliveries can be snapshotted and replayed cheaply.
+#[derive(Clone, Copy)]
 struct Handoff {
     at: f64,
     hop: u32,
     tx: ShardTx,
 }
 
+#[derive(Clone)]
 struct LocalTx {
     tx: ShardTx,
     path_start: u32,
     path_len: u32,
 }
 
+/// One speculative spanning injection: everything the attempt's workers
+/// saw of it. Two attempts whose `SpecTx` sequences compare equal ran
+/// the same window, so equality is the optimistic commit criterion.
+#[derive(Clone, Copy, PartialEq)]
+struct SpecTx {
+    at: f64,
+    /// First-hop shard the hop-0 handoff was delivered to.
+    target: u32,
+    tx: ShardTx,
+}
+
+/// Coordinator-side snapshot of one spanning source at an optimistic
+/// window's barrier: the source's own state plus the staging cursors the
+/// validation replay rewinds to.
+struct SpanCkpt {
+    snap: Box<dyn std::any::Any + Send>,
+    staged: Option<(f64, SourcedTx)>,
+    blocked: bool,
+    done: bool,
+    inflight: usize,
+    last_issue: f64,
+    emitted: u64,
+}
+
 enum Cmd {
     /// Run one epoch `[.., t1)`. `inbox` carries this epoch's deliveries;
     /// `out` and `completions` are empty recycled buffers the worker
     /// fills and returns (mailbox memory is reused across epochs instead
-    /// of reallocated).
-    Epoch { t1: f64, inbox: Vec<Handoff>, out: Vec<(u32, Handoff)>, completions: Vec<Completion> },
+    /// of reallocated). `checkpoint` asks the worker to snapshot its
+    /// mutable state before executing (optimistic window, first
+    /// participation); `rollback` asks it to restore that snapshot first
+    /// (replay attempt). `digest` is the epoch-start backlog table for
+    /// adaptive rail resolution (`None` when the run is not adaptive).
+    Epoch {
+        t1: f64,
+        inbox: Vec<Handoff>,
+        out: Vec<(u32, Handoff)>,
+        completions: Vec<Completion>,
+        checkpoint: bool,
+        rollback: bool,
+        digest: Option<Arc<Vec<[f64; 2]>>>,
+    },
     Finish,
 }
 
@@ -197,6 +307,10 @@ enum Resp {
         spent: Vec<Handoff>,
         /// Earliest still-pending local event (INFINITY when idle).
         next_event: f64,
+        /// Per owned link: `pending_ns` of both direction servers at the
+        /// window edge, for the coordinator's adaptive-routing table.
+        /// Empty unless the epoch command carried a digest.
+        digest: Vec<(u32, [f64; 2])>,
     },
     Final {
         shard: usize,
@@ -249,6 +363,9 @@ pub(crate) fn plan(
     // every rail it can spray over — co-locating the owners co-locates
     // the link servers, so the source's events never leave its shard
     let mut groups: Vec<Vec<NodeId>> = Vec::new();
+    // group index -> source index, so per-group spanning verdicts map
+    // back onto sources
+    let mut group_src: Vec<usize> = Vec::new();
     for (i, m) in meta.iter().enumerate() {
         if m.open {
             continue;
@@ -257,7 +374,8 @@ pub(crate) fn plan(
             Some(fp) => fp,
             None => {
                 return PlanOutcome::Fallback(format!(
-                    "reactive source {i} has no static footprint"
+                    "reactive source {i} (class {}) has no static footprint",
+                    m.class.name()
                 ))
             }
         };
@@ -298,19 +416,42 @@ pub(crate) fn plan(
             }
         }
         groups.push(closure);
+        group_src.push(i);
     }
-    let node_shard = if groups.is_empty() {
-        topo.partition_domains(max_shards)
+    // a closure that would collapse the partition (e.g. a fabric-wide
+    // ring) is excluded from coupling and marked *spanning* — it runs on
+    // the coordinator under the optimistic protocol instead of forcing
+    // the serial loop
+    let (node_shard, span_groups) = if groups.is_empty() {
+        (topo.partition_domains(max_shards), Vec::new())
     } else {
-        topo.partition_domains_coupled(max_shards, &groups)
+        topo.partition_domains_coupled_spanning(max_shards, &groups)
     };
     let nshards = node_shard.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
     if nshards <= 1 {
-        return PlanOutcome::Fallback(if groups.is_empty() {
-            "topology yields a single domain".into()
-        } else {
-            "reactive footprints span the whole fabric (single merged domain)".into()
-        });
+        return PlanOutcome::Fallback("topology yields a single domain".into());
+    }
+    let mut spanning = vec![false; meta.len()];
+    for (g, &src) in group_src.iter().enumerate() {
+        if span_groups.get(g).copied().unwrap_or(false) {
+            spanning[src] = true;
+        }
+    }
+    let any_span = spanning.iter().any(|&s| s);
+    if any_span {
+        // optimistic windows snapshot EVERY reactive source at the
+        // barrier (spanning ones on the coordinator, pinned ones inside
+        // their worker's rollback path), so all of them must support
+        // the checkpoint/restore protocol
+        if let Some(i) = (0..meta.len()).find(|&i| !meta[i].open && !meta[i].checkpointable) {
+            let s = spanning.iter().position(|&s| s).expect("any_span implies a spanning source");
+            return PlanOutcome::Fallback(format!(
+                "reactive source {s} (class {}) has a footprint spanning the partition and \
+                 reactive source {i} (class {}) does not support checkpoint/rollback",
+                meta[s].class.name(),
+                meta[i].class.name()
+            ));
+        }
     }
     let link_shard: Vec<u32> =
         topo.links.iter().map(|l| node_shard[link_owner(topo, l.a, l.b)]).collect();
@@ -318,14 +459,18 @@ pub(crate) fn plan(
     if link_shard.iter().all(|&s| Some(s) == first) {
         return PlanOutcome::Fallback("every link owned by one shard".into());
     }
-    // pin each reactive source to the shard holding its (merged) closure
+    // pin each non-spanning reactive source to the shard holding its
+    // (merged) closure; spanning sources stay coordinator-owned
     let mut pinned: Vec<Option<u32>> = Vec::with_capacity(meta.len());
     let mut g = 0usize;
-    for m in meta {
+    for (i, m) in meta.iter().enumerate() {
         if m.open {
             pinned.push(None);
         } else if m.footprint.as_ref().map(|fp| fp.is_empty()).unwrap_or(false) {
             pinned.push(Some(0));
+        } else if spanning[i] {
+            g += 1;
+            pinned.push(None); // coordinator-owned, optimistic
         } else {
             let group = &groups[g];
             g += 1;
@@ -338,7 +483,7 @@ pub(crate) fn plan(
         }
     }
     let any_open = meta.iter().any(|m| m.open);
-    if !any_open && !meta.is_empty() {
+    if !any_open && !any_span && !meta.is_empty() {
         let first_pin = pinned.first().copied().flatten();
         if pinned.iter().all(|&p| p == first_pin) {
             return PlanOutcome::Fallback(
@@ -346,10 +491,10 @@ pub(crate) fn plan(
             );
         }
     }
-    // lookahead: only open-loop traffic can cross shard boundaries (a
-    // pinned source's closure keeps its whole path inside one shard), so
-    // with no open sources the bound is INFINITY — one decoupled epoch.
-    // Otherwise a handoff out of link (l, dir) arrives at
+    // lookahead: only open-loop and spanning traffic can cross shard
+    // boundaries (a pinned source's closure keeps its whole path inside
+    // one shard), so with neither the bound is INFINITY — one decoupled
+    // epoch. Otherwise a handoff out of link (l, dir) arrives at
     // done + fixed + switch_at_receiver with done >= now, so minimize
     // fixed + switch over directions whose receiving node is a gateway
     // (usually a switch; a non-switch gateway contributes switch_ns = 0,
@@ -358,7 +503,7 @@ pub(crate) fn plan(
     // EVERY gateway-receiving link direction — a superset of the union
     // of boundary-crossing rails — so whichever equal-cost rail a
     // transaction rides, its handoffs are stamped >= T0 + L
-    let lookahead = if !any_open {
+    let lookahead = if !any_open && !any_span {
         f64::INFINITY
     } else {
         let mut gateway = vec![false; topo.nodes.len()];
@@ -390,7 +535,7 @@ pub(crate) fn plan(
         }
         lookahead
     };
-    PlanOutcome::Sharded(ShardPlan { node_shard, link_shard, nshards, pinned, lookahead })
+    PlanOutcome::Sharded(ShardPlan { node_shard, link_shard, nshards, pinned, spanning, lookahead })
 }
 
 /// Pull coordinator-owned source `i` once so it is staged one
@@ -424,6 +569,146 @@ fn stage_next(
             "traffic source {i} (class {}) returned Blocked but declared itself open-loop",
             classes[i].name()
         ),
+    }
+}
+
+/// Pull coordinator-owned *spanning* source `i` once at `now` — the
+/// serial pump for a reactive source, run on the coordinator: stage one
+/// ahead, park on `Blocked` (a completion unblocks it during
+/// validation), mark done on exhaustion. Shared by window staging and
+/// the validation replay, so both advance the source identically.
+fn stage_span(
+    i: usize,
+    now: f64,
+    sources: &mut [Option<&mut dyn TrafficSource>],
+    staged: &mut [Option<(f64, SourcedTx)>],
+    src_done: &mut [bool],
+    blocked: &mut [bool],
+    inflight: &[usize],
+) {
+    if src_done[i] || blocked[i] || staged[i].is_some() {
+        return;
+    }
+    let src = sources[i].as_mut().expect("spanning source owned by coordinator");
+    match src.pull(now) {
+        Pull::Tx(stx) => {
+            let at = stx.tx.at.max(now);
+            staged[i] = Some((at, stx));
+        }
+        Pull::Blocked => {
+            assert!(
+                inflight[i] > 0,
+                "spanning traffic source {i} blocked with nothing in flight (deadlock)"
+            );
+            blocked[i] = true;
+        }
+        Pull::Done => src_done[i] = true,
+    }
+}
+
+/// How an injection resolves its rail, bundled so the coordinator's
+/// staging, the validation replay and the workers' pinned-source pumps
+/// all pick through the identical procedure.
+struct RailChoice<'a> {
+    fabric: &'a Fabric,
+    tiers: &'a [LinkTier],
+    spread: [bool; LinkTier::COUNT],
+    spraying: bool,
+    adaptive: bool,
+    rail_fan: usize,
+    /// Barrier-piggybacked backlog per `(link, direction)`; empty unless
+    /// `adaptive`. Updated only at epoch commits, so every replay
+    /// attempt of a window scores against the same table.
+    digest: &'a [[f64; 2]],
+}
+
+impl RailChoice<'_> {
+    /// Resolve one injection's rail: least-digest-backlog candidate
+    /// under Adaptive, the ECMP spray hash under HashSpray, rail 0 when
+    /// the run does not spread.
+    fn pick(&self, src: usize, dst: usize, key: u64, scratch: &mut Vec<u32>) -> u16 {
+        if !self.spraying {
+            return 0;
+        }
+        if !self.adaptive {
+            return spray_rail(src, dst, key, self.rail_fan);
+        }
+        // score every candidate rail by the digest backlog along its
+        // path; strict `<` keeps ties on the lowest rail, mirroring the
+        // serial resolver's tie-break
+        let mut best = 0u16;
+        let mut best_cost = f64::INFINITY;
+        for rail in 0..self.rail_fan as u16 {
+            scratch.clear();
+            if !rail_hops(self.fabric, self.tiers, self.spread, src, dst, rail, scratch) {
+                continue; // unreachable on this rail: interning names it later
+            }
+            let cost: f64 = scratch
+                .iter()
+                .map(|&h| self.digest[(h >> 1) as usize][(h & 1) as usize])
+                .sum();
+            if cost < best_cost {
+                best_cost = cost;
+                best = rail;
+            }
+        }
+        best
+    }
+}
+
+/// Turn spanning source `i`'s staged pull at `at` into the speculative
+/// injection record: advance the emission cursor, resolve the rail and
+/// the first-hop shard. The caller pushes the hop-0 [`Handoff`] (window
+/// staging) or only the record (validation replay) — both derive
+/// bit-identical `SpecTx`es from identical source state, which is what
+/// makes the fixpoint comparison sound.
+#[allow(clippy::too_many_arguments)]
+fn speculate_span(
+    i: usize,
+    at: f64,
+    stx: &SourcedTx,
+    plan: &ShardPlan,
+    classes: &[TrafficClass],
+    rc: &RailChoice<'_>,
+    scratch: &mut Vec<u32>,
+    emitted: &mut [u64],
+    inflight: &mut [usize],
+) -> SpecTx {
+    let tx = stx.tx;
+    let seq = emitted[i];
+    emitted[i] += 1;
+    let rail = rc.pick(tx.src, tx.dst, stx.flow.unwrap_or(seq), scratch);
+    let target = if tx.src == tx.dst {
+        plan.node_shard[tx.src]
+    } else {
+        match rail_step(rc.fabric, rc.tiers, rc.spread, tx.src, tx.dst, rail) {
+            Some((_, link)) => plan.link_shard[link],
+            None => panic!(
+                "no path {} ({}) -> {} ({}) for traffic source {} (class {})",
+                tx.src,
+                rc.fabric.topo.node(tx.src).label,
+                tx.dst,
+                rc.fabric.topo.node(tx.dst).label,
+                i,
+                classes[i].name()
+            ),
+        }
+    };
+    inflight[i] += 1;
+    SpecTx {
+        at,
+        target,
+        tx: ShardTx {
+            issued: at,
+            bytes: tx.bytes,
+            device_ns: tx.device_ns,
+            src: tx.src as u32,
+            dst: tx.dst as u32,
+            source: i as u32,
+            class: classes[i],
+            token: stx.token,
+            rail,
+        },
     }
 }
 
@@ -478,14 +763,18 @@ pub(crate) fn run(
     let k = plan.nshards;
     let nsrc = sources.len();
     let classes: Vec<TrafficClass> = sources.iter().map(|s| s.class()).collect();
-    // multi-rail resolution at injection: spray for any spreading policy
-    // (Adaptive degrades to HashSpray here — worker-owned queue state is
-    // not visible across shard boundaries)
+    // multi-rail resolution at injection: spray for any spreading
+    // policy; under Adaptive the choice is steered by the barrier
+    // -piggybacked backlog digests instead of the hash (see module docs)
     let rail_fan = fabric.router().max_rails();
-    let spraying = rail_fan > 1
-        && spread != [false; LinkTier::COUNT]
-        && sim.routing_policy().resolution().spreads();
+    let resolution = sim.routing_policy().resolution();
+    let spraying = rail_fan > 1 && spread != [false; LinkTier::COUNT] && resolution.spreads();
+    let adaptive = spraying && resolution == RailSelector::Adaptive;
     let pinned_total = plan.pinned.iter().flatten().count();
+    // spanning sources run on the coordinator under the optimistic
+    // checkpoint/rollback protocol (see the module docs)
+    let optimistic = plan.spanning.iter().any(|&s| s);
+    let span_idx: Vec<usize> = (0..nsrc).filter(|&i| plan.spanning[i]).collect();
 
     // split the source slice: pinned sources move onto their owning
     // shard's worker, open-loop sources stay with the coordinator
@@ -521,6 +810,8 @@ pub(crate) fn run(
     let mut peak_inflight = 0usize;
     let mut epochs = 0u64;
     let mut barriers = 0u64;
+    let mut checkpoints = 0u64;
+    let mut rollbacks = 0u64;
     let mut shard_stats: Vec<ShardStats> = Vec::with_capacity(k);
 
     std::thread::scope(|scope| {
@@ -571,6 +862,22 @@ pub(crate) fn run(
         let mut spare_out: Vec<Vec<(u32, Handoff)>> = Vec::new();
         let mut spare_comp: Vec<Vec<Completion>> = Vec::new();
         let mut completions: Vec<Completion> = Vec::new();
+        // optimistic state: per-spanning-source block flags and in-flight
+        // counts, the speculative injection sets, the committed-inbox
+        // snapshots and the barrier checkpoints (all idle when no source
+        // spans); plus the adaptive-routing digest table
+        let mut blocked = vec![false; nsrc];
+        let mut inflight = vec![0usize; nsrc];
+        let mut speculative: Vec<Vec<SpecTx>> = (0..nsrc).map(|_| Vec::new()).collect();
+        let mut new_spec: Vec<Vec<SpecTx>> = (0..nsrc).map(|_| Vec::new()).collect();
+        let mut span_ckpt: Vec<Option<SpanCkpt>> = (0..nsrc).map(|_| None).collect();
+        let mut epoch_inbox: Vec<Vec<Handoff>> = (0..k).map(|_| Vec::new()).collect();
+        let mut participated = vec![false; k];
+        let mut pinged = vec![false; k];
+        let mut held_out: Vec<Vec<(u32, Handoff)>> = Vec::new();
+        let mut digests: Vec<(u32, [f64; 2])> = Vec::new();
+        let mut digest_table: Vec<[f64; 2]> = vec![[0.0; 2]; fabric.topo.links.len()];
+        let mut rail_scratch: Vec<u32> = Vec::new();
 
         // initial barrier: every worker pumps its pinned sources at t=0
         // and reports its earliest injection event, so a fully-pinned
@@ -578,8 +885,10 @@ pub(crate) fn run(
         // the first window
         for rx in &res_rxs {
             match rx.recv().expect("shard worker alive") {
-                Resp::Epoch { shard, out, completions: c, spent, next_event } => {
-                    debug_assert!(out.is_empty() && c.is_empty() && spent.is_empty());
+                Resp::Epoch { shard, out, completions: c, spent, next_event, digest } => {
+                    debug_assert!(
+                        out.is_empty() && c.is_empty() && spent.is_empty() && digest.is_empty()
+                    );
                     next_events[shard] = next_event;
                 }
                 Resp::Final { .. } => unreachable!("Final before Finish"),
@@ -587,9 +896,27 @@ pub(crate) fn run(
         }
 
         loop {
-            // keep every active coordinator source staged one ahead
+            // keep every active coordinator source staged one ahead:
+            // open sources via the serial clamp, spanning sources via
+            // the optimistic pump (both pull at their last injection
+            // time, which only committed completions can precede — so
+            // this staging itself is never rolled back)
             for i in 0..nsrc {
-                stage_next(i, &mut coord_srcs, &mut staged, &mut src_done, &last_issue, &classes);
+                if plan.spanning[i] {
+                    stage_span(
+                        i,
+                        last_issue[i],
+                        &mut coord_srcs,
+                        &mut staged,
+                        &mut src_done,
+                        &mut blocked,
+                        &inflight,
+                    );
+                } else {
+                    stage_next(
+                        i, &mut coord_srcs, &mut staged, &mut src_done, &last_issue, &classes,
+                    );
+                }
             }
             let t_staged =
                 staged.iter().flatten().map(|(at, _)| *at).fold(f64::INFINITY, f64::min);
@@ -604,10 +931,50 @@ pub(crate) fn run(
             }
             let mut t1 = t0 + plan.lookahead; // INFINITY lookahead: one epoch
 
+            // optimistic gate: checkpoint only for windows where a
+            // spanning source can act — an injection staged below t1, or
+            // a transaction in flight whose completion could unblock a
+            // pull inside the already-executed window. Everything else
+            // runs as a plain conservative epoch, rollback machinery idle.
+            let gate = optimistic
+                && span_idx.iter().any(|&i| {
+                    inflight[i] > 0 || staged[i].as_ref().map(|(at, _)| *at < t1).unwrap_or(false)
+                });
+            if gate {
+                checkpoints += 1;
+                for &i in &span_idx {
+                    span_ckpt[i] = Some(SpanCkpt {
+                        snap: coord_srcs[i]
+                            .as_ref()
+                            .expect("spanning source owned by coordinator")
+                            .checkpoint()
+                            .expect("plan verified checkpoint support"),
+                        staged: staged[i].clone(),
+                        blocked: blocked[i],
+                        done: src_done[i],
+                        inflight: inflight[i],
+                        last_issue: last_issue[i],
+                        emitted: emitted[i],
+                    });
+                }
+            }
+            let rc = RailChoice {
+                fabric,
+                tiers,
+                spread,
+                spraying,
+                adaptive,
+                rail_fan,
+                digest: &digest_table,
+            };
+
             // stage every injection below the window into its first-hop
             // shard's mailbox; the per-source cap bounds memory, shrinking
             // the window to the first unstaged issue time when it bites
             for i in 0..nsrc {
+                if plan.spanning[i] {
+                    continue; // staged below, speculatively
+                }
                 let mut staged_here = 0usize;
                 loop {
                     stage_next(
@@ -635,8 +1002,7 @@ pub(crate) fn run(
                     // flow-keyed when the source stamped one: same hash
                     // input as the serial injection path
                     let spray_key = stx.flow.unwrap_or(seq);
-                    let rail =
-                        if spraying { spray_rail(tx.src, tx.dst, spray_key, rail_fan) } else { 0 };
+                    let rail = rc.pick(tx.src, tx.dst, spray_key, &mut rail_scratch);
                     // the first hop is rail-dependent: different rails may
                     // enter the fabric through links owned by different shards
                     let target = if tx.src == tx.dst {
@@ -674,10 +1040,74 @@ pub(crate) fn run(
                 }
             }
 
-            // wake only shards with deliveries or events inside the window
-            let mut pinged = vec![false; k];
-            for s in 0..k {
-                if !inboxes[s].is_empty() || next_events[s] < t1 {
+            // capture the window's committed deliveries before the
+            // speculative spanning injections go in: replay attempts
+            // rebuild each inbox as this snapshot plus the (replaced)
+            // speculative set, in the same order
+            if gate {
+                for (snap, inbox) in epoch_inbox.iter_mut().zip(&inboxes) {
+                    snap.clear();
+                    snap.extend_from_slice(inbox);
+                }
+            }
+            // stage spanning injections below the window: each is
+            // recorded as speculative and delivered like an ordinary
+            // hop-0 handoff. No MAX_STAGE cap here — a spanning source
+            // keeps the lookahead finite, so the window bounds the burst
+            // exactly as the serial loop's own flow control does.
+            for &i in &span_idx {
+                loop {
+                    stage_span(
+                        i,
+                        last_issue[i],
+                        &mut coord_srcs,
+                        &mut staged,
+                        &mut src_done,
+                        &mut blocked,
+                        &inflight,
+                    );
+                    let Some(at) = staged[i].as_ref().map(|(at, _)| *at) else { break };
+                    if at >= t1 {
+                        break;
+                    }
+                    let (at, stx) = staged[i].take().expect("staged above");
+                    last_issue[i] = at;
+                    let st = speculate_span(
+                        i, at, &stx, plan, &classes, &rc, &mut rail_scratch, &mut emitted,
+                        &mut inflight,
+                    );
+                    inboxes[st.target as usize].push(Handoff { at: st.at, hop: 0, tx: st.tx });
+                    speculative[i].push(st);
+                }
+            }
+
+            epochs += 1;
+            participated.fill(false);
+            // the epoch-start digest every participating worker steers by
+            // this window (one Arc shared across replay attempts, so
+            // every attempt scores rails against identical state)
+            let epoch_digest: Option<Arc<Vec<[f64; 2]>>> =
+                if adaptive { Some(Arc::new(digest_table.clone())) } else { None };
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                // recycle the previous attempt's held outputs: a rolled
+                // -back attempt's handoffs are dropped (their producers
+                // re-execute), never routed
+                for mut o in held_out.drain(..) {
+                    o.clear();
+                    spare_out.push(o);
+                }
+                // wake shards with deliveries or events inside the
+                // window; once a shard participates in an optimistic
+                // window it is re-pinged (rollback + replay) on every
+                // further attempt, so its committed state and next-event
+                // report always come from the final attempt
+                pinged.fill(false);
+                for s in 0..k {
+                    if !participated[s] && inboxes[s].is_empty() && next_events[s] >= t1 {
+                        continue;
+                    }
                     let inbox = std::mem::replace(
                         &mut inboxes[s],
                         spare_inbox.pop().unwrap_or_default(),
@@ -689,39 +1119,178 @@ pub(crate) fn run(
                             inbox,
                             out: spare_out.pop().unwrap_or_default(),
                             completions: spare_comp.pop().unwrap_or_default(),
+                            checkpoint: gate && !participated[s],
+                            rollback: participated[s],
+                            digest: epoch_digest.clone(),
                         })
                         .expect("shard worker alive");
                     pinged[s] = true;
+                    participated[s] = true;
                     barriers += 1;
                 }
-            }
-            assert!(
-                pinged.iter().any(|&p| p),
-                "conservative window made no progress (t0={t0}, t1={t1})"
-            );
-            epochs += 1;
+                assert!(
+                    pinged.iter().any(|&p| p),
+                    "conservative window made no progress (t0={t0}, t1={t1})"
+                );
 
-            completions.clear();
-            for s in (0..k).filter(|&s| pinged[s]) {
-                match res_rxs[s].recv().expect("shard worker alive") {
-                    Resp::Epoch { shard, mut out, completions: mut c, spent, next_event } => {
-                        debug_assert_eq!(shard, s);
-                        next_events[shard] = next_event;
-                        // a pinned-only run has no conservative bound at
-                        // all — the plan proved no handoff can exist
-                        assert!(
-                            plan.lookahead.is_finite() || out.is_empty(),
-                            "cross-shard handoff under infinite lookahead"
-                        );
-                        for (target, h) in out.drain(..) {
-                            inboxes[target as usize].push(h);
+                completions.clear();
+                digests.clear();
+                for s in (0..k).filter(|&s| pinged[s]) {
+                    match res_rxs[s].recv().expect("shard worker alive") {
+                        Resp::Epoch { shard, out, completions: mut c, spent, next_event, digest } => {
+                            debug_assert_eq!(shard, s);
+                            next_events[shard] = next_event;
+                            // a pinned-only run has no conservative bound at
+                            // all — the plan proved no handoff can exist
+                            assert!(
+                                plan.lookahead.is_finite() || out.is_empty(),
+                                "cross-shard handoff under infinite lookahead"
+                            );
+                            held_out.push(out);
+                            completions.append(&mut c);
+                            spare_comp.push(c);
+                            spare_inbox.push(spent);
+                            digests.extend(digest);
                         }
-                        completions.append(&mut c);
-                        spare_out.push(out);
-                        spare_comp.push(c);
-                        spare_inbox.push(spent);
+                        Resp::Final { .. } => unreachable!("Final before Finish"),
                     }
-                    Resp::Final { .. } => unreachable!("Final before Finish"),
+                }
+                if !gate {
+                    break; // plain conservative epoch: commit directly
+                }
+
+                // ----- validate: rewind the spanning sources to the
+                // barrier and replay their decision procedure against the
+                // completions this attempt actually produced
+                completions.sort_by(|a, b| {
+                    a.at
+                        .total_cmp(&b.at)
+                        .then_with(|| a.source.cmp(&b.source))
+                        .then_with(|| a.token.cmp(&b.token))
+                });
+                for &i in &span_idx {
+                    let ck = span_ckpt[i].as_ref().expect("gated window checkpointed");
+                    coord_srcs[i]
+                        .as_mut()
+                        .expect("spanning source owned by coordinator")
+                        .restore(ck.snap.as_ref());
+                    staged[i].clone_from(&ck.staged);
+                    blocked[i] = ck.blocked;
+                    src_done[i] = ck.done;
+                    inflight[i] = ck.inflight;
+                    last_issue[i] = ck.last_issue;
+                    emitted[i] = ck.emitted;
+                    new_spec[i].clear();
+                }
+                let mut ci = 0usize;
+                loop {
+                    // earliest staged spanning injection below t1 (ties
+                    // to the lowest source index) ...
+                    let mut inj: Option<(usize, f64)> = None;
+                    for &i in &span_idx {
+                        if let Some((at, _)) = &staged[i] {
+                            let at = *at;
+                            let best = inj.map(|(_, b)| b).unwrap_or(f64::INFINITY);
+                            if at < t1 && at < best {
+                                inj = Some((i, at));
+                            }
+                        }
+                    }
+                    // ... merged against the next spanning completion
+                    while ci < completions.len()
+                        && !plan.spanning[completions[ci].source as usize]
+                    {
+                        ci += 1;
+                    }
+                    let comp = completions.get(ci);
+                    let take_inj = match (inj, comp) {
+                        (None, None) => break,
+                        (Some(_), None) => true,
+                        (None, Some(_)) => false,
+                        // completion first on ties: the serial engine
+                        // dispatches the Complete before the same-instant
+                        // injection the pump stages in response
+                        (Some((_, at)), Some(c)) => at < c.at,
+                    };
+                    if take_inj {
+                        let (i, _) = inj.expect("injection selected");
+                        let (at, stx) = staged[i].take().expect("selected above");
+                        last_issue[i] = at;
+                        let st = speculate_span(
+                            i, at, &stx, plan, &classes, &rc, &mut rail_scratch, &mut emitted,
+                            &mut inflight,
+                        );
+                        new_spec[i].push(st);
+                        stage_span(
+                            i, at, &mut coord_srcs, &mut staged, &mut src_done, &mut blocked,
+                            &inflight,
+                        );
+                    } else {
+                        let c = &completions[ci];
+                        let (i, at, token) = (c.source as usize, c.at, c.token);
+                        ci += 1;
+                        inflight[i] -= 1;
+                        coord_srcs[i]
+                            .as_mut()
+                            .expect("spanning source owned by coordinator")
+                            .on_complete(token, at);
+                        blocked[i] = false;
+                        stage_span(
+                            i, at, &mut coord_srcs, &mut staged, &mut src_done, &mut blocked,
+                            &inflight,
+                        );
+                    }
+                }
+                if span_idx.iter().all(|&i| speculative[i] == new_spec[i]) {
+                    break; // fixpoint: the attempt saw exactly these injections
+                }
+                // diverged: REPLACE the speculative set with the replay's
+                // (merging would resurrect dead injections and never
+                // converge), roll every participant back and re-execute
+                rollbacks += 1;
+                assert!(
+                    attempts < MAX_REPLAY_ATTEMPTS,
+                    "optimistic replay failed to converge after {attempts} attempts \
+                     (t0={t0}, t1={t1})"
+                );
+                for &i in &span_idx {
+                    std::mem::swap(&mut speculative[i], &mut new_spec[i]);
+                }
+                // rebuild every inbox canonically: committed deliveries
+                // first, then speculative injections source-major — the
+                // exact construction the first attempt used, so a
+                // converged replay is bit-identical to a clean run
+                for (inbox, snap) in inboxes.iter_mut().zip(&epoch_inbox) {
+                    debug_assert!(inbox.is_empty(), "undelivered inbox at replay");
+                    inbox.extend_from_slice(snap);
+                }
+                for &i in &span_idx {
+                    for st in &speculative[i] {
+                        inboxes[st.target as usize].push(Handoff {
+                            at: st.at,
+                            hop: 0,
+                            tx: st.tx,
+                        });
+                    }
+                }
+            }
+
+            // ----- commit: route the final attempt's handoffs, fold the
+            // digests into the adaptive table, stream the completions
+            for mut o in held_out.drain(..) {
+                for (target, h) in o.drain(..) {
+                    inboxes[target as usize].push(h);
+                }
+                spare_out.push(o);
+            }
+            if adaptive {
+                for &(link, d) in &digests {
+                    digest_table[link as usize] = d;
+                }
+            }
+            if gate {
+                for &i in &span_idx {
+                    speculative[i].clear();
                 }
             }
             // merge the barrier's completions in global time order so the
@@ -737,9 +1306,11 @@ pub(crate) fn run(
             for c in completions.drain(..) {
                 report.record(classes[c.source as usize], c.latency, c.bytes);
                 // pinned sources already saw on_complete inside their
-                // worker, at the exact dispatch instant
-                if plan.pinned[c.source as usize].is_none() {
-                    coord_srcs[c.source as usize]
+                // worker, spanning sources inside the validation replay —
+                // only open-loop sources are notified here
+                let i = c.source as usize;
+                if plan.pinned[i].is_none() && !plan.spanning[i] {
+                    coord_srcs[i]
                         .as_mut()
                         .expect("open-loop source owned by coordinator")
                         .on_complete(c.token, c.at);
@@ -793,6 +1364,9 @@ pub(crate) fn run(
     report.peak_inflight = peak_inflight;
     report.epochs = epochs;
     report.barriers = barriers;
+    report.optimistic_sources = plan.spanning.iter().filter(|&&s| s).count();
+    report.checkpoints = checkpoints;
+    report.rollbacks = rollbacks;
     shard_stats.sort_by_key(|s| s.shard);
     report.shards = shard_stats;
     report.qos = sim.collect_qos_stats();
@@ -823,6 +1397,29 @@ fn pump_pinned(li: usize, now: f64, pinned: &mut [PinnedSrc<'_>], engine: &mut E
         }
         Pull::Done => p.state = PinState::Done,
     }
+}
+
+/// A worker's epoch-barrier checkpoint: everything the shard mutates
+/// while executing a window. The path arena and intern cache are
+/// deliberately absent — both are append-only, so restored slots' path
+/// indices stay valid and a replayed transaction re-interns as a cache
+/// hit.
+struct WorkerCkpt {
+    engine: EngineSnapshot,
+    servers: Vec<[ClassedServer; 2]>,
+    slots: Vec<LocalTx>,
+    free: Vec<u32>,
+    pinned: Vec<PinnedCkpt>,
+}
+
+/// Barrier snapshot of one pinned source (mirrors [`SpanCkpt`] for the
+/// worker-owned pump state).
+struct PinnedCkpt {
+    snap: Box<dyn std::any::Any + Send>,
+    staged: Option<SourcedTx>,
+    state: PinState,
+    inflight: usize,
+    emitted: u64,
 }
 
 /// One shard: a calendar engine over the shard's link servers and its
@@ -860,6 +1457,10 @@ fn worker(
     let mut batch_items: Vec<BatchAdmit> = Vec::new();
     let mut admissions: Vec<Admission> = Vec::new();
     let mut idle = 0.0f64;
+    // optimistic support: the barrier checkpoint a rollback restores, and
+    // the adaptive rail-scoring scratch (both idle on conservative runs)
+    let mut ckpt: Option<WorkerCkpt> = None;
+    let mut rail_scratch: Vec<u32> = Vec::new();
 
     // initial barrier: pump every pinned source at t=0 and report the
     // earliest injection, so the coordinator's first window sees pinned
@@ -874,6 +1475,7 @@ fn worker(
             completions: Vec::new(),
             spent: Vec::new(),
             next_event: engine.peek_time().unwrap_or(f64::INFINITY),
+            digest: Vec::new(),
         })
         .is_err()
     {
@@ -885,7 +1487,57 @@ fn worker(
         let Ok(cmd) = cmds.recv() else { return };
         idle += wait.elapsed().as_secs_f64();
         match cmd {
-            Cmd::Epoch { t1, mut inbox, mut out, mut completions } => {
+            Cmd::Epoch { t1, mut inbox, mut out, mut completions, checkpoint, rollback, digest } => {
+                if rollback {
+                    // replay attempt: rewind to the barrier. The engine
+                    // restore drops the previous attempt's inbox events,
+                    // so the coordinator resends the full rebuilt inbox.
+                    let ck = ckpt.as_ref().expect("rollback without a checkpoint");
+                    engine.restore(&ck.engine);
+                    servers.clone_from(&ck.servers);
+                    slots.clone_from(&ck.slots);
+                    free.clone_from(&ck.free);
+                    for (p, pc) in pinned.iter_mut().zip(&ck.pinned) {
+                        p.src.restore(pc.snap.as_ref());
+                        p.staged.clone_from(&pc.staged);
+                        p.state = pc.state;
+                        p.inflight = pc.inflight;
+                        p.emitted = pc.emitted;
+                    }
+                } else if checkpoint {
+                    ckpt = Some(WorkerCkpt {
+                        engine: engine.snapshot(),
+                        servers: servers.clone(),
+                        slots: slots.clone(),
+                        free: free.clone(),
+                        pinned: pinned
+                            .iter()
+                            .map(|p| PinnedCkpt {
+                                snap: p
+                                    .src
+                                    .checkpoint()
+                                    .expect("plan verified checkpoint support"),
+                                staged: p.staged.clone(),
+                                state: p.state,
+                                inflight: p.inflight,
+                                emitted: p.emitted,
+                            })
+                            .collect(),
+                    });
+                }
+                let dslice: &[[f64; 2]] = match digest.as_deref() {
+                    Some(d) => d,
+                    None => &[],
+                };
+                let rc = RailChoice {
+                    fabric: ctx.fabric,
+                    tiers: ctx.tiers,
+                    spread: ctx.spread,
+                    spraying: ctx.spraying,
+                    adaptive: digest.is_some(),
+                    rail_fan: ctx.rail_fan,
+                    digest: dslice,
+                };
                 for h in inbox.drain(..) {
                     let (path_start, path_len) =
                         intern_local(ctx.fabric, ctx.tiers, ctx.spread, &mut arena, &mut cache, &h.tx);
@@ -921,11 +1573,8 @@ fn worker(
                             let tx = stx.tx;
                             let seq = pinned[li].emitted;
                             pinned[li].emitted += 1;
-                            let rail = if ctx.spraying {
-                                spray_rail(tx.src, tx.dst, stx.flow.unwrap_or(seq), ctx.rail_fan)
-                            } else {
-                                0
-                            };
+                            let rail =
+                                rc.pick(tx.src, tx.dst, stx.flow.unwrap_or(seq), &mut rail_scratch);
                             let global = pinned[li].global;
                             let stx_tx = ShardTx {
                                 issued: now,
@@ -1079,6 +1728,23 @@ fn worker(
                 }
                 debug_assert!(carried.is_none(), "batch probe leaked across the epoch barrier");
                 let next_event = engine.peek_time().unwrap_or(f64::INFINITY);
+                // adaptive runs piggyback each owned link's backlog on the
+                // barrier: both directions' pending_ns sampled at the
+                // window edge (the instant next epoch's injections steer
+                // from)
+                let digest_out: Vec<(u32, [f64; 2])> = if digest.is_some() {
+                    let at = if t1.is_finite() { t1 } else { engine.now() };
+                    servers
+                        .iter()
+                        .enumerate()
+                        .filter(|&(li, _)| ctx.link_shard[li] as usize == ctx.shard)
+                        .map(|(li, pair)| {
+                            (li as u32, [pair[0].pending_ns(at), pair[1].pending_ns(at)])
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
                 if res
                     .send(Resp::Epoch {
                         shard: ctx.shard,
@@ -1086,6 +1752,7 @@ fn worker(
                         completions,
                         spent: inbox,
                         next_event,
+                        digest: digest_out,
                     })
                     .is_err()
                 {
@@ -1267,6 +1934,7 @@ mod tests {
     /// A ping-pong reactive chain: one transaction in flight at a time,
     /// next emission unblocked by the completion. With `footprint` it is
     /// eligible for coupled-domain pinning.
+    #[derive(Clone, Copy)]
     struct Chain {
         src: usize,
         dst: usize,
@@ -1304,10 +1972,72 @@ mod tests {
                 None
             }
         }
+        fn checkpointable(&self) -> bool {
+            true
+        }
+        fn checkpoint(&self) -> Option<Box<dyn std::any::Any + Send>> {
+            Some(Box::new(*self))
+        }
+        fn restore(&mut self, snap: &(dyn std::any::Any + Send)) {
+            *self = *snap.downcast_ref::<Chain>().expect("snapshot type mismatch");
+        }
+    }
+
+    /// A [`Chain`] whose declared footprint is an arbitrary node set —
+    /// wide enough to span every partition, forcing the optimistic path.
+    #[derive(Clone)]
+    struct WideChain {
+        inner: Chain,
+        nodes: Vec<usize>,
+    }
+
+    impl TrafficSource for WideChain {
+        fn class(&self) -> TrafficClass {
+            self.inner.class()
+        }
+        fn pull(&mut self, now: f64) -> Pull {
+            self.inner.pull(now)
+        }
+        fn on_complete(&mut self, token: u64, now: f64) {
+            self.inner.on_complete(token, now);
+        }
+        fn footprint(&self) -> Option<Vec<NodeId>> {
+            Some(self.nodes.clone())
+        }
+        fn checkpointable(&self) -> bool {
+            true
+        }
+        fn checkpoint(&self) -> Option<Box<dyn std::any::Any + Send>> {
+            Some(Box::new(self.clone()))
+        }
+        fn restore(&mut self, snap: &(dyn std::any::Any + Send)) {
+            let snap = snap.downcast_ref::<WideChain>().expect("snapshot type mismatch");
+            self.clone_from(snap);
+        }
     }
 
     fn no_meta() -> Vec<SourceMeta> {
         Vec::new()
+    }
+
+    /// Reactive-source meta (checkpoint-capable, as [`Chain`] is).
+    fn rmeta(footprint: Option<Vec<NodeId>>) -> SourceMeta {
+        SourceMeta {
+            open: false,
+            footprint,
+            class: TrafficClass::Generic,
+            checkpointable: true,
+        }
+    }
+
+    /// Open-loop source meta.
+    fn ometa() -> SourceMeta {
+        SourceMeta {
+            open: true,
+            footprint: None,
+            class: TrafficClass::Generic,
+            checkpointable: false,
+        }
     }
 
     #[test]
@@ -1339,9 +2069,9 @@ mod tests {
         let sim = MemSim::new(&f);
         // two rack-local footprints on far-apart leaves + one open source
         let meta = vec![
-            SourceMeta { open: false, footprint: Some(vec![eps[0], eps[1]]) },
-            SourceMeta { open: false, footprint: Some(vec![eps[4 * 6], eps[4 * 6 + 1]]) },
-            SourceMeta { open: true, footprint: None },
+            rmeta(Some(vec![eps[0], eps[1]])),
+            rmeta(Some(vec![eps[4 * 6], eps[4 * 6 + 1]])),
+            ometa(),
         ];
         let p = plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta, 4)
             .sharded()
@@ -1358,29 +2088,69 @@ mod tests {
 
         // without open sources the shards are fully decoupled
         let meta2 = vec![
-            SourceMeta { open: false, footprint: Some(vec![eps[0], eps[1]]) },
-            SourceMeta { open: false, footprint: Some(vec![eps[4 * 6], eps[4 * 6 + 1]]) },
+            rmeta(Some(vec![eps[0], eps[1]])),
+            rmeta(Some(vec![eps[4 * 6], eps[4 * 6 + 1]])),
         ];
         let p2 = plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta2, 4)
             .sharded()
             .expect("disjoint pinned-only footprints must shard");
         assert!(p2.lookahead.is_infinite());
 
-        // an undeclared reactive source forces the serial fallback
-        let meta3 = vec![SourceMeta { open: false, footprint: None }];
+        // an undeclared reactive source forces the serial fallback, and
+        // the reason names it
+        let meta3 = vec![SourceMeta {
+            open: false,
+            footprint: None,
+            class: TrafficClass::Coherence,
+            checkpointable: true,
+        }];
         match plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta3, 4) {
-            PlanOutcome::Fallback(reason) => assert!(reason.contains("footprint")),
+            PlanOutcome::Fallback(reason) => {
+                assert!(reason.contains("footprint"), "bad reason: {reason}");
+                assert!(reason.contains("source 0"), "bad reason: {reason}");
+                assert!(reason.contains("coherence"), "bad reason: {reason}");
+            }
             PlanOutcome::Sharded(_) => panic!("undeclared footprint must not shard"),
         }
 
-        // a fabric-wide footprint collapses the partition: fallback
-        let meta4 = vec![SourceMeta { open: false, footprint: Some(eps.clone()) }];
+        // a fabric-wide footprint no longer collapses the partition: the
+        // spanning group is excluded from coupling and the source runs
+        // optimistically on the coordinator
+        let meta4 = vec![rmeta(Some(eps.clone()))];
         match plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta4, 4) {
-            PlanOutcome::Fallback(_) => {}
             PlanOutcome::Sharded(p) => {
-                // acceptable only if the closure still left >= 2 shards;
-                // on this Clos every leaf is touched, so it must not
-                panic!("fabric-wide footprint produced {} shards", p.nshards)
+                assert!(p.spanning[0], "fabric-wide footprint must be spanning");
+                assert_eq!(p.pinned[0], None, "spanning source stays on the coordinator");
+                assert!(p.nshards >= 2);
+                assert!(
+                    p.lookahead.is_finite() && p.lookahead > 0.0,
+                    "spanning traffic needs a finite conservative bound"
+                );
+            }
+            PlanOutcome::Fallback(reason) => {
+                panic!("spanning footprint must shard optimistically, got fallback: {reason}")
+            }
+        }
+
+        // ... unless some reactive source cannot checkpoint: then the
+        // run stays serial and the reason names both sources
+        let meta5 = vec![
+            rmeta(Some(eps.clone())),
+            SourceMeta {
+                open: false,
+                footprint: Some(vec![eps[0], eps[1]]),
+                class: TrafficClass::Collective,
+                checkpointable: false,
+            },
+        ];
+        match plan(&f, &sim.consts, &sim.tiers, sim.spread, 1, &meta5, 4) {
+            PlanOutcome::Fallback(reason) => {
+                assert!(reason.contains("footprint"), "bad reason: {reason}");
+                assert!(reason.contains("checkpoint"), "bad reason: {reason}");
+                assert!(reason.contains("collective"), "bad reason: {reason}");
+            }
+            PlanOutcome::Sharded(_) => {
+                panic!("spanning + non-checkpointable source must fall back")
             }
         }
     }
@@ -1568,5 +2338,86 @@ mod tests {
         };
         assert_eq!(rep.total.completed, 40);
         assert!((rep.total.latency.mean() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spanning_chain_matches_serial() {
+        // a reactive chain whose declared footprint covers the whole
+        // fabric: the partition survives, the chain runs on the
+        // coordinator under checkpoint/rollback, and the mix with
+        // open-loop background reproduces the serial run exactly
+        let (f, eps) = clos(6, 2, 4);
+        let txs = workload(&eps, 300, 0x0DDB);
+        let run_with = |sharded: bool| {
+            let mut sim = MemSim::new(&f);
+            let mut wide = WideChain {
+                inner: Chain {
+                    src: eps[0],
+                    dst: eps[eps.len() - 1],
+                    left: 40,
+                    waiting: false,
+                    declared: true,
+                },
+                nodes: eps.clone(),
+            };
+            let mut bg = BatchSource::new(txs.clone(), crate::sim::TrafficClass::Generic);
+            let mut sources: [&mut dyn TrafficSource; 2] = [&mut wide, &mut bg];
+            if sharded {
+                sim.run_streamed_sharded_with(&mut sources, 3)
+            } else {
+                sim.run_streamed(&mut sources)
+            }
+        };
+        let serial = run_with(false);
+        let sharded = run_with(true);
+        assert!(sharded.mode.is_sharded(), "spanning chain must shard: {:?}", sharded.mode);
+        assert_eq!(sharded.optimistic_sources, 1);
+        assert!(sharded.checkpoints > 0, "spanning chain never gated a window");
+        assert!(
+            sharded.rollbacks > 0,
+            "a fabric-crossing ping-pong must mispredict at least once"
+        );
+        assert_eq!(serial.total.completed, sharded.total.completed);
+        assert_eq!(serial.total.events, sharded.total.events);
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(serial.total.makespan_ns, sharded.total.makespan_ns));
+        assert!(close(serial.total.latency.mean(), sharded.total.latency.mean()));
+        assert!(close(serial.total.latency.max(), sharded.total.latency.max()));
+    }
+
+    #[test]
+    fn sharded_adaptive_uses_digests_deterministically() {
+        // Adaptive on the sharded backend steers by barrier-piggybacked
+        // digests: not byte-equal to the serial live-state scoring (the
+        // digest is one barrier stale), but deterministic across runs and
+        // work-conserving vs the serial backend
+        use crate::sim::{RailSelector, RoutingPolicy};
+        let (mut f, eps) = clos(6, 2, 6);
+        f.enable_multipath(4);
+        let txs = workload(&eps, 600, 0xADAF);
+        let policy = RoutingPolicy::uniform(RailSelector::Adaptive);
+
+        let run_sharded = || {
+            let mut sim = MemSim::with_routing(&f, policy);
+            let mut src = BatchSource::new(txs.clone(), crate::sim::TrafficClass::Generic);
+            let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+            sim.run_streamed_sharded_with(&mut sources, 3)
+        };
+        let a = run_sharded();
+        let b = run_sharded();
+        assert!(a.mode.is_sharded(), "adaptive clos run must shard: {:?}", a.mode);
+        assert_eq!(a.total.completed, b.total.completed);
+        assert_eq!(a.total.events, b.total.events);
+        assert_eq!(
+            a.total.makespan_ns.to_bits(),
+            b.total.makespan_ns.to_bits(),
+            "adaptive sharded runs must be bit-reproducible"
+        );
+        assert_eq!(a.total.latency.mean().to_bits(), b.total.latency.mean().to_bits());
+
+        // work conservation vs the serial adaptive backend
+        let mut serial_sim = MemSim::with_routing(&f, policy);
+        let serial = serial_sim.run(txs.clone());
+        assert_eq!(serial.completed, a.total.completed);
     }
 }

@@ -152,12 +152,49 @@ pub trait TrafficSource: Send {
     /// into one shard (*coupled-domain scheduling*); the source is then
     /// pinned to that shard's worker, where its zero-delay
     /// completion-to-emission chain is shard-local and needs no lookahead.
-    /// `None` (the default) means the footprint is unknown or unbounded,
-    /// which forces the serial fallback for a reactive source. Ignored
-    /// for open-loop sources (they are staged by the coordinator and may
-    /// roam the whole fabric).
+    /// A footprint whose closure glues every domain together (e.g. a
+    /// fabric-wide all-reduce ring) cannot be pinned — the planner runs
+    /// such a *spanning* source on the coordinator under the optimistic
+    /// checkpoint/rollback protocol instead, which requires
+    /// [`checkpoint`](TrafficSource::checkpoint) support from every
+    /// reactive source in the run. `None` (the default) means the
+    /// footprint is unknown or unbounded, which forces the serial
+    /// fallback for a reactive source. Ignored for open-loop sources
+    /// (they are staged by the coordinator and may roam the whole
+    /// fabric).
     fn footprint(&self) -> Option<Vec<NodeId>> {
         None
+    }
+
+    /// Capture this source's complete mutable state, to be applied back
+    /// by [`restore`](TrafficSource::restore). The optimistic sharded
+    /// backend checkpoints reactive sources at epoch barriers and rolls
+    /// them back when a speculatively executed epoch is invalidated by a
+    /// cross-shard reaction, so a restored source must replay the exact
+    /// pull/on_complete sequence it produced the first time. The usual
+    /// implementation is `Some(Box::new(self.clone()))`. The default
+    /// `None` pairs with [`checkpointable`](TrafficSource::checkpointable)
+    /// returning `false`.
+    fn checkpoint(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        None
+    }
+
+    /// Whether [`checkpoint`](TrafficSource::checkpoint) returns a real
+    /// snapshot. The planner probes this (cheaply, without materializing
+    /// a snapshot) when a spanning footprint calls for optimistic
+    /// execution; any reactive source answering `false` forces the
+    /// serial fallback for the whole run.
+    fn checkpointable(&self) -> bool {
+        false
+    }
+
+    /// Apply a state snapshot taken by
+    /// [`checkpoint`](TrafficSource::checkpoint) on this same source.
+    /// Only ever called with a value this source's own `checkpoint`
+    /// returned; the default (paired with the default `checkpoint`) is
+    /// unreachable.
+    fn restore(&mut self, _snap: &(dyn std::any::Any + Send)) {
+        unreachable!("restore() called on a source without checkpoint support");
     }
 }
 
@@ -276,6 +313,18 @@ pub struct StreamReport {
     pub barriers: u64,
     /// Per-shard balance telemetry (empty on the serial loop).
     pub shards: Vec<ShardStats>,
+    /// Reactive sources the planner could not pin to one shard and ran
+    /// on the coordinator under the optimistic checkpoint/rollback
+    /// protocol (0 for conservative sharded runs and the serial loop).
+    pub optimistic_sources: usize,
+    /// Epochs whose per-shard state was checkpointed because a spanning
+    /// source could react inside the window (optimistic mode only).
+    pub checkpoints: u64,
+    /// Speculative epoch executions invalidated by a spanning reaction
+    /// landing inside the already-executed window and replayed from the
+    /// checkpoint. Commits always outnumber rollbacks (the earliest
+    /// divergence point advances every replay round).
+    pub rollbacks: u64,
 }
 
 impl StreamReport {
@@ -295,6 +344,9 @@ impl StreamReport {
             epochs: 0,
             barriers: 0,
             shards: Vec::new(),
+            optimistic_sources: 0,
+            checkpoints: 0,
+            rollbacks: 0,
         }
     }
 

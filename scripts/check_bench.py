@@ -47,9 +47,10 @@ def walk(node, path, out, scale=None):
 
 
 def is_advisory(where, key, scale, threads):
-    if key.startswith(("sharded", "reactive_sharded")) and threads < SHARDED_MIN_THREADS:
-        # sharded acceptance bars (batch and reactive) are defined at
-        # >= 4 cores; below that the speedup is reported but advisory
+    if key.startswith(("sharded", "reactive_sharded", "optimistic")) and threads < SHARDED_MIN_THREADS:
+        # sharded acceptance bars (batch, reactive and optimistic) are
+        # defined at >= 4 cores; below that the speedup is reported but
+        # advisory
         return True
     if "rails" in where:
         # rails policy points ride along in merged records: advisory
