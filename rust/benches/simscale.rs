@@ -25,6 +25,10 @@
 //!   ring's injections and rolls back on divergence; asserted to shard
 //!   with exactly one optimistic source, to checkpoint, and at pod scale
 //!   on >= 4 cores to beat the serial backend by >= 1.3x;
+//! * flight-recorder overhead (ISSUE 9): the same memsim workload with
+//!   the bounded trace ring armed — `trace_overhead_ratio` is advisory;
+//!   the gated bar stays the untraced events/sec, because the disabled
+//!   recorder is one `Option` check per event arm;
 //! * sweep-point throughput: copy-on-write forking (`MemSim::fork` off a
 //!   warmed, frozen master) vs rebuilding the fabric + simulator for
 //!   every point — the sweep-harness pattern the experiments use;
@@ -47,7 +51,7 @@ use scalepool::coherence::{CoherenceConfig, CoherenceTraffic};
 use scalepool::collective::EventDrivenCollective;
 use scalepool::fabric::routing::reference::SerialRouter;
 use scalepool::fabric::{Fabric, LinkKind, NodeKind, Router, Topology};
-use scalepool::sim::{BatchSource, Engine, EventKind, MemSim, Server, TrafficClass, TrafficSource, Transaction};
+use scalepool::sim::{BatchSource, Engine, EventKind, MemSim, Server, TraceConfig, TrafficClass, TrafficSource, Transaction};
 use scalepool::util::Json;
 use scalepool::workloads::{AccessTrace, WorkingSetSweep};
 use std::cmp::Ordering;
@@ -368,6 +372,25 @@ fn main() {
         let eps_new = new_events as f64 / (sim_new / 1e9);
         let eps_seed = seed_events as f64 / (sim_seed / 1e9);
         let sim_speedup = eps_new / eps_seed;
+
+        // --- flight-recorder overhead (ISSUE 9) -------------------------
+        // the same workload with the trace ring armed. The ratio is
+        // advisory (how much the bounded per-event recording costs when
+        // you ask for it); the gated number stays the untraced
+        // memsim_events_per_sec above — the disabled path is one Option
+        // check per event arm and must not move the baseline
+        let mut traced_pool: Vec<Vec<Transaction>> = (0..3).map(|_| txs.clone()).collect();
+        let mut traced_events = 0u64;
+        let sim_traced = best_of(3, || {
+            let mut sim = MemSim::new(&fabric);
+            sim.set_trace(TraceConfig::default());
+            let rep = sim.run(traced_pool.pop().expect("one pre-cloned stream per iteration"));
+            assert_eq!(rep.completed, txs.len() as u64);
+            traced_events = rep.events - rep.completed;
+            rep.events
+        });
+        let eps_traced = traced_events as f64 / (sim_traced / 1e9);
+        let trace_overhead_ratio = eps_traced / eps_new;
 
         // --- sharded streamed backend (ISSUE 3) -------------------------
         // only meaningful where the topology yields >1 domain and there
@@ -703,6 +726,12 @@ fn main() {
                 eps_ser / 1e6,
             );
         }
+        println!(
+            "{:<5} flight recorder armed | {:>6.2} M ev/s ({:.2}x of untraced)",
+            s.name,
+            eps_traced / 1e6,
+            trace_overhead_ratio,
+        );
 
         let mut row = vec![
             ("scale", Json::str(s.name)),
@@ -718,6 +747,8 @@ fn main() {
             ("memsim_events_per_sec", Json::num(eps_new)),
             ("memsim_events_per_sec_seed", Json::num(eps_seed)),
             ("memsim_speedup", Json::num(sim_speedup)),
+            ("traced_events_per_sec", Json::num(eps_traced)),
+            ("trace_overhead_ratio", Json::num(trace_overhead_ratio)),
             ("sweep_points", Json::num(sweep_points as f64)),
             ("sweep_point_transactions", Json::num(point_txs.len() as f64)),
             ("sweep_points_per_sec", Json::num(pps_forked)),
@@ -828,6 +859,10 @@ fn rows_summary(out: &Json) -> String {
             }
             if let Some(sp) = p.get("sweep_fork_speedup").and_then(Json::as_f64) {
                 s.push_str(&format!(" pod_sweep_fork_speedup={sp:.2}"));
+            }
+            // advisory (not a *_speedup key): recording cost when armed
+            if let Some(r) = p.get("trace_overhead_ratio").and_then(Json::as_f64) {
+                s.push_str(&format!(" pod_trace_overhead_ratio={r:.2}"));
             }
             s
         }

@@ -10,7 +10,7 @@ use crate::experiments;
 use crate::fabric::TopologyKind;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{PjrtEngine, Trainer};
-use crate::sim::{MemSim, TrafficSource, Transaction};
+use crate::sim::{chrome_trace, time_series, MemSim, TraceConfig, TraceData, TrafficSource, Transaction};
 use crate::workloads::SyntheticTraffic;
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Context};
@@ -85,6 +85,9 @@ pub fn mixed(args: &mut Args) -> Result<()> {
     let rep = experiments::run_mixed(&cfg);
     print!("{}", experiments::mixed::render(&rep));
     println!("wall {:?}", t0.elapsed());
+    if let (Some(path), Some(t)) = (args.get("trace"), rep.trace.as_ref()) {
+        write_chrome(path, t)?;
+    }
     if let Some(path) = args.get("out") {
         let rows: Vec<Json> = rep
             .rows
@@ -121,6 +124,27 @@ pub fn mixed(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Flight-recorder knobs: `Some` only when `--trace <path>` asks for a
+/// recording, so untraced runs keep the zero-cost disabled path.
+fn trace_opt(args: &Args) -> Result<Option<TraceConfig>> {
+    if args.get("trace").is_none() {
+        return Ok(None);
+    }
+    let d = TraceConfig::default();
+    Ok(Some(TraceConfig {
+        capacity: args.usize_or("trace-cap", d.capacity).map_err(Error::msg)?,
+        gauge_interval_ns: args.f64_or("trace-interval", d.gauge_interval_ns).map_err(Error::msg)?,
+    }))
+}
+
+/// Write a recording as Chrome `trace_event` JSON (load in Perfetto or
+/// `chrome://tracing`).
+fn write_chrome(path: &str, data: &TraceData) -> Result<()> {
+    std::fs::write(path, chrome_trace(data).to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// Parse the shared mixed-scenario knobs (used by `mixed` and `qos`).
 fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
     let shape = match args.get_or("algo", "hier").as_str() {
@@ -142,6 +166,7 @@ fn mixed_config(args: &Args) -> Result<experiments::MixedConfig> {
         sharded: args.flag("sharded"),
         shards: args.usize_or("shards", 0).map_err(Error::msg)?,
         seed: args.usize_or("seed", 7).map_err(Error::msg)? as u64,
+        trace: trace_opt(args)?,
     })
 }
 
@@ -209,6 +234,9 @@ pub fn qos(args: &mut Args) -> Result<()> {
     let rep = experiments::run_qos(&cfg);
     print!("{}", experiments::qos::render(&rep, &cfg.policies));
     println!("wall {:?}", t0.elapsed());
+    if let (Some(path), Some(t)) = (args.get("trace"), rep.trace.as_ref()) {
+        write_chrome(path, t)?;
+    }
 
     if let Some(path) = args.get("out") {
         let policies: Vec<Json> = rep
@@ -273,6 +301,9 @@ pub fn rails(args: &mut Args) -> Result<()> {
     let rep = experiments::run_rails(&cfg);
     print!("{}", experiments::rails::render(&rep, cfg.rails));
     println!("wall {:?}", t0.elapsed());
+    if let (Some(path), Some(t)) = (args.get("trace"), rep.trace.as_ref()) {
+        write_chrome(path, t)?;
+    }
 
     if let Some(path) = args.get("out") {
         let policies: Vec<Json> = rep
@@ -311,6 +342,42 @@ pub fn rails(args: &mut Args) -> Result<()> {
         std::fs::write(path, Json::arr(policies).to_string())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Record a mixed-traffic run with the flight recorder on and export both
+/// trace formats. The scenario is pinned to the flat-ring collective on
+/// the sharded backend (4 shards unless overridden): that combination is
+/// guaranteed to cross shard boundaries optimistically, so the trace
+/// carries epoch *and* checkpoint instants alongside hop spans from all
+/// three traffic classes.
+pub fn trace(args: &mut Args) -> Result<()> {
+    let mut cfg = mixed_config(args)?;
+    cfg.shape = experiments::CollectiveShape::FlatRing;
+    cfg.sharded = true;
+    if args.get("shards").is_none() {
+        cfg.shards = 4;
+    }
+    let d = TraceConfig::default();
+    cfg.trace = Some(TraceConfig {
+        capacity: args.usize_or("trace-cap", d.capacity).map_err(Error::msg)?,
+        gauge_interval_ns: args.f64_or("trace-interval", d.gauge_interval_ns).map_err(Error::msg)?,
+    });
+
+    let t0 = std::time::Instant::now();
+    let rep = experiments::run_mixed(&cfg);
+    print!("{}", experiments::mixed::render(&rep));
+    println!("wall {:?}", t0.elapsed());
+
+    let data = rep
+        .trace
+        .as_ref()
+        .ok_or_else(|| Error::msg("trace run produced no recording"))?;
+    write_chrome(&args.get_or("out", "trace_chrome.json"), data)?;
+    let buckets = args.usize_or("buckets", 64).map_err(Error::msg)?.max(1);
+    let series = args.get_or("series", "trace_series.json");
+    std::fs::write(&series, time_series(data, buckets).to_string())?;
+    println!("wrote {series}");
     Ok(())
 }
 

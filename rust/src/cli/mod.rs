@@ -26,7 +26,8 @@ COMMANDS:
     mixed     [--racks <N>] [--accels <N>] [--mem-nodes <N>] [--coh-ops <N>]
               [--tier-ops <N>] [--bytes <N>] [--repeats <N>]
               [--algo <hier|ring|rackrings>] [--sharded [--shards <N>]]
-              [--seed <N>] [--out <file>]
+              [--seed <N>] [--out <file>] [--trace <file>
+              [--trace-cap <N>] [--trace-interval <ns>]]
                                Coherence + tiering + collective traffic
                                concurrently on one fabric; per-class
                                mean and p99 latency under interference.
@@ -35,10 +36,12 @@ COMMANDS:
                                per rack; --sharded runs the mixed point on
                                the multi-core conservative backend with
                                reactive sources pinned to the shard owning
-                               their footprint (identical RESULT line)
+                               their footprint (identical RESULT line);
+                               --trace records hop-level spans + telemetry
+                               and writes Chrome trace_event JSON
     qos       [same scenario options as mixed]
               [--policies <fcfs,strict,wfq>] [--order <c1,c2,c3,c4>]
-              [--weights <w1,w2,w3,w4>] [--out <file>]
+              [--weights <w1,w2,w3,w4>] [--out <file>] [--trace <file>]
                                Sweep link-arbitration policies over the
                                mixed scenario: fcfs (class-blind parity
                                baseline), strict (priority order, default
@@ -47,9 +50,11 @@ COMMANDS:
                                class order coherence,tiering,collective,
                                generic; default 4,2,2,1). Reports
                                per-class solo-vs-mixed mean and p99
-                               inflation per policy (RESULT qos lines)
+                               inflation per policy (RESULT qos lines);
+                               --trace records the last policy point
     rails     [same scenario options as mixed]
               [--policies <det,spray,adaptive>] [--rails <K>] [--out <file>]
+              [--trace <file>]
                                Sweep multi-rail routing policies over the
                                mixed scenario on a K-rail (default 4)
                                equal-cost multipath PBR table: det (rail
@@ -60,6 +65,19 @@ COMMANDS:
                                solo-vs-mixed inflation, path diversity
                                and link-utilization imbalance per policy
                                (RESULT rails lines)
+    trace     [same scenario options as mixed] [--shards <N>]
+              [--trace-cap <N>] [--trace-interval <ns>] [--buckets <N>]
+              [--out <chrome.json>] [--series <series.json>]
+                               Flight-recorder run of the mixed scenario
+                               (flat-ring collective, sharded backend):
+                               hop-level spans for every transaction,
+                               periodic per-tier utilization/queue-depth
+                               gauges and backend epoch/checkpoint/
+                               rollback instants. Writes Chrome
+                               trace_event JSON (default trace_chrome
+                               .json; open in Perfetto) and per-tier
+                               time-series JSON (default trace_series
+                               .json)
     topo      --kind <clos|torus|dragonfly|rdma> --racks <N> [--accels <N>]
                                Build a fabric and print its shape/latencies
     simulate  --racks <N> --accels <N> --txs <N> [--bytes <N>] [--seed <N>]
@@ -102,6 +120,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "mixed" => commands::mixed(&mut args),
         "qos" => commands::qos(&mut args),
         "rails" => commands::rails(&mut args),
+        "trace" => commands::trace(&mut args),
         "topo" => commands::topo(&mut args),
         "simulate" => commands::simulate(&mut args),
         "train" => commands::train(&mut args),

@@ -1,58 +1,43 @@
-//! Lightweight metrics registry: named counters and ns-scale histograms
-//! (log-bucketed), shared by the coordinator components.
+//! Lightweight metrics registry: named counters and ns-scale histograms,
+//! shared by the coordinator components. Latency distributions ride the
+//! fixed-memory [`LogHistogram`] from [`crate::util::stats`] — the same
+//! 416-bin (~±4%) geometry the traffic layer uses — plus a running sum
+//! for exact means.
 
+use crate::util::stats::LogHistogram;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-/// Log-bucketed latency histogram (1 ns .. ~18 s in x2 buckets).
-#[derive(Clone, Debug)]
-pub struct Histogram {
-    buckets: [u64; 35],
-    count: u64,
+/// A ns-scale latency histogram: log-binned counts for percentiles and an
+/// exact running sum for the mean.
+#[derive(Clone, Debug, Default)]
+pub struct NsHist {
+    hist: LogHistogram,
     sum: f64,
 }
 
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram { buckets: [0; 35], count: 0, sum: 0.0 }
-    }
-}
-
-impl Histogram {
+impl NsHist {
     #[inline]
     pub fn record(&mut self, ns: f64) {
-        let idx = if ns <= 1.0 { 0 } else { (ns.log2() as usize).min(34) };
-        self.buckets[idx] += 1;
-        self.count += 1;
+        self.hist.push(ns);
         self.sum += ns;
     }
 
     pub fn count(&self) -> u64 {
-        self.count
+        self.hist.count()
     }
 
     pub fn mean(&self) -> f64 {
-        if self.count == 0 {
+        if self.hist.count() == 0 {
             0.0
         } else {
-            self.sum / self.count as f64
+            self.sum / self.hist.count() as f64
         }
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Approximate quantile (geometric bin midpoint, ~±4%).
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return (1u64 << i) as f64;
-            }
-        }
-        (1u64 << 34) as f64
+        self.hist.percentile(q)
     }
 }
 
@@ -60,7 +45,7 @@ impl Histogram {
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
-    histograms: BTreeMap<String, Histogram>,
+    histograms: BTreeMap<String, NsHist>,
 }
 
 impl Metrics {
@@ -84,7 +69,7 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
-    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+    pub fn histogram(&self, name: &str) -> Option<&NsHist> {
         self.histograms.get(name)
     }
 
@@ -123,13 +108,29 @@ mod tests {
 
     #[test]
     fn histogram_quantiles_ordered() {
-        let mut h = Histogram::default();
+        let mut h = NsHist::default();
         for i in 1..=1000u64 {
             h.record(i as f64 * 100.0);
         }
         assert_eq!(h.count(), 1000);
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn quantiles_land_near_samples() {
+        // the 416-bin geometry resolves to ~±4%: a uniform ramp's median
+        // must land within a bin width of the true value, which the old
+        // 35-bucket power-of-two histogram could miss by 2x
+        let mut h = NsHist::default();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 100.0);
+        }
+        let p50 = h.quantile(0.5);
+        assert!(
+            (p50 - 50_000.0).abs() / 50_000.0 < 0.10,
+            "p50 {p50} too far from 50000"
+        );
     }
 
     #[test]

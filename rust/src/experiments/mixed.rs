@@ -16,7 +16,9 @@ use crate::coherence::{CoherenceConfig, CoherenceTraffic};
 use crate::collective::{Algorithm, CollectiveModel, EventDrivenCollective, Transport};
 use crate::coordinator::{TieringEngine, TieringPolicy, TieringTraffic, TieringTrafficConfig};
 use crate::fabric::TopologyKind;
-use crate::sim::{MemSim, ShardMode, StreamReport, TrafficClass, TrafficSource};
+use crate::sim::{
+    MemSim, ShardMode, StreamReport, TraceConfig, TraceData, TrafficClass, TrafficSource,
+};
 use crate::util::stats::Welford;
 
 /// Shape of the collective schedule.
@@ -60,6 +62,10 @@ pub struct MixedConfig {
     pub sharded: bool,
     /// Shard-count cap when `sharded` (0 = one per hardware thread).
     pub shards: usize,
+    /// Flight-recorder configuration for the mixed run (`None` = off; the
+    /// off path is free). Solo baselines are never traced; the recording
+    /// lands in [`MixedReport::trace`].
+    pub trace: Option<TraceConfig>,
     pub seed: u64,
 }
 
@@ -77,6 +83,7 @@ impl Default for MixedConfig {
             t1_bytes_per_acc: 2.0 * 1024.0 * 1024.0,
             sharded: false,
             shards: 0,
+            trace: None,
             seed: 7,
         }
     }
@@ -159,6 +166,13 @@ pub struct MixedReport {
     pub checkpoints: u64,
     /// Optimistic windows that mispredicted and re-executed.
     pub rollbacks: u64,
+    /// Span/instant records the flight recorder dropped at its ring
+    /// capacity (0 when tracing was off).
+    pub dropped_spans: u64,
+    /// Self-measured recording cost of the trace, wall-clock ns.
+    pub trace_overhead_ns: f64,
+    /// The mixed run's recording, when [`MixedConfig::trace`] was set.
+    pub trace: Option<TraceData>,
 }
 
 impl MixedReport {
@@ -315,9 +329,26 @@ pub(crate) fn run_fork_with(
     sharded: bool,
     max_shards: usize,
 ) -> (StreamReport, f64) {
+    let (rep, util, _) = run_fork_traced(master, sources, qos, sharded, max_shards, None);
+    (rep, util)
+}
+
+/// As [`run_fork_with`], with the flight recorder armed on the fork when
+/// `trace` is set; the recording comes back as the third element.
+pub(crate) fn run_fork_traced(
+    master: &MemSim,
+    sources: &mut [&mut dyn TrafficSource],
+    qos: Option<&crate::coordinator::QosManager>,
+    sharded: bool,
+    max_shards: usize,
+    trace: Option<TraceConfig>,
+) -> (StreamReport, f64, Option<TraceData>) {
     let mut sim = master.fork();
     if let Some(mgr) = qos {
         mgr.apply(&mut sim);
+    }
+    if let Some(tcfg) = trace {
+        sim.set_trace(tcfg);
     }
     let rep = if sharded && max_shards > 0 {
         sim.run_streamed_sharded_with(sources, max_shards)
@@ -327,7 +358,8 @@ pub(crate) fn run_fork_with(
         sim.run_streamed(sources)
     };
     let util = sim.peak_utilization(rep.total.makespan_ns);
-    (rep, util)
+    let data = sim.take_trace();
+    (rep, util, data)
 }
 
 /// `(mean, p50, p99)` of `class` transactions in `rep`.
@@ -446,9 +478,9 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
     let mut coh = coherence_sources(&sys, cfg, horizon);
     let mut tier = tiering_source(&sys, cfg, horizon);
     let mut col = collective_sources(&sys, cfg);
-    let (mixed, util) = {
+    let (mixed, util, trace) = {
         let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
-        run_fork_with(&master, &mut sources, None, cfg.sharded, cfg.shards)
+        run_fork_traced(&master, &mut sources, None, cfg.sharded, cfg.shards, cfg.trace)
     };
 
     let row = |class: TrafficClass,
@@ -485,6 +517,9 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         optimistic_sources: mixed.optimistic_sources,
         checkpoints: mixed.checkpoints,
         rollbacks: mixed.rollbacks,
+        dropped_spans: mixed.dropped_spans,
+        trace_overhead_ns: mixed.trace_overhead_ns,
+        trace,
     }
 }
 
@@ -542,6 +577,18 @@ pub fn render(r: &MixedReport) -> String {
         ShardMode::SerialFallback { reason } => {
             out.push_str(&format!("backend: serial fallback ({reason})\n"));
         }
+    }
+    // only a traced run mentions the recorder at all: untraced output
+    // (including the RESULT line below) stays byte-identical
+    if let Some(t) = &r.trace {
+        out.push_str(&format!(
+            "trace: {} spans ({} dropped), {} instants, {} gauges, overhead {:.3} ms\n",
+            t.spans.len(),
+            r.dropped_spans,
+            t.instants.len(),
+            t.gauges.len(),
+            r.trace_overhead_ns / 1e6,
+        ));
     }
     let p99 = |class: TrafficClass| r.row(class).map(MixedClassRow::p99_inflation).unwrap_or(1.0);
     out.push_str(&format!(

@@ -13,10 +13,10 @@
 
 use super::mixed::{
     as_dyn_sources, build_system, coherence_sources, collective_sources, horizon_estimate,
-    run_fork, solo_baselines, tiering_source, MixedConfig,
+    run_fork_traced, solo_baselines, tiering_source, MixedConfig,
 };
 use crate::coordinator::QosManager;
-use crate::sim::{ArbPolicy, LinkTier, MemSim, StreamReport, TrafficClass};
+use crate::sim::{ArbPolicy, LinkTier, MemSim, StreamReport, TraceData, TrafficClass};
 
 /// One policy point of the sweep.
 #[derive(Clone, Debug)]
@@ -151,6 +151,11 @@ impl QosPolicyRow {
 #[derive(Clone, Debug)]
 pub struct QosReport {
     pub policies: Vec<QosPolicyRow>,
+    /// Flight recording of the sweep's *last* policy point, when
+    /// [`MixedConfig::trace`] was set — the point whose tail the sweep's
+    /// final row describes, so "where did the p99 queueing happen" can be
+    /// answered for it.
+    pub trace: Option<TraceData>,
 }
 
 impl QosReport {
@@ -209,15 +214,22 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
 
     // --- one mixed run per policy ----------------------------------------
     let mut policies = Vec::new();
-    for spec in &cfg.policies {
+    let mut trace: Option<TraceData> = None;
+    let last = cfg.policies.len().saturating_sub(1);
+    for (pi, spec) in cfg.policies.iter().enumerate() {
         let mgr = QosManager::uniform(spec.policy);
         let mut coh = coherence_sources(&sys, mcfg, horizon);
         let mut tier = tiering_source(&sys, mcfg, horizon);
         let mut col = collective_sources(&sys, mcfg);
-        let (rep, util) = {
+        // only the last policy point records (one trace per sweep file)
+        let tcfg = if pi == last { mcfg.trace } else { None };
+        let (rep, util, tr) = {
             let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
-            run_fork(&master, &mut sources, Some(&mgr))
+            run_fork_traced(&master, &mut sources, Some(&mgr), false, 0, tcfg)
         };
+        if tr.is_some() {
+            trace = tr;
+        }
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
             let c = rep.class(class);
             QosClassRow {
@@ -245,7 +257,7 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
             tiers: tier_summaries(&rep, rep.total.makespan_ns),
         });
     }
-    QosReport { policies }
+    QosReport { policies, trace }
 }
 
 /// Paper-style report plus the machine-readable RESULT lines.

@@ -20,7 +20,9 @@ use super::mixed::{
 };
 use super::qos::QosClassRow;
 use crate::coordinator::RoutingManager;
-use crate::sim::{MemSim, RailSelector, StreamReport, TrafficClass, TrafficSource};
+use crate::sim::{
+    MemSim, RailSelector, StreamReport, TraceConfig, TraceData, TrafficClass, TrafficSource,
+};
 
 /// One policy point of the sweep.
 #[derive(Clone, Debug)]
@@ -118,6 +120,11 @@ impl RailsPolicyRow {
 #[derive(Clone, Debug)]
 pub struct RailsReport {
     pub policies: Vec<RailsPolicyRow>,
+    /// Flight recording of the sweep's *last* policy point, when
+    /// [`MixedConfig::trace`] was set (the adaptive point under the
+    /// default policy list — the steering whose per-link behavior the
+    /// trace is usually wanted for).
+    pub trace: Option<TraceData>,
 }
 
 impl RailsReport {
@@ -156,13 +163,18 @@ fn run_point(
     master: &MemSim,
     sources: &mut [&mut dyn TrafficSource],
     mgr: &RoutingManager,
-) -> (StreamReport, f64, usize, usize) {
+    trace: Option<TraceConfig>,
+) -> (StreamReport, f64, usize, usize, Option<TraceData>) {
     let mut sim = master.fork();
     mgr.apply(&mut sim);
+    if let Some(tcfg) = trace {
+        sim.set_trace(tcfg);
+    }
     let rep = sim.run_streamed(sources);
     let util = sim.peak_utilization(rep.total.makespan_ns);
     let (paths, pairs) = (sim.used_path_count(), sim.used_pair_count());
-    (rep, util, paths, pairs)
+    let data = sim.take_trace();
+    (rep, util, paths, pairs, data)
 }
 
 /// Run the sweep: one set of solo baselines (deterministic rail-0
@@ -183,15 +195,22 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
 
     // --- one mixed run per policy ----------------------------------------
     let mut policies = Vec::new();
-    for spec in &cfg.policies {
+    let mut trace: Option<TraceData> = None;
+    let last = cfg.policies.len().saturating_sub(1);
+    for (pi, spec) in cfg.policies.iter().enumerate() {
         let mgr = RoutingManager::uniform(spec.selector);
         let mut coh = coherence_sources(&sys, mcfg, horizon);
         let mut tier = tiering_source(&sys, mcfg, horizon);
         let mut col = collective_sources(&sys, mcfg);
-        let (rep, util, paths, pairs) = {
+        // only the last policy point records (one trace per sweep file)
+        let tcfg = if pi == last { mcfg.trace } else { None };
+        let (rep, util, paths, pairs, tr) = {
             let mut sources = as_dyn_sources(&mut coh, &mut tier, &mut col);
-            run_point(&master, &mut sources, &mgr)
+            run_point(&master, &mut sources, &mgr, tcfg)
         };
+        if tr.is_some() {
+            trace = tr;
+        }
         let row = |class: TrafficClass, (solo_tx, solo_p50, solo_p99): (f64, f64, f64)| {
             let c = rep.class(class);
             QosClassRow {
@@ -221,7 +240,7 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
             util_imbalance: util_imbalance(&rep, sys.fabric.topo.links.len() * 2),
         });
     }
-    RailsReport { policies }
+    RailsReport { policies, trace }
 }
 
 /// Paper-style report plus the machine-readable RESULT lines.

@@ -63,6 +63,7 @@
 use super::engine::{Engine, EventKind};
 use super::qos::{self, Admission, BatchAdmit, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 use super::rails::{spray_rail, RailSelector, RoutingPolicy};
+use super::trace::{GaugeSample, TraceConfig, TraceData, TraceSink};
 use super::traffic::{BatchSource, Pull, SourcedTx, StreamReport, TrafficClass, TrafficSource};
 use crate::fabric::flit::FlitFormat;
 use crate::fabric::{Fabric, NodeId};
@@ -185,6 +186,11 @@ pub struct MemSim<'f> {
     used_paths: HashSet<(u32, u32)>,
     /// Distinct `(src, dst)` pairs that carried traffic.
     used_pairs: HashSet<u64>,
+    /// Flight-recorder configuration ([`MemSim::set_trace`]); `None`
+    /// (the default) keeps every event arm on the record-nothing path.
+    pub(crate) trace_cfg: Option<TraceConfig>,
+    /// Records of the last traced run ([`MemSim::take_trace`]).
+    pub(crate) trace_out: Option<TraceData>,
 }
 
 /// Path-cache key: `(src << 34) | (dst << 4) | rail`. Node ids stay far
@@ -314,6 +320,8 @@ impl<'f> MemSim<'f> {
             overlay_cache: HashMap::new(),
             used_paths: HashSet::new(),
             used_pairs: HashSet::new(),
+            trace_cfg: None,
+            trace_out: None,
         }
     }
 
@@ -352,7 +360,36 @@ impl<'f> MemSim<'f> {
             overlay_cache: HashMap::new(),
             used_paths: HashSet::new(),
             used_pairs: HashSet::new(),
+            // the recorder configuration forks with the point; recorded
+            // data does not (each fork records its own run)
+            trace_cfg: self.trace_cfg,
+            trace_out: None,
         }
+    }
+
+    /// Arm the flight recorder: the next streamed run (serial or sharded)
+    /// records hop-level spans, gauges, and backend instants into a
+    /// bounded ring, retrievable via [`MemSim::take_trace`]. Forks
+    /// inherit the configuration. Recording never changes simulation
+    /// output (pinned by `prop_tracing_is_inert`).
+    pub fn set_trace(&mut self, cfg: TraceConfig) {
+        self.trace_cfg = Some(cfg);
+    }
+
+    /// Disarm the flight recorder (subsequent runs record nothing).
+    pub fn clear_trace(&mut self) {
+        self.trace_cfg = None;
+    }
+
+    /// The active flight-recorder configuration, if armed.
+    pub fn trace_config(&self) -> Option<TraceConfig> {
+        self.trace_cfg
+    }
+
+    /// Take the records of the last traced run (`None` when the recorder
+    /// was not armed or no run has finished since).
+    pub fn take_trace(&mut self) -> Option<TraceData> {
+        self.trace_out.take()
     }
 
     /// Merge this instance's path overlay into the fork-shared arena, so
@@ -631,7 +668,15 @@ impl<'f> MemSim<'f> {
     /// transactions to the link's `Depart` chain, which re-schedules the
     /// next-hop Arrive when the arbiter starts them.
     #[inline]
-    fn step(&mut self, engine: &mut Engine, fl: &InFlight, now: f64, id: usize, hop: usize) {
+    fn step(
+        &mut self,
+        engine: &mut Engine,
+        fl: &InFlight,
+        now: f64,
+        id: usize,
+        hop: usize,
+        trace: &mut Option<Box<TraceSink>>,
+    ) {
         if hop >= fl.path_len as usize {
             // reached destination: pay device service then complete
             engine.after(fl.device_ns, EventKind::Complete { id });
@@ -650,13 +695,24 @@ impl<'f> MemSim<'f> {
         match self.servers[link_idx][dir].admit(now, service, fl.bytes, fl.class, id as u32, hop as u32)
         {
             Admission::Release { done } => {
+                if let Some(tr) = trace.as_deref_mut() {
+                    // both admission flavors serve over [done-service, done]
+                    tr.hop(id, now, done - service, done, link_idx, dir);
+                }
                 engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
             }
             Admission::Start { done } => {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.hop(id, now, done - service, done, link_idx, dir);
+                }
                 engine.schedule(done, EventKind::Depart { link: link_idx as u32, dir: dir as u8 });
                 engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
             }
-            Admission::Queued => {}
+            Admission::Queued => {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.queued(id, now);
+                }
+            }
         }
     }
 
@@ -672,6 +728,12 @@ impl<'f> MemSim<'f> {
         let mut batch = BatchSource::new(txs, TrafficClass::Generic);
         let mut sources: [&mut dyn TrafficSource; 1] = [&mut batch];
         self.run_streamed(&mut sources).total
+    }
+
+    /// Build the serial run's recorder sink when the recorder is armed —
+    /// the single `Option` check the off path pays per event arm.
+    fn make_sink(&self) -> Option<Box<TraceSink>> {
+        self.trace_cfg.map(|cfg| Box::new(TraceSink::new(&cfg, 0, cfg.capacity, &self.tiers)))
     }
 
     /// The streamed core: pull each source one transaction ahead, inject
@@ -698,6 +760,9 @@ impl<'f> MemSim<'f> {
         let mut slots: Vec<InFlight> = Vec::new();
         let mut free_slots: Vec<u32> = Vec::new();
         let mut report = StreamReport::new();
+        // flight recorder: a local sink so the hot loop borrows it
+        // independently of `self`; None (the default) records nothing
+        let mut trace = self.make_sink();
 
         // Pull source `i` once (if active and unstaged) and schedule its
         // injection event.
@@ -749,6 +814,28 @@ impl<'f> MemSim<'f> {
             let Some((now, ev)) = carried.take().or_else(|| engine.next()) else {
                 break;
             };
+            if let Some(tr) = trace.as_deref_mut() {
+                if tr.gauge_due(now) {
+                    let t0 = std::time::Instant::now();
+                    let mut busy = [0.0; LinkTier::COUNT];
+                    let mut queued = [0u32; LinkTier::COUNT];
+                    for (li, pair) in self.servers.iter().enumerate() {
+                        let t = self.tiers[li].index();
+                        for srv in pair {
+                            busy[t] += srv.busy_ns();
+                            queued[t] += srv.backlog() as u32;
+                        }
+                    }
+                    tr.gauge(GaugeSample {
+                        at: now,
+                        shard: 0,
+                        tier_busy_ns: busy,
+                        tier_queued: queued,
+                        inflight: (slots.len() - free_slots.len()) as u32,
+                    });
+                    tr.add_overhead(t0.elapsed().as_nanos() as f64);
+                }
+            }
             match ev {
                 // injection: the staged transaction of source `tag`
                 // reaches its issue time
@@ -801,14 +888,27 @@ impl<'f> MemSim<'f> {
                         }
                     };
                     inflight_count[i] += 1;
-                    self.step(&mut engine, &slots[id], now, id, 0);
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.inject(
+                            id,
+                            now,
+                            tx.src,
+                            tx.dst,
+                            tx.bytes,
+                            rail,
+                            classes[i],
+                            i,
+                            slots[id].token,
+                        );
+                    }
+                    self.step(&mut engine, &slots[id], now, id, 0, &mut trace);
                     pump(i, now, sources, &mut staged, &mut state, &inflight_count, &mut engine);
                 }
                 EventKind::Arrive { id, hop } => {
                     let fl = &slots[id];
                     if hop >= fl.path_len as usize {
                         // destination arrival: no link admission to batch
-                        self.step(&mut engine, fl, now, id, hop);
+                        self.step(&mut engine, fl, now, id, hop, &mut trace);
                         continue;
                     }
                     // epoch batching: coalesce the consecutive arrivals at
@@ -850,15 +950,21 @@ impl<'f> MemSim<'f> {
                     }
                     admissions.clear();
                     self.servers[link_idx][dir].admit_batch(now, &batch_items, &mut admissions);
-                    for (adm, &(bid, bhop)) in admissions.iter().zip(&batch_ids) {
+                    for (k, (adm, &(bid, bhop))) in admissions.iter().zip(&batch_ids).enumerate() {
                         match *adm {
                             Admission::Release { done } => {
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    tr.hop(bid, now, done - batch_items[k].service, done, link_idx, dir);
+                                }
                                 engine.schedule(
                                     done + c.fixed_ns + sw,
                                     EventKind::Arrive { id: bid, hop: bhop + 1 },
                                 );
                             }
                             Admission::Start { done } => {
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    tr.hop(bid, now, done - batch_items[k].service, done, link_idx, dir);
+                                }
                                 engine.schedule(
                                     done,
                                     EventKind::Depart { link: link_idx as u32, dir: dir as u8 },
@@ -868,7 +974,11 @@ impl<'f> MemSim<'f> {
                                     EventKind::Arrive { id: bid, hop: bhop + 1 },
                                 );
                             }
-                            Admission::Queued => {}
+                            Admission::Queued => {
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    tr.queued(bid, now);
+                                }
+                            }
                         }
                     }
                 }
@@ -877,6 +987,11 @@ impl<'f> MemSim<'f> {
                 EventKind::Depart { link, dir } => {
                     let (li, di) = (link as usize, dir as usize);
                     if let Some((id, hop, done)) = self.servers[li][di].depart(now) {
+                        if let Some(tr) = trace.as_deref_mut() {
+                            // the arbiter starts the queued hop now; its
+                            // arrival time was parked at admission
+                            tr.departed(id as usize, now, done, li, di);
+                        }
                         let c = &self.consts[li];
                         let sw = c.switch_ns[1 - di];
                         engine.schedule(done, EventKind::Depart { link, dir });
@@ -890,6 +1005,9 @@ impl<'f> MemSim<'f> {
                     let fl = &slots[id];
                     let i = fl.source as usize;
                     let token = fl.token;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.complete(id, now, now - fl.issued);
+                    }
                     report.record(classes[i], now - fl.issued, fl.bytes);
                     free_slots.push(id as u32);
                     inflight_count[i] -= 1;
@@ -907,6 +1025,12 @@ impl<'f> MemSim<'f> {
         // recycle through the free list) — the streaming memory contract
         report.peak_inflight = slots.len();
         report.qos = self.collect_qos_stats();
+        if let Some(tr) = trace {
+            let data = tr.into_data();
+            report.dropped_spans = data.dropped_spans;
+            report.trace_overhead_ns = data.overhead_ns;
+            self.trace_out = Some(data);
+        }
         report
     }
 

@@ -48,6 +48,7 @@ pub mod memsim;
 pub mod qos;
 pub mod rails;
 mod shard;
+pub mod trace;
 pub mod traffic;
 
 pub use engine::{Engine, EngineSnapshot, EventKind};
@@ -55,6 +56,10 @@ pub use memsim::{MemSim, MemSimReport, Transaction};
 pub use qos::{ArbPolicy, ClassedServer, LinkClassStats, LinkTier, QosPolicy};
 pub use rails::{RailSelector, RoutingPolicy};
 pub use server::Server;
+pub use trace::{
+    chrome_trace, time_series, GaugeSample, InstantEvent, InstantKind, SpanRecord, TraceConfig,
+    TraceData,
+};
 pub use traffic::{
     BatchSource, ClassReport, Pull, ShardMode, ShardStats, SourcedTx, StreamReport, TrafficClass,
     TrafficSource,

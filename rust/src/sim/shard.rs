@@ -141,6 +141,7 @@ use super::engine::{Engine, EngineSnapshot, EventKind};
 use super::memsim::{path_key, rail_hops, rail_step, LinkConsts, MemSim};
 use super::qos::{Admission, BatchAdmit, ClassedServer, LinkTier};
 use super::rails::{spray_rail, RailSelector};
+use super::trace::{GaugeSample, InstantEvent, InstantKind, TraceData, TraceSink};
 use super::traffic::{
     Pull, ShardMode, ShardStats, SourcedTx, StreamReport, TrafficClass, TrafficSource,
 };
@@ -160,6 +161,11 @@ const MAX_REPLAY_ATTEMPTS: usize = 1000;
 /// streamed memory stays O(peak in-flight) even under infinite lookahead
 /// (fully disjoint shards).
 const MAX_STAGE_PER_SOURCE: usize = 4096;
+
+/// Cap on the coordinator-side epoch/checkpoint/rollback instant events a
+/// traced run retains (the protocol record, never rolled back). Bounded so
+/// a pathological barrier count cannot grow the trace O(epochs).
+const MAX_COORD_INSTANTS: usize = 1 << 16;
 
 /// What [`plan`] needs to know about each source: whether it is
 /// open-loop (stays on the coordinator), for reactive sources the static
@@ -320,6 +326,9 @@ enum Resp {
         peak_slots: usize,
         /// Wall-clock seconds this worker spent waiting on the barrier.
         idle_s: f64,
+        /// The worker's flight-recorder sink, handed back for the
+        /// coordinator's shard-ordered merge (`None` when not tracing).
+        trace: Option<Box<TraceSink>>,
     },
 }
 
@@ -804,6 +813,12 @@ pub(crate) fn run(
 
     let mut report = StreamReport::new();
     report.mode = ShardMode::Sharded { shards: k, pinned_sources: pinned_total };
+    // flight recorder: each worker gets a shard-stamped sink (the span
+    // budget splits across shards); the coordinator keeps the protocol
+    // instants, which commit immediately and are never rolled back
+    let trace_cfg = sim.trace_cfg;
+    let mut trace_data: Option<TraceData> = trace_cfg.map(|_| TraceData::default());
+    let mut trace_instants: Vec<InstantEvent> = Vec::new();
     let mut merged_servers = sim.servers.clone();
     let mut makespan = 0.0f64;
     let mut events = 0u64;
@@ -843,7 +858,11 @@ pub(crate) fn run(
                 owned_links: owned_links[shard],
                 classes: classes_ref,
             };
-            scope.spawn(move || worker(ctx, cmd_rx, res_tx, servers0, pinned));
+            let trace0 = trace_cfg.map(|cfg| {
+                let cap = (cfg.capacity / k).max(1024).min(cfg.capacity);
+                Box::new(TraceSink::new(&cfg, shard as u16, cap, tiers))
+            });
+            scope.spawn(move || worker(ctx, cmd_rx, res_tx, servers0, pinned, trace0));
         }
 
         // coordinator state: one staged transaction per open-loop source
@@ -1113,17 +1132,43 @@ pub(crate) fn run(
                         spare_inbox.pop().unwrap_or_default(),
                     );
                     next_events[s] = f64::INFINITY; // refreshed by the response
+                    let ckpt = gate && !participated[s];
+                    let replay = participated[s];
                     cmd_txs[s]
                         .send(Cmd::Epoch {
                             t1,
                             inbox,
                             out: spare_out.pop().unwrap_or_default(),
                             completions: spare_comp.pop().unwrap_or_default(),
-                            checkpoint: gate && !participated[s],
-                            rollback: participated[s],
+                            checkpoint: ckpt,
+                            rollback: replay,
                             digest: epoch_digest.clone(),
                         })
                         .expect("shard worker alive");
+                    // the protocol's own trace: an epoch mark per ping plus
+                    // the checkpoint / rollback marks the flags imply
+                    if trace_cfg.is_some() && trace_instants.len() + 3 <= MAX_COORD_INSTANTS {
+                        let sh = s as u16;
+                        trace_instants.push(InstantEvent {
+                            at: t0,
+                            kind: InstantKind::Epoch,
+                            shard: sh,
+                        });
+                        if ckpt {
+                            trace_instants.push(InstantEvent {
+                                at: t0,
+                                kind: InstantKind::Checkpoint,
+                                shard: sh,
+                            });
+                        }
+                        if replay {
+                            trace_instants.push(InstantEvent {
+                                at: t0,
+                                kind: InstantKind::Rollback,
+                                shard: sh,
+                            });
+                        }
+                    }
                     pinged[s] = true;
                     participated[s] = true;
                     barriers += 1;
@@ -1323,7 +1368,7 @@ pub(crate) fn run(
         }
         for (s, rx) in res_rxs.iter().enumerate() {
             match rx.recv().expect("shard worker alive") {
-                Resp::Final { shard, servers, now, dispatched, peak_slots, idle_s } => {
+                Resp::Final { shard, servers, now, dispatched, peak_slots, idle_s, trace } => {
                     debug_assert_eq!(shard, s);
                     makespan = makespan.max(now);
                     events += dispatched;
@@ -1349,6 +1394,11 @@ pub(crate) fn run(
                             merged_servers[li] = srv;
                         }
                     }
+                    // shard-ordered collection makes the merged span order
+                    // deterministic (shard-major, push order within)
+                    if let (Some(td), Some(tr)) = (trace_data.as_mut(), trace) {
+                        td.merge(tr.into_data());
+                    }
                 }
                 Resp::Epoch { .. } => unreachable!("Epoch after Finish"),
             }
@@ -1370,6 +1420,12 @@ pub(crate) fn run(
     shard_stats.sort_by_key(|s| s.shard);
     report.shards = shard_stats;
     report.qos = sim.collect_qos_stats();
+    if let Some(mut data) = trace_data {
+        data.instants.extend(trace_instants);
+        report.dropped_spans = data.dropped_spans;
+        report.trace_overhead_ns = data.overhead_ns;
+        sim.trace_out = Some(data);
+    }
     report
 }
 
@@ -1410,6 +1466,9 @@ struct WorkerCkpt {
     slots: Vec<LocalTx>,
     free: Vec<u32>,
     pinned: Vec<PinnedCkpt>,
+    /// Flight-recorder snapshot: a rolled-back attempt's span records roll
+    /// back with the state that produced them.
+    trace: Option<Box<TraceSink>>,
 }
 
 /// Barrier snapshot of one pinned source (mirrors [`SpanCkpt`] for the
@@ -1431,6 +1490,7 @@ fn worker(
     res: mpsc::Sender<Resp>,
     mut servers: Vec<[ClassedServer; 2]>,
     mut pinned: Vec<PinnedSrc<'_>>,
+    mut trace: Option<Box<TraceSink>>,
 ) {
     // slab arena sized from the shard's link count: the calendar queue
     // and slot table for a shard serving L links rarely need more than a
@@ -1504,6 +1564,7 @@ fn worker(
                         p.inflight = pc.inflight;
                         p.emitted = pc.emitted;
                     }
+                    trace.clone_from(&ck.trace);
                 } else if checkpoint {
                     ckpt = Some(WorkerCkpt {
                         engine: engine.snapshot(),
@@ -1523,6 +1584,7 @@ fn worker(
                                 emitted: p.emitted,
                             })
                             .collect(),
+                        trace: trace.clone(),
                     });
                 }
                 let dslice: &[[f64; 2]] = match digest.as_deref() {
@@ -1552,6 +1614,19 @@ fn worker(
                             slots.len() - 1
                         }
                     };
+                    if let Some(tr) = trace.as_deref_mut() {
+                        // an injection delivery opens the span chain; a
+                        // mid-path handoff only re-registers slot context
+                        let tx = &slots[id].tx;
+                        if h.hop == 0 {
+                            tr.inject(
+                                id, h.at, tx.src as usize, tx.dst as usize, tx.bytes, tx.rail,
+                                tx.class, tx.source as usize, tx.token,
+                            );
+                        } else {
+                            tr.adopt(id, tx.bytes, tx.rail, tx.class, tx.source as usize, tx.token);
+                        }
+                    }
                     engine.schedule(h.at, EventKind::Arrive { id, hop: h.hop as usize });
                 }
                 loop {
@@ -1561,6 +1636,31 @@ fn worker(
                     }) else {
                         break;
                     };
+                    if let Some(tr) = trace.as_deref_mut() {
+                        if tr.gauge_due(now) {
+                            let sweep = Instant::now();
+                            let mut busy = [0.0f64; LinkTier::COUNT];
+                            let mut depth = [0u32; LinkTier::COUNT];
+                            for (li, pair) in servers.iter().enumerate() {
+                                if ctx.link_shard[li] as usize != ctx.shard {
+                                    continue;
+                                }
+                                let ti = tr.tier_of(li);
+                                for srv in pair {
+                                    busy[ti] += srv.busy_ns();
+                                    depth[ti] += srv.backlog() as u32;
+                                }
+                            }
+                            tr.gauge(GaugeSample {
+                                at: now,
+                                shard: ctx.shard as u16,
+                                tier_busy_ns: busy,
+                                tier_queued: depth,
+                                inflight: (slots.len() - free.len()) as u32,
+                            });
+                            tr.add_overhead(sweep.elapsed().as_nanos() as f64);
+                        }
+                    }
                     match ev {
                         // injection: a pinned source's staged transaction
                         // reaches its issue time — the serial Custom arm,
@@ -1602,10 +1702,16 @@ fn worker(
                                     slots.len() - 1
                                 }
                             };
+                            if let Some(tr) = trace.as_deref_mut() {
+                                tr.inject(
+                                    id, now, tx.src, tx.dst, tx.bytes, stx_tx.rail, stx_tx.class,
+                                    global as usize, stx_tx.token,
+                                );
+                            }
                             pinned[li].inflight += 1;
                             admit_one(
                                 &mut engine, &mut out, &mut free, &arena, &ctx, &mut servers,
-                                &slots, id, 0, now,
+                                &slots, id, 0, now, &mut trace,
                             );
                             pump_pinned(li, now, &mut pinned, &mut engine);
                         }
@@ -1663,13 +1769,31 @@ fn worker(
                             }
                             admissions.clear();
                             servers[link][dir].admit_batch(now, &batch_items, &mut admissions);
-                            for (adm, &(bid, bhop)) in admissions.iter().zip(&batch_ids) {
+                            for (bk, (adm, &(bid, bhop))) in
+                                admissions.iter().zip(&batch_ids).enumerate()
+                            {
                                 match *adm {
-                                    Admission::Release { done } => forward(
-                                        &mut engine, &mut out, &mut free, &arena, &ctx, &slots,
-                                        bid, link, dir, bhop, done,
-                                    ),
+                                    Admission::Release { done } => {
+                                        if let Some(tr) = trace.as_deref_mut() {
+                                            // both admission flavors serve
+                                            // over [done - service, done]
+                                            tr.hop(
+                                                bid, now, done - batch_items[bk].service, done,
+                                                link, dir,
+                                            );
+                                        }
+                                        forward(
+                                            &mut engine, &mut out, &mut free, &arena, &ctx,
+                                            &slots, bid, link, dir, bhop, done,
+                                        );
+                                    }
                                     Admission::Start { done } => {
+                                        if let Some(tr) = trace.as_deref_mut() {
+                                            tr.hop(
+                                                bid, now, done - batch_items[bk].service, done,
+                                                link, dir,
+                                            );
+                                        }
                                         engine.schedule(
                                             done,
                                             EventKind::Depart {
@@ -1682,7 +1806,11 @@ fn worker(
                                             &slots, bid, link, dir, bhop, done,
                                         );
                                     }
-                                    Admission::Queued => {}
+                                    Admission::Queued => {
+                                        if let Some(tr) = trace.as_deref_mut() {
+                                            tr.queued(bid, now);
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -1691,6 +1819,9 @@ fn worker(
                         EventKind::Depart { link, dir } => {
                             let (li, di) = (link as usize, dir as usize);
                             if let Some((id, hop, done)) = servers[li][di].depart(now) {
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    tr.departed(id as usize, now, done, li, di);
+                                }
                                 engine.schedule(done, EventKind::Depart { link, dir });
                                 forward(
                                     &mut engine, &mut out, &mut free, &arena, &ctx, &slots,
@@ -1700,6 +1831,9 @@ fn worker(
                         }
                         EventKind::Complete { id } => {
                             let lt = &slots[id];
+                            if let Some(tr) = trace.as_deref_mut() {
+                                tr.complete(id, now, now - lt.tx.issued);
+                            }
                             completions.push(Completion {
                                 at: now,
                                 latency: now - lt.tx.issued,
@@ -1771,6 +1905,7 @@ fn worker(
                     dispatched: engine.dispatched(),
                     peak_slots: slots.len(),
                     idle_s: idle,
+                    trace,
                 });
                 return;
             }
@@ -1795,6 +1930,7 @@ fn admit_one(
     id: usize,
     hop: usize,
     now: f64,
+    trace: &mut Option<Box<TraceSink>>,
 ) {
     let lt = &slots[id];
     if hop >= lt.path_len as usize {
@@ -1813,13 +1949,23 @@ fn admit_one(
     let service = c.flit.wire_bytes(lt.tx.bytes) * c.inv_rate;
     match servers[link][dir].admit(now, service, lt.tx.bytes, lt.tx.class, id as u32, hop as u32) {
         Admission::Release { done } => {
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.hop(id, now, done - service, done, link, dir);
+            }
             forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done)
         }
         Admission::Start { done } => {
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.hop(id, now, done - service, done, link, dir);
+            }
             engine.schedule(done, EventKind::Depart { link: link as u32, dir: dir as u8 });
             forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done);
         }
-        Admission::Queued => {}
+        Admission::Queued => {
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.queued(id, now);
+            }
+        }
     }
 }
 

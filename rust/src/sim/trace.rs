@@ -1,0 +1,982 @@
+//! The fabric flight recorder: opt-in hop-level transaction tracing and
+//! time-bucketed telemetry for the streamed simulator.
+//!
+//! Every number the reports carry is an end-of-run aggregate; when a QoS
+//! or rails sweep shows a p99 inflation, the aggregate cannot say *where
+//! on the fabric or when in the run* the queueing happened. The flight
+//! recorder answers that: with tracing enabled (`MemSim::set_trace`), the
+//! run records per-transaction span events — inject, one span per hop
+//! with link id / direction / rail / [`TrafficClass`] / queue delay, and
+//! the completion — plus periodically sampled gauges (per-link-tier busy
+//! time and queue depth, in-flight count) and, on the sharded backend,
+//! per-shard epoch / checkpoint / rollback instants.
+//!
+//! # Cost discipline
+//!
+//! * **Disabled = free.** The simulator holds an `Option` checked once
+//!   per event arm; the off path allocates nothing and records nothing.
+//!   The `simscale` bench records `trace_overhead_ratio` so the disabled
+//!   path stays pinned to the PR 8 baseline.
+//! * **Enabled = bounded.** Spans land in a fixed-capacity ring that
+//!   keeps the *latest* records and counts what it dropped
+//!   (`TraceData::dropped_spans`); gauges decimate (drop every other
+//!   sample and double the interval) when they hit their cap. Memory is
+//!   O(capacity), never O(workload) — the same discipline as
+//!   `peak_inflight`.
+//! * **Inert.** Recording never changes a simulation byte: the property
+//!   test `prop_tracing_is_inert` pins a traced run's `StreamReport`
+//!   equal to the untraced run's, serial and sharded.
+//!
+//! # Exports
+//!
+//! [`chrome_trace`] renders Chrome `trace_event` JSON (open in
+//! `chrome://tracing` or <https://ui.perfetto.dev>): one process per
+//! shard, one track per link direction, spans named and colored by
+//! traffic class, instants and counter tracks for the gauges.
+//! [`time_series`] renders a compact per-link-direction busy/bytes
+//! time series for plotting. The `scalepool trace` subcommand writes
+//! both.
+
+use super::qos::LinkTier;
+use super::traffic::TrafficClass;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Flight-recorder knobs. `Default` is a bounded, always-safe setting.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Span-ring capacity (total across all shards of a sharded run).
+    /// The ring keeps the latest `capacity` records and counts drops.
+    pub capacity: usize,
+    /// Gauge sampling interval in simulated ns. Samples decimate
+    /// adaptively if the run outlives the gauge budget.
+    pub gauge_interval_ns: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: 1 << 18, gauge_interval_ns: 10_000.0 }
+    }
+}
+
+/// One recorded span event. All times are simulated ns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpanRecord {
+    /// A transaction entered the fabric.
+    Inject {
+        at: f64,
+        src: u32,
+        dst: u32,
+        bytes: f64,
+        rail: u16,
+        class: TrafficClass,
+        source: u32,
+        token: u64,
+        shard: u16,
+    },
+    /// One hop's service on a link direction: arrived at `arrive`,
+    /// started serving at `start` (`start - arrive` is the queue delay
+    /// the arbitration policy imposed), finished at `done`.
+    Hop {
+        arrive: f64,
+        start: f64,
+        done: f64,
+        link: u32,
+        dir: u8,
+        rail: u16,
+        class: TrafficClass,
+        source: u32,
+        token: u64,
+        bytes: f64,
+        shard: u16,
+    },
+    /// End-to-end completion (after the destination device time).
+    Complete {
+        at: f64,
+        latency_ns: f64,
+        bytes: f64,
+        class: TrafficClass,
+        source: u32,
+        token: u64,
+        shard: u16,
+    },
+}
+
+/// Kinds of backend instant events (sharded runs only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstantKind {
+    /// A conservative epoch window opened on a shard.
+    Epoch,
+    /// The coordinator snapshotted spanning sources + worker state.
+    Checkpoint,
+    /// A speculated epoch was invalidated and replayed.
+    Rollback,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Epoch => "epoch",
+            InstantKind::Checkpoint => "checkpoint",
+            InstantKind::Rollback => "rollback",
+        }
+    }
+}
+
+/// A backend instant event (epoch boundary, checkpoint, rollback).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstantEvent {
+    pub at: f64,
+    pub kind: InstantKind,
+    /// Shard the instant belongs to; the coordinator stamps `nshards`.
+    pub shard: u16,
+}
+
+/// One periodic telemetry sample. On the sharded backend each worker
+/// samples only the link directions it owns, so per-shard samples sum to
+/// the fabric-wide view.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GaugeSample {
+    pub at: f64,
+    pub shard: u16,
+    /// Cumulative busy ns per [`LinkTier`] (sum over owned directions);
+    /// utilization over a window is the delta between samples.
+    pub tier_busy_ns: [f64; LinkTier::COUNT],
+    /// Transactions queued (admitted but not yet serving) per tier.
+    pub tier_queued: [u32; LinkTier::COUNT],
+    /// Transactions in flight on this shard (or the whole serial run).
+    pub inflight: u32,
+}
+
+/// Per-slot context the recorder carries so hot-path hooks only hand over
+/// what they already have in registers (slot id + times + link).
+#[derive(Clone, Copy, Debug, Default)]
+struct SlotMeta {
+    class_idx: u8,
+    rail: u16,
+    source: u32,
+    token: u64,
+    bytes: f64,
+    /// Arrival time of a hop parked in a busy link's virtual channel;
+    /// consumed by the matching Depart.
+    pend_arrive: f64,
+}
+
+/// Cap on stored gauges per sink; hitting it halves resolution instead
+/// of growing (the bounded-memory contract).
+const MAX_GAUGES: usize = 1 << 14;
+/// Cap on stored instants per sink; overflow counts as dropped records.
+const MAX_INSTANTS: usize = 1 << 16;
+
+/// The recording endpoint one backend (the serial loop, or one sharded
+/// worker) writes into. Cheap to clone — the optimistic backend snapshots
+/// it in `WorkerCkpt` so rolled-back epochs also roll back their records.
+#[derive(Clone, Debug)]
+pub struct TraceSink {
+    shard: u16,
+    cap: usize,
+    ring: Vec<SpanRecord>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    pushed: u64,
+    instants: Vec<InstantEvent>,
+    dropped_instants: u64,
+    gauges: Vec<GaugeSample>,
+    gauge_every: f64,
+    pub(crate) next_gauge: f64,
+    /// `LinkTier::index()` per link id (for gauge bucketing + exports).
+    link_tiers: Vec<u8>,
+    slots: Vec<SlotMeta>,
+    /// Calibrated wall cost of one ring push, for the overhead
+    /// self-measurement (`StreamReport::trace_overhead_ns`).
+    per_record_ns: f64,
+    extra_overhead_ns: f64,
+}
+
+impl TraceSink {
+    /// A sink for `shard` holding at most `cap` span records. `tiers` is
+    /// the fabric's per-link tier classification.
+    pub fn new(cfg: &TraceConfig, shard: u16, cap: usize, tiers: &[LinkTier]) -> TraceSink {
+        let cap = cap.max(1);
+        let mut sink = TraceSink {
+            shard,
+            cap,
+            ring: Vec::with_capacity(cap.min(1 << 20)),
+            head: 0,
+            pushed: 0,
+            instants: Vec::new(),
+            dropped_instants: 0,
+            gauges: Vec::new(),
+            gauge_every: cfg.gauge_interval_ns.max(1.0),
+            next_gauge: cfg.gauge_interval_ns.max(1.0),
+            link_tiers: tiers.iter().map(|t| t.index() as u8).collect(),
+            slots: Vec::new(),
+            per_record_ns: 0.0,
+            extra_overhead_ns: 0.0,
+        };
+        // calibrate the per-push cost once so the run can self-report its
+        // recording overhead without timing the hot loop
+        let probes = 2048.min(cap);
+        let t0 = Instant::now();
+        for i in 0..probes {
+            sink.push(SpanRecord::Inject {
+                at: i as f64,
+                src: 0,
+                dst: 0,
+                bytes: 0.0,
+                rail: 0,
+                class: TrafficClass::Generic,
+                source: 0,
+                token: 0,
+                shard: 0,
+            });
+        }
+        sink.per_record_ns = t0.elapsed().as_nanos() as f64 / probes.max(1) as f64;
+        sink.ring.clear();
+        sink.head = 0;
+        sink.pushed = 0;
+        sink
+    }
+
+    #[inline]
+    fn push(&mut self, r: SpanRecord) {
+        self.pushed += 1;
+        if self.ring.len() < self.cap {
+            self.ring.push(r);
+        } else {
+            self.ring[self.head] = r;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+        }
+    }
+
+    #[inline]
+    fn meta_mut(&mut self, slot: usize) -> &mut SlotMeta {
+        if slot >= self.slots.len() {
+            self.slots.resize(slot + 1, SlotMeta::default());
+        }
+        &mut self.slots[slot]
+    }
+
+    /// Register slot context without an inject record — the sharded
+    /// backend uses this when a mid-path transaction hops into a shard.
+    #[inline]
+    pub(crate) fn adopt(
+        &mut self,
+        slot: usize,
+        bytes: f64,
+        rail: u16,
+        class: TrafficClass,
+        source: usize,
+        token: u64,
+    ) {
+        let m = self.meta_mut(slot);
+        m.class_idx = class.index() as u8;
+        m.rail = rail;
+        m.source = source as u32;
+        m.token = token;
+        m.bytes = bytes;
+        m.pend_arrive = 0.0;
+    }
+
+    /// A transaction entered the fabric on `slot`.
+    #[inline]
+    pub(crate) fn inject(
+        &mut self,
+        slot: usize,
+        at: f64,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        rail: u16,
+        class: TrafficClass,
+        source: usize,
+        token: u64,
+    ) {
+        self.adopt(slot, bytes, rail, class, source, token);
+        let shard = self.shard;
+        self.push(SpanRecord::Inject {
+            at,
+            src: src as u32,
+            dst: dst as u32,
+            bytes,
+            rail,
+            class,
+            source: source as u32,
+            token,
+            shard,
+        });
+    }
+
+    /// A hop was admitted and its service window is fully known.
+    #[inline]
+    pub(crate) fn hop(
+        &mut self,
+        slot: usize,
+        arrive: f64,
+        start: f64,
+        done: f64,
+        link: usize,
+        dir: usize,
+    ) {
+        let m = *self.meta_mut(slot);
+        let shard = self.shard;
+        self.push(SpanRecord::Hop {
+            arrive,
+            start,
+            done,
+            link: link as u32,
+            dir: dir as u8,
+            rail: m.rail,
+            class: TrafficClass::ALL[m.class_idx as usize],
+            source: m.source,
+            token: m.token,
+            bytes: m.bytes,
+            shard,
+        });
+    }
+
+    /// A hop was parked in a busy link's virtual channel at `at`; the
+    /// span is emitted when the matching Depart launches it.
+    #[inline]
+    pub(crate) fn queued(&mut self, slot: usize, at: f64) {
+        self.meta_mut(slot).pend_arrive = at;
+    }
+
+    /// The Depart chain launched a previously-queued hop.
+    #[inline]
+    pub(crate) fn departed(&mut self, slot: usize, start: f64, done: f64, link: usize, dir: usize) {
+        let arrive = self.meta_mut(slot).pend_arrive;
+        self.hop(slot, arrive, start, done, link, dir);
+    }
+
+    /// The transaction on `slot` completed end-to-end.
+    #[inline]
+    pub(crate) fn complete(&mut self, slot: usize, at: f64, latency_ns: f64) {
+        let m = *self.meta_mut(slot);
+        let shard = self.shard;
+        self.push(SpanRecord::Complete {
+            at,
+            latency_ns,
+            bytes: m.bytes,
+            class: TrafficClass::ALL[m.class_idx as usize],
+            source: m.source,
+            token: m.token,
+            shard,
+        });
+    }
+
+    /// Record a backend instant event (epoch / checkpoint / rollback).
+    pub(crate) fn instant(&mut self, at: f64, kind: InstantKind, shard: u16) {
+        if self.instants.len() < MAX_INSTANTS {
+            self.instants.push(InstantEvent { at, kind, shard });
+        } else {
+            self.dropped_instants += 1;
+        }
+    }
+
+    /// True when the gauge interval elapsed and a sample is due.
+    #[inline]
+    pub(crate) fn gauge_due(&self, now: f64) -> bool {
+        now >= self.next_gauge
+    }
+
+    /// Store a sample and schedule the next one; at the gauge cap the
+    /// stored samples decimate and the interval doubles (bounded memory).
+    pub(crate) fn gauge(&mut self, sample: GaugeSample) {
+        if self.gauges.len() >= MAX_GAUGES {
+            let mut keep = false;
+            self.gauges.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.gauge_every *= 2.0;
+        }
+        self.next_gauge = sample.at + self.gauge_every;
+        self.gauges.push(sample);
+    }
+
+    /// Tier index of a link (for gauge accumulation at the backends).
+    #[inline]
+    pub(crate) fn tier_of(&self, link: usize) -> usize {
+        self.link_tiers.get(link).copied().unwrap_or(0) as usize
+    }
+
+    /// Charge wall-clock ns spent off the span hot path (gauge sweeps).
+    pub(crate) fn add_overhead(&mut self, ns: f64) {
+        self.extra_overhead_ns += ns;
+    }
+
+    /// Span + instant records dropped at capacity so far.
+    pub(crate) fn dropped(&self) -> u64 {
+        self.pushed.saturating_sub(self.ring.len() as u64) + self.dropped_instants
+    }
+
+    /// Self-measured recording cost: calibrated per-push cost times the
+    /// records attempted, plus the measured gauge sweeps.
+    pub(crate) fn overhead_ns(&self) -> f64 {
+        self.pushed as f64 * self.per_record_ns + self.extra_overhead_ns
+    }
+
+    /// Unroll the ring (oldest first) into an exportable [`TraceData`].
+    pub(crate) fn into_data(self) -> TraceData {
+        let dropped = self.dropped();
+        let overhead = self.overhead_ns();
+        let mut spans = self.ring;
+        if self.pushed as usize > self.cap {
+            spans.rotate_left(self.head);
+        }
+        TraceData {
+            spans,
+            instants: self.instants,
+            gauges: self.gauges,
+            link_tiers: self.link_tiers,
+            dropped_spans: dropped,
+            overhead_ns: overhead,
+        }
+    }
+}
+
+/// The collected output of a traced run: span records (oldest first per
+/// backend), instant events, gauges, and the honesty counters. Sharded
+/// runs merge per-shard sinks in shard order.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<SpanRecord>,
+    pub instants: Vec<InstantEvent>,
+    pub gauges: Vec<GaugeSample>,
+    /// `LinkTier::index()` per link id.
+    pub link_tiers: Vec<u8>,
+    /// Span/instant records lost to the ring capacity.
+    pub dropped_spans: u64,
+    /// Self-measured recording cost (wall ns): what tracing added to the
+    /// run that produced this data.
+    pub overhead_ns: f64,
+}
+
+impl TraceData {
+    /// Fold another backend's records in (per-shard merge).
+    pub fn merge(&mut self, mut other: TraceData) {
+        self.spans.append(&mut other.spans);
+        self.instants.append(&mut other.instants);
+        self.gauges.append(&mut other.gauges);
+        if self.link_tiers.is_empty() {
+            self.link_tiers = other.link_tiers;
+        }
+        self.dropped_spans += other.dropped_spans;
+        self.overhead_ns += other.overhead_ns;
+    }
+}
+
+fn tier_name(link_tiers: &[u8], link: usize) -> &'static str {
+    link_tiers
+        .get(link)
+        .and_then(|&t| LinkTier::ALL.get(t as usize))
+        .map(|t| t.name())
+        .unwrap_or("?")
+}
+
+fn class_cname(class: TrafficClass) -> &'static str {
+    // stable chrome://tracing palette names, one hue per class
+    match class {
+        TrafficClass::Coherence => "thread_state_running",
+        TrafficClass::Tiering => "thread_state_iowait",
+        TrafficClass::Collective => "thread_state_runnable",
+        TrafficClass::Generic => "generic_work",
+    }
+}
+
+/// Chrome trace-event tid of a link-direction track (tid 0 is the
+/// lifecycle/instant track, tid 1 the counter track).
+fn link_tid(link: u32, dir: u8) -> u64 {
+    2 + (link as u64) * 2 + dir as u64
+}
+
+const US: f64 = 1e-3; // ns -> trace_event µs
+
+/// Render Chrome `trace_event` JSON: one process per shard, one thread
+/// track per link direction carrying B/E span pairs (named and colored
+/// by [`TrafficClass`]), instant events for injects / completions /
+/// epoch-checkpoint-rollback marks, and counter tracks from the gauges.
+/// Load the output in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace(d: &TraceData) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // group hop spans per (shard, link, dir) track; lifecycle instants
+    // per shard — BTreeMaps keep the output deterministic
+    let mut tracks: BTreeMap<(u16, u32, u8), Vec<(f64, f64, f64, &SpanRecord)>> = BTreeMap::new();
+    let mut life: BTreeMap<u16, Vec<&SpanRecord>> = BTreeMap::new();
+    for s in &d.spans {
+        match *s {
+            SpanRecord::Hop { arrive, start, done, link, dir, shard, .. } => {
+                tracks.entry((shard, link, dir)).or_default().push((start, done, arrive, s));
+            }
+            SpanRecord::Inject { shard, .. } | SpanRecord::Complete { shard, .. } => {
+                life.entry(shard).or_default().push(s);
+            }
+        }
+    }
+
+    let mut shards: Vec<u16> = tracks.keys().map(|k| k.0).collect();
+    shards.extend(life.keys().copied());
+    shards.extend(d.instants.iter().map(|i| i.shard));
+    shards.extend(d.gauges.iter().map(|g| g.shard));
+    shards.sort_unstable();
+    shards.dedup();
+
+    for &p in &shards {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(p as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(&format!("shard{p}")))])),
+        ]));
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(p as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str("lifecycle"))])),
+        ]));
+    }
+
+    for ((shard, link, dir), mut spans) in tracks {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(shard as f64)),
+            ("tid", Json::num(link_tid(link, dir) as f64)),
+            (
+                "args",
+                Json::obj(vec![(
+                    "name",
+                    Json::str(&format!(
+                        "link{link} d{dir} [{}]",
+                        tier_name(&d.link_tiers, link as usize)
+                    )),
+                )]),
+            ),
+        ]));
+        // service on one link direction is serial, so sorting by start
+        // yields non-overlapping spans -> clean alternating B/E pairs
+        spans.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        for (start, done, arrive, s) in spans {
+            let (rail, class, source, token, bytes) = match *s {
+                SpanRecord::Hop { rail, class, source, token, bytes, .. } => {
+                    (rail, class, source, token, bytes)
+                }
+                _ => unreachable!("hop track holds only hop records"),
+            };
+            let args = Json::obj(vec![
+                ("bytes", Json::num(bytes)),
+                ("queue_ns", Json::num(start - arrive)),
+                ("rail", Json::num(rail as f64)),
+                ("source", Json::num(source as f64)),
+                ("token", Json::num(token as f64)),
+            ]);
+            events.push(Json::obj(vec![
+                ("name", Json::str(class.name())),
+                ("cat", Json::str("hop")),
+                ("ph", Json::str("B")),
+                ("pid", Json::num(shard as f64)),
+                ("tid", Json::num(link_tid(link, dir) as f64)),
+                ("ts", Json::num(start * US)),
+                ("cname", Json::str(class_cname(class))),
+                ("args", args),
+            ]));
+            events.push(Json::obj(vec![
+                ("name", Json::str(class.name())),
+                ("cat", Json::str("hop")),
+                ("ph", Json::str("E")),
+                ("pid", Json::num(shard as f64)),
+                ("tid", Json::num(link_tid(link, dir) as f64)),
+                ("ts", Json::num(done * US)),
+            ]));
+        }
+    }
+
+    for (shard, mut marks) in life {
+        marks.sort_by(|a, b| {
+            let at = |s: &SpanRecord| match *s {
+                SpanRecord::Inject { at, .. } | SpanRecord::Complete { at, .. } => at,
+                SpanRecord::Hop { arrive, .. } => arrive,
+            };
+            at(a).partial_cmp(&at(b)).unwrap()
+        });
+        for s in marks {
+            let (name, at, class, source, token, extra) = match *s {
+                SpanRecord::Inject { at, class, source, token, src, dst, .. } => {
+                    ("inject", at, class, source, token, ("dst", src as f64, dst as f64))
+                }
+                SpanRecord::Complete { at, class, source, token, latency_ns, .. } => {
+                    ("complete", at, class, source, token, ("latency_ns", latency_ns, 0.0))
+                }
+                _ => unreachable!("lifecycle track holds no hop records"),
+            };
+            let mut args = vec![
+                ("class", Json::str(class.name())),
+                ("source", Json::num(source as f64)),
+                ("token", Json::num(token as f64)),
+            ];
+            if name == "inject" {
+                args.push(("src", Json::num(extra.1)));
+                args.push(("dst", Json::num(extra.2)));
+            } else {
+                args.push(("latency_ns", Json::num(extra.1)));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("lifecycle")),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::num(shard as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(at * US)),
+                ("cname", Json::str(class_cname(class))),
+                ("args", Json::obj(args)),
+            ]));
+        }
+    }
+
+    let mut instants: Vec<&InstantEvent> = d.instants.iter().collect();
+    instants.sort_by(|a, b| (a.shard, a.at).partial_cmp(&(b.shard, b.at)).unwrap());
+    for i in instants {
+        events.push(Json::obj(vec![
+            ("name", Json::str(i.kind.name())),
+            ("cat", Json::str("backend")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("p")),
+            ("pid", Json::num(i.shard as f64)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(i.at * US)),
+        ]));
+    }
+
+    let mut gauges: Vec<&GaugeSample> = d.gauges.iter().collect();
+    gauges.sort_by(|a, b| (a.shard, a.at).partial_cmp(&(b.shard, b.at)).unwrap());
+    let mut prev: BTreeMap<u16, (f64, [f64; LinkTier::COUNT])> = BTreeMap::new();
+    for g in gauges {
+        events.push(Json::obj(vec![
+            ("name", Json::str("inflight")),
+            ("ph", Json::str("C")),
+            ("pid", Json::num(g.shard as f64)),
+            ("tid", Json::num(1.0)),
+            ("ts", Json::num(g.at * US)),
+            ("args", Json::obj(vec![("inflight", Json::num(g.inflight as f64))])),
+        ]));
+        let queued: Vec<(&str, Json)> = LinkTier::ALL
+            .iter()
+            .map(|t| (t.name(), Json::num(g.tier_queued[t.index()] as f64)))
+            .collect();
+        events.push(Json::obj(vec![
+            ("name", Json::str("queued")),
+            ("ph", Json::str("C")),
+            ("pid", Json::num(g.shard as f64)),
+            ("tid", Json::num(1.0)),
+            ("ts", Json::num(g.at * US)),
+            ("args", Json::obj(queued)),
+        ]));
+        // utilization = delta busy over delta t since the previous sample
+        let (t_prev, busy_prev) =
+            prev.get(&g.shard).copied().unwrap_or((0.0, [0.0; LinkTier::COUNT]));
+        let dt = (g.at - t_prev).max(1e-9);
+        let util: Vec<(&str, Json)> = LinkTier::ALL
+            .iter()
+            .map(|t| {
+                let d_busy = (g.tier_busy_ns[t.index()] - busy_prev[t.index()]).max(0.0);
+                (t.name(), Json::num(d_busy / dt))
+            })
+            .collect();
+        events.push(Json::obj(vec![
+            ("name", Json::str("tier_util")),
+            ("ph", Json::str("C")),
+            ("pid", Json::num(g.shard as f64)),
+            ("tid", Json::num(1.0)),
+            ("ts", Json::num(g.at * US)),
+            ("args", Json::obj(util)),
+        ]));
+        prev.insert(g.shard, (g.at, g.tier_busy_ns));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ns")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("generator", Json::str("scalepool flight recorder")),
+                ("dropped_spans", Json::num(d.dropped_spans as f64)),
+                ("trace_overhead_ns", Json::num(d.overhead_ns)),
+            ]),
+        ),
+    ])
+}
+
+/// Render a compact per-link-direction time series: hop busy-ns and
+/// delivered bytes bucketed over the traced span range, plus the raw
+/// gauges and instants. `buckets` is the time resolution.
+pub fn time_series(d: &TraceData, buckets: usize) -> Json {
+    let buckets = buckets.max(1);
+    let mut t0 = f64::INFINITY;
+    let mut t1 = f64::NEG_INFINITY;
+    for s in &d.spans {
+        match *s {
+            SpanRecord::Inject { at, .. } | SpanRecord::Complete { at, .. } => {
+                t0 = t0.min(at);
+                t1 = t1.max(at);
+            }
+            SpanRecord::Hop { arrive, done, .. } => {
+                t0 = t0.min(arrive);
+                t1 = t1.max(done);
+            }
+        }
+    }
+    if !t0.is_finite() {
+        t0 = 0.0;
+        t1 = 0.0;
+    }
+    let bucket_ns = ((t1 - t0) / buckets as f64).max(1e-9);
+
+    let mut links: BTreeMap<(u32, u8), (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for s in &d.spans {
+        if let SpanRecord::Hop { start, done, link, dir, bytes, .. } = *s {
+            let (busy, by) = links
+                .entry((link, dir))
+                .or_insert_with(|| (vec![0.0; buckets], vec![0.0; buckets]));
+            // busy time spreads proportionally over the buckets the
+            // service window overlaps; bytes land at delivery time
+            let b0 = (((start - t0) / bucket_ns) as usize).min(buckets - 1);
+            let b1 = (((done - t0) / bucket_ns) as usize).min(buckets - 1);
+            for (b, slot) in busy.iter_mut().enumerate().take(b1 + 1).skip(b0) {
+                let lo = t0 + b as f64 * bucket_ns;
+                let hi = lo + bucket_ns;
+                *slot += (done.min(hi) - start.max(lo)).max(0.0);
+            }
+            by[(((done - t0) / bucket_ns) as usize).min(buckets - 1)] += bytes;
+        }
+    }
+
+    let link_rows: Vec<Json> = links
+        .into_iter()
+        .map(|((link, dir), (busy, bytes))| {
+            Json::obj(vec![
+                ("link", Json::num(link as f64)),
+                ("dir", Json::num(dir as f64)),
+                ("tier", Json::str(tier_name(&d.link_tiers, link as usize))),
+                ("busy_ns", Json::Arr(busy.into_iter().map(Json::num).collect())),
+                ("bytes", Json::Arr(bytes.into_iter().map(Json::num).collect())),
+            ])
+        })
+        .collect();
+
+    let gauge_rows: Vec<Json> = d
+        .gauges
+        .iter()
+        .map(|g| {
+            let per_tier = |vals: &dyn Fn(usize) -> f64| {
+                Json::obj(LinkTier::ALL.iter().map(|t| (t.name(), Json::num(vals(t.index())))).collect())
+            };
+            Json::obj(vec![
+                ("at", Json::num(g.at)),
+                ("shard", Json::num(g.shard as f64)),
+                ("inflight", Json::num(g.inflight as f64)),
+                ("tier_busy_ns", per_tier(&|i| g.tier_busy_ns[i])),
+                ("tier_queued", per_tier(&|i| g.tier_queued[i] as f64)),
+            ])
+        })
+        .collect();
+
+    let instant_rows: Vec<Json> = d
+        .instants
+        .iter()
+        .map(|i| {
+            Json::obj(vec![
+                ("at", Json::num(i.at)),
+                ("kind", Json::str(i.kind.name())),
+                ("shard", Json::num(i.shard as f64)),
+            ])
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("format", Json::str("scalepool-trace-series/v1")),
+        ("t0_ns", Json::num(t0)),
+        ("bucket_ns", Json::num(bucket_ns)),
+        ("buckets", Json::num(buckets as f64)),
+        ("spans", Json::num(d.spans.len() as f64)),
+        ("dropped_spans", Json::num(d.dropped_spans as f64)),
+        ("trace_overhead_ns", Json::num(d.overhead_ns)),
+        ("links", Json::Arr(link_rows)),
+        ("gauges", Json::Arr(gauge_rows)),
+        ("instants", Json::Arr(instant_rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(cap: usize) -> TraceSink {
+        let cfg = TraceConfig { capacity: cap, gauge_interval_ns: 100.0 };
+        TraceSink::new(&cfg, 0, cap, &[LinkTier::Xlink, LinkTier::CxlSpine])
+    }
+
+    #[test]
+    fn ring_keeps_latest_and_counts_drops() {
+        let mut s = sink(4);
+        for i in 0..10usize {
+            s.adopt(0, 64.0, 0, TrafficClass::Generic, 0, i as u64);
+            s.hop(0, i as f64, i as f64, i as f64 + 1.0, 0, 0);
+        }
+        let d = s.into_data();
+        assert_eq!(d.spans.len(), 4);
+        assert_eq!(d.dropped_spans, 6);
+        // oldest-first unroll: the last four pushes in push order
+        for (k, span) in d.spans.iter().enumerate() {
+            match span {
+                SpanRecord::Hop { arrive, .. } => assert_eq!(*arrive, (6 + k) as f64),
+                other => panic!("expected hop, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn slot_meta_rides_from_inject_to_complete() {
+        let mut s = sink(16);
+        s.inject(3, 5.0, 10, 20, 4096.0, 2, TrafficClass::Coherence, 7, 99);
+        s.hop(3, 5.0, 6.0, 8.0, 1, 1);
+        s.queued(3, 9.0);
+        s.departed(3, 11.0, 12.0, 0, 0);
+        s.complete(3, 14.0, 9.0);
+        let d = s.into_data();
+        assert_eq!(d.spans.len(), 4);
+        match d.spans[1] {
+            SpanRecord::Hop { rail, class, source, token, bytes, .. } => {
+                assert_eq!(rail, 2);
+                assert_eq!(class, TrafficClass::Coherence);
+                assert_eq!(source, 7);
+                assert_eq!(token, 99);
+                assert_eq!(bytes, 4096.0);
+            }
+            ref other => panic!("expected hop, got {other:?}"),
+        }
+        match d.spans[2] {
+            SpanRecord::Hop { arrive, start, done, .. } => {
+                assert_eq!(arrive, 9.0, "departed span must carry the queued arrival");
+                assert_eq!(start, 11.0);
+                assert_eq!(done, 12.0);
+            }
+            ref other => panic!("expected hop, got {other:?}"),
+        }
+        assert_eq!(d.dropped_spans, 0);
+    }
+
+    #[test]
+    fn gauges_decimate_at_cap_instead_of_growing() {
+        let mut s = sink(4);
+        for i in 0..(MAX_GAUGES * 3) {
+            s.gauge(GaugeSample {
+                at: i as f64,
+                shard: 0,
+                tier_busy_ns: [0.0; LinkTier::COUNT],
+                tier_queued: [0; LinkTier::COUNT],
+                inflight: 0,
+            });
+        }
+        assert!(s.gauges.len() <= MAX_GAUGES + 1);
+        assert!(s.gauge_every > 100.0, "interval must back off at the cap");
+    }
+
+    #[test]
+    fn merge_concatenates_and_sums() {
+        let mut a = sink(8);
+        a.inject(0, 1.0, 0, 1, 64.0, 0, TrafficClass::Generic, 0, 0);
+        let mut b = sink(8);
+        b.instant(2.0, InstantKind::Epoch, 1);
+        b.inject(0, 3.0, 1, 0, 64.0, 0, TrafficClass::Generic, 1, 0);
+        let mut d = a.into_data();
+        d.merge(b.into_data());
+        assert_eq!(d.spans.len(), 2);
+        assert_eq!(d.instants.len(), 1);
+        assert_eq!(d.dropped_spans, 0);
+    }
+
+    #[test]
+    fn chrome_export_has_matched_monotonic_pairs() {
+        let mut s = sink(64);
+        s.inject(0, 0.0, 0, 3, 64.0, 0, TrafficClass::Collective, 0, 0);
+        s.hop(0, 0.0, 0.0, 2.0, 0, 0);
+        s.hop(0, 2.5, 2.5, 4.0, 1, 0);
+        s.inject(1, 1.0, 3, 0, 64.0, 1, TrafficClass::Coherence, 1, 5);
+        s.hop(1, 1.0, 4.0, 6.0, 1, 0);
+        s.complete(0, 5.0, 5.0);
+        s.instant(6.0, InstantKind::Checkpoint, 0);
+        let j = chrome_trace(&s.into_data());
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // per (pid, tid): B/E alternate starting with B, ts non-decreasing
+        let mut open: BTreeMap<(u64, u64), usize> = BTreeMap::new();
+        let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        let mut b_count = 0;
+        for e in events {
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let key = (
+                e.get("pid").and_then(Json::as_u64).unwrap(),
+                e.get("tid").and_then(Json::as_u64).unwrap(),
+            );
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            if ph == "B" || ph == "E" {
+                let prev = last_ts.insert(key, ts).unwrap_or(f64::NEG_INFINITY);
+                assert!(ts >= prev, "track {key:?} ts went backwards: {prev} -> {ts}");
+            }
+            match ph {
+                "B" => {
+                    let depth = open.entry(key).or_insert(0);
+                    assert_eq!(*depth, 0, "overlapping spans on one link track");
+                    *depth = 1;
+                    b_count += 1;
+                }
+                "E" => {
+                    let depth = open.entry(key).or_insert(0);
+                    assert_eq!(*depth, 1, "E without a matching B");
+                    *depth = 0;
+                }
+                "i" | "C" => {}
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert_eq!(b_count, 3);
+        assert!(open.values().all(|&d| d == 0), "unclosed span at end of trace");
+        // the json round-trips through the parser
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn time_series_conserves_busy_time() {
+        let mut s = sink(64);
+        s.adopt(0, 1000.0, 0, TrafficClass::Tiering, 0, 0);
+        s.hop(0, 0.0, 0.0, 10.0, 0, 0);
+        s.hop(0, 10.0, 12.0, 30.0, 1, 1);
+        let j = time_series(&s.into_data(), 8);
+        let links = j.get("links").and_then(Json::as_arr).unwrap();
+        assert_eq!(links.len(), 2);
+        let total: f64 = links
+            .iter()
+            .flat_map(|l| l.get("busy_ns").and_then(Json::as_arr).unwrap())
+            .map(|v| v.as_f64().unwrap())
+            .sum();
+        let want = 10.0 + 18.0;
+        assert!((total - want).abs() < 1e-6, "bucketed busy {total} != span busy {want}");
+        let bytes: f64 = links
+            .iter()
+            .flat_map(|l| l.get("bytes").and_then(Json::as_arr).unwrap())
+            .map(|v| v.as_f64().unwrap())
+            .sum();
+        assert_eq!(bytes, 2000.0);
+    }
+}

@@ -325,6 +325,13 @@ pub struct StreamReport {
     /// checkpoint. Commits always outnumber rollbacks (the earliest
     /// divergence point advances every replay round).
     pub rollbacks: u64,
+    /// Flight-recorder records lost to the trace ring capacity (0 when
+    /// tracing is off or the ring never filled) — the honesty counter
+    /// that makes a truncated trace visible.
+    pub dropped_spans: u64,
+    /// Self-measured wall-clock cost of recording (ns): what tracing
+    /// added to this run. 0 when tracing is off.
+    pub trace_overhead_ns: f64,
 }
 
 impl StreamReport {
@@ -347,6 +354,8 @@ impl StreamReport {
             optimistic_sources: 0,
             checkpoints: 0,
             rollbacks: 0,
+            dropped_spans: 0,
+            trace_overhead_ns: 0.0,
         }
     }
 

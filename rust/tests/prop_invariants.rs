@@ -2023,6 +2023,322 @@ fn prop_forked_sim_matches_fresh_build() {
     );
 }
 
+/// Flight-recorder inertness (ISSUE 9): arming the trace sink must not
+/// perturb the simulation in any observable way. On randomized Clos and
+/// torus fabrics, a traced run's [`StreamReport`] — totals, per-class
+/// stats, QoS telemetry, backend mode and protocol counters — and the
+/// source's per-transaction completion instants must be bit-identical
+/// to the untraced run's, on BOTH the serial and the sharded backend
+/// (`dropped_spans`/`trace_overhead_ns` are the recorder's own fields
+/// and are excluded by construction).
+#[test]
+fn prop_tracing_is_inert() {
+    use scalepool::sim::{StreamReport, TraceConfig};
+    let fingerprint = |r: &StreamReport| -> Vec<u64> {
+        let mut v = vec![
+            r.total.completed,
+            r.total.events,
+            r.total.makespan_ns.to_bits(),
+            r.total.latency.mean().to_bits(),
+            r.total.latency.min().to_bits(),
+            r.total.latency.max().to_bits(),
+            r.peak_inflight as u64,
+            r.epochs,
+            r.barriers,
+            r.optimistic_sources as u64,
+            r.checkpoints,
+            r.rollbacks,
+        ];
+        for c in TrafficClass::ALL {
+            let cr = r.class(c);
+            v.push(cr.completed);
+            v.push(cr.bytes.to_bits());
+            v.push(cr.latency.mean().to_bits());
+            v.push(cr.latency.max().to_bits());
+            v.push(cr.hist.p50().to_bits());
+            v.push(cr.hist.p99().to_bits());
+        }
+        for q in &r.qos {
+            v.push(q.link as u64);
+            v.push(q.dir as u64);
+            v.push(q.tier.index() as u64);
+            v.push(q.class.index() as u64);
+            v.push(q.served);
+            v.push(q.bytes.to_bits());
+            v.push(q.busy_ns.to_bits());
+            v.push(q.queue_delay_ns.to_bits());
+        }
+        v
+    };
+    forall_res(
+        Config { cases: 16, seed: 0x71ACE },
+        |rng: &mut Rng| {
+            let (t, eps) = if rng.below(2) == 0 {
+                // Clos with endpoints per leaf
+                let (mut t, leaves) = Topology::clos(
+                    2 + rng.below(6) as usize,
+                    1 + rng.below(3) as usize,
+                    LinkKind::CxlCoherent,
+                    "c",
+                );
+                let per = 2 + rng.below(4) as usize;
+                let mut eps = Vec::new();
+                for (i, &l) in leaves.iter().enumerate() {
+                    for e in 0..per {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                        t.connect(n, l, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            } else {
+                // torus with endpoints on alternating switches
+                let (mut t, sw) = Topology::torus3d(
+                    (2 + rng.below(3) as usize, 2 + rng.below(3) as usize, 1 + rng.below(2) as usize),
+                    LinkKind::CxlCoherent,
+                    "t",
+                );
+                let mut eps = Vec::new();
+                for (i, &s) in sw.iter().enumerate() {
+                    if i % 2 == 0 {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}"));
+                        t.connect(n, s, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                }
+                (t, eps)
+            };
+            let ntx = 80 + rng.below(300) as usize;
+            let shards = 2 + rng.below(3) as usize;
+            (t, eps, ntx, shards, rng.below(1 << 30))
+        },
+        |(t, eps, ntx, shards, seed)| {
+            if eps.len() < 2 {
+                return Ok(());
+            }
+            let f = Fabric::new(t.clone());
+            let mut rng = Rng::new(*seed);
+            let mut at = 0.0;
+            let txs: Vec<Transaction> = (0..*ntx)
+                .map(|_| {
+                    at += rng.exp(1.0 / 30.0) + 1e-6;
+                    let s = rng.below(eps.len() as u64) as usize;
+                    let mut d = rng.below(eps.len() as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % eps.len();
+                    }
+                    Transaction {
+                        src: eps[s],
+                        dst: eps[d],
+                        at,
+                        bytes: 64.0 + rng.f64() * 8192.0,
+                        device_ns: rng.f64() * 200.0,
+                    }
+                })
+                .collect();
+
+            for sharded in [false, true] {
+                let ctx = if sharded { "[sharded]" } else { "[serial]" };
+                let run = |traced: bool| {
+                    let mut src = RecordingSource::new(txs.clone());
+                    let mut sim = MemSim::new(&f);
+                    if traced {
+                        sim.set_trace(TraceConfig::default());
+                    }
+                    let rep = {
+                        let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+                        if sharded {
+                            sim.run_streamed_sharded_with(&mut sources, *shards)
+                        } else {
+                            sim.run_streamed(&mut sources)
+                        }
+                    };
+                    (rep, src.completions, sim.take_trace())
+                };
+                let (plain, plain_done, no_data) = run(false);
+                let (traced, traced_done, data) = run(true);
+                if no_data.is_some() {
+                    return Err(format!("{ctx} untraced run produced a recording"));
+                }
+                let data = data.ok_or(format!("{ctx} traced run produced no recording"))?;
+                if traced.total.completed > 0 && data.spans.is_empty() {
+                    return Err(format!("{ctx} armed recorder captured no spans"));
+                }
+                if plain.dropped_spans != 0 || plain.trace_overhead_ns != 0.0 {
+                    return Err(format!("{ctx} untraced report carries recorder fields"));
+                }
+                if plain.mode != traced.mode {
+                    return Err(format!(
+                        "{ctx} backend mode changed under tracing: {:?} vs {:?}",
+                        plain.mode, traced.mode
+                    ));
+                }
+                if fingerprint(&plain) != fingerprint(&traced) {
+                    return Err(format!("{ctx} traced report diverged from untraced"));
+                }
+                if plain_done.len() != traced_done.len() {
+                    return Err(format!("{ctx} completion counts diverged"));
+                }
+                for (a, b) in plain_done.iter().zip(&traced_done) {
+                    if a.0 != b.0 || a.1.to_bits() != b.1.to_bits() {
+                        return Err(format!(
+                            "{ctx} completion instants diverged: {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Trace conservation (ISSUE 9): with the ring sized above the workload,
+/// a traced serial run records a well-formed span chain for every
+/// transaction — exactly one inject and one complete per token, every
+/// hop ordered `arrive <= start <= done` with the next hop arriving no
+/// earlier than the previous finished, the complete's latency equal to
+/// `complete.at - inject.at` — and the per-class completed counts and
+/// byte totals rebuilt from the complete spans match the report. A
+/// sharded rerun of the same workload must additionally carry epoch
+/// instants from the coordinator protocol.
+#[test]
+fn trace_conserves_transactions() {
+    use scalepool::sim::{SpanRecord, TraceConfig};
+    use std::collections::BTreeMap;
+
+    let (mut t, leaves) = Topology::clos(4, 2, LinkKind::CxlCoherent, "c");
+    let mut eps = Vec::new();
+    for (i, &l) in leaves.iter().enumerate() {
+        for e in 0..3 {
+            let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+            t.connect(n, l, LinkKind::CxlCoherent);
+            eps.push(n);
+        }
+    }
+    let f = Fabric::new(t);
+    let mut rng = Rng::new(0x7C09E);
+    let mut at = 0.0;
+    let ntx = 400usize;
+    let txs: Vec<Transaction> = (0..ntx)
+        .map(|_| {
+            at += rng.exp(1.0 / 25.0) + 1e-6;
+            let s = rng.below(eps.len() as u64) as usize;
+            let mut d = rng.below(eps.len() as u64) as usize;
+            if d == s {
+                d = (d + 1) % eps.len();
+            }
+            Transaction {
+                src: eps[s],
+                dst: eps[d],
+                at,
+                bytes: 64.0 + rng.f64() * 4096.0,
+                device_ns: rng.f64() * 150.0,
+            }
+        })
+        .collect();
+
+    let mut src = RecordingSource::new(txs.clone());
+    let mut sim = MemSim::new(&f);
+    sim.set_trace(TraceConfig::default());
+    let rep = {
+        let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+        sim.run_streamed(&mut sources)
+    };
+    let data = sim.take_trace().expect("traced run must yield a recording");
+    assert_eq!(rep.total.completed, ntx as u64);
+    assert_eq!(rep.dropped_spans, 0, "ring sized above the workload must not drop");
+    assert_eq!(data.dropped_spans, 0);
+    assert!(data.instants.is_empty(), "serial runs have no backend protocol instants");
+    assert!(rep.trace_overhead_ns > 0.0, "recording must report its own cost");
+
+    // group spans per token; single source, so tokens are unique
+    #[derive(Default)]
+    struct Chain {
+        inject: Option<(f64, f64)>,          // at, bytes
+        hops: Vec<(f64, f64, f64)>,          // arrive, start, done
+        complete: Option<(f64, f64, f64)>,   // at, latency_ns, bytes
+    }
+    let mut chains: BTreeMap<u64, Chain> = BTreeMap::new();
+    let mut class_bytes = 0.0f64;
+    let mut class_completed = 0u64;
+    for s in &data.spans {
+        match *s {
+            SpanRecord::Inject { at, bytes, token, shard, .. } => {
+                assert_eq!(shard, 0, "serial spans are shard 0");
+                let c = chains.entry(token).or_default();
+                assert!(c.inject.is_none(), "token {token} injected twice");
+                c.inject = Some((at, bytes));
+            }
+            SpanRecord::Hop { arrive, start, done, token, .. } => {
+                chains.entry(token).or_default().hops.push((arrive, start, done));
+            }
+            SpanRecord::Complete { at, latency_ns, bytes, class, token, .. } => {
+                let c = chains.entry(token).or_default();
+                assert!(c.complete.is_none(), "token {token} completed twice");
+                c.complete = Some((at, latency_ns, bytes));
+                if class == TrafficClass::Generic {
+                    class_bytes += bytes;
+                    class_completed += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(chains.len(), ntx, "every transaction must leave a span chain");
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+    for (token, c) in &chains {
+        let (inj_at, inj_bytes) = c.inject.unwrap_or_else(|| panic!("token {token} has no inject"));
+        assert_eq!(inj_at.to_bits(), txs[*token as usize].at.to_bits());
+        assert_eq!(inj_bytes.to_bits(), txs[*token as usize].bytes.to_bits());
+        assert!(!c.hops.is_empty(), "token {token}: distinct endpoints need >= 1 hop");
+        let mut hops = c.hops.clone();
+        hops.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.total_cmp(&b.2)));
+        let mut prev_done = inj_at;
+        for &(arrive, start, done) in &hops {
+            assert!(arrive <= start && start <= done, "token {token}: hop out of order");
+            assert!(
+                arrive >= prev_done - 1e-9,
+                "token {token}: hop arrives before the previous one finished"
+            );
+            prev_done = done;
+        }
+        let (done_at, latency, done_bytes) =
+            c.complete.unwrap_or_else(|| panic!("token {token} never completed"));
+        assert!(done_at >= prev_done - 1e-9, "token {token}: completed mid-flight");
+        assert!(close(latency, done_at - inj_at), "token {token}: latency mismatch");
+        assert_eq!(done_bytes.to_bits(), inj_bytes.to_bits());
+    }
+    let generic = rep.class(TrafficClass::Generic);
+    assert_eq!(class_completed, generic.completed);
+    assert!(close(class_bytes, generic.bytes), "byte totals diverged from the report");
+
+    // the sharded backend must additionally stamp coordinator protocol
+    // instants into the merged recording
+    let mut src = RecordingSource::new(txs);
+    let mut sim = MemSim::new(&f);
+    sim.set_trace(TraceConfig::default());
+    let shr = {
+        let mut sources: [&mut dyn TrafficSource; 1] = [&mut src];
+        sim.run_streamed_sharded_with(&mut sources, 4)
+    };
+    let sdata = sim.take_trace().expect("sharded traced run must yield a recording");
+    if shr.mode.is_sharded() {
+        assert!(
+            sdata
+                .instants
+                .iter()
+                .any(|i| i.kind == scalepool::sim::InstantKind::Epoch),
+            "sharded recording carries no epoch instants"
+        );
+        assert!(
+            sdata.spans.iter().any(|s| match *s {
+                SpanRecord::Hop { shard, .. } => shard > 0,
+                _ => false,
+            }),
+            "no span was stamped by a non-zero shard"
+        );
+    }
+}
+
 /// The fig7 model: for ANY fabric-derived parameter set with sane
 /// ordering, the three-config ordering holds in region 3.
 #[test]

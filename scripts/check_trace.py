@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Validate Chrome ``trace_event`` JSON emitted by ``scalepool trace``.
+
+Structural checks on the ``traceEvents`` array:
+
+* every event carries the phase-appropriate required fields
+  (``B``/``E`` need pid/tid/ts/name; counters ``C`` need pid/ts/name/args;
+  instants ``i`` need ts and a scope ``s``);
+* per (pid, tid) track, ``B``/``E`` events alternate starting with ``B``
+  and ending balanced — the exporter emits complete spans only;
+* ``B``/``E`` timestamps are non-decreasing within a track and every
+  ``E`` closes at or after its ``B`` (instants and counters share tid 0
+  with the lifecycle pass and are exempt from the track ordering rule —
+  they are emitted in separate passes);
+* optional content requirements: ``--require-class NAME`` asserts at
+  least one hop span of that traffic class (hop spans are named after
+  their class), ``--require-instant KIND`` asserts at least one instant
+  of that name (epoch / checkpoint / rollback / inject / complete).
+
+Exits non-zero with a list of violations; prints a one-line summary on
+success.
+
+Usage: check_trace.py TRACE.json [--require-class NAME]...
+                                 [--require-instant KIND]...
+"""
+
+import json
+import sys
+
+
+def fail(errors):
+    for e in errors[:40]:
+        print(f"FAIL: {e}")
+    if len(errors) > 40:
+        print(f"... and {len(errors) - 40} more")
+    sys.exit(1)
+
+
+def main(argv):
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        sys.exit(0)
+    path = argv[0]
+    want_classes, want_instants = [], []
+    i = 1
+    while i < len(argv):
+        if argv[i] == "--require-class" and i + 1 < len(argv):
+            want_classes.append(argv[i + 1])
+            i += 2
+        elif argv[i] == "--require-instant" and i + 1 < len(argv):
+            want_instants.append(argv[i + 1])
+            i += 2
+        else:
+            print(f"unknown argument {argv[i]!r}")
+            sys.exit(2)
+
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail([f"{path}: no traceEvents array"])
+
+    errors = []
+    tracks = {}  # (pid, tid) -> [depth, last_ts, last_b_ts]
+    seen_classes, seen_instants = set(), set()
+    counts = {"B": 0, "E": 0, "C": 0, "i": 0, "M": 0}
+
+    for n, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None:
+            errors.append(f"event {n}: missing ph")
+            continue
+        counts[ph] = counts.get(ph, 0) + 1
+        if ph == "M":  # metadata names the tracks; no ts required
+            if "pid" not in ev or "name" not in ev:
+                errors.append(f"event {n}: metadata without pid/name")
+            continue
+        if "ts" not in ev or not isinstance(ev["ts"], (int, float)):
+            errors.append(f"event {n} (ph={ph}): missing numeric ts")
+            continue
+        ts = ev["ts"]
+        if ph in ("B", "E"):
+            missing = [k for k in ("pid", "tid", "name") if k not in ev]
+            if missing:
+                errors.append(f"event {n} (ph={ph}): missing {missing}")
+                continue
+            key = (ev["pid"], ev["tid"])
+            depth, last_ts, last_b = tracks.get(key, [0, None, None])
+            if last_ts is not None and ts < last_ts:
+                errors.append(
+                    f"event {n}: track {key} ts {ts} went backwards from {last_ts}"
+                )
+            if ph == "B":
+                if depth != 0:
+                    errors.append(f"event {n}: track {key} opened a span inside a span")
+                tracks[key] = [depth + 1, ts, ts]
+                # hop spans are named after their traffic class
+                seen_classes.add(ev["name"])
+            else:
+                if depth != 1:
+                    errors.append(f"event {n}: track {key} E without matching B")
+                elif last_b is not None and ts < last_b:
+                    errors.append(f"event {n}: track {key} span closes before it opens")
+                tracks[key] = [max(depth - 1, 0), ts, None]
+        elif ph == "C":
+            missing = [k for k in ("pid", "name", "args") if k not in ev]
+            if missing:
+                errors.append(f"event {n} (ph=C): missing {missing}")
+        elif ph == "i":
+            if "s" not in ev:
+                errors.append(f"event {n} (ph=i): instant without scope s")
+            name = ev.get("name", "")
+            seen_instants.add(name)
+        else:
+            errors.append(f"event {n}: unexpected phase {ph!r}")
+
+    for key, (depth, _, _) in tracks.items():
+        if depth != 0:
+            errors.append(f"track {key}: {depth} unclosed B span(s) at end of trace")
+    if counts.get("B", 0) != counts.get("E", 0):
+        errors.append(f"unbalanced spans: {counts.get('B', 0)} B vs {counts.get('E', 0)} E")
+    for c in want_classes:
+        if c not in seen_classes:
+            errors.append(f"required class {c!r} has no hop span (saw {sorted(seen_classes)})")
+    for k in want_instants:
+        if k not in seen_instants:
+            errors.append(f"required instant {k!r} absent (saw {sorted(seen_instants)})")
+
+    if errors:
+        fail(errors)
+    print(
+        f"OK: {len(events)} events — {counts.get('B', 0)} spans on {len(tracks)} tracks, "
+        f"{counts.get('C', 0)} counter samples, {counts.get('i', 0)} instants"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
