@@ -155,6 +155,12 @@ pub struct MixedReport {
     pub mixed_events: u64,
     pub mixed_peak_utilization: f64,
     pub peak_inflight: usize,
+    /// Hops express dispatch admitted inline (ISSUE 10) — 0 when fusion
+    /// never fired (dense traffic) or was disabled.
+    pub fused_hops: u64,
+    /// Fraction of hop-level events that were fused (see
+    /// [`StreamReport::fusion_rate`]).
+    pub fusion_rate: f64,
     /// Backend the mixed run executed on (serial, sharded, or a sharded
     /// request that fell back — and why).
     pub mode: ShardMode,
@@ -513,6 +519,8 @@ pub fn run_mixed(cfg: &MixedConfig) -> MixedReport {
         mixed_events: mixed.total.events,
         mixed_peak_utilization: util,
         peak_inflight: mixed.peak_inflight,
+        fused_hops: mixed.fused_hops,
+        fusion_rate: mixed.fusion_rate(),
         mode: mixed.mode.clone(),
         optimistic_sources: mixed.optimistic_sources,
         checkpoints: mixed.checkpoints,
@@ -558,6 +566,16 @@ pub fn render(r: &MixedReport) -> String {
         100.0 * r.mixed_peak_utilization,
         r.peak_inflight
     ));
+    // only printed when express dispatch actually fired: dense mixed
+    // traffic rarely clears the peek gate, and the zero case keeps the
+    // output (and the CI parity greps) byte-identical to pre-PR-10
+    if r.fused_hops > 0 {
+        out.push_str(&format!(
+            "express dispatch: {} hops fused inline ({:.1}% of hop events)\n",
+            r.fused_hops,
+            100.0 * r.fusion_rate,
+        ));
+    }
     match &r.mode {
         // serial output stays byte-identical to what it always was
         ShardMode::Serial => {}

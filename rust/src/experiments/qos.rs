@@ -131,6 +131,11 @@ pub struct QosPolicyRow {
     pub makespan_ns: f64,
     pub events: u64,
     pub peak_utilization: f64,
+    /// Hops express dispatch admitted inline (ISSUE 10) — 0 when the
+    /// dense mixed traffic never cleared the peek gate.
+    pub fused_hops: u64,
+    /// Fraction of hop-level events that were fused.
+    pub fusion_rate: f64,
     pub tiers: Vec<TierSummary>,
 }
 
@@ -254,6 +259,8 @@ pub fn run_qos(cfg: &QosSweepConfig) -> QosReport {
             makespan_ns: rep.total.makespan_ns,
             events: rep.total.events,
             peak_utilization: util,
+            fused_hops: rep.fused_hops,
+            fusion_rate: rep.fusion_rate(),
             tiers: tier_summaries(&rep, rep.total.makespan_ns),
         });
     }
@@ -297,6 +304,14 @@ pub fn render(r: &QosReport, specs: &[PolicySpec]) -> String {
             p.events,
             100.0 * p.peak_utilization
         ));
+        // zero keeps the sweep output (and CI greps) byte-identical
+        if p.fused_hops > 0 {
+            out.push_str(&format!(
+                "express dispatch: {} hops fused inline ({:.1}% of hop events)\n",
+                p.fused_hops,
+                100.0 * p.fusion_rate,
+            ));
+        }
         for t in &p.tiers {
             out.push_str(&format!(
                 "  tier {:>11}: peak dir util {:>5.1}%, mean queue delay {:>10}, bytes coh/tier/col/gen = {}/{}/{}/{}\n",

@@ -79,6 +79,11 @@ pub struct RailsPolicyRow {
     pub makespan_ns: f64,
     pub events: u64,
     pub peak_utilization: f64,
+    /// Hops express dispatch admitted inline (ISSUE 10) — 0 when the
+    /// dense mixed traffic never cleared the peek gate.
+    pub fused_hops: u64,
+    /// Fraction of hop-level events that were fused.
+    pub fusion_rate: f64,
     /// Distinct physical paths transactions actually rode in the mixed
     /// run (adaptive probes and aliased rail indices do not count).
     pub used_paths: usize,
@@ -235,6 +240,8 @@ pub fn run_rails(cfg: &RailsSweepConfig) -> RailsReport {
             makespan_ns: rep.total.makespan_ns,
             events: rep.total.events,
             peak_utilization: util,
+            fused_hops: rep.fused_hops,
+            fusion_rate: rep.fusion_rate(),
             used_paths: paths,
             used_pairs: pairs,
             util_imbalance: util_imbalance(&rep, sys.fabric.topo.links.len() * 2),
@@ -275,6 +282,14 @@ pub fn render(r: &RailsReport, rails: usize) -> String {
             p.events,
             100.0 * p.peak_utilization
         ));
+        // zero keeps the sweep output (and CI greps) byte-identical
+        if p.fused_hops > 0 {
+            out.push_str(&format!(
+                "express dispatch: {} hops fused inline ({:.1}% of hop events)\n",
+                p.fused_hops,
+                100.0 * p.fusion_rate,
+            ));
+        }
         out.push_str(&format!(
             "  steering: {} paths ridden over {} pairs (diversity {:.2}x), link-utilization imbalance {:.2}x\n",
             p.used_paths,

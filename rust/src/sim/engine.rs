@@ -375,6 +375,26 @@ impl Engine {
         }
     }
 
+    /// Express-dispatch gate: would a hypothetical event at `at` be the
+    /// very next dispatch, ahead of every pending event?
+    ///
+    /// Strict `<` against [`Engine::peek_time`], and deliberately so: an
+    /// event scheduled at *exactly* `peek_time` receives a higher `seq`
+    /// than the already-pending same-time events and therefore
+    /// dispatches *after* them (the FIFO tie-break
+    /// `fifo_tie_at_peek_time` pins for both this engine and
+    /// [`reference::HeapEngine`]). Only a strictly earlier time
+    /// guarantees nothing can interleave before it, which is what lets
+    /// the streamed core commit such an event inline (hop fusion)
+    /// instead of filing it.
+    #[inline]
+    pub fn would_dispatch_next(&mut self, at: SimTime) -> bool {
+        match self.peek_time() {
+            Some(t) => at < t,
+            None => true,
+        }
+    }
+
     /// Pop the next event, advancing the clock. None when drained.
     /// (Deliberately not an `Iterator`: callers interleave `schedule`.)
     #[allow(clippy::should_implement_trait)]
@@ -542,6 +562,18 @@ pub mod reference {
             self.heap.peek().map(|k| k.at)
         }
 
+        /// Express-dispatch gate; same strict-`<` tie semantics as
+        /// [`super::Engine::would_dispatch_next`] (an event filed at
+        /// exactly `peek_time` loses the `seq` tie-break to everything
+        /// already pending there).
+        #[inline]
+        pub fn would_dispatch_next(&mut self, at: SimTime) -> bool {
+            match self.peek_time() {
+                Some(t) => at < t,
+                None => true,
+            }
+        }
+
         #[allow(clippy::should_implement_trait)]
         pub fn next(&mut self) -> Option<(SimTime, EventKind)> {
             let k = self.heap.pop()?;
@@ -641,6 +673,59 @@ mod tests {
             assert_eq!(at, t, "peek_time disagreed with next");
         }
         assert!(e.is_empty());
+    }
+
+    /// The fact that forces the hop-fusion gate to be strict `<`: an
+    /// event scheduled at exactly `peek_time` dispatches AFTER the
+    /// already-pending same-time events (FIFO `seq` tie-break), in both
+    /// the calendar engine and the heap reference.
+    #[test]
+    fn fifo_tie_at_peek_time() {
+        let mut e = Engine::new();
+        e.schedule(10.0, EventKind::Custom { tag: 0 });
+        e.schedule(10.0, EventKind::Custom { tag: 1 });
+        assert_eq!(e.peek_time(), Some(10.0));
+        // an event filed at exactly peek_time must lose the tie-break...
+        e.schedule(10.0, EventKind::Custom { tag: 2 });
+        let order: Vec<i64> = std::iter::from_fn(|| e.next())
+            .map(|(_, k)| match k {
+                EventKind::Custom { tag } => tag as i64,
+                _ => -1,
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2], "late same-time event jumped the queue");
+
+        let mut h = reference::HeapEngine::new();
+        h.schedule(10.0, EventKind::Custom { tag: 0 });
+        h.schedule(10.0, EventKind::Custom { tag: 1 });
+        assert_eq!(h.peek_time(), Some(10.0));
+        h.schedule(10.0, EventKind::Custom { tag: 2 });
+        let order: Vec<i64> = std::iter::from_fn(|| h.next())
+            .map(|(_, k)| match k {
+                EventKind::Custom { tag } => tag as i64,
+                _ => -1,
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2], "heap reference disagreed on the tie-break");
+    }
+
+    /// ...which is exactly what `would_dispatch_next` encodes: true
+    /// strictly below `peek_time`, false at it, true on an empty queue.
+    #[test]
+    fn would_dispatch_next_is_strict() {
+        let mut e = Engine::new();
+        assert!(e.would_dispatch_next(5.0), "empty queue: anything dispatches next");
+        e.schedule(10.0, EventKind::Custom { tag: 0 });
+        assert!(e.would_dispatch_next(9.999));
+        assert!(!e.would_dispatch_next(10.0), "a tie files behind the pending event");
+        assert!(!e.would_dispatch_next(10.001));
+
+        let mut h = reference::HeapEngine::new();
+        assert!(h.would_dispatch_next(5.0));
+        h.schedule(10.0, EventKind::Custom { tag: 0 });
+        assert!(h.would_dispatch_next(9.999));
+        assert!(!h.would_dispatch_next(10.0));
+        assert!(!h.would_dispatch_next(10.001));
     }
 
     #[test]

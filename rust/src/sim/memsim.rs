@@ -186,6 +186,11 @@ pub struct MemSim<'f> {
     used_paths: HashSet<(u32, u32)>,
     /// Distinct `(src, dst)` pairs that carried traffic.
     used_pairs: HashSet<u64>,
+    /// Express dispatch (peek-gated hop fusion) on the streamed
+    /// backends. On by default — provably byte-inert, pinned by
+    /// `prop_fused_matches_unfused` — the switch exists for A/B
+    /// benchmarking (`SCALEPOOL_BENCH_FUSION=off`) and bisection.
+    pub(crate) fuse: bool,
     /// Flight-recorder configuration ([`MemSim::set_trace`]); `None`
     /// (the default) keeps every event arm on the record-nothing path.
     pub(crate) trace_cfg: Option<TraceConfig>,
@@ -320,9 +325,24 @@ impl<'f> MemSim<'f> {
             overlay_cache: HashMap::new(),
             used_paths: HashSet::new(),
             used_pairs: HashSet::new(),
+            fuse: true,
             trace_cfg: None,
             trace_out: None,
         }
+    }
+
+    /// Enable/disable express dispatch (peek-gated hop fusion) for the
+    /// streamed backends, serial and sharded. On by default; fusion is
+    /// byte-inert (`prop_fused_matches_unfused`), so the only observable
+    /// difference is wall-clock time and the [`StreamReport::fused_hops`]
+    /// telemetry.
+    pub fn set_fusion(&mut self, on: bool) {
+        self.fuse = on;
+    }
+
+    /// Whether express dispatch is enabled.
+    pub fn fusion(&self) -> bool {
+        self.fuse
     }
 
     /// Fork a cheap per-sweep-point clone: the link constants, tiers and
@@ -360,6 +380,7 @@ impl<'f> MemSim<'f> {
             overlay_cache: HashMap::new(),
             used_paths: HashSet::new(),
             used_pairs: HashSet::new(),
+            fuse: self.fuse,
             // the recorder configuration forks with the point; recorded
             // data does not (each fork records its own run)
             trace_cfg: self.trace_cfg,
@@ -659,58 +680,191 @@ impl<'f> MemSim<'f> {
         self.used_pairs.len()
     }
 
-    /// Advance transaction `id` (state `fl`) arriving at hop `hop`: admit
-    /// it to the link-direction server, or pay device time and complete.
-    /// Shared by injection (hop 0, inline) and the Arrive handler.
+    /// Advance transaction `id` (state `fl`) arriving at hop `hop` at
+    /// time `at`: admit it to the link-direction server, or pay device
+    /// time and complete. The single shared hop-advance of the serial
+    /// backend — injection (hop 0, inline), the Arrive handler's batch
+    /// members and the Depart chain all funnel into it (directly or via
+    /// [`MemSim::commit_admission`]), so express dispatch has exactly
+    /// one call site.
     ///
     /// FCFS servers time-release (the completion time is known at
     /// admission, no extra events); queued-mode policies defer backlogged
     /// transactions to the link's `Depart` chain, which re-schedules the
     /// next-hop Arrive when the arbiter starts them.
+    ///
+    /// `bound` is the express-dispatch ceiling (see
+    /// [`MemSim::forward_local`]); `at` may sit ahead of the engine
+    /// clock when reached by a fused chain. Returns the number of hops
+    /// fused inline downstream of this admission.
     #[inline]
     fn step(
         &mut self,
         engine: &mut Engine,
         fl: &InFlight,
-        now: f64,
+        at: f64,
         id: usize,
         hop: usize,
+        bound: f64,
         trace: &mut Option<Box<TraceSink>>,
-    ) {
+    ) -> u64 {
         if hop >= fl.path_len as usize {
             // reached destination: pay device service then complete
-            engine.after(fl.device_ns, EventKind::Complete { id });
-            return;
+            engine.schedule(at + fl.device_ns, EventKind::Complete { id });
+            return 0;
         }
         let h = self.hop_at(fl.path_start, hop);
         let link_idx = (h >> 1) as usize;
         let dir = (h & 1) as usize;
-        let c = &self.consts[link_idx];
+        let c = self.consts[link_idx];
         let service = c.flit.wire_bytes(fl.bytes) * c.inv_rate;
-        // fixed per-hop latency + switch traversal at the receiving node
-        // (precomputed — §Perf). NOTE: the sum is associated exactly as the
-        // pre-QoS hot path (`done + fixed + sw`) so FCFS results stay
-        // byte-identical to the plain-Server oracle.
-        let sw = c.switch_ns[1 - dir];
-        match self.servers[link_idx][dir].admit(now, service, fl.bytes, fl.class, id as u32, hop as u32)
-        {
+        let adm =
+            self.servers[link_idx][dir].admit(at, service, fl.bytes, fl.class, id as u32, hop as u32);
+        self.commit_admission(engine, fl, id, hop, link_idx, dir, service, adm, at, bound, trace)
+    }
+
+    /// Commit one admission outcome at time `at`: the hop span record,
+    /// the queued-mode Depart chain, and the forward to the next hop.
+    /// Shared by [`MemSim::step`]'s single admissions and the Arrive
+    /// handler's batch admissions — the one place admission outcomes
+    /// turn into scheduled (or fused) events in the serial backend.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn commit_admission(
+        &mut self,
+        engine: &mut Engine,
+        fl: &InFlight,
+        id: usize,
+        hop: usize,
+        link_idx: usize,
+        dir: usize,
+        service: f64,
+        adm: Admission,
+        at: f64,
+        bound: f64,
+        trace: &mut Option<Box<TraceSink>>,
+    ) -> u64 {
+        match adm {
             Admission::Release { done } => {
                 if let Some(tr) = trace.as_deref_mut() {
                     // both admission flavors serve over [done-service, done]
-                    tr.hop(id, now, done - service, done, link_idx, dir);
+                    tr.hop(id, at, done - service, done, link_idx, dir);
                 }
-                engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+                self.forward_local(engine, fl, id, hop, link_idx, dir, done, bound, trace)
             }
             Admission::Start { done } => {
                 if let Some(tr) = trace.as_deref_mut() {
-                    tr.hop(id, now, done - service, done, link_idx, dir);
+                    tr.hop(id, at, done - service, done, link_idx, dir);
                 }
-                engine.schedule(done, EventKind::Depart { link: link_idx as u32, dir: dir as u8 });
-                engine.schedule(done + c.fixed_ns + sw, EventKind::Arrive { id, hop: hop + 1 });
+                engine
+                    .schedule(done, EventKind::Depart { link: link_idx as u32, dir: dir as u8 });
+                self.forward_local(engine, fl, id, hop, link_idx, dir, done, bound, trace)
             }
             Admission::Queued => {
                 if let Some(tr) = trace.as_deref_mut() {
-                    tr.queued(id, now);
+                    tr.queued(id, at);
+                }
+                0
+            }
+        }
+    }
+
+    /// Put transaction `id` onto the hop after `hop`, whose service on
+    /// `(li, di)` finished at `done`: schedule the next-hop Arrive — or,
+    /// under the express-dispatch gate, admit the next hop *inline* at
+    /// its true arrival time and keep chaining (ISSUE 10's peek-gated
+    /// hop fusion). Returns the number of hops fused.
+    ///
+    /// The gate: the next-hop arrival `t_next = done + fixed + switch`
+    /// must be strictly earlier than both `bound` (events the caller
+    /// knows are coming but has not filed yet — `-inf` disables fusion,
+    /// the sharded workers pass their epoch horizon) and every pending
+    /// event ([`Engine::would_dispatch_next`]). Strict `<` because an
+    /// event scheduled at exactly `peek_time` dispatches *after* the
+    /// already-pending same-time events (FIFO `seq` tie-break): only a
+    /// strictly earlier arrival is guaranteed to be the very next
+    /// dispatch, making the inline admission exactly the event the
+    /// engine would have dispatched — byte-identical results, span
+    /// chain included. A backlogged downstream server
+    /// ([`ClassedServer::fuse_ready`]) or a failed gate ends the chain
+    /// through the unchanged per-hop schedule path.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_local(
+        &mut self,
+        engine: &mut Engine,
+        fl: &InFlight,
+        id: usize,
+        hop: usize,
+        li: usize,
+        di: usize,
+        done: f64,
+        bound: f64,
+        trace: &mut Option<Box<TraceSink>>,
+    ) -> u64 {
+        let (mut hop, mut li, mut di, mut done) = (hop, li, di, done);
+        let mut fused = 0u64;
+        loop {
+            let c = self.consts[li];
+            // fixed per-hop latency + switch traversal at the receiving
+            // node (precomputed — §Perf). NOTE: the sum is associated
+            // exactly as the pre-QoS hot path (`done + fixed + sw`) so
+            // FCFS results stay byte-identical to the plain-Server oracle.
+            let sw = c.switch_ns[1 - di];
+            let t_next = done + c.fixed_ns + sw;
+            let nh = hop + 1;
+            if !(self.fuse && t_next < bound && engine.would_dispatch_next(t_next)) {
+                engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+                return fused;
+            }
+            if nh >= fl.path_len as usize {
+                // fused destination arrival: device service, then complete
+                engine.schedule(t_next + fl.device_ns, EventKind::Complete { id });
+                return fused + 1;
+            }
+            let h = self.hop_at(fl.path_start, nh);
+            let nl = (h >> 1) as usize;
+            let nd = (h & 1) as usize;
+            if !self.servers[nl][nd].fuse_ready(t_next) {
+                // backlogged downstream server: degrade to per-hop dispatch
+                engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+                return fused;
+            }
+            let c2 = self.consts[nl];
+            let service = c2.flit.wire_bytes(fl.bytes) * c2.inv_rate;
+            match self.servers[nl][nd].admit(t_next, service, fl.bytes, fl.class, id as u32, nh as u32)
+            {
+                Admission::Release { done: d } => {
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.hop(id, t_next, d - service, d, nl, nd);
+                    }
+                    fused += 1;
+                    hop = nh;
+                    li = nl;
+                    di = nd;
+                    done = d;
+                }
+                Admission::Start { done: d } => {
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.hop(id, t_next, d - service, d, nl, nd);
+                    }
+                    // the Depart at `d` lands before the following arrival,
+                    // so the next gate check fails and the chain exits
+                    // through the schedule path above
+                    engine.schedule(d, EventKind::Depart { link: nl as u32, dir: nd as u8 });
+                    fused += 1;
+                    hop = nh;
+                    li = nl;
+                    di = nd;
+                    done = d;
+                }
+                Admission::Queued => {
+                    // unreachable under fuse_ready; kept as the safe
+                    // degradation (identical to a dispatched arrival that
+                    // parked in a VC)
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.queued(id, t_next);
+                    }
+                    return fused + 1;
                 }
             }
         }
@@ -809,6 +963,9 @@ impl<'f> MemSim<'f> {
         let mut batch_ids: Vec<(usize, usize)> = Vec::new();
         let mut batch_items: Vec<BatchAdmit> = Vec::new();
         let mut admissions: Vec<Admission> = Vec::new();
+        // hops admitted inline by express dispatch — each one is exactly
+        // one calendar event the engine never had to file and pop
+        let mut fused_hops = 0u64;
 
         loop {
             let Some((now, ev)) = carried.take().or_else(|| engine.next()) else {
@@ -901,14 +1058,20 @@ impl<'f> MemSim<'f> {
                             slots[id].token,
                         );
                     }
-                    self.step(&mut engine, &slots[id], now, id, 0, &mut trace);
+                    // no fusion off the injection: the source is re-pumped
+                    // only after this admission, so its next staged event is
+                    // not yet in the engine and the peek gate would be blind
+                    // to it
+                    fused_hops +=
+                        self.step(&mut engine, &slots[id], now, id, 0, f64::NEG_INFINITY, &mut trace);
                     pump(i, now, sources, &mut staged, &mut state, &inflight_count, &mut engine);
                 }
                 EventKind::Arrive { id, hop } => {
                     let fl = &slots[id];
                     if hop >= fl.path_len as usize {
                         // destination arrival: no link admission to batch
-                        self.step(&mut engine, fl, now, id, hop, &mut trace);
+                        fused_hops +=
+                            self.step(&mut engine, fl, now, id, hop, f64::NEG_INFINITY, &mut trace);
                         continue;
                     }
                     // epoch batching: coalesce the consecutive arrivals at
@@ -936,7 +1099,6 @@ impl<'f> MemSim<'f> {
                     let link_idx = (h >> 1) as usize;
                     let dir = (h & 1) as usize;
                     let c = self.consts[link_idx];
-                    let sw = c.switch_ns[1 - dir];
                     batch_items.clear();
                     for &(bid, bhop) in &batch_ids {
                         let fl = &slots[bid];
@@ -950,36 +1112,34 @@ impl<'f> MemSim<'f> {
                     }
                     admissions.clear();
                     self.servers[link_idx][dir].admit_batch(now, &batch_items, &mut admissions);
+                    let last = admissions.len() - 1;
                     for (k, (adm, &(bid, bhop))) in admissions.iter().zip(&batch_ids).enumerate() {
-                        match *adm {
-                            Admission::Release { done } => {
-                                if let Some(tr) = trace.as_deref_mut() {
-                                    tr.hop(bid, now, done - batch_items[k].service, done, link_idx, dir);
-                                }
-                                engine.schedule(
-                                    done + c.fixed_ns + sw,
-                                    EventKind::Arrive { id: bid, hop: bhop + 1 },
-                                );
-                            }
-                            Admission::Start { done } => {
-                                if let Some(tr) = trace.as_deref_mut() {
-                                    tr.hop(bid, now, done - batch_items[k].service, done, link_idx, dir);
-                                }
-                                engine.schedule(
-                                    done,
-                                    EventKind::Depart { link: link_idx as u32, dir: dir as u8 },
-                                );
-                                engine.schedule(
-                                    done + c.fixed_ns + sw,
-                                    EventKind::Arrive { id: bid, hop: bhop + 1 },
-                                );
-                            }
-                            Admission::Queued => {
-                                if let Some(tr) = trace.as_deref_mut() {
-                                    tr.queued(bid, now);
-                                }
-                            }
-                        }
+                        // only the batch's last member may open an express
+                        // chain: earlier members' next-hop arrivals are
+                        // already filed by the time it forwards, but a later
+                        // member's are not (the gate would be blind to
+                        // them). A carried event at `now` disables fusion
+                        // the same way — it is pending work the engine does
+                        // not know about, and it must be handled before any
+                        // admission at a later timestamp.
+                        let bound = if k == last && carried.is_none() {
+                            f64::INFINITY
+                        } else {
+                            f64::NEG_INFINITY
+                        };
+                        fused_hops += self.commit_admission(
+                            &mut engine,
+                            &slots[bid],
+                            bid,
+                            bhop,
+                            link_idx,
+                            dir,
+                            batch_items[k].service,
+                            *adm,
+                            now,
+                            bound,
+                            &mut trace,
+                        );
                     }
                 }
                 // a queued-mode link freed: arbitrate the next VC and put
@@ -992,12 +1152,19 @@ impl<'f> MemSim<'f> {
                             // arrival time was parked at admission
                             tr.departed(id as usize, now, done, li, di);
                         }
-                        let c = &self.consts[li];
-                        let sw = c.switch_ns[1 - di];
+                        // next Depart first (the vanilla order), so it
+                        // participates in the express gate below
                         engine.schedule(done, EventKind::Depart { link, dir });
-                        engine.schedule(
-                            done + c.fixed_ns + sw,
-                            EventKind::Arrive { id: id as usize, hop: hop as usize + 1 },
+                        fused_hops += self.forward_local(
+                            &mut engine,
+                            &slots[id as usize],
+                            id as usize,
+                            hop as usize,
+                            li,
+                            di,
+                            done,
+                            f64::INFINITY,
+                            &mut trace,
                         );
                     }
                 }
@@ -1020,7 +1187,12 @@ impl<'f> MemSim<'f> {
             }
         }
         report.total.makespan_ns = engine.now();
-        report.total.events = engine.dispatched();
+        // a fused hop is exactly the event the engine would have
+        // dispatched next, so the logical event count — and therefore
+        // every events-based parity assertion — is identical fusion on
+        // or off
+        report.total.events = engine.dispatched() + fused_hops;
+        report.fused_hops = fused_hops;
         // the slot table's high-water mark IS the peak concurrency (slots
         // recycle through the free list) — the streaming memory contract
         report.peak_inflight = slots.len();

@@ -527,6 +527,23 @@ impl ClassedServer {
         self.in_service
     }
 
+    /// Express-dispatch probe: would a transaction arriving at `now`
+    /// begin service immediately, with no queueing ahead of it? FCFS:
+    /// the shared queue has time-released (`free_at <= now`, so `admit`
+    /// starts it at `now` exactly); queued-mode: the link is idle (so
+    /// `admit` returns `Start`, never `Queued`). The hop-fusion gate in
+    /// the streamed core only admits a fused hop inline when this holds
+    /// — a backlogged server ends the chain and the transaction falls
+    /// back to the per-hop event path unchanged.
+    #[inline]
+    pub fn fuse_ready(&self, now: f64) -> bool {
+        if let ArbPolicy::FcfsShared = self.policy {
+            self.free_at <= now
+        } else {
+            !self.in_service
+        }
+    }
+
     pub fn class_stats(&self, class: TrafficClass) -> &VcStats {
         &self.stats[class.index()]
     }

@@ -323,6 +323,9 @@ enum Resp {
         servers: Vec<[ClassedServer; 2]>,
         now: f64,
         dispatched: u64,
+        /// Hops this worker's express chains admitted inline (each one a
+        /// calendar event its engine never dispatched).
+        fused: u64,
         peak_slots: usize,
         /// Wall-clock seconds this worker spent waiting on the barrier.
         idle_s: f64,
@@ -755,6 +758,9 @@ struct WorkerCtx<'e> {
     /// Links this shard owns — sizes the slab arena up front.
     owned_links: usize,
     classes: &'e [TrafficClass],
+    /// Express dispatch enabled ([`MemSim::set_fusion`]); each worker
+    /// applies the same peek gate against its own engine + epoch horizon.
+    fuse: bool,
 }
 
 /// Run the sharded simulation. Callers have already verified the plan
@@ -822,6 +828,7 @@ pub(crate) fn run(
     let mut merged_servers = sim.servers.clone();
     let mut makespan = 0.0f64;
     let mut events = 0u64;
+    let mut fused_hops = 0u64;
     let mut peak_inflight = 0usize;
     let mut epochs = 0u64;
     let mut barriers = 0u64;
@@ -857,6 +864,7 @@ pub(crate) fn run(
                 spraying,
                 owned_links: owned_links[shard],
                 classes: classes_ref,
+                fuse: sim.fuse,
             };
             let trace0 = trace_cfg.map(|cfg| {
                 let cap = (cfg.capacity / k).max(1024).min(cfg.capacity);
@@ -1368,10 +1376,11 @@ pub(crate) fn run(
         }
         for (s, rx) in res_rxs.iter().enumerate() {
             match rx.recv().expect("shard worker alive") {
-                Resp::Final { shard, servers, now, dispatched, peak_slots, idle_s, trace } => {
+                Resp::Final { shard, servers, now, dispatched, fused, peak_slots, idle_s, trace } => {
                     debug_assert_eq!(shard, s);
                     makespan = makespan.max(now);
-                    events += dispatched;
+                    events += dispatched + fused;
+                    fused_hops += fused;
                     // the sum of per-shard slot high-waters: the slot
                     // memory actually allocated, an upper bound on the
                     // serial definition (true peak concurrency) since the
@@ -1380,7 +1389,7 @@ pub(crate) fn run(
                     peak_inflight += peak_slots;
                     shard_stats.push(ShardStats {
                         shard,
-                        events: dispatched,
+                        events: dispatched + fused,
                         pinned_sources: plan
                             .pinned
                             .iter()
@@ -1409,8 +1418,10 @@ pub(crate) fn run(
     report.total.makespan_ns = makespan;
     // same count as the serial streamed loop: its per-transaction
     // injection event is the sharded loop's hop-0 arrival event (and a
-    // pinned source's injection is a Custom event on its worker)
+    // pinned source's injection is a Custom event on its worker);
+    // fused hops count as the events they replaced, exactly as serial
     report.total.events = events;
+    report.fused_hops = fused_hops;
     report.peak_inflight = peak_inflight;
     report.epochs = epochs;
     report.barriers = barriers;
@@ -1466,6 +1477,9 @@ struct WorkerCkpt {
     slots: Vec<LocalTx>,
     free: Vec<u32>,
     pinned: Vec<PinnedCkpt>,
+    /// Express-dispatch counter at the barrier: a rolled-back attempt's
+    /// fused hops are not real work, so the tally rewinds with the state.
+    fused: u64,
     /// Flight-recorder snapshot: a rolled-back attempt's span records roll
     /// back with the state that produced them.
     trace: Option<Box<TraceSink>>,
@@ -1517,6 +1531,9 @@ fn worker(
     let mut batch_items: Vec<BatchAdmit> = Vec::new();
     let mut admissions: Vec<Admission> = Vec::new();
     let mut idle = 0.0f64;
+    // hops admitted inline by express chains — logical events the engine
+    // never dispatched; joins `dispatched` in the final event count
+    let mut fused = 0u64;
     // optimistic support: the barrier checkpoint a rollback restores, and
     // the adaptive rail-scoring scratch (both idle on conservative runs)
     let mut ckpt: Option<WorkerCkpt> = None;
@@ -1564,6 +1581,7 @@ fn worker(
                         p.inflight = pc.inflight;
                         p.emitted = pc.emitted;
                     }
+                    fused = ck.fused;
                     trace.clone_from(&ck.trace);
                 } else if checkpoint {
                     ckpt = Some(WorkerCkpt {
@@ -1584,6 +1602,7 @@ fn worker(
                                 emitted: p.emitted,
                             })
                             .collect(),
+                        fused,
                         trace: trace.clone(),
                     });
                 }
@@ -1709,9 +1728,13 @@ fn worker(
                                 );
                             }
                             pinned[li].inflight += 1;
-                            admit_one(
+                            // no fusion off an injection: the source is
+                            // re-pumped only after this admission, so its
+                            // next staged event is invisible to the peek
+                            // gate — bound -inf forces the per-hop path
+                            fused += admit_one(
                                 &mut engine, &mut out, &mut free, &arena, &ctx, &mut servers,
-                                &slots, id, 0, now, &mut trace,
+                                &slots, id, 0, now, f64::NEG_INFINITY, &mut trace,
                             );
                             pump_pinned(li, now, &mut pinned, &mut engine);
                         }
@@ -1769,9 +1792,22 @@ fn worker(
                             }
                             admissions.clear();
                             servers[link][dir].admit_batch(now, &batch_items, &mut admissions);
+                            // express dispatch: only the batch's last member
+                            // may fuse, and only when no probe was carried —
+                            // earlier members' continuations (and a carried
+                            // same-time event) are pending work the peek
+                            // gate cannot see. The fusion bound is the epoch
+                            // horizon `t1`, composing with the conservative
+                            // window exactly like a dispatched event.
+                            let last = admissions.len() - 1;
                             for (bk, (adm, &(bid, bhop))) in
                                 admissions.iter().zip(&batch_ids).enumerate()
                             {
+                                let bound = if bk == last && carried.is_none() {
+                                    t1
+                                } else {
+                                    f64::NEG_INFINITY
+                                };
                                 match *adm {
                                     Admission::Release { done } => {
                                         if let Some(tr) = trace.as_deref_mut() {
@@ -1782,9 +1818,10 @@ fn worker(
                                                 link, dir,
                                             );
                                         }
-                                        forward(
+                                        fused += forward(
                                             &mut engine, &mut out, &mut free, &arena, &ctx,
-                                            &slots, bid, link, dir, bhop, done,
+                                            &mut servers, &slots, bid, link, dir, bhop, done,
+                                            bound, &mut trace,
                                         );
                                     }
                                     Admission::Start { done } => {
@@ -1801,9 +1838,10 @@ fn worker(
                                                 dir: dir as u8,
                                             },
                                         );
-                                        forward(
+                                        fused += forward(
                                             &mut engine, &mut out, &mut free, &arena, &ctx,
-                                            &slots, bid, link, dir, bhop, done,
+                                            &mut servers, &slots, bid, link, dir, bhop, done,
+                                            bound, &mut trace,
                                         );
                                     }
                                     Admission::Queued => {
@@ -1823,9 +1861,10 @@ fn worker(
                                     tr.departed(id as usize, now, done, li, di);
                                 }
                                 engine.schedule(done, EventKind::Depart { link, dir });
-                                forward(
-                                    &mut engine, &mut out, &mut free, &arena, &ctx, &slots,
-                                    id as usize, li, di, hop as usize, done,
+                                fused += forward(
+                                    &mut engine, &mut out, &mut free, &arena, &ctx, &mut servers,
+                                    &slots, id as usize, li, di, hop as usize, done, t1,
+                                    &mut trace,
                                 );
                             }
                         }
@@ -1903,6 +1942,7 @@ fn worker(
                     servers,
                     now: engine.now(),
                     dispatched: engine.dispatched(),
+                    fused,
                     peak_slots: slots.len(),
                     idle_s: idle,
                     trace,
@@ -1930,12 +1970,13 @@ fn admit_one(
     id: usize,
     hop: usize,
     now: f64,
+    bound: f64,
     trace: &mut Option<Box<TraceSink>>,
-) {
+) -> u64 {
     let lt = &slots[id];
     if hop >= lt.path_len as usize {
         engine.after(lt.tx.device_ns, EventKind::Complete { id });
-        return;
+        return 0;
     }
     let h = arena[lt.path_start as usize + hop];
     let link = (h >> 1) as usize;
@@ -1952,19 +1993,20 @@ fn admit_one(
             if let Some(tr) = trace.as_deref_mut() {
                 tr.hop(id, now, done - service, done, link, dir);
             }
-            forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done)
+            forward(engine, out, free, arena, ctx, servers, slots, id, link, dir, hop, done, bound, trace)
         }
         Admission::Start { done } => {
             if let Some(tr) = trace.as_deref_mut() {
                 tr.hop(id, now, done - service, done, link, dir);
             }
             engine.schedule(done, EventKind::Depart { link: link as u32, dir: dir as u8 });
-            forward(engine, out, free, arena, ctx, slots, id, link, dir, hop, done);
+            forward(engine, out, free, arena, ctx, servers, slots, id, link, dir, hop, done, bound, trace)
         }
         Admission::Queued => {
             if let Some(tr) = trace.as_deref_mut() {
                 tr.queued(id, now);
             }
+            0
         }
     }
 }
@@ -1972,9 +2014,16 @@ fn admit_one(
 /// After a service on `(served_link, dir)` completes at `done`: put
 /// transaction `id` onto its next hop — a cross-shard handoff when the
 /// next link belongs to another shard (freeing the local slot), a local
-/// Arrive event otherwise. Shared by the admit and depart paths; a
-/// handoff's arrival time is `done + fixed + switch >= now + L`, so the
-/// conservative-lookahead argument is unchanged under queued arbitration.
+/// Arrive event — or, under the express-dispatch gate, an *inline*
+/// admission at the true arrival time that keeps chaining (the worker
+/// twin of `MemSim::forward_local`; returns the hops fused). Shared by
+/// the admit and depart paths; a handoff's arrival time is
+/// `done + fixed + switch >= now + L`, so the conservative-lookahead
+/// argument is unchanged under queued arbitration — and unchanged by
+/// fusion, which only commits events the worker would have dispatched
+/// inside this window anyway (`bound` is the epoch horizon `t1`, so a
+/// fused arrival satisfies `t_next < t1` exactly like a dispatched one;
+/// a foreign next link always exits through the handoff branch).
 #[allow(clippy::too_many_arguments)]
 fn forward(
     engine: &mut Engine,
@@ -1982,27 +2031,95 @@ fn forward(
     free: &mut Vec<u32>,
     arena: &[u32],
     ctx: &WorkerCtx<'_>,
+    servers: &mut [[ClassedServer; 2]],
     slots: &[LocalTx],
     id: usize,
     served_link: usize,
     dir: usize,
     hop: usize,
     done: f64,
-) {
+    bound: f64,
+    trace: &mut Option<Box<TraceSink>>,
+) -> u64 {
     let lt = &slots[id];
-    let c = &ctx.consts[served_link];
-    let t_next = done + c.fixed_ns + c.switch_ns[1 - dir];
-    let nh = hop + 1;
-    if nh < lt.path_len as usize {
-        let next_link = (arena[lt.path_start as usize + nh] >> 1) as usize;
+    let (mut hop, mut li, mut di, mut done) = (hop, served_link, dir, done);
+    let mut fused = 0u64;
+    loop {
+        let c = &ctx.consts[li];
+        // association order matches the serial hot path (`done + fixed +
+        // sw`) so results stay byte-identical across backends
+        let t_next = done + c.fixed_ns + c.switch_ns[1 - di];
+        let nh = hop + 1;
+        if nh >= lt.path_len as usize {
+            // destination arrival: fuse it (device service, then a
+            // pending Complete) only when it beats the horizon and every
+            // pending event — the strict-`<` peek gate
+            if ctx.fuse && t_next < bound && engine.would_dispatch_next(t_next) {
+                engine.schedule(t_next + lt.tx.device_ns, EventKind::Complete { id });
+                return fused + 1;
+            }
+            engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+            return fused;
+        }
+        let h = arena[lt.path_start as usize + nh];
+        let next_link = (h >> 1) as usize;
         let target = ctx.link_shard[next_link];
         if target as usize != ctx.shard {
             out.push((target, Handoff { at: t_next, hop: nh as u32, tx: lt.tx }));
             free.push(id as u32);
-            return;
+            return fused;
+        }
+        let nd = (h & 1) as usize;
+        if !(ctx.fuse
+            && t_next < bound
+            && engine.would_dispatch_next(t_next)
+            && servers[next_link][nd].fuse_ready(t_next))
+        {
+            // gate failed or the downstream server is backlogged:
+            // degrade to the per-hop event path
+            engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
+            return fused;
+        }
+        let c2 = &ctx.consts[next_link];
+        let service = c2.flit.wire_bytes(lt.tx.bytes) * c2.inv_rate;
+        match servers[next_link][nd]
+            .admit(t_next, service, lt.tx.bytes, lt.tx.class, id as u32, nh as u32)
+        {
+            Admission::Release { done: d } => {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.hop(id, t_next, d - service, d, next_link, nd);
+                }
+                fused += 1;
+                hop = nh;
+                li = next_link;
+                di = nd;
+                done = d;
+            }
+            Admission::Start { done: d } => {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.hop(id, t_next, d - service, d, next_link, nd);
+                }
+                // the Depart at `d` lands before the following arrival,
+                // so the next gate check fails and the chain exits
+                // through the schedule path
+                engine.schedule(d, EventKind::Depart { link: next_link as u32, dir: nd as u8 });
+                fused += 1;
+                hop = nh;
+                li = next_link;
+                di = nd;
+                done = d;
+            }
+            Admission::Queued => {
+                // unreachable under fuse_ready; kept as the safe
+                // degradation (identical to a dispatched arrival that
+                // parked in a VC)
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.queued(id, t_next);
+                }
+                return fused + 1;
+            }
         }
     }
-    engine.schedule(t_next, EventKind::Arrive { id, hop: nh });
 }
 
 /// Shard-local twin of `MemSim::intern_path` (same arena packing:

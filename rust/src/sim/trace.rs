@@ -26,6 +26,14 @@
 //! * **Inert.** Recording never changes a simulation byte: the property
 //!   test `prop_tracing_is_inert` pins a traced run's `StreamReport`
 //!   equal to the untraced run's, serial and sharded.
+//! * **Fusion-transparent.** Express dispatch (ISSUE 10) admits quiet
+//!   hops inline without dispatching their `Arrive` events, but every
+//!   fused hop still emits its full span — same link, same rail, same
+//!   queue delay, same timestamps, same order — so a trace cannot tell
+//!   a fused chain from per-hop dispatch
+//!   (`prop_fused_matches_unfused` pins the span chains identical).
+//!   Gauges sample at dispatch granularity, so only their sample
+//!   *instants* may differ between the two modes, never the hop record.
 //!
 //! # Exports
 //!

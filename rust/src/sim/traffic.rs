@@ -227,7 +227,8 @@ impl ShardMode {
 pub struct ShardStats {
     /// Shard index (dense, `0..shards`).
     pub shard: usize,
-    /// Events dispatched by this shard's engine — the load-balance axis.
+    /// Logical events this shard processed (engine dispatches plus hops
+    /// its express chains admitted inline) — the load-balance axis.
     pub events: u64,
     /// Reactive sources pinned to this shard's worker.
     pub pinned_sources: usize,
@@ -332,6 +333,15 @@ pub struct StreamReport {
     /// Self-measured wall-clock cost of recording (ns): what tracing
     /// added to this run. 0 when tracing is off.
     pub trace_overhead_ns: f64,
+    /// Hops admitted inline by express dispatch (peek-gated hop fusion)
+    /// instead of being filed and popped as calendar events. Each fused
+    /// hop is exactly the event the engine would have dispatched next,
+    /// so it is counted into [`MemSimReport::events`] and every
+    /// events-based parity holds with fusion on or off, serial or
+    /// sharded. 0 when fusion is disabled ([`MemSim::set_fusion`]).
+    ///
+    /// [`MemSim::set_fusion`]: super::MemSim::set_fusion
+    pub fused_hops: u64,
 }
 
 impl StreamReport {
@@ -356,11 +366,26 @@ impl StreamReport {
             rollbacks: 0,
             dropped_spans: 0,
             trace_overhead_ns: 0.0,
+            fused_hops: 0,
         }
     }
 
     pub fn class(&self, class: TrafficClass) -> &ClassReport {
         &self.per_class[class.index()]
+    }
+
+    /// Fraction of hop-level events (link arrivals + queued-mode
+    /// departs; the total minus one injection and one completion per
+    /// transaction) that express dispatch admitted inline instead of
+    /// dispatching through the calendar. 0.0 when fusion is off or the
+    /// run had no hop events.
+    pub fn fusion_rate(&self) -> f64 {
+        let hop_events = self.total.events.saturating_sub(2 * self.total.completed);
+        if hop_events == 0 {
+            0.0
+        } else {
+            self.fused_hops as f64 / hop_events as f64
+        }
     }
 
     pub(crate) fn record(&mut self, class: TrafficClass, latency: f64, bytes: f64) {

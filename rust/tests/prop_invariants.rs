@@ -2378,3 +2378,286 @@ fn prop_fig7_ordering_robust() {
         },
     );
 }
+
+/// Express-dispatch inertness (ISSUE 10): peek-gated hop fusion is a
+/// pure event-count optimization — it must not perturb any observable
+/// result. On randomized Clos and torus fabrics carrying either a
+/// sparse open-loop stream (the fusion-friendly regime) or a dense
+/// reactive mix (coherence domains + collective rings + open-loop
+/// background), a fused run's [`StreamReport`] — totals, per-class
+/// stats, event counts, makespan bits, full QoS telemetry — the
+/// source-observed completion instants, and the recorded span chain
+/// must be bit-identical to the same run with fusion disabled
+/// ([`MemSim::set_fusion`]), swept across arbitration policies (FCFS /
+/// strict / weighted), rail selectors (single-path, multipath
+/// Deterministic, multipath HashSpray), both backends, traced and
+/// untraced. Sparse serial cases must additionally fuse at least one
+/// hop (the optimization actually fires where it is supposed to).
+#[test]
+fn prop_fused_matches_unfused() {
+    use scalepool::sim::{StreamReport, TraceConfig};
+    let fingerprint = |r: &StreamReport| -> Vec<u64> {
+        let mut v = vec![
+            r.total.completed,
+            r.total.events,
+            r.total.makespan_ns.to_bits(),
+            r.total.latency.mean().to_bits(),
+            r.total.latency.min().to_bits(),
+            r.total.latency.max().to_bits(),
+            r.peak_inflight as u64,
+            r.epochs,
+            r.barriers,
+            r.optimistic_sources as u64,
+            r.checkpoints,
+            r.rollbacks,
+        ];
+        for c in TrafficClass::ALL {
+            let cr = r.class(c);
+            v.push(cr.completed);
+            v.push(cr.bytes.to_bits());
+            v.push(cr.latency.mean().to_bits());
+            v.push(cr.latency.max().to_bits());
+            v.push(cr.hist.p50().to_bits());
+            v.push(cr.hist.p99().to_bits());
+        }
+        for q in &r.qos {
+            v.push(q.link as u64);
+            v.push(q.dir as u64);
+            v.push(q.tier.index() as u64);
+            v.push(q.class.index() as u64);
+            v.push(q.served);
+            v.push(q.bytes.to_bits());
+            v.push(q.busy_ns.to_bits());
+            v.push(q.queue_delay_ns.to_bits());
+        }
+        v
+    };
+    forall_res(
+        Config { cases: 10, seed: 0xF05ED },
+        |rng: &mut Rng| {
+            let (t, groups) = if rng.below(2) == 0 {
+                let (mut t, leaves) = Topology::clos(
+                    2 + rng.below(5) as usize,
+                    1 + rng.below(3) as usize,
+                    LinkKind::CxlCoherent,
+                    "c",
+                );
+                let per = 3 + rng.below(3) as usize;
+                let mut groups = Vec::new();
+                for (i, &l) in leaves.iter().enumerate() {
+                    let mut eps = Vec::new();
+                    for e in 0..per {
+                        let n = t.add_node(NodeKind::Accelerator, format!("e{i}-{e}"));
+                        t.connect(n, l, LinkKind::CxlCoherent);
+                        eps.push(n);
+                    }
+                    groups.push(eps);
+                }
+                (t, groups)
+            } else {
+                let (mut t, sw) = Topology::torus3d(
+                    (2 + rng.below(3) as usize, 2 + rng.below(3) as usize, 1 + rng.below(2) as usize),
+                    LinkKind::CxlCoherent,
+                    "t",
+                );
+                let mut eps = Vec::new();
+                for (i, &s) in sw.iter().enumerate() {
+                    let n = t.add_node(NodeKind::Accelerator, format!("e{i}"));
+                    t.connect(n, s, LinkKind::CxlCoherent);
+                    eps.push(n);
+                }
+                let groups: Vec<Vec<usize>> =
+                    eps.chunks(3).filter(|c| c.len() >= 3).map(|c| c.to_vec()).collect();
+                (t, groups)
+            };
+            // sparse: a lone open-loop stream with interarrivals far above
+            // the per-hop latency, so nearly every hop beats the peek gate.
+            // dense: the reactive mix, where fusion fires opportunistically.
+            let sparse = rng.below(2) == 1;
+            let ntx = 80 + rng.below(200) as usize;
+            let coh_ops = 30 + rng.below(60);
+            let col_bytes = 4096.0 + rng.f64() * 32_768.0;
+            let shards = 2 + rng.below(3) as usize;
+            (t, groups, sparse, ntx, coh_ops, col_bytes, shards, rng.below(1 << 30))
+        },
+        |(t, groups, sparse, ntx, coh_ops, col_bytes, shards, seed)| {
+            if groups.len() < 2 {
+                return Ok(());
+            }
+            let mut f = Fabric::new(t.clone());
+            let all_eps: Vec<usize> = groups.iter().flatten().copied().collect();
+            let mut rng = Rng::new(*seed);
+            let mut at = 0.0;
+            let mean = if *sparse { 2_500.0 } else { 60.0 };
+            let txs: Vec<Transaction> = (0..*ntx)
+                .map(|_| {
+                    at += rng.exp(1.0 / mean) + 1e-6;
+                    let s = rng.below(all_eps.len() as u64) as usize;
+                    let mut d = rng.below(all_eps.len() as u64) as usize;
+                    if d == s {
+                        d = (d + 1) % all_eps.len();
+                    }
+                    Transaction {
+                        src: all_eps[s],
+                        dst: all_eps[d],
+                        at,
+                        bytes: 64.0 + rng.f64() * 4096.0,
+                        device_ns: rng.f64() * 120.0,
+                    }
+                })
+                .collect();
+
+            // policy sweep: FCFS single-path (also the traced combo), then
+            // the queued-mode arbiters on a 4-rail multipath table
+            for pi in 0..3usize {
+                if pi > 0 && f.max_rails() == 1 {
+                    f.enable_multipath(4);
+                }
+                let selector = match pi {
+                    1 => RailSelector::HashSpray,
+                    _ => RailSelector::Deterministic,
+                };
+                let ctx = format!(
+                    "[{} pi={pi} {}]",
+                    if *sparse { "sparse" } else { "dense" },
+                    selector.name()
+                );
+                for sharded in [false, true] {
+                    let traced_set: &[bool] = if pi == 0 { &[false, true] } else { &[false] };
+                    for &traced in traced_set {
+                        let run = |fuse: bool| {
+                            let mut coh: Vec<CoherenceTraffic> = Vec::new();
+                            let mut col: Vec<EventDrivenCollective> = Vec::new();
+                            if !*sparse {
+                                for (g, eps) in groups.iter().enumerate() {
+                                    let ccfg = CoherenceConfig {
+                                        ops: *coh_ops,
+                                        mean_interarrival_ns: 40.0,
+                                        window: eps.len().max(4),
+                                        ..Default::default()
+                                    };
+                                    coh.push(CoherenceTraffic::new(
+                                        eps[1..].to_vec(),
+                                        vec![eps[0]],
+                                        ccfg,
+                                        seed.wrapping_add(g as u64 * 7919),
+                                    ));
+                                    col.push(EventDrivenCollective::ring(
+                                        eps.clone(),
+                                        *col_bytes,
+                                        1,
+                                    ));
+                                }
+                            }
+                            let mut bg = RecordingSource::new(txs.clone());
+                            let mut sources: Vec<&mut dyn TrafficSource> = Vec::new();
+                            for c in &mut coh {
+                                sources.push(c);
+                            }
+                            for c in &mut col {
+                                sources.push(c);
+                            }
+                            sources.push(&mut bg);
+                            let mut sim = MemSim::with_routing(
+                                &f,
+                                RoutingPolicy::uniform(selector),
+                            );
+                            sim.set_qos(match pi {
+                                0 => QosPolicy::fcfs(),
+                                1 => QosPolicy::uniform(ArbPolicy::strict_default()),
+                                _ => QosPolicy::uniform(ArbPolicy::weighted_default()),
+                            });
+                            sim.set_fusion(fuse);
+                            if traced {
+                                sim.set_trace(TraceConfig::default());
+                            }
+                            let rep = if sharded {
+                                sim.run_streamed_sharded_with(&mut sources, *shards)
+                            } else {
+                                sim.run_streamed(&mut sources)
+                            };
+                            let coh_lat: Vec<(u64, u64)> = coh
+                                .iter()
+                                .map(|c| {
+                                    (c.op_latency().count(), c.op_latency().mean().to_bits())
+                                })
+                                .collect();
+                            let col_lat: Vec<(u64, u64)> = col
+                                .iter()
+                                .map(|c| {
+                                    (
+                                        c.repeat_latency().count(),
+                                        c.repeat_latency().mean().to_bits(),
+                                    )
+                                })
+                                .collect();
+                            (rep, bg.completions, coh_lat, col_lat, sim.take_trace())
+                        };
+                        let (fused, f_done, f_coh, f_col, f_tr) = run(true);
+                        let (plain, p_done, p_coh, p_col, p_tr) = run(false);
+                        if plain.fused_hops != 0 {
+                            return Err(format!(
+                                "{ctx} fusion disabled but {} hops fused",
+                                plain.fused_hops
+                            ));
+                        }
+                        if fused.mode != plain.mode {
+                            return Err(format!(
+                                "{ctx} fusion changed the backend mode: {:?} vs {:?}",
+                                fused.mode, plain.mode
+                            ));
+                        }
+                        if fingerprint(&fused) != fingerprint(&plain) {
+                            return Err(format!(
+                                "{ctx} sharded={sharded} traced={traced} fused report diverged \
+                                 (events {} vs {}, makespan {} vs {})",
+                                fused.total.events,
+                                plain.total.events,
+                                fused.total.makespan_ns,
+                                plain.total.makespan_ns
+                            ));
+                        }
+                        if fused.fused_hops > 0 && fused.fusion_rate() <= 0.0 {
+                            return Err(format!("{ctx} fused_hops > 0 but fusion_rate is 0"));
+                        }
+                        if f_done.len() != p_done.len() {
+                            return Err(format!("{ctx} completion counts diverged"));
+                        }
+                        for (a, b) in f_done.iter().zip(&p_done) {
+                            if a.0 != b.0 || a.1.to_bits() != b.1.to_bits() {
+                                return Err(format!(
+                                    "{ctx} completion instants diverged: {a:?} vs {b:?}"
+                                ));
+                            }
+                        }
+                        if f_coh != p_coh || f_col != p_col {
+                            return Err(format!("{ctx} reactive-source accumulators diverged"));
+                        }
+                        if traced {
+                            let ft = f_tr.ok_or(format!("{ctx} fused traced run lost data"))?;
+                            let pt = p_tr.ok_or(format!("{ctx} plain traced run lost data"))?;
+                            // fused hops record their spans inline at the
+                            // true hop times — the chain must be identical
+                            if ft.spans != pt.spans {
+                                return Err(format!(
+                                    "{ctx} sharded={sharded} span chains diverged \
+                                     ({} vs {} spans)",
+                                    ft.spans.len(),
+                                    pt.spans.len()
+                                ));
+                            }
+                        }
+                        if *sparse && !sharded && fused.fused_hops == 0 {
+                            return Err(format!(
+                                "{ctx} sparse serial run fused nothing \
+                                 (events {}, completed {})",
+                                fused.total.events, fused.total.completed
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -7,6 +7,16 @@ seed/serial baselines. The sharded backend's speedup is only *enforced*
 when the recording machine had >= 4 cores (its acceptance bar is defined
 at >= 4 cores; on narrower machines it is reported but advisory).
 
+Express-dispatch entries (ISSUE 10): ``fused_speedup`` is floor-checked
+and regression-gated like any other ``*_speedup`` key, except at rack
+scale where the single-crossbar 2-hop paths leave one fusible hop per
+transaction and the ratio is timer-noise-sized (advisory there; the
+bench itself asserts the >= 1.5x bar at pod scale).
+``fused_events_per_sec`` and ``fusion_rate`` carry no floor by
+construction (not ``*_speedup`` keys); the fusion rate is echoed as an
+advisory line so trajectory regressions stay visible. Records made with
+``SCALEPOOL_BENCH_FUSION=off`` simply omit the fused keys.
+
 Multi-rail routing points (``rails``/``rails_*`` entries, recorded by
 scripts/bench.sh into BENCH_figs.json) are *advisory*: they carry no
 speedup bar — inflation, path-diversity and imbalance metrics are
@@ -60,7 +70,28 @@ def is_advisory(where, key, scale, threads):
         # fork-vs-rebuild ratio there is timer noise; the >= 3x bar is
         # asserted by the bench itself at row scale and beyond
         return True
+    if key == "fused_speedup" and scale == "rack":
+        # rack's 2-hop paths leave a single fusible hop per transaction,
+        # so the wall-time margin is runner noise; the >= 1.5x bar is
+        # asserted by the bench itself at pod scale
+        return True
     return False
+
+
+def walk_key(node, want, path, out, scale=None):
+    """Collect every numeric ``want`` key (advisory metrics without a
+    speedup bar, e.g. ``fusion_rate``) with its record path and scale."""
+    if isinstance(node, dict):
+        if isinstance(node.get("scale"), str):
+            scale = node["scale"]
+        for k, v in node.items():
+            if k == want and isinstance(v, (int, float)):
+                out.append((f"{path}.{k}" if path else k, float(v), scale))
+            else:
+                walk_key(v, want, f"{path}.{k}" if path else k, out, scale)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            walk_key(v, want, f"{path}[{i}]", out, scale)
 
 
 def main():
@@ -130,6 +161,12 @@ def main():
                 advisories += 1
             else:
                 failures.append((where, value, f"below the {FLOOR}x floor"))
+    # advisory echo: express-dispatch fusion rate (no floor here — the
+    # >= 0.5 bar on the sparse workload is asserted in-bench at pod scale)
+    rates = []
+    walk_key(data, "fusion_rate", "", rates)
+    for where, value, _ in rates:
+        print(f"advisory  {where} = {value:.2f} (fusion rate; in-bench bar)")
     if baseline_path is not None:
         try:
             with open(baseline_path) as f:
